@@ -1,0 +1,42 @@
+"""Paper Figure 3 / §4.3: PyVizier <-> wire-format conversion throughput."""
+
+import msgpack
+
+from benchmarks.bench_util import emit, timeit
+
+from repro.core import Measurement, StudyConfig, Trial, ScaleType
+
+
+def main() -> None:
+    t = Trial(id=42, parameters={"lr": 3e-4, "model": "vgg", "layers": 5})
+    for i in range(20):
+        t.add_measurement(Measurement(metrics={"acc": 0.5 + i / 100,
+                                               "loss": 2.0 - i / 50}, steps=i))
+    t.complete(Measurement(metrics={"acc": 0.7, "num_params": 20423}))
+
+    proto = t.to_proto()
+    emit("fig3.trial.to_proto", timeit(lambda: t.to_proto(), repeats=20),
+         f"measurements={len(t.measurements)}")
+    emit("fig3.trial.from_proto", timeit(lambda: Trial.from_proto(proto),
+                                         repeats=20), "")
+    wire = msgpack.packb(proto, use_bin_type=True)
+    emit("fig3.trial.wire_encode",
+         timeit(lambda: msgpack.packb(proto, use_bin_type=True), repeats=20),
+         f"wire_bytes={len(wire)}")
+    emit("fig3.trial.wire_decode",
+         timeit(lambda: msgpack.unpackb(wire, raw=False), repeats=20), "")
+
+    cfg = StudyConfig()
+    root = cfg.search_space.select_root()
+    root.add_float_param("lr", 1e-4, 1e-1, scale_type=ScaleType.LOG)
+    cat = root.add_categorical_param("model", ["linear", "dnn"])
+    cat.select_values(["dnn"]).add_int_param("layers", 1, 8)
+    cfg.metrics.add("acc", "MAXIMIZE")
+    sproto = cfg.to_proto()
+    emit("fig3.study_config.roundtrip",
+         timeit(lambda: StudyConfig.from_proto(cfg.to_proto()), repeats=20),
+         f"params={len(cfg.search_space.all_parameters())}")
+
+
+if __name__ == "__main__":
+    main()

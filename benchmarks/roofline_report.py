@@ -1,0 +1,82 @@
+"""Roofline report: renders the §Roofline table from the dry-run JSONs.
+
+Per (arch × shape × mesh): the three terms in seconds, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS (useful-compute fraction), per-device
+memory, and the roofline fraction (useful compute time / optimistic step
+time) that §Perf hillclimbs.
+"""
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+PEAK = 197e12
+
+
+def load_records(results_dir=RESULTS):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_fraction(rec) -> float:
+    """useful model FLOPs time / optimistic step time (higher = better)."""
+    if not rec.get("ok"):
+        return 0.0
+    useful_s = rec["model_flops_per_device"] / PEAK
+    step = rec["roofline"]["step_time_s"]
+    return useful_s / step if step > 0 else 0.0
+
+
+def render_table(recs, *, mesh="16x16") -> str:
+    rows = []
+    header = (f"{'arch':<18} {'shape':<12} {'compute_s':>10} {'memory_s':>10} "
+              f"{'coll_s':>10} {'dom':>10} {'mem/dev':>8} {'useful%':>8} "
+              f"{'roofline%':>9}")
+    rows.append(header)
+    rows.append("-" * len(header))
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("skipped"):
+            rows.append(f"{r['arch']:<18} {r['shape']:<12} "
+                        f"{'SKIP (' + r['reason'][:48] + ')':>60}")
+            continue
+        if not r.get("ok"):
+            rows.append(f"{r['arch']:<18} {r['shape']:<12} FAILED: "
+                        f"{r.get('error', '')[:60]}")
+            continue
+        rf = r["roofline"]
+        rows.append(
+            f"{r['arch']:<18} {r['shape']:<12} {rf['compute_s']:>10.4f} "
+            f"{rf['memory_s']:>10.4f} {rf['collective_s']:>10.4f} "
+            f"{rf['dominant']:>10} "
+            f"{r['memory']['total_per_device']/1e9:>7.1f}G "
+            f"{100*min(r['useful_flops_fraction'],9.99):>7.1f}% "
+            f"{100*roofline_fraction(r):>8.2f}%")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    recs = load_records()
+    if not recs:
+        print("roofline.report,0,NO_DRYRUN_RESULTS (run repro.launch.dryrun --sweep)")
+        return
+    ok = [r for r in recs if r.get("ok")]
+    for mesh in ("16x16", "2x16x16"):
+        sub = [r for r in ok if r.get("mesh") == mesh]
+        if not sub:
+            continue
+        fracs = [roofline_fraction(r) for r in sub]
+        mean_frac = sum(fracs) / len(fracs)
+        print(f"roofline.cells.{mesh},{len(sub)},mean_roofline_frac="
+              f"{100*mean_frac:.2f}%")
+    print()
+    print(render_table(recs, mesh="16x16"))
+
+
+if __name__ == "__main__":
+    main()

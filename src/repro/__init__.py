@@ -1,0 +1,17 @@
+"""repro — OSS Vizier reproduced as a production-grade JAX framework ("VizierX").
+
+Layers:
+  core/         Vizier primitives (Study/Trial/SearchSpace/StudyConfig/Metadata)
+  pythia/       developer API (Policy, PolicySupporter, Designers, algorithms)
+  service/      distributed fault-tolerant service (RPC, datastore, operations)
+  tuning/       Vizier <-> JAX-trainer integration (workers, shardtune)
+  models/       assigned architecture zoo (dense/GQA/MLA/MoE/Mamba2/xLSTM/enc-dec)
+  configs/      one config per assigned architecture + input shapes
+  distributed/  mesh & logical sharding rules, gradient compression, elastic
+  train/        optimizer, data pipeline, checkpointing, train loop
+  serve/        KV/SSM cache decode engine
+  kernels/      Pallas TPU kernels (+ jnp oracles) for compute hot-spots
+  launch/       production mesh, multi-pod dry-run, roofline, train driver
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,24 @@
+"""Assigned-architecture configs (10 archs × 4 input shapes)."""
+
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPES,
+    SUBQUADRATIC,
+    ArchConfig,
+    EncDecConfig,
+    HybridConfig,
+    InputShape,
+    MLAConfig,
+    MoEConfig,
+    SSMConfig,
+    VLMConfig,
+    XLSTMConfig,
+    get_arch,
+    shape_supported,
+)
+
+__all__ = [
+    "ARCH_IDS", "SHAPES", "SUBQUADRATIC", "ArchConfig", "EncDecConfig",
+    "HybridConfig", "InputShape", "MLAConfig", "MoEConfig", "SSMConfig",
+    "VLMConfig", "XLSTMConfig", "get_arch", "shape_supported",
+]

@@ -1,0 +1,218 @@
+"""Architecture configs + input shapes (the assigned 10×4 grid).
+
+Each assigned architecture gets a module ``configs/<id>.py`` exporting
+``CONFIG: ArchConfig`` (exact published numbers) and ``REDUCED: ArchConfig``
+(same family, tiny dims — used by CPU smoke tests). The registry resolves
+``--arch <id>``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int                # per-expert FFN hidden dim
+    n_shared_experts: int = 0    # DeepSeek-style always-on experts
+    first_k_dense: int = 0       # leading dense layers (DeepSeek: 1)
+    dense_d_ff: int = 0          # FFN width of those dense layers
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+    moe_chunks: int = 8          # token-chunked dispatch (memory bound)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    d_conv: int = 4
+    n_groups: int = 1
+    chunk: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    attn_every: int = 6          # shared attention block applied every N layers
+    shared_attn: bool = True     # one set of attention weights, reused
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    slstm_every: int = 8         # 1 sLSTM per this many layers (rest mLSTM)
+    proj_factor: float = 2.0
+    chunk: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    n_encoder_layers: int = 6
+    n_frames: int = 1500         # whisper 30s @ 50Hz after conv stub
+    frame_dim: int = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class VLMConfig:
+    n_patch_tokens: int = 256    # InternViT output tokens after pixel shuffle
+    patch_dim: int = 8192        # stubbed: already projected to d_model
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0              # 0 -> d_model // n_heads
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    vlm: Optional[VLMConfig] = None
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+    tie_embeddings: bool = False
+    mlp_kind: str = "swiglu"     # swiglu (3 matrices) | gelu (2 matrices)
+    # training-time knobs (hillclimb levers — shardtune searches over these)
+    remat: str = "block"         # none | block | full
+    scan_layers: bool = True
+    num_microbatches: int = 1
+    attn_q_chunk: int = 1024
+    attn_kv_chunk: int = 1024
+    param_dtype: str = "bfloat16"
+    # source annotation
+    source: str = ""
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or (self.d_model // self.n_heads)
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embedding + blocks), for roofline."""
+        d, v = self.d_model, self.vocab_size
+        total = v * d * (1 if self.tie_embeddings else 2)
+        hd = self.head_dim
+        attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+        if self.mla is not None:
+            m = self.mla
+            attn = (
+                d * m.q_lora_rank
+                + m.q_lora_rank * self.n_heads * (m.nope_head_dim + m.rope_head_dim)
+                + d * (m.kv_lora_rank + m.rope_head_dim)
+                + m.kv_lora_rank * self.n_heads * (m.nope_head_dim + m.v_head_dim)
+                + self.n_heads * m.v_head_dim * d
+            )
+        for layer in range(self.n_layers):
+            if self.family == "hybrid":
+                s = self.ssm
+                d_in = s.expand * d
+                total += d * (2 * d_in + 2 * s.n_groups * s.d_state) + d_in * d
+                total += d_in  # dt/A/D params order-of
+                continue
+            if self.family == "ssm" and self.xlstm is not None:
+                d_in = int(self.xlstm.proj_factor * d)
+                total += 2 * d * d_in + d_in * d + 3 * d_in * d_in // 4
+                continue
+            total += attn
+            if self.moe is not None and layer >= self.moe.first_k_dense:
+                total += self.moe.n_experts * 3 * d * self.moe.d_expert
+                total += self.moe.n_shared_experts * 3 * d * self.moe.d_expert
+                total += d * self.moe.n_experts  # router
+            elif self.moe is not None:
+                total += 3 * d * self.moe.dense_d_ff
+            else:
+                total += (3 if self.mlp_kind == "swiglu" else 2) * d * self.d_ff
+        if self.family == "hybrid" and self.hybrid is not None:
+            # one shared attention+MLP block
+            total += attn + 3 * d * self.d_ff
+        if self.encdec is not None:
+            enc_attn = 4 * d * d
+            nm = 3 if self.mlp_kind == "swiglu" else 2
+            total += self.encdec.n_encoder_layers * (enc_attn + nm * d * self.d_ff)
+            total += self.n_layers * enc_attn  # cross attention in decoder
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only routed-active experts)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        full = self.param_count()
+        inactive = (
+            (self.n_layers - m.first_k_dense)
+            * (m.n_experts - m.top_k)
+            * 3 * self.d_model * m.d_expert
+        )
+        return int(full - inactive)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", "train", 4096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524288, 1),
+}
+
+ARCH_IDS = [
+    "zamba2_1p2b",
+    "olmoe_1b_7b",
+    "deepseek_v2_236b",
+    "yi_34b",
+    "stablelm_12b",
+    "granite_20b",
+    "phi4_mini_3p8b",
+    "xlstm_350m",
+    "whisper_base",
+    "internvl2_76b",
+]
+
+# archs whose attention is full/quadratic -> long_500k is skipped (see DESIGN.md)
+SUBQUADRATIC = {"zamba2_1p2b", "xlstm_350m"}
+
+
+def shape_supported(arch_id: str, shape_name: str) -> Tuple[bool, str]:
+    if shape_name == "long_500k" and arch_id not in SUBQUADRATIC:
+        return False, "pure full-attention arch: long_500k needs sub-quadratic attention"
+    return True, ""
+
+
+def get_arch(arch_id: str, *, reduced: bool = False) -> ArchConfig:
+    arch_id = arch_id.replace("-", "_").replace(".", "p")
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; available: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.REDUCED if reduced else mod.CONFIG

@@ -1,0 +1,51 @@
+"""DeepSeek-V2 236B — MLA attention + 160-expert top-6 MoE with 2 shared
+experts and first-layer-dense [arXiv:2405.04434]."""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, MLAConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,
+    d_ff=1536,  # per routed expert
+    vocab_size=102400,
+    d_head=192,  # nope(128) + rope(64)
+    moe=MoEConfig(
+        n_experts=160,
+        top_k=6,
+        d_expert=1536,
+        n_shared_experts=2,
+        first_k_dense=1,
+        dense_d_ff=12288,
+        capacity_factor=1.25,
+        moe_chunks=8,
+    ),
+    mla=MLAConfig(
+        kv_lora_rank=512, q_lora_rank=1536, rope_head_dim=64,
+        nope_head_dim=128, v_head_dim=128,
+    ),
+    source="arXiv:2405.04434; hf:deepseek-ai/DeepSeek-V2",
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG,
+    name="deepseek-v2-reduced",
+    n_layers=4,
+    d_model=128,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=64,
+    vocab_size=256,
+    d_head=48,
+    moe=MoEConfig(
+        n_experts=8, top_k=2, d_expert=64, n_shared_experts=1,
+        first_k_dense=1, dense_d_ff=256, capacity_factor=1.5, moe_chunks=2,
+    ),
+    mla=MLAConfig(kv_lora_rank=32, q_lora_rank=48, rope_head_dim=16,
+                  nope_head_dim=32, v_head_dim=32),
+)

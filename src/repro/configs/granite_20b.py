@@ -1,0 +1,23 @@
+"""Granite-20B (code) — llama-arch with MQA (kv=1) [arXiv:2405.04324]."""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-20b",
+    family="dense",
+    n_layers=52,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=1,
+    d_ff=24576,
+    vocab_size=49152,
+    mlp_kind="gelu",  # gpt-bigcode 2-matrix MLP (20B nameplate)
+    source="arXiv:2405.04324; hf:ibm-granite/granite-20b-code-base",
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG, name="granite-reduced", n_layers=3, d_model=96, n_heads=6,
+    n_kv_heads=1, d_ff=256, vocab_size=128,
+)

@@ -1,0 +1,25 @@
+"""InternVL2-76B — InternViT frontend (stub) + 80L LLM backbone
+[arXiv:2404.16821]."""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, VLMConfig
+
+CONFIG = ArchConfig(
+    name="internvl2-76b",
+    family="vlm",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab_size=128256,
+    vlm=VLMConfig(n_patch_tokens=256, patch_dim=8192),
+    source="arXiv:2404.16821; hf:OpenGVLab/InternVL2-Llama3-76B",
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG, name="internvl2-reduced", n_layers=3, d_model=128, n_heads=8,
+    n_kv_heads=2, d_ff=384, vocab_size=256,
+    vlm=VLMConfig(n_patch_tokens=16, patch_dim=128),
+)

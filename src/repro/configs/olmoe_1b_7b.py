@@ -1,0 +1,30 @@
+"""OLMoE-1B-7B — 64-expert top-8 MoE [arXiv:2409.02060]."""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1024,  # per-expert FFN width
+    vocab_size=50304,
+    moe=MoEConfig(n_experts=64, top_k=8, d_expert=1024, capacity_factor=1.25),
+    source="arXiv:2409.02060; hf:allenai/OLMoE-1B-7B-0924",
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG,
+    name="olmoe-reduced",
+    n_layers=4,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=32,
+    vocab_size=128,
+    moe=MoEConfig(n_experts=8, top_k=2, d_expert=32, capacity_factor=1.5, moe_chunks=2),
+)

@@ -1,0 +1,22 @@
+"""Phi-4-mini 3.8B — dense RoPE+SwiGLU+GQA, 200k vocab [arXiv:2412.08905]."""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi4-mini-3.8b",
+    family="dense",
+    n_layers=32,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=200064,
+    source="arXiv:2412.08905; hf:microsoft/Phi-4-mini-instruct",
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG, name="phi4-reduced", n_layers=3, d_model=96, n_heads=6,
+    n_kv_heads=2, d_ff=256, vocab_size=256,
+)

@@ -1,0 +1,22 @@
+"""StableLM-2-12B — dense GQA [hf:stabilityai/stablelm-2-12b]."""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="stablelm-12b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=13824,
+    vocab_size=100352,
+    source="hf:stabilityai/stablelm-2-12b (per assignment: stablelm-2 family)",
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG, name="stablelm-reduced", n_layers=3, d_model=64, n_heads=4,
+    n_kv_heads=1, d_ff=192, vocab_size=128,
+)

@@ -1,0 +1,27 @@
+"""Whisper-base — encoder-decoder; conv frontend stubbed (precomputed frame
+embeddings) [arXiv:2212.04356]."""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, EncDecConfig
+
+CONFIG = ArchConfig(
+    name="whisper-base",
+    family="encdec",
+    n_layers=6,  # decoder layers
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51865,
+    mlp_kind="gelu",
+    tie_embeddings=True,
+    encdec=EncDecConfig(n_encoder_layers=6, n_frames=1500, frame_dim=512),
+    source="arXiv:2212.04356; hf:openai/whisper-base",
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG, name="whisper-reduced", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=4, d_ff=128, vocab_size=128,
+    encdec=EncDecConfig(n_encoder_layers=2, n_frames=60, frame_dim=64),
+)

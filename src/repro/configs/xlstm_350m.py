@@ -1,0 +1,24 @@
+"""xLSTM-350M — mLSTM (matrix memory) + sLSTM blocks [arXiv:2405.04517]."""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, XLSTMConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-350m",
+    family="ssm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,  # xLSTM blocks carry their own up-projection (proj_factor)
+    vocab_size=50304,
+    xlstm=XLSTMConfig(slstm_every=8, proj_factor=2.0, chunk=256),
+    source="arXiv:2405.04517 (xLSTM[7:1] ratio)",
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG, name="xlstm-reduced", n_layers=4, d_model=64, n_heads=2,
+    n_kv_heads=2, vocab_size=128,
+    xlstm=XLSTMConfig(slstm_every=4, proj_factor=2.0, chunk=16),
+)

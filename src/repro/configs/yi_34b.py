@@ -1,0 +1,23 @@
+"""Yi-34B — dense llama-arch GQA [arXiv:2403.04652]."""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="yi-34b",
+    family="dense",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=20480,
+    vocab_size=64000,
+    rope_theta=5000000.0,
+    source="arXiv:2403.04652; hf:01-ai/Yi-34B",
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG, name="yi-reduced", n_layers=3, d_model=112, n_heads=7, n_kv_heads=1,
+    d_ff=320, vocab_size=128,
+)

@@ -1,0 +1,32 @@
+"""Zamba2-1.2B — Mamba2 backbone + one shared attention block [arXiv:2411.15242]."""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig, HybridConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32000,
+    ssm=SSMConfig(d_state=64, head_dim=64, expand=2, d_conv=4, n_groups=1, chunk=256),
+    hybrid=HybridConfig(attn_every=6, shared_attn=True),
+    source="arXiv:2411.15242; hf:Zyphra/Zamba2-1.2B",
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG,
+    name="zamba2-reduced",
+    n_layers=6,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab_size=128,
+    ssm=SSMConfig(d_state=16, head_dim=16, expand=2, d_conv=4, n_groups=1, chunk=32),
+    hybrid=HybridConfig(attn_every=3, shared_attn=True),
+)

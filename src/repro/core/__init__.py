@@ -1,0 +1,50 @@
+"""PyVizier core primitives (the paper's §4)."""
+
+from repro.core.metadata import Metadata, MetadataDelta, Namespace
+from repro.core.search_space import (
+    ExternalType,
+    ParameterConfig,
+    ParameterDict,
+    ParameterType,
+    ParameterValue,
+    ScaleType,
+    SearchSpace,
+    SearchSpaceSelector,
+    lehmer_decode,
+    subset_decode,
+)
+from repro.core.study import (
+    CompletedTrials,
+    Measurement,
+    Metric,
+    MetricDict,
+    Study,
+    StudyState,
+    Trial,
+    TrialState,
+    TrialSuggestion,
+)
+from repro.core.study_config import (
+    AutomatedStoppingConfig,
+    AutomatedStoppingType,
+    MetricInformation,
+    MetricsConfig,
+    ObjectiveMetricGoal,
+    ObservationNoise,
+    ProblemStatement,
+    StudyConfig,
+)
+from repro.core import converters, early_stopping, pareto
+
+__all__ = [
+    "Metadata", "MetadataDelta", "Namespace",
+    "ExternalType", "ParameterConfig", "ParameterDict", "ParameterType",
+    "ParameterValue", "ScaleType", "SearchSpace", "SearchSpaceSelector",
+    "lehmer_decode", "subset_decode",
+    "CompletedTrials", "Measurement", "Metric", "MetricDict", "Study",
+    "StudyState", "Trial", "TrialState", "TrialSuggestion",
+    "AutomatedStoppingConfig", "AutomatedStoppingType", "MetricInformation",
+    "MetricsConfig", "ObjectiveMetricGoal", "ObservationNoise",
+    "ProblemStatement", "StudyConfig",
+    "converters", "early_stopping", "pareto",
+]

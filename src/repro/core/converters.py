@@ -1,0 +1,67 @@
+"""Converter objects matching the paper's Table 2 naming.
+
+PyVizier classes in this codebase carry their own ``to_proto``/``from_proto``;
+these converter classes exist so user code written against the paper's API
+(``TrialConverter.to_proto(trial)`` etc.) works verbatim.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.metadata import Metadata
+from repro.core.search_space import ParameterConfig, ParameterValue
+from repro.core.study import Measurement, Study, Trial
+from repro.core.study_config import MetricInformation, StudyConfig
+
+
+class _Converter:
+    _cls = None
+
+    @classmethod
+    def to_proto(cls, obj):
+        return obj.to_proto()
+
+    @classmethod
+    def from_proto(cls, proto):
+        return cls._cls.from_proto(proto)
+
+
+class TrialConverter(_Converter):
+    _cls = Trial
+
+    @classmethod
+    def to_protos(cls, trials: List[Trial]) -> list:
+        return [t.to_proto() for t in trials]
+
+    @classmethod
+    def from_protos(cls, protos: list) -> List[Trial]:
+        return [Trial.from_proto(p) for p in protos]
+
+
+class ParameterConfigConverter(_Converter):
+    _cls = ParameterConfig
+
+
+class ParameterValueConverter(_Converter):
+    _cls = ParameterValue
+
+
+class MeasurementConverter(_Converter):
+    _cls = Measurement
+
+
+class MetadataConverter(_Converter):
+    _cls = Metadata
+
+
+class StudyConfigConverter(_Converter):
+    _cls = StudyConfig
+
+
+class StudyConverter(_Converter):
+    _cls = Study
+
+
+class MetricInformationConverter(_Converter):
+    _cls = MetricInformation

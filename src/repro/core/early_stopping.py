@@ -1,0 +1,163 @@
+"""Automated/early stopping rules (paper Appendix B.1).
+
+Two modes, selected via StudyConfig.automated_stopping:
+
+* **Median automated stopping** — a pending trial is stopped if its best
+  objective so far is strictly below the median *performance* of all completed
+  trials up to the pending trial's last reported step, where performance is
+  the running average of reported objective values.
+
+* **Decay-curve automated stopping** — a Gaussian-process regressor over
+  (step, value) learning curves predicts the trial's final objective; the
+  trial is stopped if the probability of exceeding the best completed value is
+  below ``probability_threshold``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.study import Trial, TrialState
+from repro.core.study_config import (
+    AutomatedStoppingType,
+    ObjectiveMetricGoal,
+    StudyConfig,
+)
+
+
+def _curve(trial: Trial, metric: str, sign: float) -> List[tuple]:
+    """[(step, larger_is_better_value), ...] from intermediate measurements."""
+    out = []
+    for m in trial.measurements:
+        v = m.metrics.get_value(metric)
+        if v is not None and math.isfinite(v):
+            out.append((m.steps, sign * v))
+    return out
+
+
+def _running_average(values: Sequence[float]) -> List[float]:
+    out, acc = [], 0.0
+    for i, v in enumerate(values):
+        acc += v
+        out.append(acc / (i + 1))
+    return out
+
+
+def median_rule_should_stop(
+    pending: Trial, completed: List[Trial], config: StudyConfig
+) -> bool:
+    mi = config.single_objective_metric()
+    sign = 1.0 if mi.goal == ObjectiveMetricGoal.MAXIMIZE else -1.0
+    pc = _curve(pending, mi.name, sign)
+    if not pc:
+        return False
+    last_step = pc[-1][0]
+    best_pending = max(v for _, v in pc)
+    references = []
+    for t in completed:
+        cc = _curve(t, mi.name, sign)
+        upto = [v for s, v in cc if s <= last_step]
+        if upto:
+            references.append(_running_average(upto)[-1])
+    if len(references) < config.automated_stopping.min_completed_trials:
+        return False
+    return best_pending < float(np.median(references))
+
+
+# ---------------------------------------------------------------------------
+# Decay-curve rule: GP over (log-step) -> value, per-study, with a
+# monotone-trend prior captured by fitting residuals of a power-law mean.
+# ---------------------------------------------------------------------------
+
+
+def _fit_power_law(steps: np.ndarray, values: np.ndarray):
+    """Least-squares fit of v ~ a - b * s^(-c) with c fixed grid-searched."""
+    best = None
+    s = np.maximum(steps.astype(np.float64), 1.0)
+    for c in (0.3, 0.5, 0.7, 1.0):
+        X = np.stack([np.ones_like(s), -(s ** (-c))], axis=1)
+        coef, *_ = np.linalg.lstsq(X, values, rcond=None)
+        resid = values - X @ coef
+        sse = float(np.sum(resid**2))
+        if best is None or sse < best[0]:
+            best = (sse, coef, c)
+    return best[1], best[2]
+
+
+def _gp_posterior(x: np.ndarray, y: np.ndarray, x_star: float, noise: float = 1e-3):
+    """Tiny 1-D RBF GP posterior at x_star (mean, std)."""
+    if len(x) == 1:
+        return float(y[0]), 1.0
+    ell = max((x.max() - x.min()) / 2.0, 1e-3)
+    amp = max(float(np.var(y)), 1e-6)
+
+    def k(a, b):
+        d = (a[:, None] - b[None, :]) / ell
+        return amp * np.exp(-0.5 * d * d)
+
+    K = k(x, x) + noise * amp * np.eye(len(x))
+    ks = k(np.array([x_star]), x)[0]
+    try:
+        L = np.linalg.cholesky(K)
+        alpha = np.linalg.solve(L.T, np.linalg.solve(L, y))
+        v = np.linalg.solve(L, ks)
+        mean = float(ks @ alpha)
+        var = float(amp - v @ v)
+    except np.linalg.LinAlgError:
+        return float(np.mean(y)), float(np.std(y) + 1e-6)
+    return mean, math.sqrt(max(var, 1e-12))
+
+
+def decay_curve_should_stop(
+    pending: Trial, completed: List[Trial], config: StudyConfig
+) -> bool:
+    mi = config.single_objective_metric()
+    sign = 1.0 if mi.goal == ObjectiveMetricGoal.MAXIMIZE else -1.0
+    pc = _curve(pending, mi.name, sign)
+    if len(pc) < 3:
+        return False  # not enough curve to extrapolate
+    finals = [
+        sign * t.final_measurement.metrics.get_value(mi.name)
+        for t in completed
+        if t.state == TrialState.COMPLETED
+        and t.final_measurement is not None
+        and t.final_measurement.metrics.get_value(mi.name) is not None
+    ]
+    if not finals:
+        return False
+    best_final = max(finals)
+    steps = np.array([s for s, _ in pc], dtype=np.float64)
+    values = np.array([v for _, v in pc], dtype=np.float64)
+    horizon = max(float(max(t_steps(t) for t in completed) or steps[-1]), steps[-1])
+    # power-law trend + GP on residuals in log-step space
+    coef, c = _fit_power_law(steps, values)
+    trend = lambda s: coef[0] - coef[1] * np.maximum(s, 1.0) ** (-c)
+    resid = values - trend(steps)
+    lx = np.log(np.maximum(steps, 1.0))
+    mean_r, std_r = _gp_posterior(lx, resid, math.log(max(horizon, 1.0)))
+    pred_mean = float(trend(np.array([horizon]))[0]) + mean_r
+    pred_std = max(std_r, 1e-6)
+    # P(final > best_final)
+    z = (pred_mean - best_final) / pred_std
+    p_exceed = 0.5 * math.erfc(-z / math.sqrt(2.0))
+    return p_exceed < config.automated_stopping.probability_threshold
+
+
+def t_steps(trial: Trial) -> int:
+    return max((m.steps for m in trial.measurements), default=0)
+
+
+def should_stop(pending: Trial, all_trials: List[Trial], config: StudyConfig) -> bool:
+    """Dispatch on StudyConfig.automated_stopping; False if disabled."""
+    kind = config.automated_stopping.type
+    if kind == AutomatedStoppingType.NONE or config.is_multi_objective:
+        return False
+    completed = [t for t in all_trials if t.state == TrialState.COMPLETED]
+    if kind == AutomatedStoppingType.MEDIAN:
+        return median_rule_should_stop(pending, completed, config)
+    if kind == AutomatedStoppingType.DECAY_CURVE:
+        return decay_curve_should_stop(pending, completed, config)
+    return False

@@ -1,0 +1,200 @@
+"""Namespaced Metadata (paper §4.1, §6.3).
+
+Metadata is a key-value mapping with namespaces that prevent key collisions.
+It is *not interpreted* by the service: algorithm authors use it to persist
+policy state (SerializableDesigner.dump/recover), users use it for small
+arbitrary payloads, and it doubles as a side-channel between user code and
+algorithms.
+
+Values are strings or bytes (anything else must be serialized by the caller,
+e.g. json/msgpack) — mirroring google.protobuf.Any semantics without protobuf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Mapping, Optional, Tuple, Union
+
+MetadataValue = Union[str, bytes]
+
+
+def _check_value(value: MetadataValue) -> MetadataValue:
+    if not isinstance(value, (str, bytes)):
+        raise TypeError(
+            f"Metadata values must be str or bytes; got {type(value).__name__}. "
+            "Serialize structured state (e.g. json.dumps) before storing."
+        )
+    return value
+
+
+class Namespace(tuple):
+    """Hierarchical namespace, e.g. Namespace(('pythia', 'gp_bandit'))."""
+
+    def __new__(cls, components: Union[str, Tuple[str, ...], "Namespace"] = ()):
+        if isinstance(components, Namespace):
+            return super().__new__(cls, tuple(components))
+        if isinstance(components, str):
+            components = tuple(c for c in components.split(":") if c)
+        return super().__new__(cls, tuple(components))
+
+    def child(self, component: str) -> "Namespace":
+        return Namespace(tuple(self) + (component,))
+
+    def encode(self) -> str:
+        return ":".join(self)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"Namespace({self.encode()!r})"
+
+
+class Metadata:
+    """A namespaced key-value store.
+
+    ``md['key']`` reads/writes in the current namespace. ``md.ns('sub')``
+    returns a *view* into a child namespace sharing the same storage, so a
+    Policy can hand sub-namespaces to sub-components safely.
+    """
+
+    def __init__(
+        self,
+        initial: Optional[Mapping[str, MetadataValue]] = None,
+        *,
+        _store: Optional[Dict[str, Dict[str, MetadataValue]]] = None,
+        _namespace: Namespace = Namespace(),
+    ):
+        # _store maps encoded-namespace -> {key: value}
+        self._store: Dict[str, Dict[str, MetadataValue]] = (
+            _store if _store is not None else {}
+        )
+        self._namespace = Namespace(_namespace)
+        if initial:
+            for k, v in initial.items():
+                self[k] = v
+
+    # -- namespace handling -------------------------------------------------
+    @property
+    def namespace(self) -> Namespace:
+        return self._namespace
+
+    def ns(self, component: str) -> "Metadata":
+        """Returns a view of the child namespace (shared storage)."""
+        return Metadata(_store=self._store, _namespace=self._namespace.child(component))
+
+    def abs_ns(self, namespace: Union[str, Namespace] = Namespace()) -> "Metadata":
+        """Returns a view of an absolute namespace (shared storage)."""
+        return Metadata(_store=self._store, _namespace=Namespace(namespace))
+
+    def namespaces(self) -> Tuple[Namespace, ...]:
+        return tuple(Namespace(k) for k, v in self._store.items() if v)
+
+    # -- mapping protocol (current namespace) --------------------------------
+    def _bucket(self) -> Dict[str, MetadataValue]:
+        return self._store.setdefault(self._namespace.encode(), {})
+
+    def __getitem__(self, key: str) -> MetadataValue:
+        return self._bucket()[key]
+
+    def __setitem__(self, key: str, value: MetadataValue) -> None:
+        self._bucket()[key] = _check_value(value)
+
+    def __delitem__(self, key: str) -> None:
+        del self._bucket()[key]
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._bucket()
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(dict(self._bucket()))
+
+    def __len__(self) -> int:
+        return len(self._bucket())
+
+    def get(self, key: str, default=None):
+        return self._bucket().get(key, default)
+
+    def keys(self):
+        return self._bucket().keys()
+
+    def items(self):
+        return self._bucket().items()
+
+    def update(self, other: Mapping[str, MetadataValue]) -> None:
+        for k, v in other.items():
+            self[k] = v
+
+    # -- merge / serialization ----------------------------------------------
+    def attach(self, other: "Metadata") -> None:
+        """Merges all namespaces of ``other`` into this metadata (last wins)."""
+        for ns_key, bucket in other._store.items():
+            dst = self._store.setdefault(ns_key, {})
+            dst.update(bucket)
+
+    def to_proto(self) -> list:
+        """Wire format: list of {key, ns, value} dicts (value str or bytes)."""
+        out = []
+        for ns_key in sorted(self._store):
+            for key in sorted(self._store[ns_key]):
+                out.append({"key": key, "ns": ns_key, "value": self._store[ns_key][key]})
+        return out
+
+    @classmethod
+    def from_proto(cls, proto: Optional[list]) -> "Metadata":
+        md = cls()
+        for item in proto or ():
+            md._store.setdefault(item.get("ns", ""), {})[item["key"]] = item["value"]
+        return md
+
+    def __eq__(self, other) -> bool:
+        if not isinstance(other, Metadata):
+            return NotImplemented
+        clean = lambda s: {k: v for k, v in s.items() if v}
+        return clean(self._store) == clean(other._store)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"Metadata(ns={self._namespace.encode()!r}, store={self._store!r})"
+
+
+@dataclasses.dataclass
+class MetadataDelta:
+    """A batch of metadata updates produced by a Pythia policy (paper §6.3).
+
+    ``on_study`` updates StudySpec-level metadata; ``on_trials`` maps trial id
+    to per-Trial metadata. Applied atomically by the service.
+    """
+
+    on_study: Metadata = dataclasses.field(default_factory=Metadata)
+    on_trials: Dict[int, Metadata] = dataclasses.field(default_factory=dict)
+
+    def assign(
+        self,
+        namespace: str,
+        key: str,
+        value: MetadataValue,
+        *,
+        trial_id: Optional[int] = None,
+    ) -> None:
+        if trial_id is None:
+            self.on_study.abs_ns(Namespace(namespace))[key] = value
+        else:
+            md = self.on_trials.setdefault(trial_id, Metadata())
+            md.abs_ns(Namespace(namespace))[key] = value
+
+    def empty(self) -> bool:
+        return not self.on_study._store and not self.on_trials
+
+    def to_proto(self) -> dict:
+        return {
+            "on_study": self.on_study.to_proto(),
+            "on_trials": {str(tid): md.to_proto() for tid, md in self.on_trials.items()},
+        }
+
+    @classmethod
+    def from_proto(cls, proto: Optional[dict]) -> "MetadataDelta":
+        proto = proto or {}
+        return cls(
+            on_study=Metadata.from_proto(proto.get("on_study")),
+            on_trials={
+                int(tid): Metadata.from_proto(md)
+                for tid, md in (proto.get("on_trials") or {}).items()
+            },
+        )

@@ -1,0 +1,119 @@
+"""Multi-objective (Pareto) utilities in JAX (paper §4.1 multi-objective).
+
+All functions take objective matrices ``Y`` of shape (n, k) in
+**larger-is-better** convention (StudyConfig.objective_values already flips
+MINIMIZE metrics).
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def pareto_dominated_mask(y: jnp.ndarray) -> jnp.ndarray:
+    """Boolean mask of points dominated by some other point.
+
+    A point i is dominated iff there exists j with Y[j] >= Y[i] elementwise and
+    Y[j] > Y[i] somewhere. O(n^2 k) vectorized — fine for typical study sizes.
+    """
+    ge = jnp.all(y[:, None, :] >= y[None, :, :], axis=-1)  # ge[j, i]: j >= i
+    gt = jnp.any(y[:, None, :] > y[None, :, :], axis=-1)
+    dominates = ge & gt  # dominates[j, i]: j dominates i
+    return jnp.any(dominates, axis=0)
+
+
+def pareto_frontier_indices(y) -> List[int]:
+    """Indices of non-dominated points (f64 numpy: denormal-exact)."""
+    y = np.asarray(y, dtype=np.float64)
+    if y.ndim != 2:
+        raise ValueError(f"expected (n, k) objectives, got shape {y.shape}")
+    if y.shape[0] == 0:
+        return []
+    ge = np.all(y[:, None, :] >= y[None, :, :], axis=-1)
+    gt = np.any(y[:, None, :] > y[None, :, :], axis=-1)
+    dominated = np.any(ge & gt, axis=0)
+    return [i for i in range(y.shape[0]) if not dominated[i]]
+
+
+@jax.jit
+def _hv_mc(y: jnp.ndarray, ref: jnp.ndarray, key: jax.Array, upper: jnp.ndarray) -> jnp.ndarray:
+    n_samples = 16384
+    k = y.shape[1]
+    u = jax.random.uniform(key, (n_samples, k))
+    pts = ref + u * (upper - ref)
+    dominated = jnp.any(jnp.all(y[None, :, :] >= pts[:, None, :], axis=-1), axis=1)
+    vol_box = jnp.prod(upper - ref)
+    return jnp.mean(dominated.astype(jnp.float32)) * vol_box
+
+
+def hypervolume(y, reference_point, *, seed: int = 0) -> float:
+    """Hypervolume dominated by Y w.r.t. a reference point.
+
+    Exact for k<=2 (sweep); Monte-Carlo estimate for k>=3 (16384 samples).
+    """
+    y = np.asarray(y, dtype=np.float32)
+    ref = np.asarray(reference_point, dtype=np.float32)
+    if y.size == 0:
+        return 0.0
+    y = y[np.all(y > ref, axis=1)]
+    if y.size == 0:
+        return 0.0
+    k = y.shape[1]
+    if k == 1:
+        return float(np.max(y[:, 0]) - ref[0])
+    if k == 2:
+        idx = np.argsort(-y[:, 0])
+        ys = y[idx]
+        hv, prev_y1 = 0.0, ref[1]
+        for x0, x1 in ys:
+            if x1 > prev_y1:
+                hv += (x0 - ref[0]) * (x1 - prev_y1)
+                prev_y1 = x1
+        return float(hv)
+    upper = np.max(y, axis=0)
+    return float(
+        _hv_mc(jnp.asarray(y), jnp.asarray(ref), jax.random.PRNGKey(seed), jnp.asarray(upper))
+    )
+
+
+def crowding_distance(y) -> np.ndarray:
+    """NSGA-II crowding distance (np; used inside NSGA2Designer)."""
+    y = np.asarray(y, dtype=np.float64)
+    n, k = y.shape
+    dist = np.zeros(n)
+    if n <= 2:
+        return np.full(n, np.inf)
+    for m in range(k):
+        order = np.argsort(y[:, m])
+        dist[order[0]] = dist[order[-1]] = np.inf
+        span = y[order[-1], m] - y[order[0], m]
+        if span <= 0:
+            continue
+        dist[order[1:-1]] += (y[order[2:], m] - y[order[:-2], m]) / span
+    return dist
+
+
+def non_dominated_sort(y) -> List[np.ndarray]:
+    """Fast non-dominated sort: list of fronts (index arrays), best first."""
+    y = np.asarray(y, dtype=np.float64)
+    n = y.shape[0]
+    ge = np.all(y[:, None, :] >= y[None, :, :], axis=-1)
+    gt = np.any(y[:, None, :] > y[None, :, :], axis=-1)
+    dominates = ge & gt  # [j, i]: j dominates i
+    dom_count = dominates.sum(axis=0).astype(np.int64)  # how many dominate i
+    fronts: List[np.ndarray] = []
+    remaining = np.ones(n, dtype=bool)
+    while remaining.any():
+        front = np.where(remaining & (dom_count == 0))[0]
+        if front.size == 0:  # numerical degenerate (duplicates): take the rest
+            front = np.where(remaining)[0]
+        fronts.append(front)
+        remaining[front] = False
+        # removing the front decrements domination counts of its dominatees
+        dom_count = dom_count - dominates[front].sum(axis=0)
+    return fronts

@@ -1,0 +1,595 @@
+"""Search space primitives (paper §4.2, Appendix A).
+
+ParameterConfig covers the four primitives — DOUBLE, INTEGER, DISCRETE,
+CATEGORICAL — each numerical one with a scaling type, and each potentially
+carrying *conditional* child parameters that are only active when the parent
+takes specific values.
+
+SearchSpace + SearchSpaceSelector reproduce the PyVizier construction API:
+
+    space = SearchSpace()
+    root = space.select_root()
+    root.add_float_param('learning_rate', 1e-4, 1e-2, scale_type=ScaleType.LOG)
+    model = root.add_categorical_param('model', ['linear', 'dnn'])
+    model.select_values(['dnn']).add_int_param('num_layers', 1, 5)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+import random as _random
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+ParameterValueTypes = Union[float, int, str, bool]
+
+
+class ParameterType(enum.Enum):
+    DOUBLE = "DOUBLE"
+    INTEGER = "INTEGER"
+    DISCRETE = "DISCRETE"
+    CATEGORICAL = "CATEGORICAL"
+
+    def is_numeric(self) -> bool:
+        return self != ParameterType.CATEGORICAL
+
+
+class ScaleType(enum.Enum):
+    """Toggles the transformed space the optimizer works in (paper §4.2)."""
+
+    LINEAR = "UNIT_LINEAR_SCALE"
+    LOG = "UNIT_LOG_SCALE"
+    REVERSE_LOG = "UNIT_REVERSE_LOG_SCALE"
+    UNIFORM_DISCRETE = "UNIT_UNIFORM_DISCRETE"
+
+
+class ExternalType(enum.Enum):
+    """How INTEGER/DISCRETE values surface to user code."""
+
+    INTERNAL = "INTERNAL"
+    BOOLEAN = "BOOLEAN"
+    INTEGER = "INTEGER"
+    FLOAT = "FLOAT"
+
+
+@dataclasses.dataclass(frozen=True)
+class ParameterValue:
+    """A single parameter assignment value (PyVizier ParameterValue)."""
+
+    value: ParameterValueTypes
+
+    @property
+    def as_float(self) -> float:
+        if isinstance(self.value, bool):
+            return float(self.value)
+        return float(self.value)  # raises for non-numeric strings
+
+    @property
+    def as_int(self) -> int:
+        return int(self.as_float)
+
+    @property
+    def as_str(self) -> str:
+        return str(self.value)
+
+    @property
+    def as_bool(self) -> bool:
+        if isinstance(self.value, bool):
+            return self.value
+        if isinstance(self.value, str):
+            return self.value.lower() == "true"
+        return bool(self.value)
+
+    def to_proto(self) -> dict:
+        if isinstance(self.value, bool):
+            return {"string_value": "true" if self.value else "false"}
+        if isinstance(self.value, (int, float)):
+            return {"number_value": float(self.value)}
+        return {"string_value": str(self.value)}
+
+    @classmethod
+    def from_proto(cls, proto: dict) -> "ParameterValue":
+        if "number_value" in proto:
+            v = proto["number_value"]
+            return cls(int(v) if float(v).is_integer() and isinstance(v, (int, float)) and abs(v) < 2**53 and v == int(v) else v)
+        return cls(proto.get("string_value", ""))
+
+
+class ParameterDict(dict):
+    """dict[str, ParameterValue] with convenient raw-value assignment."""
+
+    def __setitem__(self, key: str, value):
+        if not isinstance(value, ParameterValue):
+            value = ParameterValue(value)
+        super().__setitem__(key, value)
+
+    def get_value(self, key: str, default=None):
+        if key in self:
+            return self[key].value
+        return default
+
+    def as_dict(self) -> Dict[str, ParameterValueTypes]:
+        return {k: v.value for k, v in self.items()}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, ParameterValueTypes]) -> "ParameterDict":
+        pd = cls()
+        for k, v in d.items():
+            pd[k] = v
+        return pd
+
+
+def _lehmer_encode_bounds(n: int) -> List[int]:
+    """Bounds [n, n-1, ..., 1] for the Lehmer-code reparameterization of
+    permutations over [n] (paper Appendix A.1.1)."""
+    return list(range(n, 0, -1))
+
+
+def lehmer_decode(code: Sequence[int]) -> List[int]:
+    """Decodes a Lehmer code into a permutation of range(len(code))."""
+    pool = list(range(len(code)))
+    out = []
+    for c in code:
+        out.append(pool.pop(c))
+    return out
+
+
+def subset_decode(code: Sequence[int], n: int) -> List[int]:
+    """Decodes indices-without-replacement into a k-subset of range(n)."""
+    pool = list(range(n))
+    return [pool.pop(c) for c in code]
+
+
+@dataclasses.dataclass
+class ParameterConfig:
+    """Specification for a single parameter (PyVizier ParameterConfig)."""
+
+    name: str
+    type: ParameterType
+    bounds: Optional[Tuple[float, float]] = None  # DOUBLE / INTEGER
+    feasible_values: Optional[List[float]] = None  # DISCRETE
+    categories: Optional[List[str]] = None  # CATEGORICAL
+    scale_type: Optional[ScaleType] = None
+    default_value: Optional[ParameterValueTypes] = None
+    external_type: ExternalType = ExternalType.INTERNAL
+    # Conditional children: list of (matching parent values, child config).
+    children: List[Tuple[List[ParameterValueTypes], "ParameterConfig"]] = dataclasses.field(
+        default_factory=list
+    )
+
+    def __post_init__(self):
+        self.validate()
+
+    # -- validation ----------------------------------------------------------
+    def validate(self) -> None:
+        if self.type in (ParameterType.DOUBLE, ParameterType.INTEGER):
+            if self.bounds is None:
+                raise ValueError(f"{self.name}: {self.type} requires bounds")
+            lo, hi = self.bounds
+            if not lo <= hi:
+                raise ValueError(f"{self.name}: bounds must satisfy min <= max, got {self.bounds}")
+            if self.type == ParameterType.INTEGER and (
+                int(lo) != lo or int(hi) != hi
+            ):
+                raise ValueError(f"{self.name}: INTEGER bounds must be integral")
+        elif self.type == ParameterType.DISCRETE:
+            if not self.feasible_values:
+                raise ValueError(f"{self.name}: DISCRETE requires feasible_values")
+            fv = sorted(float(v) for v in self.feasible_values)
+            if len(set(fv)) != len(fv):
+                raise ValueError(f"{self.name}: duplicate feasible_values")
+            self.feasible_values = fv
+        elif self.type == ParameterType.CATEGORICAL:
+            if not self.categories:
+                raise ValueError(f"{self.name}: CATEGORICAL requires categories")
+            if len(set(self.categories)) != len(self.categories):
+                raise ValueError(f"{self.name}: duplicate categories")
+        if self.scale_type in (ScaleType.LOG, ScaleType.REVERSE_LOG):
+            lo, _ = self.bounds if self.bounds else (min(self.feasible_values), 0)
+            if lo <= 0:
+                raise ValueError(
+                    f"{self.name}: {self.scale_type} scaling requires strictly positive domain"
+                )
+        if self.scale_type is not None and self.type == ParameterType.CATEGORICAL:
+            raise ValueError(f"{self.name}: categorical parameters cannot have a scale_type")
+        if self.default_value is not None and not self.contains(
+            ParameterValue(self.default_value)
+        ):
+            raise ValueError(f"{self.name}: default {self.default_value!r} is infeasible")
+
+    # -- feasibility ----------------------------------------------------------
+    def contains(self, value: ParameterValue) -> bool:
+        try:
+            if self.type == ParameterType.DOUBLE:
+                lo, hi = self.bounds
+                return lo <= value.as_float <= hi
+            if self.type == ParameterType.INTEGER:
+                lo, hi = self.bounds
+                f = value.as_float
+                return f == int(f) and lo <= f <= hi
+            if self.type == ParameterType.DISCRETE:
+                return any(
+                    math.isclose(value.as_float, fv, rel_tol=1e-12, abs_tol=1e-12)
+                    for fv in self.feasible_values
+                )
+            return value.as_str in self.categories
+        except (TypeError, ValueError):
+            return False
+
+    @property
+    def num_feasible_values(self) -> float:
+        if self.type == ParameterType.DOUBLE:
+            return math.inf
+        if self.type == ParameterType.INTEGER:
+            return self.bounds[1] - self.bounds[0] + 1
+        if self.type == ParameterType.DISCRETE:
+            return len(self.feasible_values)
+        return len(self.categories)
+
+    # -- [0,1] featurization (scaling-aware; used by all numeric designers) ---
+    def to_unit(self, value: ParameterValue) -> float:
+        """Maps a feasible value into [0, 1] honoring the scale_type."""
+        if self.type == ParameterType.CATEGORICAL:
+            return self.categories.index(value.as_str) / max(1, len(self.categories) - 1)
+        if self.type == ParameterType.DISCRETE and self.scale_type in (
+            None,
+            ScaleType.UNIFORM_DISCRETE,
+        ):
+            idx = min(
+                range(len(self.feasible_values)),
+                key=lambda i: abs(self.feasible_values[i] - value.as_float),
+            )
+            return idx / max(1, len(self.feasible_values) - 1)
+        lo, hi = self._continuous_bounds()
+        v = min(max(value.as_float, lo), hi)
+        if hi == lo:
+            return 0.0
+        if self.scale_type == ScaleType.LOG:
+            return (math.log(v) - math.log(lo)) / (math.log(hi) - math.log(lo))
+        if self.scale_type == ScaleType.REVERSE_LOG:
+            return 1.0 - (math.log(hi + lo - v) - math.log(lo)) / (
+                math.log(hi) - math.log(lo)
+            )
+        return (v - lo) / (hi - lo)
+
+    def from_unit(self, u: float) -> ParameterValue:
+        """Inverse of to_unit: maps [0,1] to a feasible value."""
+        u = min(max(float(u), 0.0), 1.0)
+        if self.type == ParameterType.CATEGORICAL:
+            idx = int(round(u * (len(self.categories) - 1)))
+            return ParameterValue(self.categories[idx])
+        if self.type == ParameterType.DISCRETE and self.scale_type in (
+            None,
+            ScaleType.UNIFORM_DISCRETE,
+        ):
+            idx = int(round(u * (len(self.feasible_values) - 1)))
+            return ParameterValue(self.feasible_values[idx])
+        lo, hi = self._continuous_bounds()
+        if self.scale_type == ScaleType.LOG:
+            v = math.exp(math.log(lo) + u * (math.log(hi) - math.log(lo)))
+        elif self.scale_type == ScaleType.REVERSE_LOG:
+            v = hi + lo - math.exp(math.log(lo) + (1 - u) * (math.log(hi) - math.log(lo)))
+        else:
+            v = lo + u * (hi - lo)
+        if self.type == ParameterType.INTEGER:
+            return ParameterValue(int(round(min(max(v, lo), hi))))
+        if self.type == ParameterType.DISCRETE:
+            nearest = min(self.feasible_values, key=lambda fv: abs(fv - v))
+            return ParameterValue(nearest)
+        # clamp: exp/log roundtrips can overshoot bounds by an ulp
+        return ParameterValue(float(min(max(v, lo), hi)))
+
+    def _continuous_bounds(self) -> Tuple[float, float]:
+        if self.bounds is not None:
+            return float(self.bounds[0]), float(self.bounds[1])
+        return float(self.feasible_values[0]), float(self.feasible_values[-1])
+
+    def sample(self, rng: Optional[_random.Random] = None) -> ParameterValue:
+        rng = rng or _random
+        if self.type == ParameterType.CATEGORICAL:
+            return ParameterValue(rng.choice(self.categories))
+        if self.type == ParameterType.DISCRETE and self.scale_type in (
+            None,
+            ScaleType.UNIFORM_DISCRETE,
+        ):
+            return ParameterValue(rng.choice(self.feasible_values))
+        return self.from_unit(rng.random())
+
+    # -- conditional children --------------------------------------------------
+    def add_child(
+        self, matching_values: Sequence[ParameterValueTypes], child: "ParameterConfig"
+    ) -> None:
+        for v in matching_values:
+            if not self.contains(ParameterValue(v)):
+                raise ValueError(
+                    f"{self.name}: conditional match value {v!r} is infeasible"
+                )
+        self.children.append((list(matching_values), child))
+
+    def active_children(self, value: ParameterValue) -> List["ParameterConfig"]:
+        out = []
+        for matches, child in self.children:
+            if any(ParameterValue(m).value == value.value or
+                   (isinstance(m, (int, float)) and not isinstance(m, bool) and
+                    isinstance(value.value, (int, float)) and
+                    math.isclose(float(m), value.as_float, rel_tol=1e-12, abs_tol=1e-12))
+                   for m in matches):
+                out.append(child)
+        return out
+
+    # -- wire format (Vertex Vizier StudySpec.ParameterSpec field names) ------
+    def to_proto(self) -> dict:
+        p: Dict[str, Any] = {"parameter_id": self.name}
+        if self.type == ParameterType.DOUBLE:
+            p["double_value_spec"] = {"min_value": self.bounds[0], "max_value": self.bounds[1]}
+        elif self.type == ParameterType.INTEGER:
+            p["integer_value_spec"] = {
+                "min_value": int(self.bounds[0]),
+                "max_value": int(self.bounds[1]),
+            }
+        elif self.type == ParameterType.DISCRETE:
+            p["discrete_value_spec"] = {"values": list(self.feasible_values)}
+        else:
+            p["categorical_value_spec"] = {"values": list(self.categories)}
+        if self.scale_type is not None:
+            p["scale_type"] = self.scale_type.value
+        if self.default_value is not None:
+            p["default_value"] = ParameterValue(self.default_value).to_proto()
+        if self.external_type != ExternalType.INTERNAL:
+            p["external_type"] = self.external_type.value
+        if self.children:
+            p["conditional_parameter_specs"] = [
+                {
+                    "parent_values": [ParameterValue(v).to_proto() for v in matches],
+                    "parameter_spec": child.to_proto(),
+                }
+                for matches, child in self.children
+            ]
+        return p
+
+    @classmethod
+    def from_proto(cls, p: dict) -> "ParameterConfig":
+        kwargs: Dict[str, Any] = {"name": p["parameter_id"]}
+        if "double_value_spec" in p:
+            s = p["double_value_spec"]
+            kwargs["type"] = ParameterType.DOUBLE
+            kwargs["bounds"] = (float(s["min_value"]), float(s["max_value"]))
+        elif "integer_value_spec" in p:
+            s = p["integer_value_spec"]
+            kwargs["type"] = ParameterType.INTEGER
+            kwargs["bounds"] = (int(s["min_value"]), int(s["max_value"]))
+        elif "discrete_value_spec" in p:
+            kwargs["type"] = ParameterType.DISCRETE
+            kwargs["feasible_values"] = list(p["discrete_value_spec"]["values"])
+        else:
+            kwargs["type"] = ParameterType.CATEGORICAL
+            kwargs["categories"] = list(p["categorical_value_spec"]["values"])
+        if "scale_type" in p:
+            kwargs["scale_type"] = ScaleType(p["scale_type"])
+        if "default_value" in p:
+            kwargs["default_value"] = ParameterValue.from_proto(p["default_value"]).value
+        if "external_type" in p:
+            kwargs["external_type"] = ExternalType(p["external_type"])
+        cfg = cls(**kwargs)
+        for cps in p.get("conditional_parameter_specs", ()):
+            child = cls.from_proto(cps["parameter_spec"])
+            matches = [ParameterValue.from_proto(v).value for v in cps["parent_values"]]
+            cfg.add_child(matches, child)
+        return cfg
+
+
+class SearchSpaceSelector:
+    """Fluent builder over a list of ParameterConfigs (paper Code Block 1)."""
+
+    def __init__(self, configs: List[ParameterConfig]):
+        self._configs = configs
+
+    # base adders -------------------------------------------------------------
+    def _add(self, cfg: ParameterConfig) -> "SearchSpaceSelector":
+        if any(c.name == cfg.name for c in self._configs):
+            raise ValueError(f"duplicate parameter name {cfg.name!r} in this scope")
+        self._configs.append(cfg)
+        return _ParamSelector(cfg)
+
+    def add_float_param(
+        self,
+        name: str,
+        min_value: float,
+        max_value: float,
+        *,
+        scale_type: Optional[ScaleType] = ScaleType.LINEAR,
+        default_value: Optional[float] = None,
+    ):
+        return self._add(
+            ParameterConfig(
+                name,
+                ParameterType.DOUBLE,
+                bounds=(float(min_value), float(max_value)),
+                scale_type=scale_type,
+                default_value=default_value,
+            )
+        )
+
+    # alias matching paper pseudocode
+    add_float = add_float_param
+
+    def add_int_param(
+        self,
+        name: str,
+        min_value: int,
+        max_value: int,
+        *,
+        scale_type: Optional[ScaleType] = None,
+        default_value: Optional[int] = None,
+    ):
+        return self._add(
+            ParameterConfig(
+                name,
+                ParameterType.INTEGER,
+                bounds=(int(min_value), int(max_value)),
+                scale_type=scale_type,
+                default_value=default_value,
+            )
+        )
+
+    add_int = add_int_param
+
+    def add_discrete_param(
+        self,
+        name: str,
+        feasible_values: Sequence[float],
+        *,
+        scale_type: Optional[ScaleType] = None,
+        default_value: Optional[float] = None,
+    ):
+        return self._add(
+            ParameterConfig(
+                name,
+                ParameterType.DISCRETE,
+                feasible_values=[float(v) for v in feasible_values],
+                scale_type=scale_type,
+                default_value=default_value,
+            )
+        )
+
+    def add_categorical_param(
+        self,
+        name: str,
+        feasible_values: Sequence[str],
+        *,
+        default_value: Optional[str] = None,
+    ):
+        return self._add(
+            ParameterConfig(
+                name,
+                ParameterType.CATEGORICAL,
+                categories=list(feasible_values),
+                default_value=default_value,
+            )
+        )
+
+    def add_bool_param(self, name: str, *, default_value: Optional[bool] = None):
+        sel = self._add(
+            ParameterConfig(
+                name,
+                ParameterType.CATEGORICAL,
+                categories=["false", "true"],
+                external_type=ExternalType.BOOLEAN,
+                default_value=None
+                if default_value is None
+                else ("true" if default_value else "false"),
+            )
+        )
+        return sel
+
+
+class _ParamSelector(SearchSpaceSelector):
+    """Selector bound to one parameter; supports conditional children."""
+
+    def __init__(self, config: ParameterConfig):
+        super().__init__([config])
+        self._param = config
+
+    def select_values(self, values: Sequence[ParameterValueTypes]) -> "_ChildScope":
+        return _ChildScope(self._param, list(values))
+
+
+class _ChildScope(SearchSpaceSelector):
+    """Scope that adds conditional children active for given parent values."""
+
+    def __init__(self, parent: ParameterConfig, values: List[ParameterValueTypes]):
+        self._parent = parent
+        self._values = values
+        super().__init__([])
+
+    def _add(self, cfg: ParameterConfig):
+        self._parent.add_child(self._values, cfg)
+        return _ParamSelector(cfg)
+
+
+@dataclasses.dataclass
+class SearchSpace:
+    """The feasible space X: a tree of ParameterConfigs (paper §4.2)."""
+
+    parameters: List[ParameterConfig] = dataclasses.field(default_factory=list)
+
+    def select_root(self) -> SearchSpaceSelector:
+        return SearchSpaceSelector(self.parameters)
+
+    # -- traversal -------------------------------------------------------------
+    def all_parameters(self) -> List[ParameterConfig]:
+        """All configs in the tree (DFS), including inactive-able children."""
+        out: List[ParameterConfig] = []
+
+        def visit(cfg: ParameterConfig):
+            out.append(cfg)
+            for _, child in cfg.children:
+                visit(child)
+
+        for cfg in self.parameters:
+            visit(cfg)
+        return out
+
+    def get(self, name: str) -> ParameterConfig:
+        for cfg in self.all_parameters():
+            if cfg.name == name:
+                return cfg
+        raise KeyError(name)
+
+    @property
+    def is_conditional(self) -> bool:
+        return any(cfg.children for cfg in self.parameters)
+
+    # -- validation / sampling ---------------------------------------------------
+    def active_parameters(self, parameters: ParameterDict) -> List[ParameterConfig]:
+        """Configs active under the given (possibly partial) assignment."""
+        active: List[ParameterConfig] = []
+
+        def visit(cfg: ParameterConfig):
+            active.append(cfg)
+            if cfg.name in parameters:
+                for child in cfg.active_children(parameters[cfg.name]):
+                    visit(child)
+
+        for cfg in self.parameters:
+            visit(cfg)
+        return active
+
+    def validate_parameters(self, parameters: ParameterDict) -> None:
+        """Raises if assignment is infeasible or has in/extra-active params."""
+        active = self.active_parameters(parameters)
+        active_names = {c.name for c in active}
+        for cfg in active:
+            if cfg.name not in parameters:
+                raise ValueError(f"missing active parameter {cfg.name!r}")
+            if not cfg.contains(parameters[cfg.name]):
+                raise ValueError(
+                    f"value {parameters[cfg.name].value!r} infeasible for {cfg.name!r}"
+                )
+        for name in parameters:
+            if name not in active_names:
+                raise ValueError(f"parameter {name!r} is not active under this assignment")
+
+    def sample(self, rng: Optional[_random.Random] = None) -> ParameterDict:
+        """Uniform (scaling-aware) sample respecting conditionality."""
+        rng = rng or _random
+        out = ParameterDict()
+
+        def visit(cfg: ParameterConfig):
+            value = cfg.sample(rng)
+            out[cfg.name] = value
+            for child in cfg.active_children(value):
+                visit(child)
+
+        for cfg in self.parameters:
+            visit(cfg)
+        return out
+
+    # -- wire ---------------------------------------------------------------------
+    def to_proto(self) -> list:
+        return [c.to_proto() for c in self.parameters]
+
+    @classmethod
+    def from_proto(cls, protos: list) -> "SearchSpace":
+        return cls(parameters=[ParameterConfig.from_proto(p) for p in protos or ()])

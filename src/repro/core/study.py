@@ -1,0 +1,269 @@
+"""Study / Trial / Measurement primitives (paper §3, §4.1).
+
+A Study is a single optimization run over a feasible space; a Trial is the
+container for a suggestion x (and, once COMPLETED, its objective value(s)).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import time
+from typing import Dict, List, Optional
+
+from repro.core.metadata import Metadata
+from repro.core.search_space import ParameterDict, ParameterValue
+
+
+class TrialState(enum.Enum):
+    REQUESTED = "REQUESTED"
+    ACTIVE = "ACTIVE"          # suggested, not yet evaluated (paper §4.1)
+    STOPPING = "STOPPING"      # early-stop signal sent, awaiting final report
+    COMPLETED = "SUCCEEDED"    # evaluation finished (proto name: SUCCEEDED)
+    INFEASIBLE = "INFEASIBLE"  # persistent failure; do not retry (paper §2)
+
+    @property
+    def is_terminal(self) -> bool:
+        return self in (TrialState.COMPLETED, TrialState.INFEASIBLE)
+
+
+class StudyState(enum.Enum):
+    ACTIVE = "ACTIVE"
+    INACTIVE = "INACTIVE"
+    COMPLETED = "COMPLETED"
+
+
+@dataclasses.dataclass
+class Metric:
+    """A single metric observation; std captures known observation noise."""
+
+    value: float
+    std: Optional[float] = None
+
+    def __post_init__(self):
+        self.value = float(self.value)
+
+    def to_proto(self) -> dict:
+        p = {"value": self.value}
+        if self.std is not None:
+            p["std"] = self.std
+        return p
+
+    @classmethod
+    def from_proto(cls, p) -> "Metric":
+        if isinstance(p, dict):
+            return cls(value=p["value"], std=p.get("std"))
+        return cls(value=float(p))
+
+
+class MetricDict(dict):
+    """dict[str, Metric] accepting raw floats on assignment."""
+
+    def __setitem__(self, key: str, value):
+        if not isinstance(value, Metric):
+            value = Metric(value)
+        super().__setitem__(key, value)
+
+    def get_value(self, key: str, default: Optional[float] = None) -> Optional[float]:
+        if key in self:
+            return self[key].value
+        return default
+
+
+@dataclasses.dataclass
+class Measurement:
+    """Metrics observed at one evaluation point (possibly intermediate)."""
+
+    metrics: MetricDict = dataclasses.field(default_factory=MetricDict)
+    elapsed_secs: float = 0.0
+    steps: int = 0
+
+    def __post_init__(self):
+        if not isinstance(self.metrics, MetricDict):
+            md = MetricDict()
+            for k, v in dict(self.metrics).items():
+                md[k] = v
+            self.metrics = md
+
+    def to_proto(self) -> dict:
+        return {
+            "elapsed_duration": self.elapsed_secs,
+            "step_count": int(self.steps),
+            "metrics": [
+                {"metric_id": k, **v.to_proto()} for k, v in sorted(self.metrics.items())
+            ],
+        }
+
+    @classmethod
+    def from_proto(cls, p: Optional[dict]) -> Optional["Measurement"]:
+        if p is None:
+            return None
+        m = cls(elapsed_secs=p.get("elapsed_duration", 0.0), steps=p.get("step_count", 0))
+        for item in p.get("metrics", ()):
+            m.metrics[item["metric_id"]] = Metric(item["value"], item.get("std"))
+        return m
+
+
+@dataclasses.dataclass
+class Trial:
+    """Container for x (parameters) and f(x) (measurements). Paper §4.1."""
+
+    id: int = 0
+    parameters: ParameterDict = dataclasses.field(default_factory=ParameterDict)
+    state: TrialState = TrialState.ACTIVE
+    measurements: List[Measurement] = dataclasses.field(default_factory=list)
+    final_measurement: Optional[Measurement] = None
+    metadata: Metadata = dataclasses.field(default_factory=Metadata)
+    client_id: Optional[str] = None  # worker binding (paper §5)
+    infeasibility_reason: Optional[str] = None
+    creation_time: float = dataclasses.field(default_factory=time.time)
+    completion_time: Optional[float] = None
+    study_name: Optional[str] = None
+
+    def __post_init__(self):
+        if not isinstance(self.parameters, ParameterDict):
+            self.parameters = ParameterDict.from_dict(dict(self.parameters))
+
+    # -- state transitions ------------------------------------------------------
+    @property
+    def is_completed(self) -> bool:
+        return self.state.is_terminal
+
+    def complete(
+        self,
+        measurement: Optional[Measurement] = None,
+        *,
+        infeasibility_reason: Optional[str] = None,
+    ) -> "Trial":
+        if infeasibility_reason is not None:
+            self.state = TrialState.INFEASIBLE
+            self.infeasibility_reason = infeasibility_reason
+        else:
+            if measurement is None:
+                raise ValueError("COMPLETED trials require a final measurement")
+            self.final_measurement = measurement
+            self.state = TrialState.COMPLETED
+        self.completion_time = time.time()
+        return self
+
+    def add_measurement(self, measurement: Measurement) -> None:
+        self.measurements.append(measurement)
+
+    # -- convenience --------------------------------------------------------------
+    def final_objective(self, metric_name: str) -> Optional[float]:
+        if self.final_measurement is None:
+            return None
+        return self.final_measurement.metrics.get_value(metric_name)
+
+    def to_suggestion(self) -> "TrialSuggestion":
+        return TrialSuggestion(parameters=self.parameters, metadata=self.metadata)
+
+    # -- wire (Vertex Vizier Trial proto field names) -------------------------------
+    def to_proto(self) -> dict:
+        p = {
+            "id": str(self.id),
+            "state": self.state.value,
+            "parameters": [
+                {"parameter_id": k, "value": v.to_proto()}
+                for k, v in sorted(self.parameters.items())
+            ],
+            "measurements": [m.to_proto() for m in self.measurements],
+            "metadata": self.metadata.to_proto(),
+            "start_time": self.creation_time,
+        }
+        if self.final_measurement is not None:
+            p["final_measurement"] = self.final_measurement.to_proto()
+        if self.client_id is not None:
+            p["client_id"] = self.client_id
+        if self.infeasibility_reason is not None:
+            p["infeasible_reason"] = self.infeasibility_reason
+        if self.completion_time is not None:
+            p["end_time"] = self.completion_time
+        if self.study_name is not None:
+            p["name"] = f"{self.study_name}/trials/{self.id}"
+        return p
+
+    @classmethod
+    def from_proto(cls, p: dict) -> "Trial":
+        params = ParameterDict()
+        for item in p.get("parameters", ()):
+            params[item["parameter_id"]] = ParameterValue.from_proto(item["value"])
+        t = cls(
+            id=int(p.get("id", 0)),
+            parameters=params,
+            state=TrialState(p.get("state", "ACTIVE")),
+            measurements=[Measurement.from_proto(m) for m in p.get("measurements", ())],
+            final_measurement=Measurement.from_proto(p.get("final_measurement")),
+            metadata=Metadata.from_proto(p.get("metadata")),
+            client_id=p.get("client_id"),
+            infeasibility_reason=p.get("infeasible_reason"),
+            creation_time=p.get("start_time", 0.0),
+            completion_time=p.get("end_time"),
+        )
+        name = p.get("name")
+        if name and "/trials/" in name:
+            t.study_name = name.rsplit("/trials/", 1)[0]
+        return t
+
+
+@dataclasses.dataclass
+class TrialSuggestion:
+    """A suggested x, not yet registered as a Trial (Designer output)."""
+
+    parameters: ParameterDict = dataclasses.field(default_factory=ParameterDict)
+    metadata: Metadata = dataclasses.field(default_factory=Metadata)
+
+    def __post_init__(self):
+        if not isinstance(self.parameters, ParameterDict):
+            self.parameters = ParameterDict.from_dict(dict(self.parameters))
+
+    def to_trial(self, uid: int) -> Trial:
+        return Trial(id=uid, parameters=self.parameters, metadata=self.metadata,
+                     state=TrialState.ACTIVE)
+
+
+@dataclasses.dataclass
+class CompletedTrials:
+    """Batch of newly completed trials handed to Designer.update (paper D.4)."""
+
+    trials: List[Trial] = dataclasses.field(default_factory=list)
+
+    def __len__(self) -> int:
+        return len(self.trials)
+
+
+@dataclasses.dataclass
+class Study:
+    """All data pertaining to one optimization loop (paper §3)."""
+
+    name: str = ""           # resource name: owners/{owner}/studies/{study_id}
+    display_name: str = ""
+    state: StudyState = StudyState.ACTIVE
+    # StudyConfig is attached by the service layer; typed as Any to avoid an
+    # import cycle (study_config imports search_space, not study).
+    study_config: Optional[object] = None
+    creation_time: float = dataclasses.field(default_factory=time.time)
+
+    def to_proto(self) -> dict:
+        p = {
+            "name": self.name,
+            "display_name": self.display_name,
+            "state": self.state.value,
+            "create_time": self.creation_time,
+        }
+        if self.study_config is not None:
+            p["study_spec"] = self.study_config.to_proto()
+        return p
+
+    @classmethod
+    def from_proto(cls, p: dict) -> "Study":
+        from repro.core.study_config import StudyConfig  # local: avoid cycle
+
+        cfg = StudyConfig.from_proto(p["study_spec"]) if "study_spec" in p else None
+        return cls(
+            name=p.get("name", ""),
+            display_name=p.get("display_name", ""),
+            state=StudyState(p.get("state", "ACTIVE")),
+            study_config=cfg,
+            creation_time=p.get("create_time", 0.0),
+        )

@@ -1,0 +1,244 @@
+"""StudyConfig / MetricInformation / stopping & noise configs (paper §4.1, B.1, B.2).
+
+PyVizier StudyConfig <-> StudySpec proto (paper Table 2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional, Sequence
+
+from repro.core.metadata import Metadata
+from repro.core.search_space import SearchSpace, ParameterDict
+from repro.core.study import Measurement, Trial
+
+
+class ObjectiveMetricGoal(enum.Enum):
+    MAXIMIZE = "MAXIMIZE"
+    MINIMIZE = "MINIMIZE"
+
+
+class ObservationNoise(enum.Enum):
+    """User hint about evaluation reproducibility (paper Appendix B.2)."""
+
+    UNSPECIFIED = "OBSERVATION_NOISE_UNSPECIFIED"
+    LOW = "LOW"    # never repeat the same parameters
+    HIGH = "HIGH"  # re-evaluation of (near-)identical parameters is worthwhile
+
+
+@dataclasses.dataclass
+class MetricInformation:
+    """Information about one metric f_i to optimize (paper §4.1)."""
+
+    name: str
+    goal: ObjectiveMetricGoal
+    min_value: Optional[float] = None
+    max_value: Optional[float] = None
+    safety_threshold: Optional[float] = None  # constraint-style metric hook
+
+    def __post_init__(self):
+        if isinstance(self.goal, str):
+            self.goal = ObjectiveMetricGoal(self.goal)
+
+    def flip_sign_for_min(self, value: float) -> float:
+        """Maps value so that larger-is-better regardless of goal."""
+        return value if self.goal == ObjectiveMetricGoal.MAXIMIZE else -value
+
+    def to_proto(self) -> dict:
+        p = {"metric_id": self.name, "goal": self.goal.value}
+        if self.min_value is not None:
+            p["min_value"] = self.min_value
+        if self.max_value is not None:
+            p["max_value"] = self.max_value
+        if self.safety_threshold is not None:
+            p["safety_threshold"] = self.safety_threshold
+        return p
+
+    @classmethod
+    def from_proto(cls, p: dict) -> "MetricInformation":
+        return cls(
+            name=p["metric_id"],
+            goal=ObjectiveMetricGoal(p["goal"]),
+            min_value=p.get("min_value"),
+            max_value=p.get("max_value"),
+            safety_threshold=p.get("safety_threshold"),
+        )
+
+
+class MetricsConfig(list):
+    """List of MetricInformation with a convenient .add() (paper Code Block 1)."""
+
+    def add(
+        self,
+        name: str,
+        goal: str | ObjectiveMetricGoal = ObjectiveMetricGoal.MAXIMIZE,
+        *,
+        min_value: Optional[float] = None,
+        max_value: Optional[float] = None,
+    ) -> MetricInformation:
+        mi = MetricInformation(
+            name=name,
+            goal=ObjectiveMetricGoal(goal) if isinstance(goal, str) else goal,
+            min_value=min_value,
+            max_value=max_value,
+        )
+        if any(m.name == name for m in self):
+            raise ValueError(f"duplicate metric {name!r}")
+        self.append(mi)
+        return mi
+
+    def of_interest(self) -> List[MetricInformation]:
+        return list(self)
+
+    @property
+    def is_multi_objective(self) -> bool:
+        return len(self) > 1
+
+
+class AutomatedStoppingType(enum.Enum):
+    NONE = "NONE"
+    DECAY_CURVE = "DECAY_CURVE"  # GP regressor over learning curves (B.1)
+    MEDIAN = "MEDIAN"            # median rule over running averages (B.1)
+
+
+@dataclasses.dataclass
+class AutomatedStoppingConfig:
+    type: AutomatedStoppingType = AutomatedStoppingType.NONE
+    # MEDIAN: minimum number of completed trials before the rule activates.
+    min_completed_trials: int = 5
+    # DECAY_CURVE: stop if P(exceed best) < threshold.
+    probability_threshold: float = 0.05
+    use_elapsed_duration: bool = False
+
+    @classmethod
+    def decay_curve_stopping_config(cls, probability_threshold: float = 0.05):
+        return cls(AutomatedStoppingType.DECAY_CURVE,
+                   probability_threshold=probability_threshold)
+
+    @classmethod
+    def median_automated_stopping_config(cls, min_completed_trials: int = 5):
+        return cls(AutomatedStoppingType.MEDIAN,
+                   min_completed_trials=min_completed_trials)
+
+    def to_proto(self) -> dict:
+        return {
+            "type": self.type.value,
+            "min_completed_trials": self.min_completed_trials,
+            "probability_threshold": self.probability_threshold,
+            "use_elapsed_duration": self.use_elapsed_duration,
+        }
+
+    @classmethod
+    def from_proto(cls, p: Optional[dict]) -> "AutomatedStoppingConfig":
+        if not p:
+            return cls()
+        return cls(
+            type=AutomatedStoppingType(p.get("type", "NONE")),
+            min_completed_trials=p.get("min_completed_trials", 5),
+            probability_threshold=p.get("probability_threshold", 0.05),
+            use_elapsed_duration=p.get("use_elapsed_duration", False),
+        )
+
+
+@dataclasses.dataclass
+class StudyConfig:
+    """PyVizier StudyConfig == StudySpec proto + SearchSpace (paper Table 2)."""
+
+    search_space: SearchSpace = dataclasses.field(default_factory=SearchSpace)
+    metrics: MetricsConfig = dataclasses.field(default_factory=MetricsConfig)
+    algorithm: str = "DEFAULT"
+    observation_noise: ObservationNoise = ObservationNoise.UNSPECIFIED
+    automated_stopping: AutomatedStoppingConfig = dataclasses.field(
+        default_factory=AutomatedStoppingConfig
+    )
+    metadata: Metadata = dataclasses.field(default_factory=Metadata)
+    # Names of prior studies whose trials seed transfer learning.
+    prior_study_names: List[str] = dataclasses.field(default_factory=list)
+
+    # -- convenience ----------------------------------------------------------
+    @property
+    def metric_information(self) -> MetricsConfig:
+        return self.metrics
+
+    @property
+    def is_multi_objective(self) -> bool:
+        return self.metrics.is_multi_objective
+
+    def single_objective_metric(self) -> MetricInformation:
+        if len(self.metrics) != 1:
+            raise ValueError(
+                f"expected a single objective; study has {len(self.metrics)} metrics"
+            )
+        return self.metrics[0]
+
+    def validate_trial(self, trial: Trial) -> None:
+        self.search_space.validate_parameters(trial.parameters)
+
+    def objective_values(self, trial: Trial) -> Optional[List[float]]:
+        """Larger-is-better objective vector, or None if not comparable."""
+        if trial.final_measurement is None:
+            return None
+        out = []
+        for mi in self.metrics:
+            v = trial.final_measurement.metrics.get_value(mi.name)
+            if v is None:
+                return None
+            out.append(mi.flip_sign_for_min(v))
+        return out
+
+    # -- wire (StudySpec proto field names) --------------------------------------
+    def to_proto(self) -> dict:
+        p = {
+            "parameters": self.search_space.to_proto(),
+            "metrics": [m.to_proto() for m in self.metrics],
+            "algorithm": self.algorithm,
+            "observation_noise": self.observation_noise.value,
+            "metadata": self.metadata.to_proto(),
+        }
+        if self.automated_stopping.type != AutomatedStoppingType.NONE:
+            p["automated_stopping_spec"] = self.automated_stopping.to_proto()
+        if self.prior_study_names:
+            p["prior_study_names"] = list(self.prior_study_names)
+        return p
+
+    @classmethod
+    def from_proto(cls, p: dict) -> "StudyConfig":
+        cfg = cls(
+            search_space=SearchSpace.from_proto(p.get("parameters")),
+            algorithm=p.get("algorithm", "DEFAULT"),
+            observation_noise=ObservationNoise(
+                p.get("observation_noise", "OBSERVATION_NOISE_UNSPECIFIED")
+            ),
+            automated_stopping=AutomatedStoppingConfig.from_proto(
+                p.get("automated_stopping_spec")
+            ),
+            metadata=Metadata.from_proto(p.get("metadata")),
+            prior_study_names=list(p.get("prior_study_names", ())),
+        )
+        for mp in p.get("metrics", ()):
+            cfg.metrics.append(MetricInformation.from_proto(mp))
+        return cfg
+
+
+@dataclasses.dataclass
+class ProblemStatement:
+    """Algorithm-facing view of a study (search space + metrics only)."""
+
+    search_space: SearchSpace
+    metrics: MetricsConfig
+    observation_noise: ObservationNoise = ObservationNoise.UNSPECIFIED
+    metadata: Metadata = dataclasses.field(default_factory=Metadata)
+
+    @classmethod
+    def from_study_config(cls, cfg: StudyConfig) -> "ProblemStatement":
+        return cls(
+            search_space=cfg.search_space,
+            metrics=cfg.metrics,
+            observation_noise=cfg.observation_noise,
+            metadata=cfg.metadata,
+        )
+
+    @property
+    def is_multi_objective(self) -> bool:
+        return self.metrics.is_multi_objective

@@ -1,0 +1,108 @@
+"""Elastic scaling: rebuild the mesh when hosts join/leave, reshard via
+checkpoint.
+
+On a real cluster the controller detects a failed host (missed heartbeats),
+triggers a checkpoint-backed restart with the surviving host set, and the
+job resumes on a smaller (or regrown) mesh. In this framework:
+
+  * plan_elastic_mesh picks the largest (data, model) grid that fits the
+    surviving device count while preserving the model axis (TP degree is a
+    property of the compiled program; DP shrinks first);
+  * reshard_state reloads a checkpoint under the new mesh — the checkpoint
+    format is mesh-agnostic (full arrays), so resharding is just re-placing
+    with the new NamedShardings;
+  * ElasticController simulates the heartbeat/failure/recovery cycle (used
+    by tests and the parallel-tuning benchmark).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+from jax.sharding import AxisType
+
+from repro.distributed.sharding import ShardingCtx, make_rules, tree_shardings
+
+
+def plan_elastic_mesh(n_devices: int, *, model_parallel: int) -> Tuple[int, int]:
+    """Largest (data, model) grid with the fixed TP degree."""
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"need >= {model_parallel} devices to preserve TP degree, "
+            f"have {n_devices}")
+    data = n_devices // model_parallel
+    return data, model_parallel
+
+
+def make_elastic_mesh(devices: List, *, model_parallel: int):
+    data, model = plan_elastic_mesh(len(devices), model_parallel=model_parallel)
+    import numpy as np
+
+    grid = np.asarray(devices[: data * model]).reshape(data, model)
+    from jax.sharding import Mesh
+
+    return Mesh(grid, ("data", "model"))
+
+
+def reshard_state(state, axes_tree, mesh, rules: Optional[dict] = None):
+    """Re-places a (restored) state under a new mesh's shardings."""
+    ctx = ShardingCtx(mesh=mesh, rules=rules or make_rules("train"))
+    shapes = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    shardings = tree_shardings(ctx, shapes, axes_tree)
+    return jax.tree.map(jax.device_put, state, shardings)
+
+
+@dataclasses.dataclass
+class HostState:
+    host_id: int
+    last_heartbeat: float
+    alive: bool = True
+
+
+class ElasticController:
+    """Heartbeat-based failure detector + re-mesh planner (simulation)."""
+
+    def __init__(self, n_hosts: int, *, heartbeat_timeout: float = 5.0,
+                 model_parallel: int = 1):
+        now = time.monotonic()
+        self.hosts: Dict[int, HostState] = {
+            i: HostState(i, now) for i in range(n_hosts)}
+        self.heartbeat_timeout = heartbeat_timeout
+        self.model_parallel = model_parallel
+        self.generation = 0  # bumps on every re-mesh
+
+    def heartbeat(self, host_id: int) -> None:
+        h = self.hosts[host_id]
+        h.last_heartbeat = time.monotonic()
+        if not h.alive:
+            h.alive = True           # host rejoined
+            self.generation += 1
+
+    def fail(self, host_id: int) -> None:
+        """Test hook: simulate a crash."""
+        self.hosts[host_id].alive = False
+        self.hosts[host_id].last_heartbeat = -1e18
+        self.generation += 1
+
+    def check(self) -> List[int]:
+        """Marks hosts with stale heartbeats dead; returns dead host ids."""
+        now = time.monotonic()
+        dead = []
+        for h in self.hosts.values():
+            if h.alive and now - h.last_heartbeat > self.heartbeat_timeout:
+                h.alive = False
+                self.generation += 1
+            if not h.alive:
+                dead.append(h.host_id)
+        return dead
+
+    def alive_hosts(self) -> List[int]:
+        return [h.host_id for h in self.hosts.values() if h.alive]
+
+    def plan(self, devices_per_host: int) -> Tuple[int, int]:
+        n = len(self.alive_hosts()) * devices_per_host
+        return plan_elastic_mesh(n, model_parallel=self.model_parallel)

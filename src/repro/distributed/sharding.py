@@ -1,0 +1,162 @@
+"""Logical-axis sharding rules (MaxText-style), with divisibility fallback.
+
+Every parameter and activation carries a tuple of *logical* axis names; a
+rules table maps logical names to mesh axes. ``logical_to_spec`` drops a mesh
+axis when the dimension size is not divisible by it (e.g. yi-34b's 56 heads
+on a 16-way model axis) instead of failing — the fallback is recorded so the
+roofline report can call it out.
+
+Baseline rules implement 2D parameter sharding (FSDP over ``data`` × tensor
+over ``model``) with data-parallel activations; shape kinds adjust them:
+  * decode shapes shard the KV cache batch over ``data``;
+  * long-context decode (batch=1) context-parallelizes: KV sequence over
+    ``data``;
+  * sequence-parallel (SP) residual saving shards the scanned activations'
+    sequence dim over ``model``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+log = logging.getLogger(__name__)
+
+LogicalAxes = Tuple[Optional[str], ...]
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+# -- rules -------------------------------------------------------------------
+
+BASE_RULES: Dict[str, Tuple[str, ...]] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": (),
+    "seq_sp": ("model",),          # sequence-parallel saved residuals
+    "act_embed": (),
+    "act_heads": ("model",),
+    "act_kv_heads": ("model",),
+    "act_mlp": ("model",),
+    "act_experts": ("model",),
+    # parameters (2D: fsdp x tensor)
+    "embed": ("data",),            # d_model dim of weights (FSDP shard)
+    "mlp": ("model",),             # d_ff dim
+    "heads": ("model",),           # attention head dim of weights
+    "kv_heads": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),         # expert-parallel parameter dim
+    "expert_mlp": (),              # per-expert hidden (kept unsharded; experts carry EP)
+    "q_lora": (), "kv_lora": (),   # MLA latents (small)
+    "head_dim": (),
+    "ssm_inner": ("model",),       # mamba2 d_inner
+    "ssm_state": (), "ssm_heads": ("model",), "conv": (),
+    "layers": (),                  # scan dim
+    # kv cache
+    "kv_batch": ("pod", "data"),
+    "kv_seq": (),
+    # frontends
+    "frames": (), "patches": (),
+}
+
+
+def make_rules(shape_kind: str = "train", *, context_parallel: bool = False,
+               sp: bool = True, overrides: Optional[Dict[str, Tuple[str, ...]]] = None
+               ) -> Dict[str, Tuple[str, ...]]:
+    rules = dict(BASE_RULES)
+    if not sp:
+        rules["seq_sp"] = ()
+    if shape_kind == "decode":
+        # shard the KV-cache sequence over `model`: works for every kv-head
+        # count (GQA kv=8 / MQA kv=1 can't split a 16-way model axis) and
+        # the decode softmax reduction lowers to a tiny all-reduce
+        rules["kv_seq"] = ("model",)
+        rules["act_kv_heads"] = ()
+    if context_parallel:
+        # batch=1 long decode: context-parallel over BOTH axes
+        rules["kv_batch"] = ()
+        rules["kv_seq"] = ("data", "model")
+        rules["batch"] = ()
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+# -- translation -----------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    """Mesh + rules + a log of divisibility fallbacks (for the perf report)."""
+
+    mesh: Mesh
+    rules: Dict[str, Tuple[str, ...]]
+    fallbacks: list = dataclasses.field(default_factory=list)
+
+    def axis_size(self, name: str) -> int:
+        return self.mesh.shape[name] if name in self.mesh.shape else 1
+
+    def spec_for(self, logical: Union[str, LogicalAxes], shape: Sequence[int]) -> P:
+        """PartitionSpec honoring divisibility; drops non-dividing mesh axes.
+
+        ``logical`` is either a tuple of names (None = unsharded) or a
+        space-separated string where '-' means unsharded — strings keep
+        logical-axes trees pytree-leaf-compatible.
+        """
+        logical = parse_axes(logical)
+        assert len(logical) == len(shape), (logical, shape)
+        out = []
+        used: set = set()
+        for dim, name in zip(shape, logical):
+            if name is None:
+                out.append(None)
+                continue
+            mesh_axes = self.rules.get(name, ())
+            if isinstance(mesh_axes, str):
+                mesh_axes = (mesh_axes,)
+            picked = []
+            remaining = dim
+            for ax in mesh_axes:
+                if ax in used or ax not in self.mesh.shape:
+                    continue
+                size = self.axis_size(ax)
+                if size > 1 and remaining % size == 0:
+                    picked.append(ax)
+                    remaining //= size
+                    used.add(ax)
+                elif size > 1:
+                    self.fallbacks.append((name, ax, dim))
+            if not picked:
+                out.append(None)
+            elif len(picked) == 1:
+                out.append(picked[0])
+            else:
+                out.append(tuple(picked))
+        return P(*out)
+
+    def shard(self, x, logical: Union[str, LogicalAxes]):
+        """with_sharding_constraint by logical axes (no-op outside jit/mesh)."""
+        spec = self.spec_for(logical, x.shape)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def named_sharding(self, logical: Union[str, LogicalAxes], shape: Sequence[int]
+                       ) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(logical, shape))
+
+
+def parse_axes(logical: Union[str, LogicalAxes]) -> LogicalAxes:
+    """'vocab embed' -> ('vocab', 'embed'); '-' -> None."""
+    if isinstance(logical, str):
+        return tuple(None if t in ("-", "") else t for t in logical.split())
+    return tuple(logical)
+
+
+def tree_shardings(ctx: ShardingCtx, shapes_tree, axes_tree):
+    """NamedShardings for a pytree of ShapeDtypeStructs + string-axes tree."""
+    return jax.tree.map(
+        lambda sds, axes: ctx.named_sharding(axes, sds.shape), shapes_tree, axes_tree
+    )

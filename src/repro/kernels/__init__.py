@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for compute hot-spots, each with a pure-jnp oracle.
+
+Layout per kernel:
+  <name>.py   pl.pallas_call + BlockSpec implementation (TPU target; validated
+              on CPU via interpret=True)
+  ref.py      pure-jnp oracles (the correctness ground truth)
+  ops.py      jit'd dispatch wrappers: XLA path by default on CPU, Pallas path
+              on TPU (or interpret=True when forced)
+
+Kernels:
+  gram            Matérn-5/2 Gram matrix — the GP-bandit hot-spot (paper §6.3
+                  notes cubic-cost GP suggestion; the Gram build is the
+                  bandwidth-bound part)
+  flash_attention chunked online-softmax attention for the model zoo
+  mamba2_ssd      chunked state-space-dual scan (zamba2 hybrid blocks)
+"""
+
+from repro.kernels import ops, ref

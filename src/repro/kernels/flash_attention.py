@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: causal flash attention (GQA-aware), online softmax.
+
+Grid: (B, Hq, nQ, nK) — the trailing kv axis is sequential on TPU, so the
+running max / sum / accumulator live in VMEM scratch across kv steps and the
+output tile is written once at the last kv block.
+
+Tiling: q tile (BQ, D), kv tiles (BK, D) — BQ = BK = 512 by default, D padded
+to a 128 multiple by the wrapper. VMEM working set per step:
+(BQ·D + 2·BK·D + BQ·BK) · 4B ≈ 2.6 MB at BQ=BK=512, D=128 — well under the
+~16 MB VMEM budget, MXU-aligned on every matmul dim.
+
+Causal masking skips fully-masked kv blocks via pl.when (block-level
+early-out, the flash trick that halves causal FLOPs).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 512
+DEFAULT_BK = 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal: bool, scale: float, q_offset: int, bq: int, bk: int,
+                  n_k: int, seq_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = q_offset + qi * bq
+    k_start = ki * bk
+
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale   # (BQ, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)           # (BK, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)           # (BK, Dv)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (BQ, BK)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = k_pos < seq_k
+        if causal:
+            mask = mask & (q_pos >= k_pos)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # block-level early-out: skip kv blocks entirely above the diagonal
+        pl.when(q_start + bq - 1 >= k_start)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, :, 0, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "q_offset", "bq", "bk", "interpret", "scale"))
+def flash_attention_pallas(
+    q: jnp.ndarray,  # (B, Sq, Hq, D)
+    k: jnp.ndarray,  # (B, Sk, Hkv, D)
+    v: jnp.ndarray,  # (B, Sk, Hkv, D)
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / (D**0.5)
+
+    bq = min(bq, max(Sq, 8))
+    bk = min(bk, max(Sk, 8))
+    pad_q = (-Sq) % bq
+    pad_k = (-Sk) % bk
+    pad_d = (-D) % 128
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, pad_d)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, pad_d)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, pad_d)))
+    Sqp, Skp, Dp = Sq + pad_q, Sk + pad_k, D + pad_d
+    n_q, n_k = Sqp // bq, Skp // bk
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, scale=scale, q_offset=q_offset,
+        bq=bq, bk=bk, n_k=n_k, seq_k=Sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, Dp), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, bk, 1, Dp), lambda b, h, qi, ki, g=group: (b, ki, h // g, 0)),
+            pl.BlockSpec((1, bk, 1, Dp), lambda b, h, qi, ki, g=group: (b, ki, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, Dp), lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sqp, Hq, Dp), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, Dp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :Sq, :, :D]

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: Matérn-5/2 Gram matrix (GP-bandit hot-spot).
+
+The GP suggestion path builds K(X, X) ∈ R^{n×n} from lengthscale-scaled
+features X ∈ R^{n×d}. On TPU the natural layout is (8,128)-aligned blocks:
+each grid cell computes a (BN, BM) tile of K from a (BN, D) and a (BM, D)
+VMEM-resident strip, contracting D on the MXU via dot(x1, x2^T).
+
+Tiling: BN = BM = 256 (f32: 256·256·4 = 256 KiB out-tile; two in-strips of
+256·D·4; for D ≤ 512 the working set stays ≪ 16 MiB VMEM).
+
+Inputs are zero-padded to block multiples by the wrapper (ops.py); padding
+contributes K values that the wrapper slices away.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 256
+BLOCK_M = 256
+
+
+def _gram_kernel(x1_ref, x2_ref, amp_ref, out_ref):
+    """One (BN, BM) tile: d2 = |x1|^2 - 2 x1 x2^T + |x2|^2, then Matérn-5/2."""
+    x1 = x1_ref[...].astype(jnp.float32)  # (BN, D)
+    x2 = x2_ref[...].astype(jnp.float32)  # (BM, D)
+    amp = amp_ref[0, 0]
+    # MXU contraction for the cross term; VPU for the norms.
+    cross = jax.lax.dot_general(
+        x1, x2, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (BN, BM)
+    n1 = jnp.sum(x1 * x1, axis=1, keepdims=True)  # (BN, 1)
+    n2 = jnp.sum(x2 * x2, axis=1, keepdims=True).T  # (1, BM)
+    d2 = jnp.maximum(n1 - 2.0 * cross + n2, 0.0)
+    a = jnp.sqrt(5.0 * d2)
+    out_ref[...] = amp * (1.0 + a + (a * a) * (1.0 / 3.0)) * jnp.exp(-a)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matern52_gram_pallas(
+    x1: jnp.ndarray, x2: jnp.ndarray, amplitude: jnp.ndarray, *, interpret: bool = False
+) -> jnp.ndarray:
+    """K(x1, x2) with x already scaled by 1/lengthscale. Shapes (n,d),(m,d)."""
+    n, d = x1.shape
+    m = x2.shape[0]
+    pad_n = (-n) % BLOCK_N
+    pad_m = (-m) % BLOCK_M
+    pad_d = (-d) % 128  # MXU lane alignment
+    x1p = jnp.pad(x1.astype(jnp.float32), ((0, pad_n), (0, pad_d)))
+    x2p = jnp.pad(x2.astype(jnp.float32), ((0, pad_m), (0, pad_d)))
+    amp = jnp.asarray(amplitude, jnp.float32).reshape((1, 1))
+    np_, mp_ = n + pad_n, m + pad_m
+    dp_ = d + pad_d
+
+    out = pl.pallas_call(
+        _gram_kernel,
+        grid=(np_ // BLOCK_N, mp_ // BLOCK_M),
+        in_specs=[
+            pl.BlockSpec((BLOCK_N, dp_), lambda i, j: (i, 0)),
+            pl.BlockSpec((BLOCK_M, dp_), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_N, BLOCK_M), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, mp_), jnp.float32),
+        interpret=interpret,
+    )(x1p, x2p, amp)
+    return out[:n, :m]

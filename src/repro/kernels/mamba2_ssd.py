@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan.
+
+Grid: (B, H, nc) — the chunk axis is sequential on TPU, so the (P, N) SSM
+state lives in VMEM scratch and flows across chunks (the cross-chunk
+recurrence), while each chunk's intra-chunk work is two (L, L)·(L, ·) MXU
+matmuls — the "state-space dual" form.
+
+Per grid step VMEM: x (L,P) + B/C (L,N) + scores (L,L) + state (P,N), all
+f32: at L=256, P=N=128 that is ≈ 0.6 MB — tiny; L can grow to 1024 before
+the score matrix dominates.
+
+The wrapper takes the generalized inputs (log-decay ``a``, multiplier
+``mult``) shared with models.mamba2.ssd_core, so the same kernel serves
+Mamba2 (a = A·dt, mult = dt) and mLSTM (a = log σ(f), mult = i-gate).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, a_ref, m_ref, b_ref, c_ref, h0_ref, y_ref, hT_ref,
+                state_ref, *, n_chunks: int, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = h0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)      # (L, P)
+    a = a_ref[0, :, 0].astype(jnp.float32)         # (L,)
+    mult = m_ref[0, :, 0].astype(jnp.float32)      # (L,)
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)     # (L, N)
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)     # (L, N)
+
+    seg = jnp.cumsum(a)                            # (L,)
+    total = seg[-1]
+
+    # intra-chunk: M[i,j] = exp(seg_i - seg_j) * mult_j  for j <= i
+    li = seg[:, None]
+    lj = seg[None, :]
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    causal = iota_i >= iota_j
+    decay = jnp.where(causal, jnp.exp(li - lj), 0.0) * mult[None, :]
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (L, L)
+    y_intra = jax.lax.dot_general(scores * decay, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # (L, P)
+
+    # inter-chunk: y_inter = exp(seg_i) * C_i @ state^T
+    h = state_ref[...]                              # (P, N)
+    y_inter = jax.lax.dot_general(Cm, h, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # (L, P)
+    y_ref[0, :, 0, :] = (y_intra + jnp.exp(seg)[:, None] * y_inter).astype(y_ref.dtype)
+
+    # state update: h' = exp(total) h + sum_j exp(total - seg_j) mult_j x_j B_j^T
+    w = jnp.exp(total - seg) * mult                 # (L,)
+    upd = jax.lax.dot_general(x * w[:, None], Bm, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (P, N)
+    state_ref[...] = h * jnp.exp(total) + upd
+
+    @pl.when(ci == n_chunks - 1)
+    def _finalize():
+        hT_ref[0, 0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(
+    x: jnp.ndarray,    # (B, S, H, P)
+    dt: jnp.ndarray,   # (B, S, H)
+    A: jnp.ndarray,    # (H,)
+    Bm: jnp.ndarray,   # (B, S, G, N)
+    Cm: jnp.ndarray,   # (B, S, G, N)
+    *,
+    init_state: Optional[jnp.ndarray] = None,  # (B, H, P, N)
+    chunk: int = 256,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    a = A.astype(jnp.float32)[None, None, :] * dt.astype(jnp.float32)
+    return ssd_core_pallas(x, a, dt, Bm, Cm, init_state=init_state, chunk=chunk,
+                           interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_core_pallas(
+    x: jnp.ndarray,     # (B, S, H, P)
+    a: jnp.ndarray,     # (B, S, H) log-decay
+    mult: jnp.ndarray,  # (B, S, H)
+    Bm: jnp.ndarray,    # (B, S, G, N)
+    Cm: jnp.ndarray,    # (B, S, G, N)
+    *,
+    init_state: Optional[jnp.ndarray] = None,
+    chunk: int = 256,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    group = H // G
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    if init_state is None:
+        init_state = jnp.zeros((B, H, P, N), jnp.float32)
+
+    kernel = functools.partial(_ssd_kernel, n_chunks=nc, chunk=chunk)
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c, g=group: (b, c, h // g, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, c, g=group: (b, c, h // g, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, a, mult, Bm, Cm, init_state)
+    return y, hT

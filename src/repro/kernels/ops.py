@@ -1,0 +1,92 @@
+"""jit'd dispatch wrappers over the Pallas kernels.
+
+Default behavior:
+  * on TPU backends -> Pallas kernel path
+  * on CPU (this container) -> XLA reference path (fast, compiles everywhere)
+  * force the Pallas path under interpret=True with REPRO_FORCE_PALLAS=1 or
+    the explicit ``impl=`` argument (tests do this for kernel validation).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+Impl = Literal["auto", "xla", "pallas", "pallas_interpret"]
+
+
+def _default_impl() -> str:
+    if os.environ.get("REPRO_FORCE_PALLAS"):
+        return "pallas_interpret"
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def matern52_gram(
+    x1: jnp.ndarray,
+    x2: jnp.ndarray,
+    amplitude=1.0,
+    *,
+    impl: Impl = "auto",
+) -> jnp.ndarray:
+    """Matérn-5/2 Gram matrix of lengthscale-scaled features."""
+    impl = _default_impl() if impl == "auto" else impl
+    if impl == "xla":
+        return ref.matern52_gram(x1, x2, amplitude)
+    from repro.kernels.gram import matern52_gram_pallas
+
+    return matern52_gram_pallas(
+        x1, x2, jnp.asarray(amplitude), interpret=(impl == "pallas_interpret")
+    )
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    impl: Impl = "auto",
+) -> jnp.ndarray:
+    """Attention dispatch: Pallas flash kernel on TPU, chunked-XLA otherwise."""
+    impl = _default_impl() if impl == "auto" else impl
+    if impl == "xla":
+        from repro.models.attention import chunked_attention
+
+        return chunked_attention(q, k, v, causal=causal, q_offset=q_offset)
+    from repro.kernels.flash_attention import flash_attention_pallas
+
+    return flash_attention_pallas(
+        q, k, v, causal=causal, q_offset=q_offset,
+        interpret=(impl == "pallas_interpret"),
+    )
+
+
+def ssd_scan(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    A: jnp.ndarray,
+    Bm: jnp.ndarray,
+    Cm: jnp.ndarray,
+    *,
+    init_state: Optional[jnp.ndarray] = None,
+    chunk: int = 256,
+    impl: Impl = "auto",
+):
+    """Mamba2 SSD scan dispatch (chunked parallel form)."""
+    impl = _default_impl() if impl == "auto" else impl
+    if impl == "xla":
+        from repro.models.mamba2 import ssd_chunked
+
+        return ssd_chunked(x, dt, A, Bm, Cm, init_state=init_state, chunk=chunk)
+    from repro.kernels.mamba2_ssd import ssd_scan_pallas
+
+    return ssd_scan_pallas(
+        x, dt, A, Bm, Cm, init_state=init_state, chunk=chunk,
+        interpret=(impl == "pallas_interpret"),
+    )

@@ -1,0 +1,172 @@
+"""HLO post-compile analysis: collective-byte accounting + roofline terms.
+
+collective_bytes is not in cost_analysis(); we parse the optimized HLO text
+and sum operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, converting each to *wire bytes per device*
+with a ring model:
+
+    all-gather:          result_bytes * (g-1)/g
+    all-reduce:      2 * result_bytes * (g-1)/g
+    reduce-scatter:      result_bytes * (g-1)        (input = g * result)
+    all-to-all:          result_bytes * (g-1)/g
+    collective-permute:  result_bytes
+
+Caveat (recorded in EXPERIMENTS.md): the CPU backend sometimes upcasts bf16
+collectives to f32 (convert-then-gather instead of gather-then-convert), so
+wire bytes here are an upper bound vs the TPU bf16 schedule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([\d,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_TUPLE_COLL_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    op: str
+    dtype: str
+    numel: int
+    bytes: int
+    group_size: int
+    wire_bytes: float  # per participating device
+
+
+def _numel(dims: str) -> int:
+    if not dims.strip():
+        return 1
+    return int(np.prod([int(d) for d in dims.split(",") if d]))
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))  # [num_groups, group_size]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([t for t in m.group(1).split(",") if t.strip() != ""])
+    return total_devices
+
+
+def _wire_bytes(op: str, nbytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if op == "all-gather":
+        return nbytes * (g - 1) / g
+    if op == "all-reduce":
+        return 2.0 * nbytes * (g - 1) / g
+    if op == "reduce-scatter":
+        return float(nbytes) * (g - 1)
+    if op == "all-to-all":
+        return nbytes * (g - 1) / g
+    return float(nbytes)  # collective-permute
+
+
+def parse_collectives(hlo_text: str, total_devices: int) -> List[CollectiveStats]:
+    out: List[CollectiveStats] = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        shapes: List[tuple] = []
+        op = None
+        if m:
+            op = m.group(3)
+            shapes = [(m.group(1), m.group(2))]
+        else:
+            mt = _TUPLE_COLL_RE.search(line)
+            if mt:
+                op = mt.group(2)
+                for part in mt.group(1).split(","):
+                    part = part.strip()
+                    sm = re.match(r"([a-z0-9]+)\[([\d,]*)\]", part)
+                    if sm:
+                        shapes.append((sm.group(1), sm.group(2)))
+        if not op or not shapes:
+            continue
+        g = _group_size(line, total_devices)
+        for dtype, dims in shapes:
+            if dtype not in _DTYPE_BYTES:
+                continue
+            numel = _numel(dims)
+            nbytes = numel * _DTYPE_BYTES[dtype]
+            out.append(CollectiveStats(
+                op=op, dtype=dtype, numel=numel, bytes=nbytes, group_size=g,
+                wire_bytes=_wire_bytes(op, nbytes, g)))
+    return out
+
+
+def collective_summary(colls: List[CollectiveStats]) -> Dict[str, dict]:
+    summary: Dict[str, dict] = {}
+    for c in colls:
+        s = summary.setdefault(c.op, {"count": 0, "bytes": 0, "wire_bytes": 0.0})
+        s["count"] += 1
+        s["bytes"] += c.bytes
+        s["wire_bytes"] += c.wire_bytes
+    return summary
+
+
+def count_remat_flops_waste(hlo_text: str) -> int:
+    """Counts duplicate fusion signatures as a proxy for remat recompute."""
+    names = re.findall(r"%(fused_computation[.\w]*)", hlo_text)
+    return max(0, len(set(names)) and len(names) - len(set(names)))
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """Three-term roofline per device (seconds)."""
+
+    flops: float
+    hbm_bytes: float
+    wire_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Optimistic (perfect-overlap) step time: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self) | {
+            "dominant": self.dominant, "step_time_s": self.step_time_s}
+
+
+def roofline_terms(flops_per_device: float, hbm_bytes_per_device: float,
+                   wire_bytes_per_device: float, *, peak_flops: float,
+                   hbm_bw: float, ici_bw: float) -> RooflineTerms:
+    return RooflineTerms(
+        flops=flops_per_device,
+        hbm_bytes=hbm_bytes_per_device,
+        wire_bytes=wire_bytes_per_device,
+        compute_s=flops_per_device / peak_flops,
+        memory_s=hbm_bytes_per_device / hbm_bw,
+        collective_s=wire_bytes_per_device / ici_bw,
+    )

@@ -1,0 +1,276 @@
+"""Loop-aware HLO cost model.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, so any scanned
+layer stack is undercounted by ~n_layers. This module parses the optimized
+HLO text into its computation graph, extracts while-loop trip counts from
+loop-condition constants, and walks from ENTRY with a multiplier:
+
+  * flops        — 2 * numel(result) * contracted-dim product, per `dot`
+  * hbm traffic  — per post-fusion op: result bytes (write) + operand bytes
+                   (reads); parameters/GTE/tuple/constant/bitcast are free
+  * wire bytes   — ring-model collective cost (hlo_analysis._wire_bytes)
+
+Conditionals take the max across branches. Numbers are per-device (the HLO
+module is the per-device SPMD program).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.launch.hlo_analysis import _DTYPE_BYTES, _group_size, _wire_bytes
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.-]+)\s*=\s*(.+?)\s+([\w-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.-]+)\s+\((.*)\)\s*->")
+_OPERAND_RE = re.compile(r"%([\w.-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+_NO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "after-all", "partition-id", "replica-id", "iota",
+    "while", "conditional", "call", "fusion", "custom-call",
+}
+_COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-gather-start", "all-reduce-start",
+                "collective-permute-start"}
+
+
+def _numel(dims: str) -> int:
+    if not dims.strip():
+        return 1
+    return int(np.prod([int(d) for d in dims.split(",") if d]))
+
+
+def _shapes_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype in _DTYPE_BYTES:
+            total += _numel(dims) * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # operand list + attrs
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    shapes: Dict[str, str]  # value name -> type string
+
+
+def parse_hlo_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    entry_name = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR_RE.match(line.strip()) if "{" in line and "->" in line else None
+        if hdr and not line.lstrip().startswith("%constant"):
+            current = Computation(name=hdr.group(1), ops=[], shapes={})
+            comps[current.name] = current
+            if line.strip().startswith("ENTRY"):
+                entry_name = current.name
+            # parameters: "p.1: f32[2,3]" pairs
+            for pname, ptype in re.findall(r"([\w.-]+):\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[\d,]*\]))",
+                                           hdr.group(2)):
+                current.shapes[pname] = ptype
+            continue
+        if current is None:
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        current.ops.append(Op(name=name, type_str=type_str, opcode=opcode, rest=rest))
+        current.shapes[name] = type_str
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest constant compared against in the loop condition."""
+    best = 1
+    consts: Dict[str, int] = {}
+    for op in cond.ops:
+        if op.opcode == "constant":
+            mm = re.search(r"\bconstant\((\d+)\)", op.type_str + " " + op.rest) or \
+                 _CONST_RE.search(op.rest)
+            if mm:
+                consts[op.name] = int(mm.group(1))
+    for op in cond.ops:
+        if op.opcode == "compare":
+            for operand in _OPERAND_RE.findall(op.rest):
+                if operand in consts:
+                    best = max(best, consts[operand])
+            mm = _CONST_RE.search(op.rest)
+            if mm:
+                best = max(best, int(mm.group(1)))
+    return best
+
+
+def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
+    result_elems = 0
+    for dtype, dims in _SHAPE_RE.findall(op.type_str):
+        result_elems += _numel(dims)
+    mm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    contract = 1
+    operands = _OPERAND_RE.findall(op.rest.split("),")[0] + ")")
+    if mm and operands:
+        lhs_shape = shapes.get(operands[0], "")
+        sm = _SHAPE_RE.search(lhs_shape)
+        if sm:
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+            for ci in mm.group(1).split(","):
+                if ci and int(ci) < len(dims):
+                    contract *= dims[int(ci)]
+    return 2.0 * result_elems * contract
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    # traffic attributed to jax.named_scope tags (e.g. "xla_flash_attention"):
+    # the part a fused Pallas kernel keeps in VMEM on real TPU
+    scoped_traffic: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, other: "Costs"):
+        self.flops += other.flops
+        self.traffic_bytes += other.traffic_bytes
+        self.wire_bytes += other.wire_bytes
+        for k, v in other.scoped_traffic.items():
+            self.scoped_traffic[k] = self.scoped_traffic.get(k, 0.0) + v
+        return self
+
+    def scaled(self, k: float) -> "Costs":
+        return Costs(self.flops * k, self.traffic_bytes * k, self.wire_bytes * k,
+                     {s: v * k for s, v in self.scoped_traffic.items()})
+
+
+TRACKED_SCOPES = ("xla_flash_attention", "xla_ssd_scan")
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _op_scope(op: "Op", inherited: Optional[str] = None) -> Optional[str]:
+    m = _OPNAME_RE.search(op.rest)
+    if m:
+        for scope in TRACKED_SCOPES:
+            if scope in m.group(1):
+                return scope
+    return inherited
+
+
+def _add_traffic(total: Costs, nbytes: float, op: "Op",
+                 inherited: Optional[str] = None) -> None:
+    total.traffic_bytes += nbytes
+    scope = _op_scope(op, inherited)
+    if scope:
+        total.scoped_traffic[scope] = total.scoped_traffic.get(scope, 0.0) + nbytes
+
+
+def _comp_costs(comp: Computation, comps: Dict[str, Computation],
+                total_devices: int, memo: Dict[Tuple[str, bool, Optional[str]], Costs],
+                count_traffic: bool = True, scope: Optional[str] = None) -> Costs:
+    key = (comp.name, count_traffic, scope)
+    if key in memo:
+        return memo[key]
+    memo[key] = Costs()  # cycle guard
+    total = Costs()
+    for op in comp.ops:
+        if op.opcode == "dot":
+            total.flops += _dot_flops(op, comp.shapes)
+            if count_traffic:
+                t = _shapes_bytes(op.type_str)
+                for operand in _OPERAND_RE.findall(op.rest.split(")")[0]):
+                    t += _shapes_bytes(comp.shapes.get(operand, ""))
+                _add_traffic(total, t, op, scope)
+        elif op.opcode in _COLLECTIVES:
+            base = op.opcode.replace("-start", "")
+            g = _group_size(op.rest, total_devices)
+            nbytes = _shapes_bytes(op.type_str)
+            total.wire_bytes += _wire_bytes(base, nbytes, g)
+            if count_traffic:
+                total.traffic_bytes += 2 * nbytes
+        elif op.opcode == "while":
+            bm = re.search(r"body=%?([\w.-]+)", op.rest)
+            cm = re.search(r"condition=%?([\w.-]+)", op.rest)
+            body_name = bm.group(1) if bm else None
+            cond_name = cm.group(1) if cm else None
+            # XLA records the statically-known trip count in backend_config
+            tm = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', op.rest)
+            if tm:
+                trip = int(tm.group(1))
+            else:
+                trip = _trip_count(comps[cond_name]) if cond_name in comps else 1
+            if body_name in comps:
+                body = _comp_costs(comps[body_name], comps, total_devices, memo,
+                                   count_traffic, _op_scope(op, scope))
+                total += body.scaled(trip)
+        elif op.opcode in ("fusion", "call", "custom-call", "async-start"):
+            cm = re.search(r"(?:calls|to_apply)=%?([\w.-]+)", op.rest)
+            inner_traffic = count_traffic and op.opcode == "call"
+            if cm and cm.group(1) in comps:
+                total += _comp_costs(comps[cm.group(1)], comps, total_devices,
+                                     memo, inner_traffic, _op_scope(op, scope))
+            # post-fusion boundary traffic: result + operands. Fusions rooted
+            # at dynamic-update-slice alias their destination buffer in place:
+            # only the non-aliased operands + the updated slice move.
+            if count_traffic and op.opcode in ("fusion", "custom-call"):
+                operands = _OPERAND_RE.findall(op.rest.split(")")[0])
+                sizes = [_shapes_bytes(comp.shapes.get(o, "")) for o in operands]
+                if "dynamic-update-slice" in op.name or "dynamic_update_slice" in op.rest:
+                    big = max(sizes) if sizes else 0
+                    t = 2.0 * (sum(sizes) - big)
+                else:
+                    t = _shapes_bytes(op.type_str) + sum(sizes)
+                _add_traffic(total, t, op, scope)
+        elif op.opcode == "conditional":
+            branches = re.findall(r"%([\w.-]+)", op.rest)
+            branch_costs = [
+                _comp_costs(comps[b], comps, total_devices, memo, count_traffic,
+                            scope)
+                for b in branches if b in comps
+            ]
+            if branch_costs:
+                best = max(branch_costs, key=lambda c: c.flops + c.traffic_bytes)
+                total += best
+        elif count_traffic and op.opcode == "dynamic-update-slice":
+            # in-place update touches only the updated slice (operand 1),
+            # not the whole destination buffer
+            operands = _OPERAND_RE.findall(op.rest.split(")")[0])
+            upd = operands[1] if len(operands) > 1 else None
+            _add_traffic(total, 2 * _shapes_bytes(comp.shapes.get(upd, "")), op,
+                         scope)
+        elif count_traffic and op.opcode not in _NO_TRAFFIC:
+            # standalone elementwise / reduce / copy / gather / scatter ...
+            t = _shapes_bytes(op.type_str)
+            for operand in _OPERAND_RE.findall(op.rest.split(")")[0]):
+                t += _shapes_bytes(comp.shapes.get(operand, ""))
+            _add_traffic(total, t, op, scope)
+    memo[key] = total
+    return total
+
+
+def analyze_hlo(text: str, total_devices: int) -> Costs:
+    """Loop-corrected per-device costs from optimized HLO text."""
+    comps = parse_hlo_module(text)
+    if "__entry__" not in comps:
+        return Costs()
+    memo: Dict[Tuple[str, bool, Optional[str]], Costs] = {}
+    entry = comps["__entry__"]
+    return _comp_costs(entry, comps, total_devices, memo)

@@ -1,0 +1,69 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi_34b --reduced \
+        --steps 100 --checkpoint-dir /tmp/ckpt
+
+Runs reduced configs on local devices (this container) or full configs on a
+real pod (same code path; the mesh comes from make_production_mesh when
+--production is set).
+"""
+
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+
+from repro.configs import get_arch
+from repro.distributed.sharding import ShardingCtx, make_rules
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models import build_model
+from repro.train.data import DataConfig
+from repro.train.step import TrainConfig
+from repro.train.train_loop import LoopConfig, train
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="yi_34b")
+    p.add_argument("--reduced", action="store_true", default=True)
+    p.add_argument("--full", dest="reduced", action="store_false")
+    p.add_argument("--production", action="store_true",
+                   help="use the 16x16 production mesh (real pod)")
+    p.add_argument("--steps", type=int, default=100)
+    p.add_argument("--seq-len", type=int, default=128)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--lr", type=float, default=3e-4)
+    p.add_argument("--microbatches", type=int, default=1)
+    p.add_argument("--grad-compression", action="store_true")
+    p.add_argument("--checkpoint-dir", default=None)
+    p.add_argument("--checkpoint-every", type=int, default=50)
+    args = p.parse_args()
+
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(levelname)s %(message)s")
+    cfg = get_arch(args.arch, reduced=args.reduced)
+    model = build_model(cfg)
+    mesh = (make_production_mesh() if args.production else make_local_mesh())
+    ctx = ShardingCtx(mesh=mesh, rules=make_rules("train"))
+
+    tc = TrainConfig(peak_lr=args.lr, total_steps=args.steps,
+                     warmup_steps=max(1, args.steps // 10),
+                     num_microbatches=args.microbatches,
+                     grad_compression=args.grad_compression)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                    global_batch=args.batch)
+    lc = LoopConfig(total_steps=args.steps,
+                    checkpoint_every=args.checkpoint_every,
+                    checkpoint_dir=args.checkpoint_dir)
+    with jax.set_mesh(mesh):
+        result = train(model, tc, dc, lc, ctx=ctx, mesh=mesh)
+    print(f"finished at step {result.final_step}; "
+          f"loss {result.losses[0]:.4f} -> {result.losses[-1]:.4f}; "
+          f"stragglers={len(result.straggler_events)} "
+          f"resumed_from={result.resumed_from}")
+
+
+if __name__ == "__main__":
+    main()

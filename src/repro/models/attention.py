@@ -1,0 +1,340 @@
+"""Attention: GQA (chunked/flash-equivalent), MLA (DeepSeek absorbed form),
+and decode paths over sharded KV caches.
+
+The training/prefill path is an online-softmax double-chunked attention —
+mathematically identical to flash attention and the jnp oracle for the Pallas
+kernel. Chunk sizes bound the score-matrix working set so 32k-sequence
+prefill fits per-device memory without materializing (S, S).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MLAConfig
+from repro.models.layers import acc_einsum, apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# chunked attention (flash-equivalent, pure jnp — oracle for the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(
+    q: jnp.ndarray,  # (B, Sq, Hq, D)
+    k: jnp.ndarray,  # (B, Sk, Hkv, D)
+    v: jnp.ndarray,  # (B, Sk, Hkv, Dv)
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    group = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / (D**0.5)
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    # pad seq dims to chunk multiples
+    pad_q = (-Sq) % q_chunk
+    pad_k = (-Sk) % kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // q_chunk, kp.shape[1] // kv_chunk
+
+    # grouped layout: q (B, nq, qc, Hkv, G, D) — K/V are NEVER materialized
+    # per-q-head (a repeat would multiply KV HBM traffic by the group size),
+    # and all inputs stay in their storage dtype (dots accumulate in f32)
+    qb = qp.reshape(B, nq, q_chunk, Hkv, group, D)
+    kb = kp.reshape(B, nk, kv_chunk, Hkv, D)
+    vb = vp.reshape(B, nk, kv_chunk, Hkv, Dv)
+
+    kv_valid = (jnp.arange(nk * kv_chunk) < Sk).reshape(nk, kv_chunk)
+
+    def one_q_block(qi, q_blk):  # q_blk: (B, qc, Hkv, G, D)
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry  # (B,Hkv,G,qc), ..., (B,Hkv,G,qc,Dv)
+            ki, k_blk, v_blk, valid = inputs
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            s = acc_einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk) * scale
+            mask = valid[None, :]
+            if causal:
+                mask = mask & (q_pos[:, None] >= k_pos[None, :])
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + acc_einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(v_blk.dtype), v_blk)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, Hkv, group, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, group, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, group, q_chunk, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step,
+            (m0, l0, a0),
+            (jnp.arange(nk), jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), kv_valid),
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return jnp.einsum("bhgqd->bqhgd", out).reshape(B, q_chunk, Hq, Dv)
+
+    with jax.named_scope("xla_flash_attention"):
+        outs = jax.lax.map(
+            lambda args: one_q_block(*args), (jnp.arange(nq), jnp.moveaxis(qb, 1, 0))
+        )  # (nq, B, qc, Hq, Dv)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * q_chunk, Hq, Dv)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,        # (B, 1, Hq, D)
+    k_cache: jnp.ndarray,  # (B, Hkv, S, D)  — head-major: no per-layer transpose
+    v_cache: jnp.ndarray,  # (B, Hkv, S, Dv)
+    cache_len,             # () int32 — valid prefix length
+    *,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Single-token attention over the cache.
+
+    The cache stays in its storage dtype (bf16) end-to-end — dots accumulate
+    in f32 via preferred_element_type; a naive .astype(f32) would stream a
+    full converted copy of the cache through HBM every layer. Softmax
+    reductions over a sequence-sharded cache lower to tiny all-reduces
+    (context parallelism)."""
+    B, _, Hq, D = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    group = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / (D**0.5)
+    qd = q[:, 0].reshape(B, Hkv, group, D).astype(k_cache.dtype)
+    # grouped einsum: KV cache read once, not repeated per q-head group
+    s = acc_einsum("bhgd,bhkd->bhgk", qd, k_cache) * scale
+    valid = jnp.arange(S)[None, None, None, :] < cache_len
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = acc_einsum("bhgk,bhkd->bhgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, 1, Hq, v_cache.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block (standard llama-style attention)
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(key, cfg: ArchConfig):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dtype = cfg.dtype
+    return {
+        "wq": dense_init(k1, d, hq * hd, dtype),
+        "wk": dense_init(k2, d, hkv * hd, dtype),
+        "wv": dense_init(k3, d, hkv * hd, dtype),
+        "wo": dense_init(k4, hq * hd, d, dtype),
+    }
+
+
+def gqa_axes():
+    return {"wq": "embed heads", "wk": "embed kv_heads", "wv": "embed kv_heads",
+            "wo": "heads embed"}
+
+
+def apply_gqa(
+    params, x: jnp.ndarray, cfg: ArchConfig, *, positions: jnp.ndarray,
+    causal: bool = True, ctx=None,
+) -> jnp.ndarray:
+    B, S, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"]).reshape(B, S, hq, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"]).reshape(B, S, hkv, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"]).reshape(B, S, hkv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if ctx is not None:
+        q = ctx.shard(q, "batch - act_heads -")
+        k = ctx.shard(k, "batch - act_kv_heads -")
+        v = ctx.shard(v, "batch - act_kv_heads -")
+    out = chunked_attention(
+        q, k, v, causal=causal, q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk
+    )
+    return jnp.einsum("bsh,hd->bsd", out.reshape(B, S, hq * hd), params["wo"])
+
+
+def gqa_decode(
+    params, x: jnp.ndarray, cfg: ArchConfig, cache: dict, *, ctx=None,
+) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, 1, d). cache: {k: (B,Hkv,S,hd), v: ..., len: ()}."""
+    B = x.shape[0]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    pos = cache["len"]
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"]).reshape(B, 1, hq, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"]).reshape(B, 1, hkv, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"]).reshape(B, 1, hkv, hd)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    # head-major cache: update writes a (B,Hkv,1,hd) slice along seq
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype).transpose(0, 2, 1, 3), pos, axis=2)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype).transpose(0, 2, 1, 3), pos, axis=2)
+    if ctx is not None:
+        k_cache = ctx.shard(k_cache, "kv_batch act_kv_heads kv_seq -")
+        v_cache = ctx.shard(v_cache, "kv_batch act_kv_heads kv_seq -")
+    out = decode_attention(q, k_cache, v_cache, pos + 1)
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(B, 1, hq * hd), params["wo"])
+    return y, {"k": k_cache, "v": v_cache, "len": pos + 1}
+
+
+def gqa_cache_spec(cfg: ArchConfig, batch: int, seq: int):
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((batch, hkv, seq, hd), cfg.dtype),
+        "v": jax.ShapeDtypeStruct((batch, hkv, seq, hd), cfg.dtype),
+        "len": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def gqa_cache_axes():
+    return {"k": "kv_batch act_kv_heads kv_seq -",
+            "v": "kv_batch act_kv_heads kv_seq -", "len": ""}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 Multi-head Latent Attention)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ArchConfig):
+    m: MLAConfig = cfg.mla
+    d, hq = cfg.d_model, cfg.n_heads
+    dtype = cfg.dtype
+    ks = jax.random.split(key, 7)
+    qk_dim = m.nope_head_dim + m.rope_head_dim
+    return {
+        "wq_a": dense_init(ks[0], d, m.q_lora_rank, dtype),          # down
+        "wq_b": dense_init(ks[1], m.q_lora_rank, hq * qk_dim, dtype),  # up
+        "wkv_a": dense_init(ks[2], d, m.kv_lora_rank + m.rope_head_dim, dtype),
+        "wk_b": dense_init(ks[3], m.kv_lora_rank, hq * m.nope_head_dim, dtype),
+        "wv_b": dense_init(ks[4], m.kv_lora_rank, hq * m.v_head_dim, dtype),
+        "wo": dense_init(ks[5], hq * m.v_head_dim, d, dtype),
+    }
+
+
+def mla_axes():
+    return {"wq_a": "embed q_lora", "wq_b": "q_lora heads",
+            "wkv_a": "embed kv_lora", "wk_b": "kv_lora heads",
+            "wv_b": "kv_lora heads", "wo": "heads embed"}
+
+
+def apply_mla(
+    params, x: jnp.ndarray, cfg: ArchConfig, *, positions: jnp.ndarray, ctx=None,
+) -> jnp.ndarray:
+    """Training/prefill MLA: expand latents to per-head K/V then flash attend."""
+    m: MLAConfig = cfg.mla
+    B, S, d = x.shape
+    hq = cfg.n_heads
+    qk_dim = m.nope_head_dim + m.rope_head_dim
+    q = jnp.einsum("bsd,dr->bsr", x, params["wq_a"])
+    q = jnp.einsum("bsr,rh->bsh", q, params["wq_b"]).reshape(B, S, hq, qk_dim)
+    q_nope, q_rope = jnp.split(q, [m.nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    c_kv, k_rope = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # 1 shared head
+    k_nope = jnp.einsum("bsr,rh->bsh", c_kv, params["wk_b"]).reshape(
+        B, S, hq, m.nope_head_dim
+    )
+    v = jnp.einsum("bsr,rh->bsh", c_kv, params["wv_b"]).reshape(B, S, hq, m.v_head_dim)
+
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kf = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, hq, m.rope_head_dim))],
+                         axis=-1)
+    if ctx is not None:
+        qf = ctx.shard(qf, "batch - act_heads -")
+        kf = ctx.shard(kf, "batch - act_heads -")
+        v = ctx.shard(v, "batch - act_heads -")
+    out = chunked_attention(
+        qf, kf, v, causal=True, q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+        scale=1.0 / (qk_dim**0.5),
+    )
+    return jnp.einsum("bsh,hd->bsd", out.reshape(B, S, hq * m.v_head_dim), params["wo"])
+
+
+def mla_decode(
+    params, x: jnp.ndarray, cfg: ArchConfig, cache: dict, *, ctx=None,
+) -> Tuple[jnp.ndarray, dict]:
+    """Absorbed-MLA decode: attends over the latent cache (c_kv, k_rope) —
+    the memory win that motivates MLA. Cache: {ckv: (B,S,R), krope: (B,S,Dr),
+    len: ()}."""
+    m: MLAConfig = cfg.mla
+    B = x.shape[0]
+    hq = cfg.n_heads
+    qk_scale = 1.0 / ((m.nope_head_dim + m.rope_head_dim) ** 0.5)
+    pos = cache["len"]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+
+    q = jnp.einsum("bsd,dr->bsr", x, params["wq_a"])
+    q = jnp.einsum("bsr,rh->bsh", q, params["wq_b"]).reshape(
+        B, 1, hq, m.nope_head_dim + m.rope_head_dim
+    )
+    q_nope, q_rope = jnp.split(q, [m.nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    c_new, kr_new = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    kr_new = apply_rope(kr_new[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], c_new.astype(cache["ckv"].dtype), pos, axis=1)
+    krope = jax.lax.dynamic_update_slice_in_dim(
+        cache["krope"], kr_new.astype(cache["krope"].dtype), pos, axis=1)
+    if ctx is not None:
+        ckv = ctx.shard(ckv, "kv_batch kv_seq -")
+        krope = ctx.shard(krope, "kv_batch kv_seq -")
+
+    # absorb W_uk into the query: q' = q_nope @ W_uk^T -> latent space.
+    # the latent cache stays bf16 (f32 casts would stream a converted copy
+    # of the whole cache through HBM per layer); dots accumulate in f32.
+    wk_b = params["wk_b"].reshape(m.kv_lora_rank, hq, m.nope_head_dim)
+    q_lat = acc_einsum("bshn,rhn->bshr", q_nope.astype(wk_b.dtype), wk_b)  # (B,1,H,R)
+    s_nope = acc_einsum("bshr,btr->bhst", q_lat.astype(ckv.dtype), ckv)
+    s_rope = acc_einsum("bshn,btn->bhst", q_rope.astype(krope.dtype), krope)
+    s = (s_nope + s_rope) * qk_scale  # (B, H, 1, S)
+    S_len = ckv.shape[1]
+    valid = jnp.arange(S_len)[None, None, None, :] < (pos + 1)
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # attend in latent space, then expand through W_uv (absorbed output)
+    lat = acc_einsum("bhst,btr->bshr", p.astype(ckv.dtype), ckv)  # (B,1,H,R)
+    wv_b = params["wv_b"].reshape(m.kv_lora_rank, hq, m.v_head_dim)
+    out = acc_einsum("bshr,rhv->bshv", lat.astype(wv_b.dtype), wv_b)
+    out = out.reshape(B, 1, hq * m.v_head_dim).astype(x.dtype)
+    y = jnp.einsum("bsh,hd->bsd", out, params["wo"])
+    return y, {"ckv": ckv, "krope": krope, "len": pos + 1}
+
+
+def mla_cache_spec(cfg: ArchConfig, batch: int, seq: int):
+    m = cfg.mla
+    return {
+        "ckv": jax.ShapeDtypeStruct((batch, seq, m.kv_lora_rank), cfg.dtype),
+        "krope": jax.ShapeDtypeStruct((batch, seq, m.rope_head_dim), cfg.dtype),
+        "len": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def mla_cache_axes():
+    return {"ckv": "kv_batch kv_seq -", "krope": "kv_batch kv_seq -", "len": ""}

@@ -1,0 +1,226 @@
+"""Whisper-style encoder-decoder (audio backbone; conv frontend stubbed).
+
+input_specs provide precomputed frame embeddings (B, n_frames, d) — the
+conv1d×2 frontend is a stub per the assignment. Encoder: bidirectional
+self-attention; decoder: causal self-attention + cross-attention.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_lib
+from repro.models.layers import (
+    apply_mlp,
+    cross_entropy_loss,
+    dense_init,
+    embed_init,
+    init_mlp,
+    mlp_axes,
+    rms_norm,
+)
+from repro.models.transformer import _remat, _stack_init, _prepend_axes
+
+
+# -- cross attention ----------------------------------------------------------
+
+
+def init_cross_attn(key, cfg: ArchConfig):
+    d, hq, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, hq * hd, cfg.dtype),
+        "wk": dense_init(ks[1], d, hq * hd, cfg.dtype),
+        "wv": dense_init(ks[2], d, hq * hd, cfg.dtype),
+        "wo": dense_init(ks[3], hq * hd, d, cfg.dtype),
+    }
+
+
+def cross_attn_axes():
+    return {"wq": "embed heads", "wk": "embed heads", "wv": "embed heads",
+            "wo": "heads embed"}
+
+
+def apply_cross_attn(params, x, enc_kv, cfg: ArchConfig, *, ctx=None):
+    """x (B,S,d) queries; enc_kv = (k, v) each (B,F,H,hd) precomputed."""
+    B, S, d = x.shape
+    hq, hd = cfg.n_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"]).reshape(B, S, hq, hd)
+    k, v = enc_kv
+    out = attn_lib.chunked_attention(
+        q, k, v, causal=False, q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk)
+    return jnp.einsum("bsh,hd->bsd", out.reshape(B, S, hq * hd), params["wo"])
+
+
+def cross_kv(params, enc_out, cfg: ArchConfig):
+    B, F, d = enc_out.shape
+    hq, hd = cfg.n_heads, cfg.head_dim
+    k = jnp.einsum("bfd,dh->bfh", enc_out, params["wk"]).reshape(B, F, hq, hd)
+    v = jnp.einsum("bfd,dh->bfh", enc_out, params["wv"]).reshape(B, F, hq, hd)
+    return k, v
+
+
+# -- blocks ----------------------------------------------------------------------
+
+
+def _init_enc_block(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "attn": attn_lib.init_gqa(k1, cfg),
+        "ffn_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.dtype, cfg.mlp_kind),
+    }
+
+
+def _init_dec_block(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "attn_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "attn": attn_lib.init_gqa(k1, cfg),
+        "cross_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "cross": init_cross_attn(k2, cfg),
+        "ffn_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.dtype, cfg.mlp_kind),
+    }
+
+
+def init_encdec(key, cfg: ArchConfig):
+    e = cfg.encdec
+    ks = jax.random.split(key, 6)
+    out = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "frame_proj": dense_init(ks[1], e.frame_dim, cfg.d_model, cfg.dtype),
+        "enc_pos": embed_init(ks[2], e.n_frames, cfg.d_model, cfg.dtype),
+        "enc_blocks": _stack_init(ks[3], e.n_encoder_layers,
+                                  lambda k: _init_enc_block(k, cfg)),
+        "enc_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "dec_blocks": _stack_init(ks[4], cfg.n_layers,
+                                  lambda k: _init_dec_block(k, cfg)),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = dense_init(ks[5], cfg.d_model, cfg.vocab_size, cfg.dtype)
+    return out
+
+
+def encdec_axes(cfg: ArchConfig):
+    enc_block = {"attn_norm": "-", "attn": attn_lib.gqa_axes(), "ffn_norm": "-",
+                 "mlp": mlp_axes(cfg.mlp_kind)}
+    dec_block = dict(enc_block, cross_norm="-", cross=cross_attn_axes())
+    return {
+        "embed": "vocab embed",
+        "frame_proj": "- embed",
+        "enc_pos": "frames embed",
+        "enc_blocks": _prepend_axes(enc_block),
+        "enc_norm": "-",
+        "dec_blocks": _prepend_axes(dec_block),
+        "final_norm": "-",
+    } | ({} if cfg.tie_embeddings else {"lm_head": "embed vocab"})
+
+
+def encode(params, frames: jnp.ndarray, cfg: ArchConfig, *, ctx=None) -> jnp.ndarray:
+    """frames (B, F, frame_dim) -> (B, F, d)."""
+    x = jnp.einsum("bfd,dh->bfh", frames, params["frame_proj"])
+    x = x + params["enc_pos"][None, : x.shape[1]]
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(x, block):
+        h = rms_norm(x, block["attn_norm"], cfg.rms_eps)
+        h = attn_lib.apply_gqa(block["attn"], h, cfg, positions=positions,
+                               causal=False, ctx=ctx)
+        x = x + h
+        h = rms_norm(x, block["ffn_norm"], cfg.rms_eps)
+        return x + apply_mlp(block["mlp"], h, ctx), None
+
+    x, _ = jax.lax.scan(_remat(body, cfg.remat), x, params["enc_blocks"])
+    return rms_norm(x, params["enc_norm"], cfg.rms_eps)
+
+
+def encdec_forward(params, frames, tokens, cfg: ArchConfig, *, ctx=None):
+    """Teacher-forced decode over full token sequence. Returns (logits, aux)."""
+    enc_out = encode(params, frames, cfg, ctx=ctx)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if ctx is not None:
+        x = ctx.shard(x, "batch - -")
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(x, block):
+        if ctx is not None:
+            x = ctx.shard(x, "batch seq_sp -")
+        h = rms_norm(x, block["attn_norm"], cfg.rms_eps)
+        h = attn_lib.apply_gqa(block["attn"], h, cfg, positions=positions,
+                               causal=True, ctx=ctx)
+        x = x + h
+        h = rms_norm(x, block["cross_norm"], cfg.rms_eps)
+        x = x + apply_cross_attn(block["cross"], h, cross_kv(block["cross"], enc_out, cfg),
+                                 cfg, ctx=ctx)
+        h = rms_norm(x, block["ffn_norm"], cfg.rms_eps)
+        return x + apply_mlp(block["mlp"], h, ctx), None
+
+    x, _ = jax.lax.scan(_remat(body, cfg.remat), x, params["dec_blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    if ctx is not None:
+        logits = ctx.shard(logits, "batch - act_mlp")
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def encdec_loss(params, batch, cfg: ArchConfig, *, ctx=None):
+    logits, aux = encdec_forward(params, batch["frames"], batch["tokens"], cfg, ctx=ctx)
+    ce = cross_entropy_loss(logits, batch["labels"], batch.get("loss_mask"))
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# -- decode -----------------------------------------------------------------------
+
+
+def encdec_cache_spec(cfg: ArchConfig, batch: int, max_seq: int):
+    e = cfg.encdec
+    hq, hd = cfg.n_heads, cfg.head_dim
+    self_one = attn_lib.gqa_cache_spec(cfg, batch, max_seq)
+    stack = lambda tree, n: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree)
+    return {
+        "self": stack(self_one, cfg.n_layers),
+        "cross_k": jax.ShapeDtypeStruct((cfg.n_layers, batch, e.n_frames, hq, hd),
+                                        cfg.dtype),
+        "cross_v": jax.ShapeDtypeStruct((cfg.n_layers, batch, e.n_frames, hq, hd),
+                                        cfg.dtype),
+    }
+
+
+def encdec_cache_axes(cfg: ArchConfig):
+    return {
+        "self": _prepend_axes(attn_lib.gqa_cache_axes()),
+        "cross_k": "layers kv_batch - act_heads -",
+        "cross_v": "layers kv_batch - act_heads -",
+    }
+
+
+def encdec_decode_step(params, cache, tokens, cfg: ArchConfig, *, ctx=None):
+    """tokens (B,1). Cross K/V precomputed at prefill (part of the cache)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+
+    def body(x, xs):
+        block, c, ck, cv = xs
+        h = rms_norm(x, block["attn_norm"], cfg.rms_eps)
+        h, c = attn_lib.gqa_decode(block["attn"], h, cfg, c, ctx=ctx)
+        x = x + h
+        h = rms_norm(x, block["cross_norm"], cfg.rms_eps)
+        x = x + apply_cross_attn(block["cross"], h, (ck, cv), cfg, ctx=ctx)
+        h = rms_norm(x, block["ffn_norm"], cfg.rms_eps)
+        return x + apply_mlp(block["mlp"], h, ctx), c
+
+    x, self_cache = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["self"], cache["cross_k"],
+                  cache["cross_v"]))
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return logits, dict(cache, self=self_cache)

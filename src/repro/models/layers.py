@@ -1,0 +1,126 @@
+"""Shared model layers: linear/init helpers, RMSNorm, RoPE, embeddings, MLP.
+
+Parameters are plain nested dicts. Every init_* function has a matching
+*_axes function returning the same tree with string leaves of logical axis
+names ('vocab embed', '-' = unsharded) consumed by distributed.sharding.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def acc_einsum(spec: str, a, b):
+    """einsum with f32 accumulation. On TPU (and in dry-run lowering) this is
+    a native bf16xbf16->f32 dot (no HBM-visible upcast); the CPU *runtime*
+    lacks that DotThunk, so eager/test execution upcasts instead."""
+    import os
+
+    if jax.default_backend() == "tpu" or os.environ.get("REPRO_DRYRUN"):
+        return jnp.einsum(spec, a, b, preferred_element_type=jnp.float32)
+    return jnp.einsum(spec, a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(in_dim))
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, weight: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# -- RoPE ---------------------------------------------------------------------
+
+
+def rope_freqs(dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D) with D even; positions: (..., S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, d/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- MLP (SwiGLU) ----------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype, kind: str = "swiglu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "gelu":  # 2-matrix (gpt/whisper-style)
+        return {
+            "w_up": dense_init(k2, d_model, d_ff, dtype),
+            "w_down": dense_init(k3, d_ff, d_model, dtype,
+                                 scale=1.0 / jnp.sqrt(d_ff)),
+        }
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype, scale=1.0 / jnp.sqrt(d_ff)),
+    }
+
+
+def mlp_axes(kind: str = "swiglu"):
+    if kind == "gelu":
+        return {"w_up": "embed mlp", "w_down": "mlp embed"}
+    return {"w_gate": "embed mlp", "w_up": "embed mlp", "w_down": "mlp embed"}
+
+
+def apply_mlp(params, x: jnp.ndarray, ctx=None) -> jnp.ndarray:
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    if "w_gate" in params:  # SwiGLU
+        h = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+        h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * u
+    else:  # GELU
+        h = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
+    if ctx is not None:
+        h = ctx.shard(h, "batch - act_mlp")
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"])
+
+
+def mlp_flops(tokens: int, d_model: int, d_ff: int) -> int:
+    return 2 * tokens * d_model * d_ff * 3
+
+
+# -- losses ------------------------------------------------------------------------
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean CE over (possibly masked) positions; logits (..., V), labels (...)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

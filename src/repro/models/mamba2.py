@@ -1,0 +1,282 @@
+"""Mamba2 block (state-space dual / SSD) — zamba2's backbone.
+
+Training/prefill uses the chunked SSD form: within-chunk computation is a
+masked attention-like quadratic in the chunk length (MXU-friendly), chunks
+are linked by a tiny recurrence over per-chunk states. Decode is the O(1)
+recurrent update. ``ssd_chunked`` is the jnp oracle for the Pallas kernel in
+kernels/mamba2_ssd.py.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.models.layers import dense_init
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD scan (jnp oracle; matches kernels/ref.ssd_scan sequentially)
+# ---------------------------------------------------------------------------
+
+
+def ssd_core(
+    x: jnp.ndarray,     # (B, S, H, P)
+    a: jnp.ndarray,     # (B, S, H)  log-decay per step (<= 0)
+    mult: jnp.ndarray,  # (B, S, H)  input multiplier (mamba2: dt; mLSTM: i-gate)
+    Bm: jnp.ndarray,    # (B, S, G, N)
+    Cm: jnp.ndarray,    # (B, S, G, N)
+    *,
+    init_state: Optional[jnp.ndarray] = None,  # (B, H, P, N)
+    chunk: int = 256,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Generalized SSD: h_t = exp(a_t) h_{t-1} + mult_t x_t B_t^T; y_t = h_t C_t."""
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    with jax.named_scope("xla_ssd_scan"):  # input prep counts as kernel-fused
+        xf = x.astype(jnp.float32).reshape(B, nc, chunk, H, P)
+        dtf = mult.astype(jnp.float32).reshape(B, nc, chunk, H)
+        Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=2).reshape(
+            B, nc, chunk, H, N)
+        Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=2).reshape(
+            B, nc, chunk, H, N)
+        a = a.astype(jnp.float32).reshape(B, nc, chunk, H)  # log-decay
+    return _ssd_core_body(xf, a, dtf, Bf, Cf, init_state, B, nc, chunk, H, P, N,
+                          x.dtype)
+
+
+def _ssd_core_body(xf, a, dtf, Bf, Cf, init_state, B, nc, chunk, H, P, N, out_dtype):
+    return _ssd_scoped(xf, a, dtf, Bf, Cf, init_state, B, nc, chunk, H, P, N,
+                       out_dtype)
+
+
+@jax.named_scope("xla_ssd_scan")
+def _ssd_scoped(xf, a, dtf, Bf, Cf, init_state, B, nc, chunk, H, P, N, out_dtype):
+    seg = jnp.cumsum(a, axis=2)                      # within-chunk cumulative
+    total = seg[:, :, -1, :]                         # (B,nc,H)
+
+    # -- intra-chunk (attention-like, causal) --------------------------------
+    # M[i,j] = exp(seg_i - seg_j) * dt_j  for j <= i
+    li = seg[:, :, :, None, :]                       # (B,nc,L,1,H)
+    lj = seg[:, :, None, :, :]                       # (B,nc,1,L,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    # clamp BEFORE exp: the masked (j > i) entries have positive exponents
+    # whose exp overflows — where() would keep the NaN in the gradient
+    diff = jnp.where(mask, li - lj, 0.0)
+    decay = jnp.where(mask, jnp.exp(diff), 0.0)      # (B,nc,L,L,H)
+    scores = jnp.einsum("bclhn,bcmhn->bclmh", Cf, Bf)  # (B,nc,L,L,H)
+    M = scores * decay * dtf[:, :, None, :, :]
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", M, xf)
+
+    # -- chunk states ----------------------------------------------------------
+    # S_c = sum_j exp(total - seg_j) dt_j B_j x_j^T   (B,nc,H,P,N)
+    # NOTE: reassociated two-step — a 3-operand einsum can materialize the
+    # (B,nc,L,H,P,N) outer product (~275 GB/layer at xLSTM head widths)
+    w = jnp.exp(total[:, :, None, :] - seg) * dtf    # (B,nc,L,H)
+    wx = xf * w[..., None]                           # (B,nc,L,H,P)
+    states = jnp.einsum("bclhp,bclhn->bchpn", wx, Bf)
+
+    # -- inter-chunk recurrence -------------------------------------------------
+    h0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((B, H, P, N), jnp.float32)
+    )
+
+    def step(h, inputs):
+        st, tot = inputs  # (B,H,P,N), (B,H)
+        h_prev = h
+        h = h * jnp.exp(tot)[:, :, None, None] + st
+        return h, h_prev
+
+    (hT, h_prevs) = jax.lax.scan(
+        step, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(total, 1, 0))
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)            # (B,nc,H,P,N) state before chunk
+
+    # -- inter-chunk contribution to outputs (reassociated, see above) -----------
+    y_inter = jnp.einsum("bclhn,bchpn->bclhp", Cf, h_prevs) \
+        * jnp.exp(seg)[..., None]
+    y = (y_intra + y_inter).reshape(B, nc * chunk, H, P)
+    return y.astype(out_dtype), hT
+
+
+def ssd_chunked(
+    x: jnp.ndarray,    # (B, S, H, P)
+    dt: jnp.ndarray,   # (B, S, H) positive
+    A: jnp.ndarray,    # (H,) negative
+    Bm: jnp.ndarray,   # (B, S, G, N)
+    Cm: jnp.ndarray,   # (B, S, G, N)
+    *,
+    init_state: Optional[jnp.ndarray] = None,
+    chunk: int = 256,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mamba2 SSD: log-decay a = A*dt, input multiplier = dt."""
+    a = A.astype(jnp.float32)[None, None, :] * dt.astype(jnp.float32)
+    return ssd_core(x, a, dt, Bm, Cm, init_state=init_state, chunk=chunk)
+
+
+def ssd_decode_step(
+    h: jnp.ndarray,    # (B, H, P, N)
+    x: jnp.ndarray,    # (B, H, P)
+    dt: jnp.ndarray,   # (B, H)
+    A: jnp.ndarray,    # (H,)
+    Bm: jnp.ndarray,   # (B, G, N)
+    Cm: jnp.ndarray,   # (B, G, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    H, G = x.shape[1], Bm.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(Bm.astype(jnp.float32), rep, axis=1)
+    Ch = jnp.repeat(Cm.astype(jnp.float32), rep, axis=1)
+    decay = jnp.exp(A.astype(jnp.float32)[None, :] * dt.astype(jnp.float32))
+    h = h * decay[..., None, None] + (
+        (dt.astype(jnp.float32)[..., None] * x.astype(jnp.float32))[..., None]
+        * Bh[:, :, None, :]
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", h, Ch)
+    return y.astype(x.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# full Mamba2 block (in_proj -> conv -> SSD -> gate -> out_proj)
+# ---------------------------------------------------------------------------
+
+
+def _dims(cfg: ArchConfig):
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return s, d_inner, n_heads, conv_dim
+
+
+def init_mamba2(key, cfg: ArchConfig):
+    s, d_inner, n_heads, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    dtype = cfg.dtype
+    ks = jax.random.split(key, 6)
+    # in_proj emits [z (gate), x, B, C, dt] fused
+    proj_out = 2 * d_inner + 2 * s.n_groups * s.d_state + n_heads
+    return {
+        "in_proj": dense_init(ks[0], d, proj_out, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_dim), jnp.float32) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads).astype(jnp.float32)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm_w": jnp.zeros((d_inner,), dtype),
+        "out_proj": dense_init(ks[2], d_inner, d, dtype),
+    }
+
+
+def mamba2_axes():
+    return {
+        "in_proj": "embed ssm_inner",
+        "conv_w": "conv -", "conv_b": "-",
+        "A_log": "ssm_heads", "D": "ssm_heads", "dt_bias": "ssm_heads",
+        "norm_w": "ssm_inner",
+        "out_proj": "ssm_inner embed",
+    }
+
+
+def _split_proj(cfg: ArchConfig, proj: jnp.ndarray):
+    s, d_inner, n_heads, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, xbc_dt = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_inner + 2 * gn], axis=-1)
+    return z, xbc, dt  # gate, conv input, dt logits
+
+
+def _causal_conv(xbc: jnp.ndarray, conv_w, conv_b, *, state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv along seq. xbc (B,S,C); state (B, d_conv-1, C)."""
+    K = conv_w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(
+        xp[:, i : i + xbc.shape[1], :] * conv_w[i][None, None, :] for i in range(K)
+    )
+    new_state = xp[:, -(K - 1):, :] if K > 1 else None
+    return jax.nn.silu((out + conv_b[None, None, :]).astype(jnp.float32)).astype(
+        xbc.dtype
+    ), new_state
+
+
+def apply_mamba2(params, x: jnp.ndarray, cfg: ArchConfig, *, ctx=None) -> jnp.ndarray:
+    s, d_inner, n_heads, _ = _dims(cfg)
+    B, S, d = x.shape
+    gn = s.n_groups * s.d_state
+    proj = jnp.einsum("bsd,dp->bsp", x, params["in_proj"])
+    if ctx is not None:
+        proj = ctx.shard(proj, "batch - act_mlp")
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc, _ = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xs, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + gn], axis=-1)
+    xs = xs.reshape(B, S, n_heads, s.head_dim)
+    Bm = Bm.reshape(B, S, s.n_groups, s.d_state)
+    Cm = Cm.reshape(B, S, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["A_log"])
+
+    from repro.kernels import ops as kops
+
+    y, _ = kops.ssd_scan(xs, dt, A, Bm, Cm, chunk=s.chunk)
+    y = y + xs * params["D"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(B, S, d_inner)
+    # gated RMSNorm (mamba2 style)
+    from repro.models.layers import rms_norm
+
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["norm_w"], cfg.rms_eps)
+    return jnp.einsum("bsi,id->bsd", y, params["out_proj"])
+
+
+def mamba2_decode(params, x: jnp.ndarray, cfg: ArchConfig, cache: dict, *, ctx=None
+                  ) -> Tuple[jnp.ndarray, dict]:
+    """x (B,1,d); cache {conv: (B,K-1,convdim), ssm: (B,H,P,N)}."""
+    s, d_inner, n_heads, conv_dim = _dims(cfg)
+    B = x.shape[0]
+    gn = s.n_groups * s.d_state
+    proj = jnp.einsum("bsd,dp->bsp", x, params["in_proj"])
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc, conv_state = _causal_conv(
+        xbc, params["conv_w"], params["conv_b"], state=cache["conv"]
+    )
+    xs, Bm, Cm = jnp.split(xbc[:, 0], [d_inner, d_inner + gn], axis=-1)
+    xs = xs.reshape(B, n_heads, s.head_dim)
+    Bm = Bm.reshape(B, s.n_groups, s.d_state)
+    Cm = Cm.reshape(B, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"][None, :])
+    A = -jnp.exp(params["A_log"])
+    y, ssm_state = ssd_decode_step(cache["ssm"].astype(jnp.float32), xs, dt, A, Bm, Cm)
+    y = y + xs * params["D"][None, :, None].astype(xs.dtype)
+    y = y.reshape(B, 1, d_inner)
+    from repro.models.layers import rms_norm
+
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["norm_w"], cfg.rms_eps)
+    out = jnp.einsum("bsi,id->bsd", y, params["out_proj"])
+    return out, {"conv": conv_state.astype(cache["conv"].dtype), "ssm": ssm_state}
+
+
+def mamba2_cache_spec(cfg: ArchConfig, batch: int):
+    s, d_inner, n_heads, conv_dim = _dims(cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, s.d_conv - 1, conv_dim), cfg.dtype),
+        "ssm": jax.ShapeDtypeStruct((batch, n_heads, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def mamba2_cache_axes():
+    return {"conv": "kv_batch - act_mlp", "ssm": "kv_batch ssm_heads - -"}

@@ -1,0 +1,137 @@
+"""Uniform model facade over all assigned architectures.
+
+``build_model(cfg)`` returns a Model with:
+  init / param_axes           — parameters + logical sharding axes
+  loss_fn                     — training loss (CE + MoE aux)
+  forward                     — logits (prefill / eval)
+  decode_step + cache_spec    — single-token serving
+  input_specs / batch_axes    — ShapeDtypeStruct stand-ins per InputShape
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import encdec as encdec_lib
+from repro.models import transformer as lm_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # -- params ----------------------------------------------------------------
+    def init(self, rng) -> Any:
+        if self.cfg.family == "encdec":
+            return encdec_lib.init_encdec(rng, self.cfg)
+        return lm_lib.init_lm(rng, self.cfg)
+
+    def param_axes(self):
+        if self.cfg.family == "encdec":
+            return encdec_lib.encdec_axes(self.cfg)
+        return lm_lib.lm_axes(self.cfg)
+
+    def param_shapes(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # -- train -------------------------------------------------------------------
+    def loss_fn(self, params, batch, *, ctx=None):
+        if self.cfg.family == "encdec":
+            return encdec_lib.encdec_loss(params, batch, self.cfg, ctx=ctx)
+        return lm_lib.lm_loss(params, batch, self.cfg, ctx=ctx)
+
+    # -- serve --------------------------------------------------------------------
+    def forward(self, params, batch, *, ctx=None):
+        if self.cfg.family == "encdec":
+            return encdec_lib.encdec_forward(
+                params, batch["frames"], batch["tokens"], self.cfg, ctx=ctx)
+        return lm_lib.lm_forward(
+            params, batch["tokens"], self.cfg, ctx=ctx,
+            img_embeds=batch.get("img_embeds"))
+
+    def decode_step(self, params, cache, tokens, *, ctx=None):
+        if self.cfg.family == "encdec":
+            return encdec_lib.encdec_decode_step(params, cache, tokens, self.cfg,
+                                                 ctx=ctx)
+        return lm_lib.lm_decode_step(params, cache, tokens, self.cfg, ctx=ctx)
+
+    def cache_spec(self, batch: int, max_seq: int):
+        if self.cfg.family == "encdec":
+            return encdec_lib.encdec_cache_spec(self.cfg, batch, max_seq)
+        return lm_lib.lm_cache_spec(self.cfg, batch, max_seq)
+
+    def cache_axes(self):
+        if self.cfg.family == "encdec":
+            return encdec_lib.encdec_cache_axes(self.cfg)
+        return lm_lib.lm_cache_axes(self.cfg)
+
+    def init_cache(self, batch: int, max_seq: int):
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), self.cache_spec(batch, max_seq))
+
+    # -- dry-run inputs -------------------------------------------------------------
+    def input_specs(self, shape: InputShape) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for one train/prefill/decode batch."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+        if cfg.family == "encdec":
+            e = cfg.encdec
+            specs = {
+                "frames": jax.ShapeDtypeStruct((B, e.n_frames, e.frame_dim), cfg.dtype),
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            }
+            if shape.kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+            return specs
+        if cfg.family == "vlm":
+            P = cfg.vlm.n_patch_tokens
+            specs = {
+                "img_embeds": jax.ShapeDtypeStruct((B, P, cfg.d_model), cfg.dtype),
+                "tokens": jax.ShapeDtypeStruct((B, S - P), i32),
+            }
+            if shape.kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((B, S - P), i32)
+            return specs
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        return specs
+
+    def batch_axes(self, shape: InputShape):
+        axes = {}
+        for name in self.input_specs(shape):
+            if shape.kind == "decode":
+                axes[name] = "kv_batch -"
+            elif name == "img_embeds":
+                axes[name] = "batch - -"
+            elif name == "frames":
+                axes[name] = "batch - -"
+            else:
+                axes[name] = "batch -"
+        return axes
+
+    def make_dummy_batch(self, shape: InputShape, rng=None):
+        """Concrete batch for smoke tests (reduced configs only)."""
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        specs = self.input_specs(shape)
+        out = {}
+        for name, sds in specs.items():
+            rng, k = jax.random.split(rng)
+            if jnp.issubdtype(sds.dtype, jnp.integer):
+                out[name] = jax.random.randint(k, sds.shape, 0, self.cfg.vocab_size,
+                                               dtype=sds.dtype)
+            else:
+                out[name] = jax.random.normal(k, sds.shape, jnp.float32).astype(sds.dtype)
+        return out
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg=cfg)

@@ -1,0 +1,171 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-bounded scatter
+dispatch (+ DeepSeek-style shared experts and first-k-dense layers).
+
+Dispatch strategy (GSPMD-friendly):
+  * tokens are processed in ``moe_chunks`` sequence chunks (bounds the
+    dispatch buffer memory);
+  * within a chunk, per-batch-row scatter builds an (B, E, C, D) buffer —
+    batch stays data-sharded, so the scatter is shard-local; the expert
+    einsum then runs with E sharded over `model` (expert parallelism);
+  * over-capacity tokens are dropped (their combine weight is zero) —
+    standard capacity-factor semantics.
+
+The router runs in float32; an auxiliary load-balancing loss (Switch-style)
+is returned for the train loss.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.models.layers import dense_init
+
+
+def init_moe(key, cfg: ArchConfig):
+    m: MoEConfig = cfg.moe
+    d = cfg.d_model
+    dtype = cfg.dtype
+    ks = jax.random.split(key, 5)
+    params = {
+        "w_router": dense_init(ks[0], d, m.n_experts, jnp.float32),
+        "w_gate": _expert_init(ks[1], m.n_experts, d, m.d_expert, dtype),
+        "w_up": _expert_init(ks[2], m.n_experts, d, m.d_expert, dtype),
+        "w_down": _expert_init(ks[3], m.n_experts, m.d_expert, d, dtype),
+    }
+    if m.n_shared_experts:
+        from repro.models.layers import init_mlp
+
+        params["shared"] = init_mlp(ks[4], d, m.n_shared_experts * m.d_expert, dtype)
+    return params
+
+
+def _expert_init(key, e, din, dout, dtype):
+    scale = 1.0 / jnp.sqrt(din)
+    return (jax.random.normal(key, (e, din, dout), jnp.float32) * scale).astype(dtype)
+
+
+def moe_axes(cfg: ArchConfig):
+    axes = {
+        "w_router": "embed -",
+        "w_gate": "experts embed expert_mlp",
+        "w_up": "experts embed expert_mlp",
+        "w_down": "experts expert_mlp embed",
+    }
+    if cfg.moe.n_shared_experts:
+        from repro.models.layers import mlp_axes
+
+        axes["shared"] = mlp_axes()
+    return axes
+
+
+def _dispatch_one_row(x_row, idx_row, pos_row, keep_row, n_experts, capacity):
+    """x_row (T, D); idx/pos/keep (T, k) -> buffer (E*C, D). vmapped over B."""
+    T, D = x_row.shape
+    k = idx_row.shape[1]
+    # over-capacity assignments are routed to an out-of-bounds sentinel slot
+    # and dropped by the scatter (capacity-factor token dropping)
+    slot = jnp.where(keep_row, idx_row * capacity + pos_row, n_experts * capacity)
+    updates = jnp.repeat(x_row, k, axis=0) * keep_row.reshape(T * k, 1).astype(x_row.dtype)
+    buf = jnp.zeros((n_experts * capacity, D), x_row.dtype)
+    return buf.at[slot.reshape(T * k)].add(updates, mode="drop")
+
+
+def _moe_chunk(params, x, cfg: ArchConfig, ctx=None):
+    """x: (B, T, D) one sequence chunk -> (out, aux_loss_terms)."""
+    m: MoEConfig = cfg.moe
+    B, T, D = x.shape
+    E, k = m.n_experts, m.top_k
+    # ceil, floor 1: at T=1 (decode) a row sends <= 1 token per expert, so
+    # C=1 suffices — a floor of k would multiply decode expert compute by k
+    capacity = max(-(-int(T * k * m.capacity_factor) // E), 1)
+
+    logits = jnp.einsum("btd,de->bte", x.astype(jnp.float32),
+                        params["w_router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # (B, T, E)
+    gate_vals, idx = jax.lax.top_k(probs, k)  # (B, T, k)
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # position of each assignment within its expert, via a per-row stable
+    # sort over expert ids — O(T*k) memory (a dense (T*k, E) one-hot cumsum
+    # would be ~GBs per device at production batch sizes)
+    flat_e = idx.reshape(B, T * k)
+    order = jnp.argsort(flat_e, axis=1, stable=True)            # (B, T*k)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    starts = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(E), side="left"))(sorted_e)
+    ends = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(E), side="right"))(sorted_e)
+    pos_sorted = (jnp.arange(T * k)[None, :]
+                  - jnp.take_along_axis(starts, sorted_e, axis=1))
+    inv_order = jnp.argsort(order, axis=1)
+    pos = jnp.take_along_axis(pos_sorted, inv_order, axis=1)
+    pos = pos.reshape(B, T, k).astype(jnp.int32)
+    keep = pos < capacity
+
+    # Switch-style aux loss terms (combined across chunks by the caller)
+    token_frac = jnp.mean((ends - starts).astype(jnp.float32), axis=0) / (T * k)
+    prob_frac = jnp.mean(probs, axis=(0, 1))                    # (E,)
+    aux = E * jnp.sum(token_frac * prob_frac)
+
+    buf = jax.vmap(
+        functools.partial(_dispatch_one_row, n_experts=E, capacity=capacity)
+    )(x, idx, pos, keep)  # (B, E*C, D)
+    buf = buf.reshape(B, E, capacity, D)
+    if ctx is not None:
+        buf = ctx.shard(buf, "batch act_experts - -")
+
+    h = jnp.einsum("becd,edf->becf", buf, params["w_gate"])
+    u = jnp.einsum("becd,edf->becf", buf, params["w_up"])
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * u
+    out_buf = jnp.einsum("becf,efd->becd", h, params["w_down"])  # (B,E,C,D)
+    if ctx is not None:
+        out_buf = ctx.shard(out_buf, "batch act_experts - -")
+
+    # combine: gather each assignment's output, weight, sum over k
+    out_flat = out_buf.reshape(B, E * capacity, D)
+    flat_slot = jnp.minimum(idx * capacity + pos, E * capacity - 1).reshape(B, T * k)
+    gathered = jnp.take_along_axis(out_flat, flat_slot[..., None], axis=1)  # (B,T*k,D)
+    w = (gate_vals * keep.astype(jnp.float32)).reshape(B, T * k, 1).astype(x.dtype)
+    out = jnp.sum((gathered * w).reshape(B, T, k, D), axis=2)
+    return out, aux
+
+
+def apply_moe(params, x: jnp.ndarray, cfg: ArchConfig, *, ctx=None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out (B,S,D), aux_loss ())."""
+    m: MoEConfig = cfg.moe
+    B, S, D = x.shape
+    n_chunks = min(m.moe_chunks, S)
+    assert S % n_chunks == 0, (S, n_chunks)
+    xc = jnp.moveaxis(x.reshape(B, n_chunks, S // n_chunks, D), 1, 0)
+
+    chunk_fn = jax.checkpoint(
+        lambda xt: _moe_chunk(params, xt, cfg, ctx=ctx))
+
+    def step(carry, xt):
+        out, aux = chunk_fn(xt)
+        return carry + aux, out
+
+    aux_total, outs = jax.lax.scan(step, jnp.zeros((), jnp.float32), xc)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, D)
+
+    if m.n_shared_experts:
+        from repro.models.layers import apply_mlp
+
+        out = out + apply_mlp(params["shared"], x, ctx)
+    return out, aux_total / n_chunks * m.router_aux_weight
+
+
+def moe_decode(params, x: jnp.ndarray, cfg: ArchConfig, *, ctx=None) -> jnp.ndarray:
+    """Decode path (T small): dense-gather per token, no capacity games."""
+    out, _ = _moe_chunk(params, x, cfg, ctx=ctx)
+    if cfg.moe.n_shared_experts:
+        from repro.models.layers import apply_mlp
+
+        out = out + apply_mlp(params["shared"], x, ctx)
+    return out

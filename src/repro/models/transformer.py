@@ -1,0 +1,495 @@
+"""Decoder-only LM covering the dense / moe / hybrid / ssm / vlm families.
+
+Layer stacks are `lax.scan`'d over stacked parameters (compile-time O(1) in
+depth); the scanned block body is optionally `jax.checkpoint`'d (remat).
+Hybrid (zamba2) scans *groups* of [attn_every × Mamba2 + 1 shared attention
+block]; xLSTM scans groups of [(slstm_every-1) × mLSTM + 1 sLSTM].
+
+Every apply function takes an optional ShardingCtx and threads an `aux`
+scalar (MoE load-balance loss) through the scan carry.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_lib
+from repro.models import mamba2 as mamba_lib
+from repro.models import moe as moe_lib
+from repro.models import xlstm as xlstm_lib
+from repro.models.layers import (
+    apply_mlp,
+    cross_entropy_loss,
+    dense_init,
+    embed_init,
+    init_mlp,
+    mlp_axes,
+    rms_norm,
+)
+
+
+def _stack_init(key, n: int, init_fn):
+    """vmap an init over n layers (stacked leading axis)."""
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def _prepend_axes(axes_tree, prefix: str = "layers"):
+    return jax.tree.map(lambda s: f"{prefix} {s}".strip(), axes_tree)
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(fn)  # "block": save only layer boundaries
+
+
+def _shard_tree(tree, axes, ctx):
+    """Constrain a (sliced) per-layer param subtree to its logical sharding.
+
+    Applied INSIDE scan bodies: the transpose of a sharding constraint
+    constrains the cotangent, so the backward scan's gradient-accumulation
+    buffers stay 2D-sharded instead of materializing full f32 stacks.
+    """
+    if ctx is None:
+        return tree
+    return jax.tree.map(lambda p, a: ctx.shard(p, a), tree, axes)
+
+
+# ---------------------------------------------------------------------------
+# standard transformer block (dense or MoE FFN; GQA or MLA attention)
+# ---------------------------------------------------------------------------
+
+
+def init_std_block(key, cfg: ArchConfig, *, use_moe: bool, dense_ff: Optional[int] = None):
+    k1, k2 = jax.random.split(key)
+    attn = (attn_lib.init_mla(k1, cfg) if cfg.mla is not None
+            else attn_lib.init_gqa(k1, cfg))
+    p = {
+        "attn_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "attn": attn,
+        "ffn_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+    }
+    if use_moe:
+        p["moe"] = moe_lib.init_moe(k2, cfg)
+    else:
+        p["mlp"] = init_mlp(k2, cfg.d_model, dense_ff or cfg.d_ff, cfg.dtype,
+                            cfg.mlp_kind)
+    return p
+
+
+def std_block_axes(cfg: ArchConfig, *, use_moe: bool):
+    attn = attn_lib.mla_axes() if cfg.mla is not None else attn_lib.gqa_axes()
+    axes = {"attn_norm": "-", "attn": attn, "ffn_norm": "-"}
+    if use_moe:
+        axes["moe"] = moe_lib.moe_axes(cfg)
+    else:
+        axes["mlp"] = mlp_axes(cfg.mlp_kind)
+    return axes
+
+
+def apply_std_block(params, x, cfg: ArchConfig, *, positions, ctx=None,
+                    use_moe: bool, causal: bool = True):
+    h = rms_norm(x, params["attn_norm"], cfg.rms_eps)
+    if cfg.mla is not None:
+        h = attn_lib.apply_mla(params["attn"], h, cfg, positions=positions, ctx=ctx)
+    else:
+        h = attn_lib.apply_gqa(params["attn"], h, cfg, positions=positions,
+                               causal=causal, ctx=ctx)
+    x = x + h
+    h = rms_norm(x, params["ffn_norm"], cfg.rms_eps)
+    if use_moe:
+        h, aux = moe_lib.apply_moe(params["moe"], h, cfg, ctx=ctx)
+    else:
+        h, aux = apply_mlp(params["mlp"], h, ctx), jnp.zeros((), jnp.float32)
+    return x + h, aux
+
+
+def decode_std_block(params, x, cfg: ArchConfig, cache, *, ctx=None, use_moe: bool):
+    h = rms_norm(x, params["attn_norm"], cfg.rms_eps)
+    if cfg.mla is not None:
+        h, cache = attn_lib.mla_decode(params["attn"], h, cfg, cache, ctx=ctx)
+    else:
+        h, cache = attn_lib.gqa_decode(params["attn"], h, cfg, cache, ctx=ctx)
+    x = x + h
+    h = rms_norm(x, params["ffn_norm"], cfg.rms_eps)
+    if use_moe:
+        h = moe_lib.moe_decode(params["moe"], h, cfg, ctx=ctx)
+    else:
+        h = apply_mlp(params["mlp"], h, ctx)
+    return x + h, cache
+
+
+# ---------------------------------------------------------------------------
+# LM: init
+# ---------------------------------------------------------------------------
+
+
+def init_lm(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[1], cfg.d_model, cfg.vocab_size, cfg.dtype)
+
+    if cfg.family in ("dense", "vlm"):
+        params["blocks"] = _stack_init(
+            ks[2], cfg.n_layers,
+            lambda k: init_std_block(k, cfg, use_moe=False))
+    elif cfg.family == "moe":
+        m = cfg.moe
+        n_moe = cfg.n_layers - m.first_k_dense
+        if m.first_k_dense:
+            params["dense_blocks"] = _stack_init(
+                ks[3], m.first_k_dense,
+                lambda k: init_std_block(k, cfg, use_moe=False,
+                                         dense_ff=m.dense_d_ff or cfg.d_ff))
+        params["blocks"] = _stack_init(
+            ks[2], n_moe, lambda k: init_std_block(k, cfg, use_moe=True))
+    elif cfg.family == "hybrid":
+        h = cfg.hybrid
+        n_groups = cfg.n_layers // h.attn_every
+        n_tail = cfg.n_layers - n_groups * h.attn_every
+        params["mamba_groups"] = _stack_init(
+            ks[2], n_groups,
+            lambda k: _stack_init(k, h.attn_every, lambda kk: _init_mamba_block(kk, cfg)))
+        if n_tail:
+            params["mamba_tail"] = _stack_init(
+                ks[4], n_tail, lambda k: _init_mamba_block(k, cfg))
+        params["shared_attn"] = init_std_block(ks[5], cfg, use_moe=False)
+    elif cfg.family == "ssm":  # xLSTM
+        xc = cfg.xlstm
+        n_groups = cfg.n_layers // xc.slstm_every
+        params["mlstm_groups"] = _stack_init(
+            ks[2], n_groups,
+            lambda k: _stack_init(k, xc.slstm_every - 1,
+                                  lambda kk: _init_mlstm_block(kk, cfg)))
+        params["slstm_blocks"] = _stack_init(
+            ks[4], n_groups, lambda k: _init_slstm_block(k, cfg))
+    else:
+        raise ValueError(f"unsupported family {cfg.family}")
+    return params
+
+
+def _init_mamba_block(key, cfg):
+    return {"norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+            "mamba": mamba_lib.init_mamba2(key, cfg)}
+
+
+def _init_mlstm_block(key, cfg):
+    return {"norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+            "mlstm": xlstm_lib.init_mlstm(key, cfg)}
+
+
+def _init_slstm_block(key, cfg):
+    return {"norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+            "slstm": xlstm_lib.init_slstm(key, cfg)}
+
+
+def lm_axes(cfg: ArchConfig):
+    axes: Dict[str, Any] = {"embed": "vocab embed", "final_norm": "-"}
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = "embed vocab"
+    if cfg.family in ("dense", "vlm"):
+        axes["blocks"] = _prepend_axes(std_block_axes(cfg, use_moe=False))
+    elif cfg.family == "moe":
+        axes["blocks"] = _prepend_axes(std_block_axes(cfg, use_moe=True))
+        if cfg.moe.first_k_dense:
+            axes["dense_blocks"] = _prepend_axes(std_block_axes(cfg, use_moe=False))
+    elif cfg.family == "hybrid":
+        mb = {"norm": "-", "mamba": mamba_lib.mamba2_axes()}
+        axes["mamba_groups"] = _prepend_axes(_prepend_axes(mb), "layers")
+        if cfg.n_layers % cfg.hybrid.attn_every:
+            axes["mamba_tail"] = _prepend_axes(mb)
+        axes["shared_attn"] = std_block_axes(cfg, use_moe=False)
+    elif cfg.family == "ssm":
+        ml = {"norm": "-", "mlstm": xlstm_lib.mlstm_axes()}
+        sl = {"norm": "-", "slstm": xlstm_lib.slstm_axes()}
+        axes["mlstm_groups"] = _prepend_axes(_prepend_axes(ml), "layers")
+        axes["slstm_blocks"] = _prepend_axes(sl)
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# LM: forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def lm_forward(
+    params,
+    tokens: jnp.ndarray,               # (B, S_text)
+    cfg: ArchConfig,
+    *,
+    ctx=None,
+    img_embeds: Optional[jnp.ndarray] = None,  # (B, P, D) for vlm
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (logits (B,S,V) [vocab-sharded], aux_loss ())."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.family == "vlm":
+        assert img_embeds is not None
+        x = jnp.concatenate([img_embeds.astype(x.dtype), x], axis=1)
+    B, S, D = x.shape
+    if ctx is not None:
+        x = ctx.shard(x, "batch - -")
+    positions = jnp.arange(S, dtype=jnp.int32)
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        use_moe = cfg.family == "moe"
+        if use_moe and cfg.moe.first_k_dense:
+            dense_axes = std_block_axes(cfg, use_moe=False)
+
+            def dense_body(carry, block):
+                x, aux = carry
+                block = _shard_tree(block, dense_axes, ctx)
+                x, a = apply_std_block(block, x, cfg, positions=positions, ctx=ctx,
+                                       use_moe=False)
+                return (x, aux + a), None
+            (x, aux0), _ = jax.lax.scan(
+                _remat(dense_body, cfg.remat), (x, aux0), params["dense_blocks"])
+
+        block_axes = std_block_axes(cfg, use_moe=use_moe)
+
+        def body(carry, block):
+            x, aux = carry
+            if ctx is not None:
+                x = ctx.shard(x, "batch seq_sp -")  # SP residual saving
+            block = _shard_tree(block, block_axes, ctx)
+            x, a = apply_std_block(block, x, cfg, positions=positions, ctx=ctx,
+                                   use_moe=use_moe)
+            if ctx is not None:
+                x = ctx.shard(x, "batch seq_sp -")  # saved carry stays SP-sharded
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(_remat(body, cfg.remat), (x, aux0), params["blocks"])
+
+    elif cfg.family == "hybrid":
+        mamba_axes = {"norm": "-", "mamba": mamba_lib.mamba2_axes()}
+
+        def mamba_body(x, block):
+            if ctx is not None:
+                x = ctx.shard(x, "batch seq_sp -")
+            block = _shard_tree(block, mamba_axes, ctx)
+            h = rms_norm(x, block["norm"], cfg.rms_eps)
+            x = x + mamba_lib.apply_mamba2(block["mamba"], h, cfg, ctx=ctx)
+            if ctx is not None:
+                x = ctx.shard(x, "batch seq_sp -")
+            return x, None
+
+        shared = params["shared_attn"]
+
+        def group_body(x, group):
+            x, _ = jax.lax.scan(_remat(mamba_body, cfg.remat), x, group)
+            x, _ = _remat(
+                lambda xx, _unused: (apply_std_block(
+                    shared, xx, cfg, positions=positions, ctx=ctx, use_moe=False)[0],
+                    None),
+                cfg.remat)(x, None)
+            return x, None
+
+        x, _ = jax.lax.scan(group_body, x, params["mamba_groups"])
+        if "mamba_tail" in params:
+            x, _ = jax.lax.scan(_remat(mamba_body, cfg.remat), x, params["mamba_tail"])
+        aux = aux0
+
+    elif cfg.family == "ssm":
+        ml_axes = {"norm": "-", "mlstm": xlstm_lib.mlstm_axes()}
+        sl_axes = {"norm": "-", "slstm": xlstm_lib.slstm_axes()}
+
+        def mlstm_body(x, block):
+            if ctx is not None:
+                x = ctx.shard(x, "batch seq_sp -")
+            block = _shard_tree(block, ml_axes, ctx)
+            h = rms_norm(x, block["norm"], cfg.rms_eps)
+            x = x + xlstm_lib.apply_mlstm(block["mlstm"], h, cfg, ctx=ctx)
+            if ctx is not None:
+                x = ctx.shard(x, "batch seq_sp -")
+            return x, None
+
+        def xgroup_body(x, group):
+            mblocks, sblock = group
+            x, _ = jax.lax.scan(_remat(mlstm_body, cfg.remat), x, mblocks)
+            sblock = _shard_tree(sblock, sl_axes, ctx)
+            h = rms_norm(x, sblock["norm"], cfg.rms_eps)
+            x = x + xlstm_lib.apply_slstm(sblock["slstm"], h, cfg, ctx=ctx)
+            return x, None
+
+        x, _ = jax.lax.scan(
+            xgroup_body, x, (params["mlstm_groups"], params["slstm_blocks"]))
+        aux = aux0
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    if ctx is not None:
+        logits = ctx.shard(logits, "batch - act_mlp")  # vocab-sharded logits
+    return logits, aux
+
+
+def lm_loss(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig, *, ctx=None):
+    """batch: tokens (B,S), labels (B,S) [, img_embeds (B,P,D)]."""
+    logits, aux = lm_forward(
+        params, batch["tokens"], cfg, ctx=ctx, img_embeds=batch.get("img_embeds")
+    )
+    labels = batch["labels"]
+    if cfg.family == "vlm":
+        # image positions carry no next-token loss
+        P = cfg.vlm.n_patch_tokens
+        logits = logits[:, P:]
+    ce = cross_entropy_loss(logits, labels, batch.get("loss_mask"))
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# LM: single-token decode with caches
+# ---------------------------------------------------------------------------
+
+
+def lm_cache_spec(cfg: ArchConfig, batch: int, max_seq: int):
+    if cfg.family in ("dense", "vlm", "moe"):
+        one = (attn_lib.mla_cache_spec(cfg, batch, max_seq) if cfg.mla is not None
+               else attn_lib.gqa_cache_spec(cfg, batch, max_seq))
+        stack = lambda n: jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), one)
+        caches = {"blocks": stack(cfg.n_layers - (cfg.moe.first_k_dense if cfg.moe else 0))}
+        if cfg.moe and cfg.moe.first_k_dense:
+            caches["dense_blocks"] = stack(cfg.moe.first_k_dense)
+        return caches
+    if cfg.family == "hybrid":
+        h = cfg.hybrid
+        n_groups = cfg.n_layers // h.attn_every
+        n_tail = cfg.n_layers - n_groups * h.attn_every
+        mamba_one = mamba_lib.mamba2_cache_spec(cfg, batch)
+        attn_one = attn_lib.gqa_cache_spec(cfg, batch, max_seq)
+        stack = lambda tree, *ns: jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(tuple(ns) + s.shape, s.dtype), tree)
+        caches = {
+            "mamba_groups": stack(mamba_one, n_groups, h.attn_every),
+            "attn": stack(attn_one, n_groups),
+        }
+        if n_tail:
+            caches["mamba_tail"] = stack(mamba_one, n_tail)
+        return caches
+    if cfg.family == "ssm":
+        xc = cfg.xlstm
+        n_groups = cfg.n_layers // xc.slstm_every
+        stack = lambda tree, *ns: jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(tuple(ns) + s.shape, s.dtype), tree)
+        return {
+            "mlstm_groups": stack(xlstm_lib.mlstm_cache_spec(cfg, batch),
+                                  n_groups, xc.slstm_every - 1),
+            "slstm_blocks": stack(xlstm_lib.slstm_cache_spec(cfg, batch), n_groups),
+        }
+    raise ValueError(cfg.family)
+
+
+def lm_cache_axes(cfg: ArchConfig):
+    pre = lambda tree, n=1: functools.reduce(lambda t, _: _prepend_axes(t), range(n), tree)
+    if cfg.family in ("dense", "vlm", "moe"):
+        one = (attn_lib.mla_cache_axes() if cfg.mla is not None
+               else attn_lib.gqa_cache_axes())
+        axes = {"blocks": pre(one)}
+        if cfg.moe and cfg.moe.first_k_dense:
+            axes["dense_blocks"] = pre(one)
+        return axes
+    if cfg.family == "hybrid":
+        axes = {
+            "mamba_groups": pre(mamba_lib.mamba2_cache_axes(), 2),
+            "attn": pre(attn_lib.gqa_cache_axes()),
+        }
+        if cfg.n_layers % cfg.hybrid.attn_every:
+            axes["mamba_tail"] = pre(mamba_lib.mamba2_cache_axes())
+        return axes
+    if cfg.family == "ssm":
+        return {
+            "mlstm_groups": pre(xlstm_lib.mlstm_cache_axes(), 2),
+            "slstm_blocks": pre(xlstm_lib.slstm_cache_axes()),
+        }
+    raise ValueError(cfg.family)
+
+
+def lm_decode_step(params, cache, tokens: jnp.ndarray, cfg: ArchConfig, *, ctx=None):
+    """tokens (B, 1) -> (logits (B, 1, V), new cache)."""
+    x = jnp.take(params["embed"], tokens, axis=0)  # (B,1,D)
+    if ctx is not None:
+        x = ctx.shard(x, "kv_batch - -")
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        use_moe = cfg.family == "moe"
+        if use_moe and cfg.moe.first_k_dense:
+            def dense_body(x, xs):
+                block, c = xs
+                x, c = decode_std_block(block, x, cfg, c, ctx=ctx, use_moe=False)
+                return x, c
+            x, dcache = jax.lax.scan(
+                dense_body, x, (params["dense_blocks"], cache["dense_blocks"]))
+            cache = dict(cache, dense_blocks=dcache)
+
+        def body(x, xs):
+            block, c = xs
+            x, c = decode_std_block(block, x, cfg, c, ctx=ctx, use_moe=use_moe)
+            return x, c
+
+        x, bcache = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+        cache = dict(cache, blocks=bcache)
+
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def mamba_body(x, xs):
+            block, c = xs
+            h = rms_norm(x, block["norm"], cfg.rms_eps)
+            h, c = mamba_lib.mamba2_decode(block["mamba"], h, cfg, c, ctx=ctx)
+            return x + h, c
+
+        def group_body(x, xs):
+            group, mcaches, acache = xs
+            x, mcaches = jax.lax.scan(mamba_body, x, (group, mcaches))
+            x, acache = decode_std_block(shared, x, cfg, acache, ctx=ctx, use_moe=False)
+            return x, (mcaches, acache)
+
+        x, (mcaches, acaches) = jax.lax.scan(
+            group_body, x,
+            (params["mamba_groups"], cache["mamba_groups"], cache["attn"]))
+        cache = dict(cache, mamba_groups=mcaches, attn=acaches)
+        if "mamba_tail" in params:
+            x, tcache = jax.lax.scan(
+                mamba_body, x, (params["mamba_tail"], cache["mamba_tail"]))
+            cache = dict(cache, mamba_tail=tcache)
+
+    elif cfg.family == "ssm":
+        def mlstm_body(x, xs):
+            block, c = xs
+            h = rms_norm(x, block["norm"], cfg.rms_eps)
+            h, c = xlstm_lib.mlstm_decode(block["mlstm"], h, cfg, c, ctx=ctx)
+            return x + h, c
+
+        def xgroup_body(x, xs):
+            (mblocks, sblock), (mc, sc) = xs
+            x, mc = jax.lax.scan(mlstm_body, x, (mblocks, mc))
+            h = rms_norm(x, sblock["norm"], cfg.rms_eps)
+            h, sc = xlstm_lib.slstm_decode(sblock["slstm"], h, cfg, sc, ctx=ctx)
+            return x + h, (mc, sc)
+
+        x, (mc, sc) = jax.lax.scan(
+            xgroup_body, x,
+            ((params["mlstm_groups"], params["slstm_blocks"]),
+             (cache["mlstm_groups"], cache["slstm_blocks"])))
+        cache = dict(cache, mlstm_groups=mc, slstm_blocks=sc)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return logits, cache

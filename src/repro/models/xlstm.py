@@ -1,0 +1,238 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel) + sLSTM (scalar
+memory, recurrent) [arXiv:2405.04517].
+
+mLSTM is expressed on the generalized SSD core (models.mamba2.ssd_core):
+the recurrence C_t = f_t C_{t-1} + i_t v_t k_t^T is an SSD scan with
+data-dependent log-decay a_t = log sigmoid(f̃_t) and input multiplier
+i_t = exp(ĩ_t). The normalizer n_t = f n_{t-1} + i k_t rides along as an
+extra channel (x' = [v, 1]).
+
+Numerical-stability note (DESIGN.md §8): instead of the paper's running
+max-state m_t we clip the input-gate logit to [-10, 8] — equivalent in the
+regimes the smoke tests exercise, and chunk-parallel friendly.
+
+sLSTM keeps its per-timestep recurrence (h_{t-1} feeds the gates through a
+block-diagonal recurrent matrix), so it runs as a lax.scan over time — the
+architecture is inherently sequential there (one layer per ``slstm_every``).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, XLSTMConfig
+from repro.models.layers import dense_init, rms_norm
+from repro.models.mamba2 import ssd_core
+
+I_CLIP = (-10.0, 8.0)
+
+
+def _dims(cfg: ArchConfig):
+    x: XLSTMConfig = cfg.xlstm
+    d_inner = int(x.proj_factor * cfg.d_model)
+    n_heads = cfg.n_heads
+    d_head = d_inner // n_heads
+    return x, d_inner, n_heads, d_head
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ArchConfig):
+    x, d_inner, n_heads, d_head = _dims(cfg)
+    d = cfg.d_model
+    dtype = cfg.dtype
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], d, 2 * d_inner, dtype),      # [cell in, gate]
+        "wq": dense_init(ks[1], d_inner, d_inner, dtype),
+        "wk": dense_init(ks[2], d_inner, d_inner, dtype),
+        "wv": dense_init(ks[3], d_inner, d_inner, dtype),
+        "w_if": dense_init(ks[4], d_inner, 2 * n_heads, jnp.float32, scale=0.01),
+        "b_if": jnp.concatenate(
+            [jnp.zeros((n_heads,)), jnp.linspace(3.0, 6.0, n_heads)]
+        ).astype(jnp.float32),  # forget gates biased open
+        "norm_w": jnp.zeros((d_inner,), dtype),
+        "w_down": dense_init(ks[5], d_inner, d, dtype),
+    }
+
+
+def mlstm_axes():
+    return {"w_up": "embed ssm_inner", "wq": "ssm_inner ssm_inner",
+            "wk": "ssm_inner ssm_inner", "wv": "ssm_inner ssm_inner",
+            "w_if": "ssm_inner -", "b_if": "-", "norm_w": "ssm_inner",
+            "w_down": "ssm_inner embed"}
+
+
+def _mlstm_gates(params, u, n_heads):
+    raw = jnp.einsum("bsi,ig->bsg", u.astype(jnp.float32),
+                     params["w_if"].astype(jnp.float32)) + params["b_if"]
+    i_raw, f_raw = jnp.split(raw, 2, axis=-1)  # (B,S,H) each
+    a = jax.nn.log_sigmoid(f_raw)              # log decay in (-inf, 0)
+    mult = jnp.exp(jnp.clip(i_raw, *I_CLIP))   # input gate
+    return a, mult
+
+
+def apply_mlstm(params, x: jnp.ndarray, cfg: ArchConfig, *, ctx=None) -> jnp.ndarray:
+    xc, d_inner, n_heads, d_head = _dims(cfg)
+    B, S, d = x.shape
+    up = jnp.einsum("bsd,di->bsi", x, params["w_up"])
+    if ctx is not None:
+        up = ctx.shard(up, "batch - act_mlp")
+    u, gate = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bsi,ij->bsj", u, params["wq"]).reshape(B, S, n_heads, d_head)
+    k = jnp.einsum("bsi,ij->bsj", u, params["wk"]).reshape(B, S, n_heads, d_head)
+    v = jnp.einsum("bsi,ij->bsj", u, params["wv"]).reshape(B, S, n_heads, d_head)
+    k = k / jnp.sqrt(jnp.asarray(d_head, k.dtype))
+    a, mult = _mlstm_gates(params, u, n_heads)
+
+    # numerator + normalizer in one SSD pass: x' = [v, 1]
+    ones = jnp.ones((B, S, n_heads, 1), v.dtype)
+    xprime = jnp.concatenate([v, ones], axis=-1)  # (B,S,H,P+1)
+    y, _ = ssd_core(xprime, a, mult, k, q, chunk=xc.chunk)
+    num, den = y[..., :d_head], y[..., d_head:]
+    h = num / jnp.maximum(jnp.abs(den), 1.0)
+    h = h.reshape(B, S, d_inner)
+    h = rms_norm(h, params["norm_w"], cfg.rms_eps)
+    h = h * jax.nn.silu(gate.astype(jnp.float32)).astype(h.dtype)
+    return jnp.einsum("bsi,id->bsd", h, params["w_down"])
+
+
+def mlstm_decode(params, x: jnp.ndarray, cfg: ArchConfig, cache: dict, *, ctx=None
+                 ) -> Tuple[jnp.ndarray, dict]:
+    """cache {C: (B,H,P+1,P)} — matrix memory with normalizer row."""
+    xc, d_inner, n_heads, d_head = _dims(cfg)
+    B = x.shape[0]
+    up = jnp.einsum("bsd,di->bsi", x, params["w_up"])
+    u, gate = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bsi,ij->bsj", u, params["wq"]).reshape(B, 1, n_heads, d_head)
+    k = jnp.einsum("bsi,ij->bsj", u, params["wk"]).reshape(B, 1, n_heads, d_head)
+    v = jnp.einsum("bsi,ij->bsj", u, params["wv"]).reshape(B, 1, n_heads, d_head)
+    k = k / jnp.sqrt(jnp.asarray(d_head, k.dtype))
+    a, mult = _mlstm_gates(params, u, n_heads)  # (B,1,H)
+
+    C = cache["C"].astype(jnp.float32)  # (B,H,P+1,P)
+    decay = jnp.exp(a[:, 0])            # (B,H)
+    xprime = jnp.concatenate([v, jnp.ones((B, 1, n_heads, 1), v.dtype)], -1)[:, 0]
+    upd = (mult[:, 0][..., None, None]
+           * xprime.astype(jnp.float32)[..., None]          # (B,H,P+1,1)
+           * k[:, 0].astype(jnp.float32)[:, :, None, :])    # (B,H,1,N)
+    C = C * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", C, q[:, 0].astype(jnp.float32))
+    num, den = y[..., :d_head], y[..., d_head:]
+    h = (num / jnp.maximum(jnp.abs(den), 1.0)).reshape(B, 1, d_inner).astype(x.dtype)
+    h = rms_norm(h, params["norm_w"], cfg.rms_eps)
+    h = h * jax.nn.silu(gate.astype(jnp.float32)).astype(h.dtype)
+    out = jnp.einsum("bsi,id->bsd", h, params["w_down"])
+    return out, {"C": C}
+
+
+def mlstm_cache_spec(cfg: ArchConfig, batch: int):
+    _, d_inner, n_heads, d_head = _dims(cfg)
+    return {"C": jax.ShapeDtypeStruct((batch, n_heads, d_head + 1, d_head), jnp.float32)}
+
+
+def mlstm_cache_axes():
+    return {"C": "kv_batch ssm_heads - -"}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ArchConfig):
+    d = cfg.d_model
+    n_heads = cfg.n_heads
+    d_head = d // n_heads
+    dtype = cfg.dtype
+    ks = jax.random.split(key, 4)
+    return {
+        # 4 gates (i, f, z, o) from input and recurrent (block-diagonal) path
+        "w_x": dense_init(ks[0], d, 4 * d, dtype),
+        "r_h": (jax.random.normal(ks[1], (n_heads, d_head, 4 * d_head), jnp.float32)
+                * 0.02).astype(dtype),
+        "b": jnp.concatenate(
+            [jnp.zeros((d,)), jnp.full((d,), 4.0), jnp.zeros((2 * d,))]
+        ).astype(jnp.float32),
+        "norm_w": jnp.zeros((d,), dtype),
+        # post-cell gated MLP (proj factor 4/3, paper's sLSTM block)
+        "w_up": dense_init(ks[2], d, 2 * (4 * d // 3), dtype),
+        "w_down": dense_init(ks[3], 4 * d // 3, d, dtype),
+    }
+
+
+def slstm_axes():
+    return {"w_x": "embed mlp", "r_h": "ssm_heads - -", "b": "-",
+            "norm_w": "-", "w_up": "embed mlp", "w_down": "mlp embed"}
+
+
+def _slstm_cell(params, xt, state, n_heads, d_head):
+    """xt (B, 4d) pre-projected gates input; state (c, n, h) each (B, d)."""
+    c, n, h = state
+    B = xt.shape[0]
+    d = c.shape[-1]
+    hh = h.reshape(B, n_heads, d_head)
+    rec = jnp.einsum("bhp,hpg->bhg", hh, params["r_h"].astype(jnp.float32))
+    gates = xt + rec.reshape(B, 4 * d) + params["b"]
+    i_raw, f_raw, z_raw, o_raw = jnp.split(gates, 4, axis=-1)
+    i = jnp.exp(jnp.clip(i_raw, *I_CLIP))
+    f = jax.nn.sigmoid(f_raw)
+    z = jnp.tanh(z_raw)
+    o = jax.nn.sigmoid(o_raw)
+    c = f * c + i * z
+    n = f * n + i
+    h = o * c / jnp.maximum(n, 1.0)
+    return (c, n, h)
+
+
+def apply_slstm(params, x: jnp.ndarray, cfg: ArchConfig, *, ctx=None) -> jnp.ndarray:
+    B, S, d = x.shape
+    n_heads = cfg.n_heads
+    d_head = d // n_heads
+    xg = jnp.einsum("bsd,dg->bsg", x, params["w_x"]).astype(jnp.float32)
+    state0 = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(3))
+
+    def step(state, xt):
+        state = _slstm_cell(params, xt, state, n_heads, d_head)
+        return state, state[2]
+
+    _, hs = jax.lax.scan(step, state0, jnp.moveaxis(xg, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)  # (B,S,d)
+    h = rms_norm(h, params["norm_w"], cfg.rms_eps)
+    up = jnp.einsum("bsd,df->bsf", h, params["w_up"])
+    a, g = jnp.split(up, 2, axis=-1)
+    return jnp.einsum("bsf,fd->bsd",
+                      a * jax.nn.silu(g.astype(jnp.float32)).astype(a.dtype),
+                      params["w_down"])
+
+
+def slstm_decode(params, x: jnp.ndarray, cfg: ArchConfig, cache: dict, *, ctx=None
+                 ) -> Tuple[jnp.ndarray, dict]:
+    B, _, d = x.shape
+    n_heads = cfg.n_heads
+    d_head = d // n_heads
+    xg = jnp.einsum("bsd,dg->bsg", x, params["w_x"])[:, 0].astype(jnp.float32)
+    state = (cache["c"], cache["n"], cache["h"])
+    c, n, h = _slstm_cell(params, xg, state, n_heads, d_head)
+    out = rms_norm(h[:, None].astype(x.dtype), params["norm_w"], cfg.rms_eps)
+    up = jnp.einsum("bsd,df->bsf", out, params["w_up"])
+    a, g = jnp.split(up, 2, axis=-1)
+    out = jnp.einsum("bsf,fd->bsd",
+                     a * jax.nn.silu(g.astype(jnp.float32)).astype(a.dtype),
+                     params["w_down"])
+    return out, {"c": c, "n": n, "h": h}
+
+
+def slstm_cache_spec(cfg: ArchConfig, batch: int):
+    d = cfg.d_model
+    return {k: jax.ShapeDtypeStruct((batch, d), jnp.float32) for k in ("c", "n", "h")}
+
+
+def slstm_cache_axes():
+    return {"c": "kv_batch -", "n": "kv_batch -", "h": "kv_batch -"}

@@ -1,0 +1,28 @@
+"""Pythia developer API (paper §6): policies, supporters, designers."""
+
+from repro.pythia.policy import (
+    EarlyStopDecision,
+    EarlyStopDecisions,
+    EarlyStopRequest,
+    Policy,
+    PolicySupporter,
+    StudyDescriptor,
+    SuggestDecision,
+    SuggestRequest,
+)
+from repro.pythia.designers import (
+    Designer,
+    DesignerPolicy,
+    HarmlessDecodeError,
+    SerializableDesigner,
+    SerializableDesignerPolicy,
+)
+from repro.pythia.registry import make_policy, register, registered_algorithms
+
+__all__ = [
+    "EarlyStopDecision", "EarlyStopDecisions", "EarlyStopRequest", "Policy",
+    "PolicySupporter", "StudyDescriptor", "SuggestDecision", "SuggestRequest",
+    "Designer", "DesignerPolicy", "HarmlessDecodeError", "SerializableDesigner",
+    "SerializableDesignerPolicy", "make_policy", "register",
+    "registered_algorithms",
+]

@@ -1,0 +1,154 @@
+"""Baseline designers: random, grid, quasi-random (Halton).
+
+RANDOM_SEARCH is the paper's running example (Code Block 1). Grid and Halton
+are SerializableDesigners — their whole state is a cursor, which makes them
+the simplest demonstrations of O(1) metadata state recovery (§6.3).
+"""
+
+from __future__ import annotations
+
+import random
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.metadata import Metadata
+from repro.core.search_space import ParameterConfig, ParameterDict, ParameterType, ParameterValue
+from repro.core.study import CompletedTrials, TrialSuggestion
+from repro.core.study_config import StudyConfig
+from repro.pythia.designers import PartiallySerializableDesignerMixin, SerializableDesigner
+
+
+class RandomSearchDesigner(SerializableDesigner, PartiallySerializableDesignerMixin):
+    """Uniform (scaling-aware, conditionality-respecting) random search."""
+
+    def __init__(self, study_config: StudyConfig, seed: int = 0):
+        self._config = study_config
+        self._seed = seed
+        self._count = 0
+        self._rng = random.Random(seed)
+
+    def suggest(self, count: Optional[int] = None) -> Sequence[TrialSuggestion]:
+        out = []
+        for _ in range(count or 1):
+            out.append(TrialSuggestion(parameters=self._config.search_space.sample(self._rng)))
+            self._count += 1
+        return out
+
+    def update(self, delta: CompletedTrials) -> None:
+        pass  # memoryless
+
+    def dump(self) -> Metadata:
+        return self._dump_json({"count": self._count, "seed": self._seed})
+
+    def load(self, metadata: Metadata) -> None:
+        state = self._load_json(metadata)
+        self._seed = int(state["seed"])
+        self._count = int(state["count"])
+        # continue the stream deterministically without replaying draws
+        self._rng = random.Random(f"{self._seed}:{self._count}")
+
+
+class GridSearchDesigner(SerializableDesigner, PartiallySerializableDesignerMixin):
+    """Exhaustive grid over a non-conditional space; DOUBLEs discretized."""
+
+    def __init__(self, study_config: StudyConfig, double_grid_resolution: int = 10):
+        if study_config.search_space.is_conditional:
+            raise ValueError("GridSearchDesigner does not support conditional spaces")
+        self._config = study_config
+        self._resolution = int(double_grid_resolution)
+        self._index = 0
+        self._axes: List[List[ParameterValue]] = [
+            self._axis_values(cfg) for cfg in study_config.search_space.parameters
+        ]
+
+    def _axis_values(self, cfg: ParameterConfig) -> List[ParameterValue]:
+        if cfg.type == ParameterType.CATEGORICAL:
+            return [ParameterValue(c) for c in cfg.categories]
+        if cfg.type == ParameterType.DISCRETE:
+            return [ParameterValue(v) for v in cfg.feasible_values]
+        if cfg.type == ParameterType.INTEGER:
+            lo, hi = int(cfg.bounds[0]), int(cfg.bounds[1])
+            step = max(1, (hi - lo) // max(1, self._resolution - 1))
+            vals = list(range(lo, hi + 1, step))
+            if vals[-1] != hi:
+                vals.append(hi)
+            return [ParameterValue(v) for v in vals]
+        n = self._resolution
+        return [cfg.from_unit(i / max(1, n - 1)) for i in range(n)]
+
+    @property
+    def grid_size(self) -> int:
+        size = 1
+        for axis in self._axes:
+            size *= len(axis)
+        return size
+
+    def suggest(self, count: Optional[int] = None) -> Sequence[TrialSuggestion]:
+        out = []
+        names = [c.name for c in self._config.search_space.parameters]
+        for _ in range(count or 1):
+            if self._index >= self.grid_size:
+                break  # grid exhausted
+            rem = self._index
+            params = ParameterDict()
+            for name, axis in zip(names, self._axes):
+                params[name] = axis[rem % len(axis)]
+                rem //= len(axis)
+            out.append(TrialSuggestion(parameters=params))
+            self._index += 1
+        return out
+
+    def update(self, delta: CompletedTrials) -> None:
+        pass
+
+    def dump(self) -> Metadata:
+        return self._dump_json({"index": self._index})
+
+    def load(self, metadata: Metadata) -> None:
+        self._index = int(self._load_json(metadata)["index"])
+
+
+def _halton(index: int, base: int) -> float:
+    f, r = 1.0, 0.0
+    i = index
+    while i > 0:
+        f /= base
+        r += f * (i % base)
+        i //= base
+    return r
+
+
+_PRIMES = [2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47, 53, 59, 61,
+           67, 71, 73, 79, 83, 89, 97, 101, 103, 107, 109, 113, 127, 131]
+
+
+class HaltonDesigner(SerializableDesigner, PartiallySerializableDesignerMixin):
+    """Halton low-discrepancy sequence (QUASI_RANDOM_SEARCH)."""
+
+    def __init__(self, study_config: StudyConfig, skip: int = 20):
+        from repro.pythia.converters import TrialToArrayConverter
+
+        self._config = study_config
+        self._conv = TrialToArrayConverter(study_config.search_space, onehot_categorical=False)
+        if self._conv.dim > len(_PRIMES):
+            raise ValueError(f"HaltonDesigner supports <= {len(_PRIMES)} dims")
+        self._index = skip
+
+    def suggest(self, count: Optional[int] = None) -> Sequence[TrialSuggestion]:
+        out = []
+        for _ in range(count or 1):
+            row = np.array([_halton(self._index, _PRIMES[d]) for d in range(self._conv.dim)])
+            params = self._conv.to_parameters(row[None, :])[0]
+            out.append(TrialSuggestion(parameters=params))
+            self._index += 1
+        return out
+
+    def update(self, delta: CompletedTrials) -> None:
+        pass
+
+    def dump(self) -> Metadata:
+        return self._dump_json({"index": self._index})
+
+    def load(self, metadata: Metadata) -> None:
+        self._index = int(self._load_json(metadata)["index"])

@@ -1,0 +1,138 @@
+"""Separable CMA-ES designer (diagonal covariance) in the unit hypercube.
+
+Serializable: mean/sigma/paths/covariance diag round-trip through Metadata,
+so restoring costs O(d) — another §6.3 demonstration, this time with
+non-trivial numeric state.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.metadata import Metadata
+from repro.core.study import CompletedTrials, TrialSuggestion
+from repro.core.study_config import StudyConfig
+from repro.pythia.converters import TrialToArrayConverter
+from repro.pythia.designers import PartiallySerializableDesignerMixin, SerializableDesigner
+
+
+class CMAESDesigner(SerializableDesigner, PartiallySerializableDesignerMixin):
+    def __init__(self, study_config: StudyConfig, *, population_size: Optional[int] = None,
+                 sigma0: float = 0.25, seed: int = 0):
+        self._config = study_config
+        self._conv = TrialToArrayConverter(study_config.search_space, onehot_categorical=False)
+        d = self._conv.dim
+        self._d = d
+        self._lam = population_size or (4 + int(3 * math.log(d + 1)))
+        self._mu = self._lam // 2
+        w = np.log(self._mu + 0.5) - np.log(np.arange(1, self._mu + 1))
+        self._w = w / w.sum()
+        self._mueff = 1.0 / np.sum(self._w**2)
+        # standard sep-CMA-ES constants
+        self._cs = (self._mueff + 2) / (d + self._mueff + 5)
+        self._ds = 1 + 2 * max(0.0, math.sqrt((self._mueff - 1) / (d + 1)) - 1) + self._cs
+        self._cc = (4 + self._mueff / d) / (d + 4 + 2 * self._mueff / d)
+        self._c1 = 2 / ((d + 1.3) ** 2 + self._mueff)
+        self._cmu = min(
+            1 - self._c1,
+            2 * (self._mueff - 2 + 1 / self._mueff) / ((d + 2) ** 2 + self._mueff),
+        ) * (d + 2) / 3  # sep-CMA correction
+        self._chiN = math.sqrt(d) * (1 - 1 / (4 * d) + 1 / (21 * d * d))
+        self._rng = np.random.RandomState(seed)
+        # mutable state
+        self._mean = np.full(d, 0.5)
+        self._sigma = sigma0
+        self._ps = np.zeros(d)
+        self._pc = np.zeros(d)
+        self._C = np.ones(d)  # diagonal covariance
+        self._gen = 0
+        self._asked: List[List[float]] = []  # genotypes awaiting evaluation
+        self._buffer: List[tuple] = []       # (genotype, fitness) pairs received
+
+    # -- designer API ------------------------------------------------------------
+    def suggest(self, count: Optional[int] = None) -> Sequence[TrialSuggestion]:
+        out = []
+        for _ in range(count or 1):
+            z = self._rng.randn(self._d)
+            xg = self._mean + self._sigma * np.sqrt(self._C) * z
+            xg = np.clip(xg, 0.0, 1.0)
+            self._asked.append(xg.tolist())
+            params = self._conv.to_parameters(xg[None, :])[0]
+            sug = TrialSuggestion(parameters=params)
+            sug.metadata.ns("cmaes")["genotype"] = json.dumps(xg.tolist())
+            out.append(sug)
+        return out
+
+    def update(self, delta: CompletedTrials) -> None:
+        for t in delta.trials:
+            obj = self._config.objective_values(t)
+            if obj is None:
+                continue
+            g = t.metadata.ns("cmaes").get("genotype")
+            if g is not None:
+                x = np.asarray(json.loads(g if isinstance(g, str) else g.decode()))
+            else:  # trial came from elsewhere: featurize
+                x = self._conv.to_features([t.parameters])[0]
+            self._buffer.append((x, obj[0]))
+        while len(self._buffer) >= self._lam:
+            batch, self._buffer = self._buffer[: self._lam], self._buffer[self._lam:]
+            self._step([b[0] for b in batch], [b[1] for b in batch])
+
+    def _step(self, xs: List[np.ndarray], fitness: List[float]) -> None:
+        order = np.argsort(-np.asarray(fitness))  # maximize
+        elite = np.stack([xs[i] for i in order[: self._mu]])
+        old_mean = self._mean.copy()
+        self._mean = self._w @ elite
+        y = (self._mean - old_mean) / max(self._sigma, 1e-12)
+        # step-size path
+        self._ps = (1 - self._cs) * self._ps + math.sqrt(
+            self._cs * (2 - self._cs) * self._mueff
+        ) * y / np.sqrt(np.maximum(self._C, 1e-12))
+        self._sigma *= math.exp(
+            (self._cs / self._ds) * (np.linalg.norm(self._ps) / self._chiN - 1)
+        )
+        self._sigma = float(np.clip(self._sigma, 1e-4, 0.8))
+        # covariance path + diagonal update
+        hsig = 1.0 if np.linalg.norm(self._ps) / math.sqrt(
+            1 - (1 - self._cs) ** (2 * (self._gen + 1))
+        ) < (1.4 + 2 / (self._d + 1)) * self._chiN else 0.0
+        self._pc = (1 - self._cc) * self._pc + hsig * math.sqrt(
+            self._cc * (2 - self._cc) * self._mueff
+        ) * y
+        artmp = (elite - old_mean) / max(self._sigma, 1e-12)
+        self._C = (
+            (1 - self._c1 - self._cmu) * self._C
+            + self._c1 * (self._pc**2 + (1 - hsig) * self._cc * (2 - self._cc) * self._C)
+            + self._cmu * (self._w @ (artmp**2))
+        )
+        self._C = np.clip(self._C, 1e-8, 10.0)
+        self._gen += 1
+
+    # -- serialization (paper §6.3) --------------------------------------------
+    def dump(self) -> Metadata:
+        return self._dump_json(
+            {
+                "mean": self._mean.tolist(),
+                "sigma": self._sigma,
+                "ps": self._ps.tolist(),
+                "pc": self._pc.tolist(),
+                "C": self._C.tolist(),
+                "gen": self._gen,
+                "buffer": [(x.tolist() if isinstance(x, np.ndarray) else x, f)
+                           for x, f in self._buffer],
+            }
+        )
+
+    def load(self, metadata: Metadata) -> None:
+        s = self._load_json(metadata)
+        self._mean = np.asarray(s["mean"])
+        self._sigma = float(s["sigma"])
+        self._ps = np.asarray(s["ps"])
+        self._pc = np.asarray(s["pc"])
+        self._C = np.asarray(s["C"])
+        self._gen = int(s["gen"])
+        self._buffer = [(np.asarray(x), float(f)) for x, f in s.get("buffer", [])]

@@ -1,0 +1,124 @@
+"""Trial <-> array featurization for numeric designers (GP, CMA-ES).
+
+Maps parameter assignments into the unit hypercube [0,1]^d honoring scale
+types; CATEGORICAL parameters are one-hot encoded. Inactive conditional
+parameters are imputed at 0.5 with an extra "active" indicator feature so
+regressors can distinguish inactive from mid-range (paper §4.2 notes the
+independence invariance conditionality conveys).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.search_space import (
+    ParameterConfig,
+    ParameterDict,
+    ParameterType,
+    ParameterValue,
+    SearchSpace,
+)
+from repro.core.study import Trial
+from repro.core.study_config import StudyConfig
+
+
+@dataclasses.dataclass
+class _Feature:
+    config: ParameterConfig
+    one_hot: bool
+    width: int
+    conditional: bool
+
+
+class TrialToArrayConverter:
+    def __init__(self, search_space: SearchSpace, *, onehot_categorical: bool = True):
+        self._space = search_space
+        self._features: List[_Feature] = []
+        root_names = {c.name for c in search_space.parameters}
+        for cfg in search_space.all_parameters():
+            onehot = onehot_categorical and cfg.type == ParameterType.CATEGORICAL
+            width = len(cfg.categories) if onehot else 1
+            conditional = cfg.name not in root_names
+            if conditional:
+                width += 1  # active indicator
+            self._features.append(_Feature(cfg, onehot, width, conditional))
+
+    @property
+    def dim(self) -> int:
+        return sum(f.width for f in self._features)
+
+    @property
+    def n_params(self) -> int:
+        return len(self._features)
+
+    def to_features(self, parameters_list: Sequence[ParameterDict]) -> np.ndarray:
+        out = np.zeros((len(parameters_list), self.dim), dtype=np.float64)
+        for i, params in enumerate(parameters_list):
+            col = 0
+            for f in self._features:
+                cfg = f.config
+                active = cfg.name in params
+                base_w = f.width - (1 if f.conditional else 0)
+                if f.one_hot:
+                    if active:
+                        idx = cfg.categories.index(params[cfg.name].as_str)
+                        out[i, col + idx] = 1.0
+                    else:
+                        out[i, col : col + base_w] = 1.0 / base_w
+                else:
+                    out[i, col] = cfg.to_unit(params[cfg.name]) if active else 0.5
+                if f.conditional:
+                    out[i, col + base_w] = 1.0 if active else 0.0
+                col += f.width
+        return out
+
+    def to_parameters(self, features: np.ndarray) -> List[ParameterDict]:
+        """Array -> parameters. Conditionality is re-derived from parent values
+        (indicator columns are ignored on the way back)."""
+        features = np.atleast_2d(features)
+        out: List[ParameterDict] = []
+        for row in features:
+            flat = {}
+            col = 0
+            for f in self._features:
+                cfg = f.config
+                base_w = f.width - (1 if f.conditional else 0)
+                if f.one_hot:
+                    idx = int(np.argmax(row[col : col + base_w]))
+                    flat[cfg.name] = ParameterValue(cfg.categories[idx])
+                else:
+                    flat[cfg.name] = cfg.from_unit(float(row[col]))
+                col += f.width
+            params = ParameterDict()
+
+            def visit(cfg: ParameterConfig):
+                params[cfg.name] = flat[cfg.name]
+                for child in cfg.active_children(flat[cfg.name]):
+                    visit(child)
+
+            for cfg in self._space.parameters:
+                visit(cfg)
+            out.append(params)
+        return out
+
+
+def trials_to_xy(
+    trials: Sequence[Trial],
+    config: StudyConfig,
+    converter: Optional[TrialToArrayConverter] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(features, larger-is-better objectives) for completed feasible trials."""
+    converter = converter or TrialToArrayConverter(config.search_space)
+    rows, ys = [], []
+    for t in trials:
+        obj = config.objective_values(t)
+        if obj is None:
+            continue
+        rows.append(t.parameters)
+        ys.append(obj)
+    if not rows:
+        return np.zeros((0, converter.dim)), np.zeros((0, len(config.metrics)))
+    return converter.to_features(rows), np.asarray(ys, dtype=np.float64)

@@ -1,0 +1,183 @@
+"""Designer abstractions + Policy wrappers (paper §6.3, Appendix D.4).
+
+* Designer — stateful algorithm: ``suggest(count)`` / ``update(completed)``.
+* DesignerPolicy — wraps a Designer into a Policy by *replaying all completed
+  trials* on every operation: O(#trials) per call, always correct.
+* SerializableDesigner — adds ``dump() -> Metadata`` / ``recover(Metadata)``.
+* SerializableDesignerPolicy — restores the designer from study metadata and
+  feeds it only trials newer than the last incorporated id: O(new trials)
+  per call. This is the paper's key scalability mechanism for cheap-objective
+  studies with very many trials.
+"""
+
+from __future__ import annotations
+
+import abc
+import json
+from typing import Callable, List, Optional, Sequence, Type, TypeVar
+
+from repro.core.metadata import Metadata, MetadataDelta, Namespace
+from repro.core.study import CompletedTrials, Trial, TrialSuggestion
+from repro.core.study_config import ProblemStatement, StudyConfig
+from repro.pythia.policy import (
+    EarlyStopDecision,
+    EarlyStopDecisions,
+    EarlyStopRequest,
+    Policy,
+    PolicySupporter,
+    SuggestDecision,
+    SuggestRequest,
+)
+
+_S = TypeVar("_S", bound="SerializableDesigner")
+
+STATE_NAMESPACE = "pythia.designer_state"
+
+
+class HarmlessDecodeError(Exception):
+    """recover() failed benignly; the wrapper falls back to full replay."""
+
+
+class Designer(abc.ABC):
+    @abc.abstractmethod
+    def suggest(self, count: Optional[int] = None) -> Sequence[TrialSuggestion]:
+        ...
+
+    @abc.abstractmethod
+    def update(self, delta: CompletedTrials) -> None:
+        ...
+
+
+class SerializableDesigner(Designer):
+    @abc.abstractmethod
+    def dump(self) -> Metadata:
+        """Dumps internal state (e.g. population pool) to metadata."""
+
+    @abc.abstractmethod
+    def load(self, metadata: Metadata) -> None:
+        """Restores state in-place on a factory-fresh instance; raises
+        HarmlessDecodeError if the metadata is absent or corrupt."""
+
+    @classmethod
+    def recover(cls: Type[_S], factory, config, metadata: Metadata) -> _S:
+        """Factory-construct then load (paper Code Block 7 equivalent)."""
+        designer = factory(config)
+        designer.load(metadata)
+        return designer
+
+
+def _rule_based_early_stop(supporter: PolicySupporter, request: EarlyStopRequest
+                           ) -> EarlyStopDecisions:
+    """Automated-stopping rules (core.early_stopping) over supporter reads."""
+    from repro.core import early_stopping
+
+    all_trials = supporter.GetTrials(request.study_guid)
+    by_id = {t.id: t for t in all_trials}
+    decisions = []
+    for tid in request.trial_ids:
+        t = by_id.get(tid)
+        if t is None:
+            decisions.append(EarlyStopDecision(tid, False, "unknown trial"))
+            continue
+        stop = early_stopping.should_stop(t, all_trials, request.study_config)
+        decisions.append(EarlyStopDecision(
+            tid, stop, "automated stopping rule" if stop else ""))
+    return EarlyStopDecisions(decisions=decisions)
+
+
+class DesignerPolicy(Policy):
+    """O(n)-replay wrapper (correct default for expensive objectives)."""
+
+    def __init__(self, supporter: PolicySupporter, designer_factory: Callable[[StudyConfig], Designer]):
+        self._supporter = supporter
+        self._designer_factory = designer_factory
+
+    def early_stop(self, request: EarlyStopRequest) -> EarlyStopDecisions:
+        return _rule_based_early_stop(self._supporter, request)
+
+    def suggest(self, request: SuggestRequest) -> SuggestDecision:
+        designer = self._designer_factory(request.study_config)
+        completed = self._supporter.CompletedTrials(request.study_guid)
+        designer.update(CompletedTrials(completed))
+        suggestions = list(designer.suggest(request.count))
+        return SuggestDecision(suggestions=suggestions)
+
+
+class SerializableDesignerPolicy(Policy):
+    """O(new trials) wrapper via metadata state saving (paper §6.3)."""
+
+    def __init__(
+        self,
+        supporter: PolicySupporter,
+        designer_factory: Callable[[StudyConfig], "SerializableDesigner"],
+        designer_cls: Type["SerializableDesigner"],
+        *,
+        namespace: str = STATE_NAMESPACE,
+    ):
+        self._supporter = supporter
+        self._designer_factory = designer_factory
+        self._designer_cls = designer_cls
+        self._ns = namespace
+        # observability for tests/benchmarks
+        self.last_restore_was_incremental: bool = False
+        self.last_trials_loaded: int = 0
+
+    def _load_designer(self, request: SuggestRequest):
+        config = request.study_config
+        state_md = config.metadata.abs_ns(Namespace(self._ns))
+        designer = self._designer_factory(config)
+        incorporated = 0
+        self.last_restore_was_incremental = False
+        if "incorporated_max_trial_id" in state_md:
+            try:
+                designer.load(state_md)
+                incorporated = int(str(state_md["incorporated_max_trial_id"]))
+                self.last_restore_was_incremental = True
+            except HarmlessDecodeError:
+                designer = self._designer_factory(config)  # corrupt state: replay
+                incorporated = 0
+        return designer, incorporated
+
+    def suggest(self, request: SuggestRequest) -> SuggestDecision:
+        designer, incorporated = self._load_designer(request)
+        new_trials = self._supporter.CompletedTrials(
+            request.study_guid, min_trial_id=incorporated + 1
+        )
+        self.last_trials_loaded = len(new_trials)
+        if new_trials:
+            designer.update(CompletedTrials(new_trials))
+            incorporated = max(t.id for t in new_trials)
+        suggestions = list(designer.suggest(request.count))
+        # persist the updated state
+        delta = MetadataDelta()
+        dumped = designer.dump()
+        dumped_abs = Metadata()
+        dumped_abs.abs_ns(Namespace(self._ns)).update(dict(dumped.items()))
+        dumped_abs.abs_ns(Namespace(self._ns))["incorporated_max_trial_id"] = str(incorporated)
+        delta.on_study.attach(dumped_abs)
+        self._supporter.SendMetadata(delta)
+        return SuggestDecision(suggestions=suggestions, metadata=delta)
+
+    def early_stop(self, request: EarlyStopRequest) -> EarlyStopDecisions:
+        return _rule_based_early_stop(self._supporter, request)
+
+
+class PartiallySerializableDesignerMixin:
+    """Helper for designers whose state is a plain JSON-able dict."""
+
+    def _dump_json(self, obj) -> Metadata:
+        md = Metadata()
+        md["state"] = json.dumps(obj)
+        return md
+
+    @staticmethod
+    def _load_json(metadata: Metadata):
+        if "state" not in metadata:
+            raise HarmlessDecodeError('cannot find key "state"')
+        try:
+            raw = metadata["state"]
+            if isinstance(raw, bytes):
+                raw = raw.decode("utf-8")
+            return json.loads(raw)
+        except (json.JSONDecodeError, UnicodeDecodeError) as e:
+            raise HarmlessDecodeError(str(e)) from e

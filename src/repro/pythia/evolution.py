@@ -1,0 +1,217 @@
+"""Evolutionary designers (paper §6.3, Appendix D.4).
+
+* RegularizedEvolutionDesigner — (Real et al., 2019), the paper's own example
+  of an algorithm whose population pool must be checkpointed via Metadata.
+* NSGA2Designer — (Deb et al., 2002), the paper's multi-objective reference.
+
+Both are SerializableDesigners: state restores in O(population), not
+O(#trials) — the paper's motivating scalability property.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.metadata import Metadata
+from repro.core.pareto import crowding_distance, non_dominated_sort
+from repro.core.search_space import (
+    ParameterConfig,
+    ParameterDict,
+    ParameterType,
+    ParameterValue,
+)
+from repro.core.study import CompletedTrials, TrialSuggestion
+from repro.core.study_config import StudyConfig
+from repro.pythia.designers import PartiallySerializableDesignerMixin, SerializableDesigner
+
+
+def _mutate_one(cfg: ParameterConfig, value: ParameterValue, rng: random.Random,
+                sigma: float = 0.15) -> ParameterValue:
+    """Local mutation in the scaled unit space (numeric) / resample (categorical)."""
+    if cfg.type == ParameterType.CATEGORICAL:
+        return ParameterValue(rng.choice(cfg.categories))
+    u = cfg.to_unit(value)
+    u = min(1.0, max(0.0, u + rng.gauss(0.0, sigma)))
+    return cfg.from_unit(u)
+
+
+class _EvolutionBase(SerializableDesigner, PartiallySerializableDesignerMixin):
+    """Shared encode/decode + mutation machinery."""
+
+    def __init__(self, study_config: StudyConfig, seed: int = 0):
+        self._config = study_config
+        self._space = study_config.search_space
+        self._rng = random.Random(seed)
+
+    # population entries: (params_dict, objective_vector)
+    def _encode_params(self, params: ParameterDict) -> dict:
+        return {k: v.value for k, v in params.items()}
+
+    def _decode_params(self, d: dict) -> ParameterDict:
+        return ParameterDict.from_dict(d)
+
+    def _mutate(self, params: ParameterDict) -> ParameterDict:
+        """Mutate one active parameter; re-derive conditional children."""
+        out = ParameterDict()
+        active = self._space.active_parameters(params)
+        target = self._rng.choice([c.name for c in active])
+
+        def visit(cfg: ParameterConfig):
+            if cfg.name == target or cfg.name not in params:
+                value = (
+                    _mutate_one(cfg, params[cfg.name], self._rng)
+                    if cfg.name in params
+                    else cfg.sample(self._rng)
+                )
+            else:
+                value = params[cfg.name]
+            out[cfg.name] = value
+            for child in cfg.active_children(value):
+                visit(child)
+
+        for cfg in self._space.parameters:
+            visit(cfg)
+        return out
+
+    def _crossover(self, a: ParameterDict, b: ParameterDict) -> ParameterDict:
+        out = ParameterDict()
+
+        def visit(cfg: ParameterConfig):
+            src = a if self._rng.random() < 0.5 else b
+            value = src[cfg.name] if cfg.name in src else cfg.sample(self._rng)
+            out[cfg.name] = value
+            for child in cfg.active_children(value):
+                visit(child)
+
+        for cfg in self._space.parameters:
+            visit(cfg)
+        return out
+
+
+class RegularizedEvolutionDesigner(_EvolutionBase):
+    """Single-objective aging evolution: tournament-select, mutate, age out."""
+
+    def __init__(self, study_config: StudyConfig, *, population_size: int = 25,
+                 tournament_size: int = 5, seed: int = 0):
+        super().__init__(study_config, seed)
+        self._metric = study_config.single_objective_metric()
+        self.population_size = population_size
+        self.tournament_size = tournament_size
+        # FIFO of (encoded_params, objective)
+        self._population: List[Tuple[dict, float]] = []
+
+    def suggest(self, count: Optional[int] = None) -> Sequence[TrialSuggestion]:
+        out = []
+        for _ in range(count or 1):
+            if len(self._population) < self.population_size:
+                out.append(TrialSuggestion(parameters=self._space.sample(self._rng)))
+                continue
+            k = min(self.tournament_size, len(self._population))
+            contenders = self._rng.sample(range(len(self._population)), k)
+            best = max(contenders, key=lambda i: self._population[i][1])
+            parent = self._decode_params(self._population[best][0])
+            out.append(TrialSuggestion(parameters=self._mutate(parent)))
+        return out
+
+    def update(self, delta: CompletedTrials) -> None:
+        for t in delta.trials:
+            obj = self._config.objective_values(t)
+            if obj is None:
+                continue
+            self._population.append((self._encode_params(t.parameters), obj[0]))
+            if len(self._population) > self.population_size:
+                self._population.pop(0)  # age out the oldest (regularized)
+
+    def dump(self) -> Metadata:
+        return self._dump_json({"population": self._population})
+
+    def load(self, metadata: Metadata) -> None:
+        state = self._load_json(metadata)
+        self._population = [(dict(p), float(o)) for p, o in state["population"]]
+
+
+class NSGA2Designer(_EvolutionBase):
+    """NSGA-II: non-dominated sort + crowding distance selection."""
+
+    def __init__(self, study_config: StudyConfig, *, population_size: int = 50,
+                 mutation_rate: float = 0.7, seed: int = 0):
+        super().__init__(study_config, seed)
+        self.population_size = population_size
+        self.mutation_rate = mutation_rate
+        self._population: List[Tuple[dict, List[float]]] = []
+
+    def _select_parents(self) -> Tuple[ParameterDict, ParameterDict]:
+        y = np.array([obj for _, obj in self._population])
+        fronts = non_dominated_sort(y)
+        rank = np.zeros(len(self._population), dtype=int)
+        for r, front in enumerate(fronts):
+            rank[front] = r
+        crowd = np.zeros(len(self._population))
+        for front in fronts:
+            crowd[front] = crowding_distance(y[front])
+
+        def tournament() -> int:
+            i, j = self._rng.randrange(len(self._population)), self._rng.randrange(
+                len(self._population)
+            )
+            if rank[i] != rank[j]:
+                return i if rank[i] < rank[j] else j
+            return i if crowd[i] >= crowd[j] else j
+
+        a, b = tournament(), tournament()
+        return (
+            self._decode_params(self._population[a][0]),
+            self._decode_params(self._population[b][0]),
+        )
+
+    def suggest(self, count: Optional[int] = None) -> Sequence[TrialSuggestion]:
+        out = []
+        for _ in range(count or 1):
+            if len(self._population) < max(4, self.population_size // 4):
+                out.append(TrialSuggestion(parameters=self._space.sample(self._rng)))
+                continue
+            pa, pb = self._select_parents()
+            child = self._crossover(pa, pb)
+            if self._rng.random() < self.mutation_rate:
+                child = self._mutate(child)
+            out.append(TrialSuggestion(parameters=child))
+        return out
+
+    def update(self, delta: CompletedTrials) -> None:
+        for t in delta.trials:
+            obj = self._config.objective_values(t)
+            if obj is None:
+                continue
+            self._population.append((self._encode_params(t.parameters), list(obj)))
+        # environmental selection back to population_size
+        if len(self._population) > self.population_size:
+            y = np.array([o for _, o in self._population])
+            fronts = non_dominated_sort(y)
+            keep: List[int] = []
+            for front in fronts:
+                if len(keep) + len(front) <= self.population_size:
+                    keep.extend(front.tolist())
+                else:
+                    crowd = crowding_distance(y[front])
+                    order = np.argsort(-crowd)
+                    need = self.population_size - len(keep)
+                    keep.extend(front[order[:need]].tolist())
+                    break
+            self._population = [self._population[i] for i in sorted(keep)]
+
+    def pareto_front(self) -> List[Tuple[dict, List[float]]]:
+        if not self._population:
+            return []
+        y = np.array([o for _, o in self._population])
+        front = non_dominated_sort(y)[0]
+        return [self._population[i] for i in front]
+
+    def dump(self) -> Metadata:
+        return self._dump_json({"population": self._population})
+
+    def load(self, metadata: Metadata) -> None:
+        state = self._load_json(metadata)
+        self._population = [(dict(p), [float(v) for v in o]) for p, o in state["population"]]

@@ -1,0 +1,235 @@
+"""Gaussian-Process bandit policy in JAX (paper Code Block 2).
+
+Pipeline per suggestion operation (the Policy's lifespan):
+  1. PolicySupporter loads completed trials.
+  2. Featurize into [0,1]^d (scaling-aware; one-hot categoricals).
+  3. Fit GP hyperparameters (ARD Matérn-5/2 + noise) by maximizing the log
+     marginal likelihood with Adam (jax.grad).
+  4. Maximize UCB over quasi-random candidates + local perturbations of the
+     incumbent; fantasize pending trials to avoid duplicate suggestions when
+     ObservationNoise is LOW (paper Appendix B.2).
+
+The Gram matrix goes through repro.kernels.ops.matern52_gram (Pallas on TPU).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.metadata import Metadata
+from repro.core.study import TrialSuggestion
+from repro.core.study_config import ObservationNoise, StudyConfig
+from repro.kernels import ops as kops
+from repro.pythia.converters import TrialToArrayConverter, trials_to_xy
+from repro.pythia.policy import (
+    EarlyStopDecision,
+    EarlyStopDecisions,
+    EarlyStopRequest,
+    Policy,
+    PolicySupporter,
+    SuggestDecision,
+    SuggestRequest,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+@dataclasses.dataclass
+class GPParams:
+    log_amp: jnp.ndarray      # ()
+    log_ell: jnp.ndarray      # (d,)
+    log_noise: jnp.ndarray    # ()
+
+
+def _kernel(params: GPParams, x1: jnp.ndarray, x2: jnp.ndarray) -> jnp.ndarray:
+    ell = jnp.exp(params.log_ell)
+    amp = jnp.exp(params.log_amp)
+    return kops.matern52_gram(x1 / ell, x2 / ell, amp, impl="xla")
+
+
+@functools.partial(jax.jit, static_argnums=())
+def _neg_mll(raw: dict, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    params = GPParams(**raw)
+    n = x.shape[0]
+    noise = jnp.exp(params.log_noise) + 1e-4
+    K = _kernel(params, x, x) + noise * jnp.eye(n)
+    L = jnp.linalg.cholesky(K)
+    alpha = jax.scipy.linalg.cho_solve((L, True), y)
+    mll = (
+        -0.5 * jnp.dot(y, alpha)
+        - jnp.sum(jnp.log(jnp.diagonal(L)))
+        - 0.5 * n * jnp.log(2.0 * jnp.pi)
+    )
+    # weak log-normal priors keep hyperparameters sane on tiny datasets
+    prior = (
+        -0.5 * (params.log_amp**2)
+        - 0.5 * jnp.sum((params.log_ell - jnp.log(0.3)) ** 2)
+        - 0.5 * ((params.log_noise - jnp.log(1e-2)) ** 2) / 4.0
+    )
+    return -(mll + prior)
+
+
+_mll_grad = jax.jit(jax.value_and_grad(_neg_mll))
+
+
+@jax.jit
+def _posterior(raw: dict, x: jnp.ndarray, y: jnp.ndarray, xq: jnp.ndarray):
+    params = GPParams(**raw)
+    n = x.shape[0]
+    noise = jnp.exp(params.log_noise) + 1e-4
+    K = _kernel(params, x, x) + noise * jnp.eye(n)
+    L = jnp.linalg.cholesky(K)
+    alpha = jax.scipy.linalg.cho_solve((L, True), y)
+    Kq = _kernel(params, x, xq)  # (n, m)
+    mean = Kq.T @ alpha
+    vsolve = jax.scipy.linalg.solve_triangular(L, Kq, lower=True)  # (n, m)
+    var = jnp.exp(params.log_amp) - jnp.sum(vsolve * vsolve, axis=0)
+    return mean, jnp.sqrt(jnp.maximum(var, 1e-10))
+
+
+class GaussianProcessBandit:
+    """Stateless-per-call GP regressor + UCB acquisition."""
+
+    def __init__(self, dim: int, *, fit_steps: int = 60, lr: float = 0.08,
+                 ucb_beta: float = 1.8, seed: int = 0):
+        self.dim = dim
+        self.fit_steps = fit_steps
+        self.lr = lr
+        self.ucb_beta = ucb_beta
+        self.seed = seed
+
+    def fit(self, x: np.ndarray, y: np.ndarray) -> dict:
+        """Returns raw GP hyperparameters after Adam on the marginal likelihood."""
+        y = jnp.asarray(y, jnp.float32)
+        x = jnp.asarray(x, jnp.float32)
+        raw = {
+            "log_amp": jnp.asarray(0.0),
+            "log_ell": jnp.full((self.dim,), jnp.log(0.3)),
+            "log_noise": jnp.asarray(jnp.log(1e-2)),
+        }
+        m = jax.tree.map(jnp.zeros_like, raw)
+        v = jax.tree.map(jnp.zeros_like, raw)
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        best_raw, best_loss = raw, float("inf")
+        for t in range(1, self.fit_steps + 1):
+            loss, g = _mll_grad(raw, x, y)
+            loss = float(loss)
+            if not np.isfinite(loss):  # singular cholesky: keep best-so-far
+                raw = best_raw
+                break
+            if loss < best_loss:
+                best_loss, best_raw = loss, raw
+            g = jax.tree.map(lambda gg: jnp.nan_to_num(gg, nan=0.0,
+                                                       posinf=0.0, neginf=0.0), g)
+            m = jax.tree.map(lambda mm, gg: b1 * mm + (1 - b1) * gg, m, g)
+            v = jax.tree.map(lambda vv, gg: b2 * vv + (1 - b2) * gg * gg, v, g)
+            mhat = jax.tree.map(lambda mm: mm / (1 - b1**t), m)
+            vhat = jax.tree.map(lambda vv: vv / (1 - b2**t), v)
+            raw = jax.tree.map(
+                lambda p, mm, vv: p - self.lr * mm / (jnp.sqrt(vv) + eps), raw, mhat, vhat
+            )
+            # clamp to numerically-safe ranges (f32 cholesky)
+            raw = {
+                "log_amp": jnp.clip(raw["log_amp"], -4.0, 4.0),
+                "log_ell": jnp.clip(raw["log_ell"], jnp.log(0.01), jnp.log(10.0)),
+                "log_noise": jnp.clip(raw["log_noise"], -9.0, 0.0),
+            }
+        else:
+            loss, _ = _mll_grad(raw, x, y)
+            if not np.isfinite(float(loss)) or float(loss) > best_loss:
+                raw = best_raw
+        return raw
+
+    def ucb(self, raw: dict, x, y, xq) -> jnp.ndarray:
+        mean, std = _posterior(raw, jnp.asarray(x, jnp.float32),
+                               jnp.asarray(y, jnp.float32), jnp.asarray(xq, jnp.float32))
+        return mean + self.ucb_beta * std
+
+
+class GPBanditPolicy(Policy):
+    """The paper's GP-bandit example as a full Pythia policy."""
+
+    def __init__(self, supporter: PolicySupporter, *, n_candidates: int = 2000,
+                 min_completed: int = 5, seed: int = 0):
+        self._supporter = supporter
+        self._n_candidates = n_candidates
+        self._min_completed = min_completed
+        self._seed = seed
+
+    def suggest(self, request: SuggestRequest) -> SuggestDecision:
+        config = request.study_config
+        converter = TrialToArrayConverter(config.search_space)
+        completed = self._supporter.CompletedTrials(request.study_guid)
+        x, y_all = trials_to_xy(completed, config, converter)
+        rng = np.random.RandomState(self._seed + len(completed))
+
+        if x.shape[0] < self._min_completed or config.is_multi_objective:
+            # cold start (or scalarize-free multi-objective fallback): random
+            suggestions = [
+                TrialSuggestion(parameters=config.search_space.sample())
+                for _ in range(request.count)
+            ]
+            return SuggestDecision(suggestions=suggestions)
+
+        y = y_all[:, 0]
+        y_mean, y_std = float(np.mean(y)), float(np.std(y) + 1e-9)
+        yn = (y - y_mean) / y_std
+
+        gp = GaussianProcessBandit(dim=converter.dim, seed=self._seed)
+        raw = gp.fit(x, yn)
+
+        # pending-trial fantasies discourage duplicates when noise is LOW
+        pending = self._supporter.ActiveTrials(request.study_guid)
+        fantasy_x = converter.to_features([t.parameters for t in pending]) if pending else None
+
+        suggestions: List[TrialSuggestion] = []
+        xs, ys = x.copy(), yn.copy()
+        for _ in range(request.count):
+            cand = rng.rand(self._n_candidates, converter.dim)
+            # local perturbations around the incumbent sharpen exploitation
+            best_x = xs[int(np.argmax(ys))]
+            local = np.clip(
+                best_x[None, :] + 0.08 * rng.randn(self._n_candidates // 4, converter.dim),
+                0.0, 1.0,
+            )
+            cand = np.vstack([cand, local])
+            if fantasy_x is not None and len(fantasy_x) and (
+                config.observation_noise != ObservationNoise.HIGH
+            ):
+                d = np.linalg.norm(cand[:, None, :] - fantasy_x[None], axis=-1)
+                cand = cand[np.min(d, axis=1) > 1e-3]
+            scores = np.asarray(gp.ucb(raw, xs, ys, cand))
+            pick = cand[int(np.argmax(scores))]
+            params = converter.to_parameters(pick[None, :])[0]
+            suggestions.append(TrialSuggestion(parameters=params))
+            # fantasize the new point at the GP mean so batch members differ
+            mean, _ = _posterior(raw, jnp.asarray(xs, jnp.float32),
+                                 jnp.asarray(ys, jnp.float32),
+                                 jnp.asarray(pick[None, :], jnp.float32))
+            xs = np.vstack([xs, pick[None, :]])
+            ys = np.concatenate([ys, np.asarray(mean)])
+        return SuggestDecision(suggestions=suggestions)
+
+    def early_stop(self, request: EarlyStopRequest) -> EarlyStopDecisions:
+        from repro.core import early_stopping
+
+        config = request.study_config
+        all_trials = self._supporter.GetTrials(request.study_guid)
+        by_id = {t.id: t for t in all_trials}
+        decisions = []
+        for tid in request.trial_ids:
+            t = by_id.get(tid)
+            if t is None:
+                decisions.append(EarlyStopDecision(tid, False, "unknown trial"))
+                continue
+            stop = early_stopping.should_stop(t, all_trials, config)
+            decisions.append(
+                EarlyStopDecision(tid, stop, "automated stopping rule" if stop else "")
+            )
+        return EarlyStopDecisions(decisions=decisions)

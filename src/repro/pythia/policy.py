@@ -1,0 +1,126 @@
+"""Pythia developer API (paper §6).
+
+A Policy executes the blackbox-optimization algorithm server-side. Its
+lifespan is one suggestion or early-stopping operation (paper §6.3), so any
+long-lived state must round-trip through Metadata via the PolicySupporter.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import List, Optional
+
+from repro.core.metadata import Metadata, MetadataDelta
+from repro.core.study import Trial, TrialSuggestion
+from repro.core.study_config import ProblemStatement, StudyConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class StudyDescriptor:
+    """Identifies the study an operation acts on."""
+
+    config: StudyConfig
+    guid: str  # resource name owners/{o}/studies/{s}
+    max_trial_id: int = 0
+
+
+@dataclasses.dataclass
+class SuggestRequest:
+    study_descriptor: StudyDescriptor
+    count: int = 1
+    checkpoint_metadata: Optional[Metadata] = None
+
+    @property
+    def study_config(self) -> StudyConfig:
+        return self.study_descriptor.config
+
+    @property
+    def study_guid(self) -> str:
+        return self.study_descriptor.guid
+
+
+@dataclasses.dataclass
+class SuggestDecision:
+    suggestions: List[TrialSuggestion] = dataclasses.field(default_factory=list)
+    metadata: MetadataDelta = dataclasses.field(default_factory=MetadataDelta)
+
+
+@dataclasses.dataclass
+class EarlyStopRequest:
+    study_descriptor: StudyDescriptor
+    trial_ids: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def study_config(self) -> StudyConfig:
+        return self.study_descriptor.config
+
+    @property
+    def study_guid(self) -> str:
+        return self.study_descriptor.guid
+
+
+@dataclasses.dataclass
+class EarlyStopDecision:
+    trial_id: int
+    should_stop: bool
+    reason: str = ""
+
+
+@dataclasses.dataclass
+class EarlyStopDecisions:
+    decisions: List[EarlyStopDecision] = dataclasses.field(default_factory=list)
+    metadata: MetadataDelta = dataclasses.field(default_factory=MetadataDelta)
+
+
+class Policy(abc.ABC):
+    """Minimal, general-purpose algorithm interface (paper §6.1)."""
+
+    @abc.abstractmethod
+    def suggest(self, request: SuggestRequest) -> SuggestDecision:
+        """Computes the next suggestion batch."""
+
+    def early_stop(self, request: EarlyStopRequest) -> EarlyStopDecisions:
+        """Optional: decide whether pending trials should stop early."""
+        return EarlyStopDecisions(
+            decisions=[
+                EarlyStopDecision(tid, False, "policy has no early-stopping rule")
+                for tid in request.trial_ids
+            ]
+        )
+
+
+class PolicySupporter(abc.ABC):
+    """Mini-client for reading/filtering Trials and sending metadata (paper §6.2).
+
+    Policies can meta-learn from *any* study in the database via
+    GetStudyConfig/GetTrials — the transfer-learning hook.
+    """
+
+    @abc.abstractmethod
+    def GetStudyConfig(self, study_guid: str) -> StudyConfig:
+        ...
+
+    @abc.abstractmethod
+    def GetTrials(
+        self,
+        study_guid: str,
+        *,
+        status_matches: Optional[str] = None,  # 'ACTIVE' | 'SUCCEEDED' | ...
+        min_trial_id: Optional[int] = None,
+        max_trial_id: Optional[int] = None,
+    ) -> List[Trial]:
+        ...
+
+    @abc.abstractmethod
+    def SendMetadata(self, delta: MetadataDelta) -> None:
+        """Persists algorithm state into the database (paper §6.3)."""
+
+    # convenience used by most policies
+    def CompletedTrials(self, study_guid: str, min_trial_id: Optional[int] = None):
+        return self.GetTrials(
+            study_guid, status_matches="SUCCEEDED", min_trial_id=min_trial_id
+        )
+
+    def ActiveTrials(self, study_guid: str):
+        return self.GetTrials(study_guid, status_matches="ACTIVE")

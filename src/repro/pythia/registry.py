@@ -1,0 +1,112 @@
+"""Algorithm registry: StudyConfig.algorithm -> Policy factory.
+
+The Pythia service looks algorithms up here; contributors register new ones
+with @register (the paper's "algorithms may easily be added as policies").
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.core.study_config import StudyConfig
+from repro.pythia.baseline_designers import (
+    GridSearchDesigner,
+    HaltonDesigner,
+    RandomSearchDesigner,
+)
+from repro.pythia.cmaes import CMAESDesigner
+from repro.pythia.designers import DesignerPolicy, SerializableDesignerPolicy
+from repro.pythia.evolution import NSGA2Designer, RegularizedEvolutionDesigner
+from repro.pythia.gp_bandit import GPBanditPolicy
+from repro.pythia.policy import Policy, PolicySupporter
+
+PolicyFactory = Callable[[PolicySupporter, StudyConfig], Policy]
+
+_REGISTRY: Dict[str, PolicyFactory] = {}
+
+
+def register(name: str):
+    def deco(factory: PolicyFactory) -> PolicyFactory:
+        _REGISTRY[name.upper()] = factory
+        return factory
+
+    return deco
+
+
+def make_policy(algorithm: str, supporter: PolicySupporter, config: StudyConfig) -> Policy:
+    name = (algorithm or "DEFAULT").upper()
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown algorithm {algorithm!r}; registered: {sorted(_REGISTRY)}"
+        )
+    return _REGISTRY[name](supporter, config)
+
+
+def registered_algorithms():
+    return sorted(_REGISTRY)
+
+
+# -- built-ins ---------------------------------------------------------------
+
+
+@register("RANDOM_SEARCH")
+def _random(supporter, config):
+    return SerializableDesignerPolicy(
+        supporter, lambda cfg: RandomSearchDesigner(cfg), RandomSearchDesigner
+    )
+
+
+@register("GRID_SEARCH")
+def _grid(supporter, config):
+    return SerializableDesignerPolicy(
+        supporter, lambda cfg: GridSearchDesigner(cfg), GridSearchDesigner
+    )
+
+
+@register("QUASI_RANDOM_SEARCH")
+def _halton(supporter, config):
+    return SerializableDesignerPolicy(
+        supporter, lambda cfg: HaltonDesigner(cfg), HaltonDesigner
+    )
+
+
+@register("REGULARIZED_EVOLUTION")
+def _regevo(supporter, config):
+    return SerializableDesignerPolicy(
+        supporter,
+        lambda cfg: RegularizedEvolutionDesigner(cfg),
+        RegularizedEvolutionDesigner,
+    )
+
+
+@register("NSGA2")
+def _nsga2(supporter, config):
+    return SerializableDesignerPolicy(
+        supporter, lambda cfg: NSGA2Designer(cfg), NSGA2Designer
+    )
+
+
+@register("CMA_ES")
+def _cmaes(supporter, config):
+    return SerializableDesignerPolicy(
+        supporter, lambda cfg: CMAESDesigner(cfg), CMAESDesigner
+    )
+
+
+@register("GP_UCB")
+def _gp(supporter, config):
+    return GPBanditPolicy(supporter)
+
+
+@register("GAUSSIAN_PROCESS_BANDIT")
+def _gp2(supporter, config):
+    return GPBanditPolicy(supporter)
+
+
+@register("DEFAULT")
+def _default(supporter, config):
+    """GP bandit for expensive single-objective studies; NSGA-II for
+    multi-objective — mirroring Google Vizier's default behavior."""
+    if config.is_multi_objective:
+        return _REGISTRY["NSGA2"](supporter, config)
+    return GPBanditPolicy(supporter)

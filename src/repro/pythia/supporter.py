@@ -1,0 +1,101 @@
+"""PolicySupporter implementations (paper §6.2).
+
+* DatastorePolicySupporter — used when Pythia runs inside the API server
+  process: reads straight from the datastore.
+* RemotePolicySupporter — used when Pythia runs as a *separate service*
+  (paper Fig. 2): reads via RPCs back to the API server, so the algorithm
+  binary needs no database access.
+
+Both support cross-study reads (transfer learning / meta-learning).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+from repro.core.metadata import MetadataDelta
+from repro.core.study import Trial, TrialState
+from repro.core.study_config import StudyConfig
+from repro.pythia.policy import PolicySupporter
+
+_STATE_BY_NAME = {s.value: s for s in TrialState}
+_STATE_BY_NAME["COMPLETED"] = TrialState.COMPLETED  # alias
+
+
+def _states_arg(status_matches: Optional[str]):
+    if status_matches is None:
+        return None
+    if status_matches not in _STATE_BY_NAME:
+        raise ValueError(f"unknown trial state filter {status_matches!r}")
+    return [_STATE_BY_NAME[status_matches]]
+
+
+class DatastorePolicySupporter(PolicySupporter):
+    def __init__(self, datastore, study_guid: str):
+        self._ds = datastore
+        self._study_guid = study_guid
+
+    def GetStudyConfig(self, study_guid: str) -> StudyConfig:
+        return self._ds.get_study(study_guid).study_config
+
+    def GetTrials(
+        self,
+        study_guid: str,
+        *,
+        status_matches: Optional[str] = None,
+        min_trial_id: Optional[int] = None,
+        max_trial_id: Optional[int] = None,
+    ) -> List[Trial]:
+        trials = self._ds.list_trials(
+            study_guid, states=_states_arg(status_matches), min_trial_id=min_trial_id
+        )
+        if max_trial_id is not None:
+            trials = [t for t in trials if t.id <= max_trial_id]
+        return trials
+
+    def SendMetadata(self, delta: MetadataDelta) -> None:
+        if not delta.on_study._store and not delta.on_trials:
+            return
+        self._ds.update_study_metadata(self._study_guid, delta.on_study)
+        for trial_id, md in delta.on_trials.items():
+            self._ds.update_trial_metadata(self._study_guid, trial_id, md)
+
+
+class RemotePolicySupporter(PolicySupporter):
+    """Backed by RPCs to the API server (for the standalone Pythia service)."""
+
+    def __init__(self, rpc_client, study_guid: str):
+        self._rpc = rpc_client
+        self._study_guid = study_guid
+
+    def GetStudyConfig(self, study_guid: str) -> StudyConfig:
+        result = self._rpc.call("GetStudy", {"name": study_guid})
+        return StudyConfig.from_proto(result["study"]["study_spec"])
+
+    def GetTrials(
+        self,
+        study_guid: str,
+        *,
+        status_matches: Optional[str] = None,
+        min_trial_id: Optional[int] = None,
+        max_trial_id: Optional[int] = None,
+    ) -> List[Trial]:
+        params = {"parent": study_guid}
+        if status_matches is not None:
+            st = _states_arg(status_matches)[0]
+            params["states"] = [st.value]
+        if min_trial_id is not None:
+            params["min_trial_id"] = min_trial_id
+        result = self._rpc.call("ListTrials", params)
+        trials = [Trial.from_proto(p) for p in result["trials"]]
+        if max_trial_id is not None:
+            trials = [t for t in trials if t.id <= max_trial_id]
+        return trials
+
+    def SendMetadata(self, delta: MetadataDelta) -> None:
+        if delta.empty():
+            return
+        self._rpc.call(
+            "UpdateMetadata",
+            {"name": self._study_guid, "delta": delta.to_proto()},
+        )

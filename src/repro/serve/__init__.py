@@ -1,0 +1,5 @@
+"""Serving: KV/SSM-cache decode engine."""
+
+from repro.serve.engine import DecodeEngine, Request
+
+__all__ = ["DecodeEngine", "Request"]

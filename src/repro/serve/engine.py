@@ -1,0 +1,93 @@
+"""Batched decode engine: continuous-batching-lite serving loop.
+
+Slots hold independent requests; each engine step decodes one token for every
+active slot (the batch dimension is fixed — a freed slot is refilled from the
+queue, the standard continuous-batching trick at fixed batch shape).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class DecodeEngine:
+    def __init__(self, model: Model, params, *, batch_size: int = 4,
+                 max_seq: int = 512, ctx=None, greedy: bool = True):
+        self.model = model
+        self.params = params
+        self.batch = batch_size
+        self.max_seq = max_seq
+        self.ctx = ctx
+        self.cache = model.init_cache(batch=batch_size, max_seq=max_seq)
+        self.slots: List[Optional[Request]] = [None] * batch_size
+        self.queue: List[Request] = []
+        self._decode = jax.jit(
+            lambda p, c, t: model.decode_step(p, c, t, ctx=ctx))
+        self._remaining_prefill: Dict[int, List[int]] = {}
+
+    def submit(self, request: Request) -> None:
+        self.queue.append(request)
+
+    def _assign_slots(self) -> None:
+        for i in range(self.batch):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                # prompt tokens are fed through decode steps (prefill-as-decode;
+                # the batched prefill path exists separately for throughput)
+                self._remaining_prefill[i] = list(req.prompt)
+
+    def step(self) -> List[Request]:
+        """One decode step for the whole batch; returns newly finished."""
+        self._assign_slots()
+        tokens = np.zeros((self.batch, 1), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            pending = self._remaining_prefill.get(i)
+            if pending:
+                tokens[i, 0] = pending.pop(0)
+            elif req.output:
+                tokens[i, 0] = req.output[-1]
+            elif req.prompt:
+                tokens[i, 0] = req.prompt[-1]
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(tokens))
+        next_tokens = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        finished = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if self._remaining_prefill.get(i):
+                continue  # still prefilling this slot
+            req.output.append(int(next_tokens[i]))
+            if len(req.output) >= req.max_new_tokens:
+                req.done = True
+                finished.append(req)
+                self.slots[i] = None
+                self._remaining_prefill.pop(i, None)
+        return finished
+
+    def run_until_done(self, max_steps: int = 10000) -> List[Request]:
+        done: List[Request] = []
+        steps = 0
+        while (self.queue or any(s is not None for s in self.slots)) and steps < max_steps:
+            done.extend(self.step())
+            steps += 1
+        return done

@@ -1,0 +1,32 @@
+"""Distributed fault-tolerant service layer (paper §3)."""
+
+from repro.service.client import VizierClient
+from repro.service.datastore import (
+    Datastore,
+    InMemoryDatastore,
+    KeyAlreadyExistsError,
+    NotFoundError,
+    SQLiteDatastore,
+)
+from repro.service.rpc import (
+    RpcClient,
+    RpcServer,
+    Servicer,
+    StatusCode,
+    VizierRpcError,
+)
+from repro.service.server import DefaultVizierServer, DistributedVizierServer
+from repro.service.vizier_service import (
+    InProcessPythia,
+    PythiaConnector,
+    RemotePythia,
+    VizierService,
+)
+
+__all__ = [
+    "VizierClient", "Datastore", "InMemoryDatastore", "KeyAlreadyExistsError",
+    "NotFoundError", "SQLiteDatastore", "RpcClient", "RpcServer", "Servicer",
+    "StatusCode", "VizierRpcError", "DefaultVizierServer",
+    "DistributedVizierServer", "InProcessPythia", "PythiaConnector",
+    "RemotePythia", "VizierService",
+]

@@ -1,0 +1,201 @@
+"""VizierClient — the user API (paper §5, Code Block 1).
+
+    client = VizierClient.load_or_create_study(
+        'cifar10', config, client_id=sys.argv[1], target=address)
+    while suggestions := client.get_suggestions(count=1):
+        for trial in suggestions:
+            metrics = evaluate(trial.parameters)
+            client.complete_trial(metrics, trial_id=trial.id)
+
+The client hides the SuggestTrials -> GetOperation polling loop, retries
+transport failures, and (by re-using its client_id) resumes its own ACTIVE
+trials after a crash.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Union
+
+from repro.core.metadata import Metadata
+from repro.core.study import Measurement, Study, StudyState, Trial, TrialState
+from repro.core.study_config import StudyConfig
+from repro.service.rpc import RpcClient, StatusCode, VizierRpcError
+
+
+class OperationFailedError(Exception):
+    pass
+
+
+class VizierClient:
+    def __init__(
+        self,
+        target,
+        study_name: str,
+        client_id: str,
+        *,
+        poll_interval: float = 0.02,
+        poll_backoff: float = 1.3,
+        max_poll_interval: float = 2.0,
+    ):
+        self._rpc = RpcClient(target)
+        self._study_name = study_name
+        self._client_id = client_id
+        self._poll = (poll_interval, poll_backoff, max_poll_interval)
+
+    # -- construction -------------------------------------------------------------
+    @classmethod
+    def load_or_create_study(
+        cls,
+        display_name: str,
+        study_config: Optional[StudyConfig] = None,
+        *,
+        client_id: str,
+        target,
+        owner: str = "default",
+        **kwargs,
+    ) -> "VizierClient":
+        rpc = RpcClient(target)
+        name = f"owners/{owner}/studies/{display_name}"
+        try:
+            rpc.call("GetStudy", {"name": name})
+        except VizierRpcError as e:
+            if e.code != StatusCode.NOT_FOUND:
+                raise
+            if study_config is None:
+                raise ValueError(
+                    f"study {name!r} does not exist and no study_config given"
+                ) from e
+            rpc.call(
+                "CreateStudy",
+                {
+                    "owner": owner,
+                    "display_name": display_name,
+                    "study_spec": study_config.to_proto(),
+                },
+            )
+        rpc.close()
+        return cls(target, name, client_id, **kwargs)
+
+    @property
+    def study_name(self) -> str:
+        return self._study_name
+
+    @property
+    def client_id(self) -> str:
+        return self._client_id
+
+    # -- suggestion loop -------------------------------------------------------------
+    def get_suggestions(self, count: int = 1, *, timeout: float = 600.0) -> List[Trial]:
+        """SuggestTrials + GetOperation polling until the batch is ready."""
+        result = self._rpc.call(
+            "SuggestTrials",
+            {
+                "parent": self._study_name,
+                "suggestion_count": count,
+                "client_id": self._client_id,
+            },
+        )
+        op = result["operation"]
+        op = self._await_operation(op, timeout=timeout)
+        return [Trial.from_proto(p) for p in (op.get("result") or {}).get("trials", [])]
+
+    def _await_operation(self, op: dict, *, timeout: float) -> dict:
+        interval, backoff, max_interval = self._poll
+        deadline = time.monotonic() + timeout
+        while not op.get("done"):
+            if time.monotonic() > deadline:
+                raise OperationFailedError(f"operation {op['name']} timed out")
+            time.sleep(interval)
+            interval = min(interval * backoff, max_interval)
+            op = self._rpc.call("GetOperation", {"name": op["name"]})["operation"]
+        if op.get("error"):
+            raise OperationFailedError(
+                f"operation {op['name']}: {op['error'].get('message')}"
+            )
+        return op
+
+    # -- reporting ---------------------------------------------------------------------
+    def _trial_name(self, trial_id: int) -> str:
+        return f"{self._study_name}/trials/{trial_id}"
+
+    def report_intermediate_objective_value(
+        self,
+        metrics: Dict[str, float],
+        *,
+        trial_id: int,
+        step: int,
+        elapsed_secs: float = 0.0,
+    ) -> Trial:
+        m = Measurement(metrics=metrics, steps=step, elapsed_secs=elapsed_secs)
+        result = self._rpc.call(
+            "AddTrialMeasurement",
+            {"trial_name": self._trial_name(trial_id), "measurement": m.to_proto()},
+        )
+        return Trial.from_proto(result["trial"])
+
+    def complete_trial(
+        self,
+        metrics: Union[Dict[str, float], Measurement, None] = None,
+        *,
+        trial_id: int,
+        infeasibility_reason: Optional[str] = None,
+        elapsed_secs: float = 0.0,
+    ) -> Trial:
+        params: dict = {"name": self._trial_name(trial_id)}
+        if infeasibility_reason is not None:
+            params["trial_infeasible"] = True
+            params["infeasible_reason"] = infeasibility_reason
+        elif metrics is not None:
+            m = (
+                metrics
+                if isinstance(metrics, Measurement)
+                else Measurement(metrics=metrics, elapsed_secs=elapsed_secs)
+            )
+            params["final_measurement"] = m.to_proto()
+        result = self._rpc.call("CompleteTrial", params)
+        return Trial.from_proto(result["trial"])
+
+    # -- early stopping -------------------------------------------------------------------
+    def should_trial_stop(self, trial_id: int, *, timeout: float = 120.0) -> bool:
+        result = self._rpc.call(
+            "CheckTrialEarlyStoppingState", {"trial_name": self._trial_name(trial_id)}
+        )
+        op = self._await_operation(result["operation"], timeout=timeout)
+        return bool((op.get("result") or {}).get("should_stop", False))
+
+    # -- reads -------------------------------------------------------------------------------
+    def get_study_config(self) -> StudyConfig:
+        result = self._rpc.call("GetStudy", {"name": self._study_name})
+        return StudyConfig.from_proto(result["study"]["study_spec"])
+
+    def get_trial(self, trial_id: int) -> Trial:
+        result = self._rpc.call("GetTrial", {"name": self._trial_name(trial_id)})
+        return Trial.from_proto(result["trial"])
+
+    def list_trials(self, states: Optional[List[TrialState]] = None) -> List[Trial]:
+        params: dict = {"parent": self._study_name}
+        if states:
+            params["states"] = [s.value for s in states]
+        result = self._rpc.call("ListTrials", params)
+        return [Trial.from_proto(p) for p in result["trials"]]
+
+    def list_optimal_trials(self) -> List[Trial]:
+        result = self._rpc.call("ListOptimalTrials", {"parent": self._study_name})
+        return [Trial.from_proto(p) for p in result["optimal_trials"]]
+
+    def add_trial(self, trial: Trial) -> Trial:
+        """Registers a pre-evaluated trial (baseline / transfer learning)."""
+        result = self._rpc.call(
+            "CreateTrial", {"parent": self._study_name, "trial": trial.to_proto()}
+        )
+        return Trial.from_proto(result["trial"])
+
+    def set_study_state(self, state: StudyState) -> None:
+        self._rpc.call("SetStudyState", {"name": self._study_name, "state": state.value})
+
+    def delete_study(self) -> None:
+        self._rpc.call("DeleteStudy", {"name": self._study_name})
+
+    def close(self) -> None:
+        self._rpc.close()

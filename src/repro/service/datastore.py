@@ -1,0 +1,454 @@
+"""Persistent datastore (paper §3.1 "Persistent Datastore", §3.2 fault tolerance).
+
+Two implementations behind one interface:
+
+* InMemoryDatastore — dict-based, thread-safe; for tests/benchmarks.
+* SQLiteDatastore — durable SQL store (WAL journal). Studies/trials/operations
+  are stored as msgpack'd wire protos, so the schema is stable across code
+  versions; secondary columns support the filtered queries PolicySupporter
+  needs without deserializing everything (paper §6.2).
+
+Server-side fault tolerance rests on this layer: `Operation`s are persisted
+with enough information to restart suggestion computations after a crash.
+"""
+
+from __future__ import annotations
+
+import os
+import sqlite3
+import threading
+from typing import Dict, List, Optional
+
+import msgpack
+
+from repro.core.metadata import Metadata
+from repro.core.study import Study, StudyState, Trial, TrialState
+
+
+class KeyAlreadyExistsError(Exception):
+    pass
+
+
+class NotFoundError(Exception):
+    pass
+
+
+class Datastore:
+    """Interface. All methods are thread-safe."""
+
+    # studies
+    def create_study(self, study: Study) -> str:
+        raise NotImplementedError
+
+    def get_study(self, study_name: str) -> Study:
+        raise NotImplementedError
+
+    def list_studies(self, owner_prefix: str = "") -> List[Study]:
+        raise NotImplementedError
+
+    def update_study(self, study: Study) -> None:
+        raise NotImplementedError
+
+    def delete_study(self, study_name: str) -> None:
+        raise NotImplementedError
+
+    # trials
+    def create_trial(self, study_name: str, trial: Trial) -> Trial:
+        """Assigns the next sequential id if trial.id == 0; stores; returns it."""
+        raise NotImplementedError
+
+    def get_trial(self, study_name: str, trial_id: int) -> Trial:
+        raise NotImplementedError
+
+    def list_trials(
+        self,
+        study_name: str,
+        *,
+        states: Optional[List[TrialState]] = None,
+        client_id: Optional[str] = None,
+        min_trial_id: Optional[int] = None,
+    ) -> List[Trial]:
+        raise NotImplementedError
+
+    def update_trial(self, study_name: str, trial: Trial) -> None:
+        raise NotImplementedError
+
+    def delete_trial(self, study_name: str, trial_id: int) -> None:
+        raise NotImplementedError
+
+    def max_trial_id(self, study_name: str) -> int:
+        raise NotImplementedError
+
+    # operations (long-running computations; paper §3.2)
+    def put_operation(self, op: dict) -> None:
+        raise NotImplementedError
+
+    def get_operation(self, op_name: str) -> dict:
+        raise NotImplementedError
+
+    def list_operations(
+        self, study_name: str, *, client_id: Optional[str] = None, only_pending: bool = False
+    ) -> List[dict]:
+        raise NotImplementedError
+
+    # study-level metadata (Pythia state saving; paper §6.3)
+    def update_study_metadata(self, study_name: str, metadata: Metadata) -> None:
+        study = self.get_study(study_name)
+        study.study_config.metadata.attach(metadata)
+        self.update_study(study)
+
+    def update_trial_metadata(self, study_name: str, trial_id: int, metadata: Metadata) -> None:
+        trial = self.get_trial(study_name, trial_id)
+        trial.metadata.attach(metadata)
+        self.update_trial(study_name, trial)
+
+
+# ---------------------------------------------------------------------------
+
+
+class InMemoryDatastore(Datastore):
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._studies: Dict[str, dict] = {}
+        self._trials: Dict[str, Dict[int, dict]] = {}
+        self._ops: Dict[str, dict] = {}
+
+    # studies ----------------------------------------------------------------
+    def create_study(self, study: Study) -> str:
+        with self._lock:
+            if study.name in self._studies:
+                raise KeyAlreadyExistsError(study.name)
+            self._studies[study.name] = study.to_proto()
+            self._trials[study.name] = {}
+            return study.name
+
+    def get_study(self, study_name: str) -> Study:
+        with self._lock:
+            if study_name not in self._studies:
+                raise NotFoundError(study_name)
+            return Study.from_proto(self._studies[study_name])
+
+    def list_studies(self, owner_prefix: str = "") -> List[Study]:
+        with self._lock:
+            return [
+                Study.from_proto(p)
+                for name, p in sorted(self._studies.items())
+                if name.startswith(owner_prefix)
+            ]
+
+    def update_study(self, study: Study) -> None:
+        with self._lock:
+            if study.name not in self._studies:
+                raise NotFoundError(study.name)
+            self._studies[study.name] = study.to_proto()
+
+    def delete_study(self, study_name: str) -> None:
+        with self._lock:
+            if study_name not in self._studies:
+                raise NotFoundError(study_name)
+            del self._studies[study_name]
+            self._trials.pop(study_name, None)
+            self._ops = {k: v for k, v in self._ops.items() if v.get("study_name") != study_name}
+
+    # trials -------------------------------------------------------------------
+    def create_trial(self, study_name: str, trial: Trial) -> Trial:
+        with self._lock:
+            if study_name not in self._studies:
+                raise NotFoundError(study_name)
+            bucket = self._trials[study_name]
+            if trial.id == 0:
+                trial.id = (max(bucket) + 1) if bucket else 1
+            elif trial.id in bucket:
+                raise KeyAlreadyExistsError(f"{study_name}/trials/{trial.id}")
+            trial.study_name = study_name
+            bucket[trial.id] = trial.to_proto()
+            return trial
+
+    def get_trial(self, study_name: str, trial_id: int) -> Trial:
+        with self._lock:
+            bucket = self._trials.get(study_name)
+            if bucket is None or trial_id not in bucket:
+                raise NotFoundError(f"{study_name}/trials/{trial_id}")
+            return Trial.from_proto(bucket[trial_id])
+
+    def list_trials(self, study_name, *, states=None, client_id=None, min_trial_id=None):
+        with self._lock:
+            if study_name not in self._trials:
+                raise NotFoundError(study_name)
+            out = []
+            state_values = {s.value for s in states} if states else None
+            for tid in sorted(self._trials[study_name]):
+                p = self._trials[study_name][tid]
+                if state_values and p.get("state") not in state_values:
+                    continue
+                if client_id is not None and p.get("client_id") != client_id:
+                    continue
+                if min_trial_id is not None and tid < min_trial_id:
+                    continue
+                out.append(Trial.from_proto(p))
+            return out
+
+    def update_trial(self, study_name: str, trial: Trial) -> None:
+        with self._lock:
+            bucket = self._trials.get(study_name)
+            if bucket is None or trial.id not in bucket:
+                raise NotFoundError(f"{study_name}/trials/{trial.id}")
+            trial.study_name = study_name
+            bucket[trial.id] = trial.to_proto()
+
+    def delete_trial(self, study_name: str, trial_id: int) -> None:
+        with self._lock:
+            bucket = self._trials.get(study_name)
+            if bucket is None or trial_id not in bucket:
+                raise NotFoundError(f"{study_name}/trials/{trial_id}")
+            del bucket[trial_id]
+
+    def max_trial_id(self, study_name: str) -> int:
+        with self._lock:
+            bucket = self._trials.get(study_name)
+            if bucket is None:
+                raise NotFoundError(study_name)
+            return max(bucket) if bucket else 0
+
+    # ops -------------------------------------------------------------------------
+    def put_operation(self, op: dict) -> None:
+        with self._lock:
+            self._ops[op["name"]] = dict(op)
+
+    def get_operation(self, op_name: str) -> dict:
+        with self._lock:
+            if op_name not in self._ops:
+                raise NotFoundError(op_name)
+            return dict(self._ops[op_name])
+
+    def list_operations(self, study_name, *, client_id=None, only_pending=False):
+        with self._lock:
+            out = []
+            for op in self._ops.values():
+                if op.get("study_name") != study_name:
+                    continue
+                if client_id is not None and op.get("client_id") != client_id:
+                    continue
+                if only_pending and op.get("done"):
+                    continue
+                out.append(dict(op))
+            return sorted(out, key=lambda o: o.get("create_time", 0))
+
+
+# ---------------------------------------------------------------------------
+
+
+class SQLiteDatastore(Datastore):
+    """Durable datastore; survives process crashes (server-side fault tolerance)."""
+
+    def __init__(self, path: str = ":memory:"):
+        self._path = path
+        self._lock = threading.RLock()
+        if path != ":memory:":
+            os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        self._conn = sqlite3.connect(path, check_same_thread=False)
+        with self._lock, self._conn:
+            self._conn.execute("PRAGMA journal_mode=WAL")
+            self._conn.execute(
+                "CREATE TABLE IF NOT EXISTS studies ("
+                " name TEXT PRIMARY KEY, proto BLOB NOT NULL)"
+            )
+            self._conn.execute(
+                "CREATE TABLE IF NOT EXISTS trials ("
+                " study_name TEXT NOT NULL, trial_id INTEGER NOT NULL,"
+                " state TEXT NOT NULL, client_id TEXT, proto BLOB NOT NULL,"
+                " PRIMARY KEY (study_name, trial_id))"
+            )
+            self._conn.execute(
+                "CREATE TABLE IF NOT EXISTS operations ("
+                " name TEXT PRIMARY KEY, study_name TEXT NOT NULL,"
+                " client_id TEXT, done INTEGER NOT NULL, create_time REAL,"
+                " proto BLOB NOT NULL)"
+            )
+            self._conn.execute(
+                "CREATE INDEX IF NOT EXISTS trials_by_state"
+                " ON trials (study_name, state)"
+            )
+
+    # studies --------------------------------------------------------------------
+    def create_study(self, study: Study) -> str:
+        blob = msgpack.packb(study.to_proto(), use_bin_type=True)
+        with self._lock, self._conn:
+            try:
+                self._conn.execute(
+                    "INSERT INTO studies (name, proto) VALUES (?, ?)", (study.name, blob)
+                )
+            except sqlite3.IntegrityError as e:
+                raise KeyAlreadyExistsError(study.name) from e
+        return study.name
+
+    def get_study(self, study_name: str) -> Study:
+        with self._lock:
+            row = self._conn.execute(
+                "SELECT proto FROM studies WHERE name = ?", (study_name,)
+            ).fetchone()
+        if row is None:
+            raise NotFoundError(study_name)
+        return Study.from_proto(msgpack.unpackb(row[0], raw=False))
+
+    def list_studies(self, owner_prefix: str = "") -> List[Study]:
+        with self._lock:
+            rows = self._conn.execute(
+                "SELECT proto FROM studies WHERE name LIKE ? ORDER BY name",
+                (owner_prefix + "%",),
+            ).fetchall()
+        return [Study.from_proto(msgpack.unpackb(r[0], raw=False)) for r in rows]
+
+    def update_study(self, study: Study) -> None:
+        blob = msgpack.packb(study.to_proto(), use_bin_type=True)
+        with self._lock, self._conn:
+            cur = self._conn.execute(
+                "UPDATE studies SET proto = ? WHERE name = ?", (blob, study.name)
+            )
+            if cur.rowcount == 0:
+                raise NotFoundError(study.name)
+
+    def delete_study(self, study_name: str) -> None:
+        with self._lock, self._conn:
+            cur = self._conn.execute("DELETE FROM studies WHERE name = ?", (study_name,))
+            if cur.rowcount == 0:
+                raise NotFoundError(study_name)
+            self._conn.execute("DELETE FROM trials WHERE study_name = ?", (study_name,))
+            self._conn.execute("DELETE FROM operations WHERE study_name = ?", (study_name,))
+
+    # trials -------------------------------------------------------------------------
+    def create_trial(self, study_name: str, trial: Trial) -> Trial:
+        with self._lock, self._conn:
+            exists = self._conn.execute(
+                "SELECT 1 FROM studies WHERE name = ?", (study_name,)
+            ).fetchone()
+            if exists is None:
+                raise NotFoundError(study_name)
+            if trial.id == 0:
+                row = self._conn.execute(
+                    "SELECT COALESCE(MAX(trial_id), 0) FROM trials WHERE study_name = ?",
+                    (study_name,),
+                ).fetchone()
+                trial.id = int(row[0]) + 1
+            trial.study_name = study_name
+            blob = msgpack.packb(trial.to_proto(), use_bin_type=True)
+            try:
+                self._conn.execute(
+                    "INSERT INTO trials (study_name, trial_id, state, client_id, proto)"
+                    " VALUES (?, ?, ?, ?, ?)",
+                    (study_name, trial.id, trial.state.value, trial.client_id, blob),
+                )
+            except sqlite3.IntegrityError as e:
+                raise KeyAlreadyExistsError(f"{study_name}/trials/{trial.id}") from e
+        return trial
+
+    def get_trial(self, study_name: str, trial_id: int) -> Trial:
+        with self._lock:
+            row = self._conn.execute(
+                "SELECT proto FROM trials WHERE study_name = ? AND trial_id = ?",
+                (study_name, trial_id),
+            ).fetchone()
+        if row is None:
+            raise NotFoundError(f"{study_name}/trials/{trial_id}")
+        return Trial.from_proto(msgpack.unpackb(row[0], raw=False))
+
+    def list_trials(self, study_name, *, states=None, client_id=None, min_trial_id=None):
+        query = "SELECT proto FROM trials WHERE study_name = ?"
+        args: list = [study_name]
+        if states:
+            marks = ",".join("?" * len(states))
+            query += f" AND state IN ({marks})"
+            args += [s.value for s in states]
+        if client_id is not None:
+            query += " AND client_id = ?"
+            args.append(client_id)
+        if min_trial_id is not None:
+            query += " AND trial_id >= ?"
+            args.append(min_trial_id)
+        query += " ORDER BY trial_id"
+        with self._lock:
+            exists = self._conn.execute(
+                "SELECT 1 FROM studies WHERE name = ?", (study_name,)
+            ).fetchone()
+            if exists is None:
+                raise NotFoundError(study_name)
+            rows = self._conn.execute(query, args).fetchall()
+        return [Trial.from_proto(msgpack.unpackb(r[0], raw=False)) for r in rows]
+
+    def update_trial(self, study_name: str, trial: Trial) -> None:
+        trial.study_name = study_name
+        blob = msgpack.packb(trial.to_proto(), use_bin_type=True)
+        with self._lock, self._conn:
+            cur = self._conn.execute(
+                "UPDATE trials SET proto = ?, state = ?, client_id = ?"
+                " WHERE study_name = ? AND trial_id = ?",
+                (blob, trial.state.value, trial.client_id, study_name, trial.id),
+            )
+            if cur.rowcount == 0:
+                raise NotFoundError(f"{study_name}/trials/{trial.id}")
+
+    def delete_trial(self, study_name: str, trial_id: int) -> None:
+        with self._lock, self._conn:
+            cur = self._conn.execute(
+                "DELETE FROM trials WHERE study_name = ? AND trial_id = ?",
+                (study_name, trial_id),
+            )
+            if cur.rowcount == 0:
+                raise NotFoundError(f"{study_name}/trials/{trial_id}")
+
+    def max_trial_id(self, study_name: str) -> int:
+        with self._lock:
+            exists = self._conn.execute(
+                "SELECT 1 FROM studies WHERE name = ?", (study_name,)
+            ).fetchone()
+            if exists is None:
+                raise NotFoundError(study_name)
+            row = self._conn.execute(
+                "SELECT COALESCE(MAX(trial_id), 0) FROM trials WHERE study_name = ?",
+                (study_name,),
+            ).fetchone()
+        return int(row[0])
+
+    # ops ---------------------------------------------------------------------------
+    def put_operation(self, op: dict) -> None:
+        blob = msgpack.packb(op, use_bin_type=True)
+        with self._lock, self._conn:
+            self._conn.execute(
+                "INSERT INTO operations (name, study_name, client_id, done, create_time, proto)"
+                " VALUES (?, ?, ?, ?, ?, ?)"
+                " ON CONFLICT(name) DO UPDATE SET done = excluded.done, proto = excluded.proto",
+                (
+                    op["name"],
+                    op.get("study_name", ""),
+                    op.get("client_id"),
+                    1 if op.get("done") else 0,
+                    op.get("create_time", 0.0),
+                    blob,
+                ),
+            )
+
+    def get_operation(self, op_name: str) -> dict:
+        with self._lock:
+            row = self._conn.execute(
+                "SELECT proto FROM operations WHERE name = ?", (op_name,)
+            ).fetchone()
+        if row is None:
+            raise NotFoundError(op_name)
+        return msgpack.unpackb(row[0], raw=False)
+
+    def list_operations(self, study_name, *, client_id=None, only_pending=False):
+        query = "SELECT proto FROM operations WHERE study_name = ?"
+        args: list = [study_name]
+        if client_id is not None:
+            query += " AND client_id = ?"
+            args.append(client_id)
+        if only_pending:
+            query += " AND done = 0"
+        query += " ORDER BY create_time"
+        with self._lock:
+            rows = self._conn.execute(query, args).fetchall()
+        return [msgpack.unpackb(r[0], raw=False) for r in rows]
+
+    def close(self) -> None:
+        with self._lock:
+            self._conn.close()

@@ -1,0 +1,58 @@
+"""Long-running Operations (paper §3.2).
+
+SuggestTrials returns an Operation immediately; the actual Pythia computation
+runs in a server thread. Clients poll GetOperation until done. Operations are
+persisted in the datastore *before* computation starts and contain enough
+information (study, client, count) to restart the computation after a server
+crash — the paper's server-side fault-tolerance mechanism.
+"""
+
+from __future__ import annotations
+
+import time
+import uuid
+from typing import List, Optional
+
+
+def new_suggest_operation(study_name: str, client_id: str, count: int) -> dict:
+    return {
+        "name": f"{study_name}/operations/{uuid.uuid4().hex}",
+        "type": "suggest",
+        "study_name": study_name,
+        "client_id": client_id,
+        "suggestion_count": int(count),
+        "done": False,
+        "create_time": time.time(),
+        "result": None,
+        "error": None,
+    }
+
+
+def new_early_stopping_operation(study_name: str, trial_id: int) -> dict:
+    return {
+        "name": f"{study_name}/operations/{uuid.uuid4().hex}",
+        "type": "early_stopping",
+        "study_name": study_name,
+        "client_id": None,
+        "trial_id": int(trial_id),
+        "done": False,
+        "create_time": time.time(),
+        "result": None,
+        "error": None,
+    }
+
+
+def complete_operation(op: dict, result: dict) -> dict:
+    op = dict(op)
+    op["result"] = result
+    op["done"] = True
+    op["complete_time"] = time.time()
+    return op
+
+
+def fail_operation(op: dict, code: int, message: str) -> dict:
+    op = dict(op)
+    op["error"] = {"code": int(code), "message": str(message)}
+    op["done"] = True
+    op["complete_time"] = time.time()
+    return op

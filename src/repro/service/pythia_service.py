@@ -1,0 +1,91 @@
+"""Standalone Pythia service (paper Figure 2: "Pythia may run as a separate
+service from the API service").
+
+Hosts the algorithm registry behind two RPC methods; reads trials through a
+RemotePolicySupporter that RPCs *back* to the API server, so the algorithm
+binary needs no datastore of its own and can be written in any language that
+speaks the wire format.
+"""
+
+from __future__ import annotations
+
+import logging
+from typing import Optional
+
+from repro.core.metadata import MetadataDelta
+from repro.core.study_config import StudyConfig
+from repro.core.study import Trial, TrialState
+from repro.pythia.policy import EarlyStopRequest, StudyDescriptor, SuggestRequest
+from repro.pythia.registry import make_policy
+from repro.pythia.supporter import RemotePolicySupporter
+from repro.service.rpc import RpcClient, RpcServer, Servicer
+
+log = logging.getLogger(__name__)
+
+
+class PythiaServicer(Servicer):
+    def __init__(self, api_server_target):
+        """api_server_target: address string or in-process VizierService."""
+        super().__init__()
+        self._api_target = api_server_target
+        self.expose("PythiaSuggest", self.PythiaSuggest)
+        self.expose("PythiaEarlyStop", self.PythiaEarlyStop)
+
+    def _rpc(self) -> RpcClient:
+        return RpcClient(self._api_target)
+
+    def _load(self, rpc: RpcClient, study_name: str):
+        study_proto = rpc.call("GetStudy", {"name": study_name})["study"]
+        config = StudyConfig.from_proto(study_proto["study_spec"])
+        trials = rpc.call("ListTrials", {"parent": study_name})["trials"]
+        max_id = max((int(t["id"]) for t in trials), default=0)
+        return config, StudyDescriptor(config=config, guid=study_name, max_trial_id=max_id)
+
+    def PythiaSuggest(self, params: dict) -> dict:
+        rpc = self._rpc()
+        try:
+            config, descriptor = self._load(rpc, params["study_name"])
+            supporter = RemotePolicySupporter(rpc, params["study_name"])
+            policy = make_policy(config.algorithm, supporter, config)
+            decision = policy.suggest(
+                SuggestRequest(study_descriptor=descriptor, count=int(params["count"]))
+            )
+            suggestions = []
+            for s in decision.suggestions:
+                t = Trial(parameters=s.parameters, metadata=s.metadata,
+                          state=TrialState.REQUESTED)
+                suggestions.append(t.to_proto())
+            return {
+                "suggestions": suggestions,
+                "metadata_delta": decision.metadata.to_proto(),
+            }
+        finally:
+            rpc.close()
+
+    def PythiaEarlyStop(self, params: dict) -> dict:
+        rpc = self._rpc()
+        try:
+            config, descriptor = self._load(rpc, params["study_name"])
+            supporter = RemotePolicySupporter(rpc, params["study_name"])
+            policy = make_policy(config.algorithm, supporter, config)
+            decisions = policy.early_stop(
+                EarlyStopRequest(
+                    study_descriptor=descriptor,
+                    trial_ids=[int(t) for t in params["trial_ids"]],
+                )
+            ).decisions
+            return {
+                "decisions": [
+                    {"trial_id": d.trial_id, "should_stop": d.should_stop,
+                     "reason": d.reason}
+                    for d in decisions
+                ]
+            }
+        finally:
+            rpc.close()
+
+
+def start_pythia_server(api_server_address: str, host: str = "127.0.0.1",
+                        port: int = 0) -> RpcServer:
+    servicer = PythiaServicer(api_server_address)
+    return RpcServer(servicer, host=host, port=port).start()

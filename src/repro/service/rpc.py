@@ -1,0 +1,293 @@
+"""RPC transport (paper §3.1-3.2).
+
+The paper's infrastructure is gRPC + protobuf; this container has neither, so
+we reproduce the *protocol semantics* over a small, robust transport:
+
+* Frames: 4-byte big-endian length prefix + msgpack body.
+* Request:  {"id", "method", "params", "deadline_ms"}
+* Response: {"id", "ok", "result"} or {"id", "ok": False,
+             "error": {"code", "message"}}
+* Server: threaded TCP server; one thread per connection, sequential frames
+  per connection (clients pool connections for concurrency).
+* Client: lazy connect, automatic reconnect, exponential-backoff retries for
+  UNAVAILABLE/connection errors, per-call deadlines. Retry semantics mirror
+  gRPC: only idempotent failures (transport-level) are retried; application
+  errors surface as VizierRpcError.
+
+A LocalTransport dispatches in-process — the paper notes the server may run
+in the same process as the client when evaluation is cheap (§3.2).
+"""
+
+from __future__ import annotations
+
+import logging
+import random
+import socket
+import socketserver
+import struct
+import threading
+import time
+import uuid
+from typing import Any, Callable, Dict, Optional
+
+import msgpack
+
+log = logging.getLogger(__name__)
+
+MAX_FRAME = 256 * 1024 * 1024  # 256 MiB
+
+
+class StatusCode:
+    OK = 0
+    UNAVAILABLE = 14
+    DEADLINE_EXCEEDED = 4
+    NOT_FOUND = 5
+    INVALID_ARGUMENT = 3
+    ALREADY_EXISTS = 6
+    FAILED_PRECONDITION = 9
+    INTERNAL = 13
+    UNIMPLEMENTED = 12
+
+
+class VizierRpcError(Exception):
+    def __init__(self, code: int, message: str):
+        super().__init__(f"[code={code}] {message}")
+        self.code = code
+        self.message = message
+
+
+def _pack(obj: dict) -> bytes:
+    body = msgpack.packb(obj, use_bin_type=True)
+    if len(body) > MAX_FRAME:
+        raise VizierRpcError(StatusCode.INVALID_ARGUMENT, "frame too large")
+    return struct.pack(">I", len(body)) + body
+
+
+def _read_exact(sock: socket.socket, n: int) -> bytes:
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise ConnectionError("peer closed connection")
+        buf += chunk
+    return buf
+
+
+def _read_frame(sock: socket.socket) -> dict:
+    (length,) = struct.unpack(">I", _read_exact(sock, 4))
+    if length > MAX_FRAME:
+        raise VizierRpcError(StatusCode.INVALID_ARGUMENT, "frame too large")
+    return msgpack.unpackb(_read_exact(sock, length), raw=False, strict_map_key=False)
+
+
+# ---------------------------------------------------------------------------
+# Transports
+# ---------------------------------------------------------------------------
+
+
+class Transport:
+    """Abstract: issue a single request dict, get a response dict."""
+
+    def call_raw(self, request: dict, timeout: float) -> dict:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+class LocalTransport(Transport):
+    """In-process dispatch straight into a servicer (no sockets)."""
+
+    def __init__(self, servicer: "Servicer"):
+        self._servicer = servicer
+
+    def call_raw(self, request: dict, timeout: float) -> dict:
+        return self._servicer.dispatch(request)
+
+
+class TcpTransport(Transport):
+    """Socket transport with reconnect-on-failure."""
+
+    def __init__(self, address: str):
+        host, port = address.rsplit(":", 1)
+        self._addr = (host, int(port))
+        self._sock: Optional[socket.socket] = None
+        self._lock = threading.Lock()
+
+    def _connect(self, timeout: float) -> socket.socket:
+        sock = socket.create_connection(self._addr, timeout=timeout)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        return sock
+
+    def call_raw(self, request: dict, timeout: float) -> dict:
+        with self._lock:  # one in-flight request per transport
+            try:
+                if self._sock is None:
+                    self._sock = self._connect(timeout)
+                self._sock.settimeout(timeout)
+                self._sock.sendall(_pack(request))
+                return _read_frame(self._sock)
+            except (OSError, ConnectionError, struct.error) as e:
+                self._drop()
+                raise VizierRpcError(StatusCode.UNAVAILABLE, f"transport: {e}") from e
+
+    def _drop(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = None
+
+    def close(self) -> None:
+        with self._lock:
+            self._drop()
+
+
+# ---------------------------------------------------------------------------
+# Client with retries/deadlines (gRPC-style fault tolerance)
+# ---------------------------------------------------------------------------
+
+
+class RpcClient:
+    def __init__(
+        self,
+        target: "str | Servicer",
+        *,
+        default_timeout: float = 30.0,
+        max_retries: int = 5,
+        backoff_base: float = 0.05,
+        backoff_cap: float = 2.0,
+    ):
+        if isinstance(target, str):
+            self._transport: Transport = TcpTransport(target)
+        else:
+            self._transport = LocalTransport(target)
+        self.default_timeout = default_timeout
+        self.max_retries = max_retries
+        self.backoff_base = backoff_base
+        self.backoff_cap = backoff_cap
+
+    def call(self, method: str, params: dict, *, timeout: Optional[float] = None) -> Any:
+        timeout = timeout if timeout is not None else self.default_timeout
+        deadline = time.monotonic() + timeout
+        request = {
+            "id": uuid.uuid4().hex,
+            "method": method,
+            "params": params,
+            "deadline_ms": int(timeout * 1000),
+        }
+        attempt = 0
+        while True:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise VizierRpcError(StatusCode.DEADLINE_EXCEEDED, f"{method} deadline")
+            try:
+                resp = self._transport.call_raw(request, remaining)
+            except VizierRpcError as e:
+                if e.code != StatusCode.UNAVAILABLE or attempt >= self.max_retries:
+                    raise
+                attempt += 1
+                delay = min(self.backoff_cap, self.backoff_base * (2**attempt))
+                time.sleep(delay * (0.5 + random.random()))
+                continue
+            if resp.get("ok"):
+                return resp.get("result")
+            err = resp.get("error") or {}
+            code = err.get("code", StatusCode.INTERNAL)
+            if code == StatusCode.UNAVAILABLE and attempt < self.max_retries:
+                attempt += 1
+                delay = min(self.backoff_cap, self.backoff_base * (2**attempt))
+                time.sleep(delay * (0.5 + random.random()))
+                continue
+            raise VizierRpcError(code, err.get("message", "unknown error"))
+
+    def close(self) -> None:
+        self._transport.close()
+
+
+# ---------------------------------------------------------------------------
+# Server
+# ---------------------------------------------------------------------------
+
+
+class Servicer:
+    """Registry of method handlers. Subclasses register via expose()."""
+
+    def __init__(self):
+        self._methods: Dict[str, Callable[[dict], Any]] = {}
+
+    def expose(self, name: str, fn: Callable[[dict], Any]) -> None:
+        self._methods[name] = fn
+
+    def dispatch(self, request: dict) -> dict:
+        rid = request.get("id")
+        method = request.get("method", "")
+        fn = self._methods.get(method)
+        if fn is None:
+            return {
+                "id": rid,
+                "ok": False,
+                "error": {"code": StatusCode.UNIMPLEMENTED, "message": f"no method {method!r}"},
+            }
+        try:
+            result = fn(request.get("params") or {})
+            return {"id": rid, "ok": True, "result": result}
+        except VizierRpcError as e:
+            return {"id": rid, "ok": False, "error": {"code": e.code, "message": e.message}}
+        except Exception as e:  # noqa: BLE001 - server must not die on handler bugs
+            log.exception("handler %s failed", method)
+            return {
+                "id": rid,
+                "ok": False,
+                "error": {"code": StatusCode.INTERNAL, "message": f"{type(e).__name__}: {e}"},
+            }
+
+
+class _Handler(socketserver.BaseRequestHandler):
+    def handle(self):
+        sock: socket.socket = self.request
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        servicer: Servicer = self.server.servicer  # type: ignore[attr-defined]
+        while True:
+            try:
+                request = _read_frame(sock)
+            except (ConnectionError, OSError, struct.error):
+                return  # client went away
+            response = servicer.dispatch(request)
+            try:
+                sock.sendall(_pack(response))
+            except (OSError, ConnectionError):
+                return
+
+
+class _ThreadingTCPServer(socketserver.ThreadingTCPServer):
+    daemon_threads = True
+    allow_reuse_address = True
+
+
+class RpcServer:
+    """Threaded TCP server wrapping a Servicer (paper Code Block 4)."""
+
+    def __init__(self, servicer: Servicer, host: str = "127.0.0.1", port: int = 0):
+        self._server = _ThreadingTCPServer((host, port), _Handler)
+        self._server.servicer = servicer  # type: ignore[attr-defined]
+        self._thread: Optional[threading.Thread] = None
+
+    @property
+    def address(self) -> str:
+        host, port = self._server.server_address[:2]
+        return f"{host}:{port}"
+
+    def start(self) -> "RpcServer":
+        self._thread = threading.Thread(
+            target=self._server.serve_forever, kwargs={"poll_interval": 0.05}, daemon=True
+        )
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._server.shutdown()
+        self._server.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=5)

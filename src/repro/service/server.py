@@ -1,0 +1,92 @@
+"""Service stand-up helpers (paper Code Block 4).
+
+    server = DefaultVizierServer(host='localhost')   # in one process
+    client = VizierClient.load_or_create_study(..., target=server.address)
+
+Modes:
+  * DefaultVizierServer        — API server with in-process Pythia.
+  * DistributedVizierServer    — API server + separate Pythia service, the
+    full Figure-2 topology (two servers, three RPC hops).
+  * Local mode — pass the servicer object itself as the client target; no
+    sockets at all (paper §3.2 "launched in the same local process").
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+from repro.service.datastore import Datastore, InMemoryDatastore, SQLiteDatastore
+from repro.service.pythia_service import PythiaServicer
+from repro.service.rpc import RpcClient, RpcServer
+from repro.service.vizier_service import InProcessPythia, RemotePythia, VizierService
+
+
+class DefaultVizierServer:
+    def __init__(
+        self,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        *,
+        database_path: Optional[str] = None,
+        reassign_stalled_after: Optional[float] = None,
+        recover: bool = True,
+    ):
+        self.datastore: Datastore = (
+            SQLiteDatastore(database_path) if database_path else InMemoryDatastore()
+        )
+        self.servicer = VizierService(
+            self.datastore,
+            InProcessPythia(self.datastore),
+            reassign_stalled_after=reassign_stalled_after,
+        )
+        self._server = RpcServer(self.servicer, host=host, port=port).start()
+        if recover:
+            self.servicer.recover_pending_operations()
+
+    @property
+    def address(self) -> str:
+        return self._server.address
+
+    def stop(self) -> None:
+        self.servicer.shutdown()
+        self._server.stop()
+
+
+class DistributedVizierServer:
+    """API service + standalone Pythia service (paper Figure 2)."""
+
+    def __init__(
+        self,
+        host: str = "127.0.0.1",
+        *,
+        database_path: Optional[str] = None,
+        reassign_stalled_after: Optional[float] = None,
+    ):
+        self.datastore: Datastore = (
+            SQLiteDatastore(database_path) if database_path else InMemoryDatastore()
+        )
+        # 1. API server comes up first (Pythia dials back into it).
+        self.servicer = VizierService(
+            self.datastore, pythia=None, reassign_stalled_after=reassign_stalled_after
+        )
+        self._api_server = RpcServer(self.servicer, host=host, port=0).start()
+        # 2. Pythia server, pointed at the API server.
+        self.pythia_servicer = PythiaServicer(self._api_server.address)
+        self._pythia_server = RpcServer(self.pythia_servicer, host=host, port=0).start()
+        # 3. Rewire the API server's connector to the remote Pythia.
+        self.servicer._pythia = RemotePythia(RpcClient(self._pythia_server.address))
+        self.servicer.recover_pending_operations()
+
+    @property
+    def address(self) -> str:
+        return self._api_server.address
+
+    @property
+    def pythia_address(self) -> str:
+        return self._pythia_server.address
+
+    def stop(self) -> None:
+        self.servicer.shutdown()
+        self._pythia_server.stop()
+        self._api_server.stop()

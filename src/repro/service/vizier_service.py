@@ -1,0 +1,490 @@
+"""The OSS Vizier API servicer (paper §3.2, Figure 2).
+
+Implements the RPC surface with Vertex-Vizier method names:
+
+  CreateStudy / GetStudy / ListStudies / DeleteStudy / SetStudyState
+  SuggestTrials -> Operation           (Pythia runs in a server thread)
+  GetOperation                         (client polling loop)
+  CompleteTrial / AddTrialMeasurement / GetTrial / ListTrials / DeleteTrial
+  CheckTrialEarlyStoppingState -> Operation
+  StopTrial / ListOptimalTrials / UpdateMetadata / ListAlgorithms
+
+Key semantics reproduced from the paper:
+  * client_id trial binding — a SuggestTrials call first returns the caller's
+    own ACTIVE trials, so a crashed-and-restarted worker resumes its trial
+    (client-side fault tolerance, §5).
+  * stalled-trial reassignment — ACTIVE trials bound to a client that has not
+    heartbeated within ``reassign_stalled_after`` seconds are re-bound to the
+    requesting client (§5 "reassign Trials to other clients to prevent
+    stalling").
+  * operation persistence + recover_pending_operations() — suggestion work
+    interrupted by a server crash restarts on boot (§3.2).
+  * Pythia may run in-process or as a separate service (Figure 2) — see
+    PythiaConnector implementations.
+"""
+
+from __future__ import annotations
+
+import logging
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional
+
+from repro.core.metadata import Metadata, MetadataDelta, Namespace
+from repro.core.pareto import pareto_frontier_indices
+from repro.core.study import (
+    Measurement,
+    Study,
+    StudyState,
+    Trial,
+    TrialState,
+)
+from repro.core.study_config import StudyConfig
+from repro.pythia.policy import StudyDescriptor, SuggestRequest, EarlyStopRequest
+from repro.pythia.registry import make_policy, registered_algorithms
+from repro.pythia.supporter import DatastorePolicySupporter
+from repro.service import operations as ops_lib
+from repro.service.datastore import Datastore, KeyAlreadyExistsError, NotFoundError
+from repro.service.rpc import Servicer, StatusCode, VizierRpcError
+
+log = logging.getLogger(__name__)
+
+HEARTBEAT_NS = "system.heartbeat"
+
+
+class PythiaConnector:
+    """How the API server reaches the algorithm (same process or remote)."""
+
+    def suggest(self, study: Study, count: int, client_id: str):
+        raise NotImplementedError
+
+    def early_stop(self, study: Study, trial_ids: List[int]):
+        raise NotImplementedError
+
+
+class InProcessPythia(PythiaConnector):
+    """Pythia policy in the API-server process (paper: 'can be the same binary')."""
+
+    def __init__(self, datastore: Datastore):
+        self._ds = datastore
+
+    def _descriptor(self, study: Study) -> StudyDescriptor:
+        return StudyDescriptor(
+            config=study.study_config,
+            guid=study.name,
+            max_trial_id=self._ds.max_trial_id(study.name),
+        )
+
+    def suggest(self, study: Study, count: int, client_id: str):
+        supporter = DatastorePolicySupporter(self._ds, study.name)
+        policy = make_policy(study.study_config.algorithm, supporter, study.study_config)
+        request = SuggestRequest(study_descriptor=self._descriptor(study), count=count)
+        decision = policy.suggest(request)
+        return decision.suggestions, decision.metadata
+
+    def early_stop(self, study: Study, trial_ids: List[int]):
+        supporter = DatastorePolicySupporter(self._ds, study.name)
+        policy = make_policy(study.study_config.algorithm, supporter, study.study_config)
+        request = EarlyStopRequest(
+            study_descriptor=self._descriptor(study), trial_ids=trial_ids
+        )
+        return policy.early_stop(request).decisions
+
+
+class RemotePythia(PythiaConnector):
+    """Pythia as a separate service reached over RPC (paper Figure 2)."""
+
+    def __init__(self, rpc_client):
+        self._rpc = rpc_client
+
+    def suggest(self, study: Study, count: int, client_id: str):
+        from repro.core.study import TrialSuggestion
+
+        result = self._rpc.call(
+            "PythiaSuggest",
+            {"study_name": study.name, "count": count, "client_id": client_id},
+            timeout=600.0,
+        )
+        suggestions = []
+        for p in result["suggestions"]:
+            t = Trial.from_proto(p)
+            suggestions.append(TrialSuggestion(parameters=t.parameters, metadata=t.metadata))
+        return suggestions, MetadataDelta.from_proto(result.get("metadata_delta"))
+
+    def early_stop(self, study: Study, trial_ids: List[int]):
+        from repro.pythia.policy import EarlyStopDecision
+
+        result = self._rpc.call(
+            "PythiaEarlyStop", {"study_name": study.name, "trial_ids": trial_ids},
+            timeout=600.0,
+        )
+        return [
+            EarlyStopDecision(d["trial_id"], d["should_stop"], d.get("reason", ""))
+            for d in result["decisions"]
+        ]
+
+
+class VizierService(Servicer):
+    def __init__(
+        self,
+        datastore: Datastore,
+        pythia: Optional[PythiaConnector] = None,
+        *,
+        reassign_stalled_after: Optional[float] = None,
+        max_workers: int = 16,
+    ):
+        super().__init__()
+        self._ds = datastore
+        self._pythia = pythia or InProcessPythia(datastore)
+        self._reassign_after = reassign_stalled_after
+        self._pool = ThreadPoolExecutor(max_workers=max_workers,
+                                        thread_name_prefix="pythia")
+        self._study_locks: Dict[str, threading.Lock] = {}
+        self._locks_guard = threading.Lock()
+        for method in (
+            "CreateStudy", "GetStudy", "ListStudies", "DeleteStudy", "SetStudyState",
+            "SuggestTrials", "GetOperation", "CompleteTrial", "AddTrialMeasurement",
+            "GetTrial", "ListTrials", "DeleteTrial", "CreateTrial",
+            "CheckTrialEarlyStoppingState", "StopTrial", "ListOptimalTrials",
+            "UpdateMetadata", "ListAlgorithms", "Ping",
+        ):
+            self.expose(method, getattr(self, method))
+
+    # -- helpers ---------------------------------------------------------------
+    def _study_lock(self, study_name: str) -> threading.Lock:
+        with self._locks_guard:
+            return self._study_locks.setdefault(study_name, threading.Lock())
+
+    def _get_study_or_rpc_error(self, name: str) -> Study:
+        try:
+            return self._ds.get_study(name)
+        except NotFoundError as e:
+            raise VizierRpcError(StatusCode.NOT_FOUND, f"study {name!r}") from e
+
+    @staticmethod
+    def _parse_trial_name(name: str):
+        if "/trials/" not in name:
+            raise VizierRpcError(StatusCode.INVALID_ARGUMENT, f"bad trial name {name!r}")
+        study_name, trial_id = name.rsplit("/trials/", 1)
+        return study_name, int(trial_id)
+
+    def _touch_heartbeat(self, trial: Trial) -> None:
+        trial.metadata.abs_ns(Namespace(HEARTBEAT_NS))["t"] = repr(time.time())
+
+    def _heartbeat_of(self, trial: Trial) -> float:
+        raw = trial.metadata.abs_ns(Namespace(HEARTBEAT_NS)).get("t")
+        if raw is None:
+            return trial.creation_time
+        try:
+            return float(raw if isinstance(raw, str) else raw.decode())
+        except ValueError:
+            return trial.creation_time
+
+    # -- studies ------------------------------------------------------------------
+    def CreateStudy(self, params: dict) -> dict:
+        owner = params.get("owner", "default")
+        display_name = params.get("display_name") or f"study-{int(time.time()*1e3)}"
+        config = StudyConfig.from_proto(params["study_spec"])
+        name = f"owners/{owner}/studies/{display_name}"
+        study = Study(name=name, display_name=display_name, study_config=config)
+        try:
+            self._ds.create_study(study)
+        except KeyAlreadyExistsError:
+            # load-or-create semantics live in the client; Create returns the
+            # existing study (idempotent for identical display names).
+            study = self._ds.get_study(name)
+        return {"study": study.to_proto()}
+
+    def GetStudy(self, params: dict) -> dict:
+        return {"study": self._get_study_or_rpc_error(params["name"]).to_proto()}
+
+    def ListStudies(self, params: dict) -> dict:
+        prefix = params.get("parent", "")
+        return {"studies": [s.to_proto() for s in self._ds.list_studies(prefix)]}
+
+    def DeleteStudy(self, params: dict) -> dict:
+        try:
+            self._ds.delete_study(params["name"])
+        except NotFoundError as e:
+            raise VizierRpcError(StatusCode.NOT_FOUND, str(e)) from e
+        return {}
+
+    def SetStudyState(self, params: dict) -> dict:
+        study = self._get_study_or_rpc_error(params["name"])
+        study.state = StudyState(params["state"])
+        self._ds.update_study(study)
+        return {"study": study.to_proto()}
+
+    # -- suggestion flow -------------------------------------------------------------
+    def SuggestTrials(self, params: dict) -> dict:
+        study_name = params["parent"]
+        client_id = params.get("client_id") or "default_client"
+        count = int(params.get("suggestion_count", 1))
+        study = self._get_study_or_rpc_error(study_name)
+
+        with self._study_lock(study_name):
+            # 1. study no longer active -> empty, done (client loop terminates)
+            if study.state != StudyState.ACTIVE:
+                op = ops_lib.new_suggest_operation(study_name, client_id, count)
+                op = ops_lib.complete_operation(op, {"trials": []})
+                self._ds.put_operation(op)
+                return {"operation": op}
+
+            # 2. client already owns ACTIVE trials -> return them immediately
+            #    (client-side fault tolerance, paper §5)
+            mine = self._ds.list_trials(
+                study_name, states=[TrialState.ACTIVE], client_id=client_id
+            )
+            if mine:
+                op = ops_lib.new_suggest_operation(study_name, client_id, count)
+                op = ops_lib.complete_operation(
+                    op, {"trials": [t.to_proto() for t in mine[:count]]}
+                )
+                self._ds.put_operation(op)
+                return {"operation": op}
+
+            # 3. reassign stalled trials from dead clients (paper §5)
+            if self._reassign_after is not None:
+                now = time.time()
+                stalled = [
+                    t
+                    for t in self._ds.list_trials(study_name, states=[TrialState.ACTIVE])
+                    if now - self._heartbeat_of(t) > self._reassign_after
+                ]
+                if stalled:
+                    grabbed = []
+                    for t in stalled[:count]:
+                        t.client_id = client_id
+                        self._touch_heartbeat(t)
+                        self._ds.update_trial(study_name, t)
+                        grabbed.append(t)
+                    op = ops_lib.new_suggest_operation(study_name, client_id, count)
+                    op = ops_lib.complete_operation(
+                        op, {"trials": [t.to_proto() for t in grabbed]}
+                    )
+                    self._ds.put_operation(op)
+                    return {"operation": op}
+
+            # 4. an identical pending op may already exist (idempotent retry)
+            pending = self._ds.list_operations(
+                study_name, client_id=client_id, only_pending=True
+            )
+            for op in pending:
+                if op.get("type") == "suggest":
+                    return {"operation": op}
+
+            # 5. schedule fresh Pythia computation
+            op = ops_lib.new_suggest_operation(study_name, client_id, count)
+            self._ds.put_operation(op)
+        self._pool.submit(self._run_suggest_op, op)
+        return {"operation": op}
+
+    def _run_suggest_op(self, op: dict) -> None:
+        study_name = op["study_name"]
+        client_id = op["client_id"]
+        try:
+            study = self._ds.get_study(study_name)
+            suggestions, delta = self._pythia.suggest(
+                study, op["suggestion_count"], client_id
+            )
+            with self._study_lock(study_name):
+                # apply policy metadata (algorithm state; paper §6.3)
+                if delta is not None and not delta.empty():
+                    self._ds.update_study_metadata(study_name, delta.on_study)
+                    for tid, md in delta.on_trials.items():
+                        try:
+                            self._ds.update_trial_metadata(study_name, tid, md)
+                        except NotFoundError:
+                            pass
+                trials = []
+                for sug in suggestions:
+                    trial = Trial(
+                        parameters=sug.parameters,
+                        metadata=sug.metadata,
+                        state=TrialState.ACTIVE,
+                        client_id=client_id,
+                    )
+                    self._touch_heartbeat(trial)
+                    trial = self._ds.create_trial(study_name, trial)
+                    trials.append(trial)
+                done = ops_lib.complete_operation(
+                    op, {"trials": [t.to_proto() for t in trials]}
+                )
+                self._ds.put_operation(done)
+        except Exception as e:  # noqa: BLE001 — op must terminate
+            log.exception("suggest op %s failed", op["name"])
+            self._ds.put_operation(
+                ops_lib.fail_operation(op, StatusCode.INTERNAL, f"{type(e).__name__}: {e}")
+            )
+
+    def GetOperation(self, params: dict) -> dict:
+        try:
+            return {"operation": self._ds.get_operation(params["name"])}
+        except NotFoundError as e:
+            raise VizierRpcError(StatusCode.NOT_FOUND, str(e)) from e
+
+    def recover_pending_operations(self) -> int:
+        """Re-launches computations for not-done ops (crash recovery, §3.2)."""
+        count = 0
+        for study in self._ds.list_studies():
+            for op in self._ds.list_operations(study.name, only_pending=True):
+                if op.get("type") == "suggest":
+                    self._pool.submit(self._run_suggest_op, op)
+                elif op.get("type") == "early_stopping":
+                    self._pool.submit(self._run_early_stop_op, op)
+                count += 1
+        return count
+
+    # -- trial lifecycle -----------------------------------------------------------
+    def CreateTrial(self, params: dict) -> dict:
+        """Registers a user-provided trial (e.g. known baselines / transfer)."""
+        study_name = params["parent"]
+        self._get_study_or_rpc_error(study_name)
+        trial = Trial.from_proto(params["trial"])
+        trial.id = 0  # service assigns ids
+        trial = self._ds.create_trial(study_name, trial)
+        return {"trial": trial.to_proto()}
+
+    def GetTrial(self, params: dict) -> dict:
+        study_name, trial_id = self._parse_trial_name(params["name"])
+        try:
+            return {"trial": self._ds.get_trial(study_name, trial_id).to_proto()}
+        except NotFoundError as e:
+            raise VizierRpcError(StatusCode.NOT_FOUND, str(e)) from e
+
+    def ListTrials(self, params: dict) -> dict:
+        study_name = params["parent"]
+        states = [TrialState(s) for s in params.get("states", [])] or None
+        try:
+            trials = self._ds.list_trials(
+                study_name,
+                states=states,
+                client_id=params.get("client_id"),
+                min_trial_id=params.get("min_trial_id"),
+            )
+        except NotFoundError as e:
+            raise VizierRpcError(StatusCode.NOT_FOUND, str(e)) from e
+        return {"trials": [t.to_proto() for t in trials]}
+
+    def AddTrialMeasurement(self, params: dict) -> dict:
+        """Intermediate measurement — also acts as the client heartbeat."""
+        study_name, trial_id = self._parse_trial_name(params["trial_name"])
+        measurement = Measurement.from_proto(params["measurement"])
+        with self._study_lock(study_name):
+            trial = self._ds.get_trial(study_name, trial_id)
+            if trial.state.is_terminal:
+                raise VizierRpcError(
+                    StatusCode.FAILED_PRECONDITION, f"trial {trial_id} already terminal"
+                )
+            trial.add_measurement(measurement)
+            self._touch_heartbeat(trial)
+            self._ds.update_trial(study_name, trial)
+        return {"trial": trial.to_proto()}
+
+    def CompleteTrial(self, params: dict) -> dict:
+        study_name, trial_id = self._parse_trial_name(params["name"])
+        with self._study_lock(study_name):
+            trial = self._ds.get_trial(study_name, trial_id)
+            if trial.state.is_terminal:
+                raise VizierRpcError(
+                    StatusCode.FAILED_PRECONDITION, f"trial {trial_id} already terminal"
+                )
+            if params.get("trial_infeasible"):
+                trial.complete(
+                    infeasibility_reason=params.get("infeasible_reason", "infeasible")
+                )
+            else:
+                fm = Measurement.from_proto(params.get("final_measurement"))
+                if fm is None:
+                    # fall back to the last intermediate measurement
+                    if not trial.measurements:
+                        raise VizierRpcError(
+                            StatusCode.INVALID_ARGUMENT,
+                            "no final_measurement and no intermediate measurements",
+                        )
+                    fm = trial.measurements[-1]
+                trial.complete(fm)
+            self._ds.update_trial(study_name, trial)
+        return {"trial": trial.to_proto()}
+
+    def DeleteTrial(self, params: dict) -> dict:
+        study_name, trial_id = self._parse_trial_name(params["name"])
+        try:
+            self._ds.delete_trial(study_name, trial_id)
+        except NotFoundError as e:
+            raise VizierRpcError(StatusCode.NOT_FOUND, str(e)) from e
+        return {}
+
+    def StopTrial(self, params: dict) -> dict:
+        study_name, trial_id = self._parse_trial_name(params["name"])
+        with self._study_lock(study_name):
+            trial = self._ds.get_trial(study_name, trial_id)
+            if not trial.state.is_terminal:
+                trial.state = TrialState.STOPPING
+                self._ds.update_trial(study_name, trial)
+        return {"trial": trial.to_proto()}
+
+    # -- early stopping ----------------------------------------------------------------
+    def CheckTrialEarlyStoppingState(self, params: dict) -> dict:
+        study_name, trial_id = self._parse_trial_name(params["trial_name"])
+        self._get_study_or_rpc_error(study_name)
+        op = ops_lib.new_early_stopping_operation(study_name, trial_id)
+        self._ds.put_operation(op)
+        self._pool.submit(self._run_early_stop_op, op)
+        return {"operation": op}
+
+    def _run_early_stop_op(self, op: dict) -> None:
+        try:
+            study = self._ds.get_study(op["study_name"])
+            decisions = self._pythia.early_stop(study, [op["trial_id"]])
+            should_stop = any(d.should_stop for d in decisions)
+            if should_stop:
+                with self._study_lock(op["study_name"]):
+                    trial = self._ds.get_trial(op["study_name"], op["trial_id"])
+                    if not trial.state.is_terminal:
+                        trial.state = TrialState.STOPPING
+                        self._ds.update_trial(op["study_name"], trial)
+            self._ds.put_operation(
+                ops_lib.complete_operation(op, {"should_stop": bool(should_stop)})
+            )
+        except Exception as e:  # noqa: BLE001
+            log.exception("early-stop op %s failed", op["name"])
+            self._ds.put_operation(
+                ops_lib.fail_operation(op, StatusCode.INTERNAL, f"{type(e).__name__}: {e}")
+            )
+
+    # -- optimal trials / metadata ---------------------------------------------------
+    def ListOptimalTrials(self, params: dict) -> dict:
+        study_name = params["parent"]
+        study = self._get_study_or_rpc_error(study_name)
+        config: StudyConfig = study.study_config
+        completed = self._ds.list_trials(study_name, states=[TrialState.COMPLETED])
+        ys, keep = [], []
+        for t in completed:
+            obj = config.objective_values(t)
+            if obj is not None:
+                ys.append(obj)
+                keep.append(t)
+        if not ys:
+            return {"optimal_trials": []}
+        idx = pareto_frontier_indices(ys)
+        return {"optimal_trials": [keep[i].to_proto() for i in idx]}
+
+    def UpdateMetadata(self, params: dict) -> dict:
+        study_name = params["name"]
+        delta = MetadataDelta.from_proto(params["delta"])
+        self._get_study_or_rpc_error(study_name)
+        self._ds.update_study_metadata(study_name, delta.on_study)
+        for tid, md in delta.on_trials.items():
+            self._ds.update_trial_metadata(study_name, tid, md)
+        return {}
+
+    def ListAlgorithms(self, params: dict) -> dict:
+        return {"algorithms": registered_algorithms()}
+
+    def Ping(self, params: dict) -> dict:
+        return {"time": time.time()}
+
+    def shutdown(self) -> None:
+        self._pool.shutdown(wait=False, cancel_futures=True)

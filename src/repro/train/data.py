@@ -1,0 +1,98 @@
+"""Deterministic, shardable synthetic data pipeline.
+
+Produces token batches from a seeded Markov-ish generator — deterministic in
+(seed, step, shard), so every host materializes exactly its shard with no
+coordination, restarts resume mid-stream (fault tolerance), and elastic
+re-sharding just changes (shard_id, num_shards).
+
+A file-backed TokenFileDataset covers the "real data" path: a flat uint16
+token file, memory-mapped, strided by (step, shard).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    token_file: Optional[str] = None
+
+
+class SyntheticLM:
+    """Structured synthetic stream: tokens follow x_{t+1} = (a*x_t + noise) %
+    V so models can actually reduce loss on it (used by examples/train_lm)."""
+
+    def __init__(self, config: DataConfig, shard_id: int = 0, num_shards: int = 1):
+        assert config.global_batch % num_shards == 0
+        self.config = config
+        self.shard_id = shard_id
+        self.num_shards = num_shards
+        self.local_batch = config.global_batch // num_shards
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        cfg = self.config
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, step, self.shard_id]))
+        B, S = self.local_batch, cfg.seq_len
+        x = rng.integers(0, cfg.vocab_size, size=(B, 1), dtype=np.int64)
+        rows = [x]
+        a = 6364136223846793005
+        for _ in range(S):
+            noise = (rng.random(size=(B, 1)) < 0.15) * rng.integers(
+                0, cfg.vocab_size, size=(B, 1))
+            x = (x * a + 12345 + noise) % cfg.vocab_size
+            rows.append(x)
+        seq = np.concatenate(rows, axis=1)  # (B, S+1)
+        return {
+            "tokens": seq[:, :-1].astype(np.int32),
+            "labels": seq[:, 1:].astype(np.int32),
+        }
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class TokenFileDataset:
+    """Flat binary uint16 token file, deterministic strided access."""
+
+    def __init__(self, config: DataConfig, shard_id: int = 0, num_shards: int = 1):
+        assert config.token_file and os.path.exists(config.token_file)
+        self.config = config
+        self.shard_id = shard_id
+        self.num_shards = num_shards
+        self.local_batch = config.global_batch // num_shards
+        self.tokens = np.memmap(config.token_file, dtype=np.uint16, mode="r")
+        self.n_windows = (len(self.tokens) - 1) // config.seq_len
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        cfg = self.config
+        B, S = self.local_batch, cfg.seq_len
+        base = (step * cfg.global_batch + self.shard_id * B) % max(
+            self.n_windows - B, 1)
+        rows = []
+        for i in range(B):
+            w = (base + i) % self.n_windows
+            rows.append(np.asarray(self.tokens[w * S : w * S + S + 1], dtype=np.int64))
+        seq = np.stack(rows) % cfg.vocab_size
+        return {
+            "tokens": seq[:, :-1].astype(np.int32),
+            "labels": seq[:, 1:].astype(np.int32),
+        }
+
+
+def make_dataset(config: DataConfig, shard_id: int = 0, num_shards: int = 1):
+    if config.token_file:
+        return TokenFileDataset(config, shard_id, num_shards)
+    return SyntheticLM(config, shard_id, num_shards)

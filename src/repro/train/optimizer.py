@@ -1,0 +1,203 @@
+"""Optimizers (pure JAX, optax-style trees): AdamW and Adafactor, LR
+schedules, global-norm clipping.
+
+AdamW keeps fp32 m/v (sharded like the params — 2D FSDP×TP — so a 236B model
+fits); Adafactor keeps factored second moments (the memory-lean option for
+the largest archs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# -- schedules -----------------------------------------------------------------
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1) -> Callable:
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        progress = jnp.clip(
+            (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+    return schedule
+
+
+def constant_lr(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+# -- gradient utilities ------------------------------------------------------------
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree), norm
+
+
+# -- AdamW ----------------------------------------------------------------------------
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    schedule: Callable
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+        )
+
+    def state_axes(self, param_axes) -> AdamWState:
+        """Optimizer state shards exactly like its parameters."""
+        return AdamWState(step="", m=param_axes, v=param_axes)
+
+    def apply(self, grads, state: AdamWState, params) -> Tuple[Any, AdamWState, dict]:
+        if self.clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        lr = self.schedule(step)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m = self.b1 * m + (1 - self.b1) * gf
+            v = self.b2 * v + (1 - self.b2) * gf * gf
+            mhat = m / (1 - self.b1**t)
+            vhat = v / (1 - self.b2**t)
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * delta
+            return new_p.astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, AdamWState(step=step, m=new_m, v=new_v), {
+            "grad_norm": gnorm, "lr": lr}
+
+
+# -- Adafactor (factored second moments) ------------------------------------------------
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: Any   # row factors (or full v for <2D params)
+    vc: Any   # col factors (or None placeholder)
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    schedule: Callable
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+    def init(self, params) -> AdafactorState:
+        def rows(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def cols(p):
+            if p.ndim >= 2:
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((1,), jnp.float32)
+
+        return AdafactorState(
+            step=jnp.zeros((), jnp.int32),
+            vr=jax.tree.map(rows, params),
+            vc=jax.tree.map(cols, params),
+        )
+
+    def state_axes(self, param_axes) -> AdafactorState:
+        from repro.distributed.sharding import parse_axes
+
+        def rows(a):
+            ax = parse_axes(a)
+            return " ".join(x or "-" for x in ax[:-1]) if len(ax) >= 2 else a
+
+        def cols(a):
+            ax = parse_axes(a)
+            return " ".join(x or "-" for x in (ax[:-2] + ax[-1:])) if len(ax) >= 2 else "-"
+
+        return AdafactorState(
+            step="",
+            vr=jax.tree.map(rows, param_axes),
+            vc=jax.tree.map(cols, param_axes),
+        )
+
+    def apply(self, grads, state: AdafactorState, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-self.decay)
+        lr = self.schedule(step)
+
+        def upd(g, vr, vc, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + self.eps
+            if p.ndim >= 2:
+                vr = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+                r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), self.eps)
+                u = gf / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :] /
+                          jnp.sqrt(jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                               self.eps))[..., None])
+            else:
+                vr = beta * vr + (1 - beta) * g2
+                u = gf / jnp.sqrt(vr)
+                vc = vc
+            rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms_u / self.clip_threshold)
+            new_p = p.astype(jnp.float32) - lr * u
+            if self.weight_decay and p.ndim >= 2:
+                new_p = new_p - lr * self.weight_decay * p.astype(jnp.float32)
+            return new_p.astype(p.dtype), vr, vc
+
+        out = jax.tree.map(upd, grads, state.vr, state.vc, params)
+        is_l = lambda x: isinstance(x, tuple) and len(x) == 3 and not hasattr(x, "_fields")
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=is_l)
+        new_vr = jax.tree.map(lambda o: o[1], out, is_leaf=is_l)
+        new_vc = jax.tree.map(lambda o: o[2], out, is_leaf=is_l)
+        return new_params, AdafactorState(step=step, vr=new_vr, vc=new_vc), {
+            "grad_norm": global_norm(grads), "lr": lr}
+
+
+def make_optimizer(name: str, schedule: Callable, **kwargs):
+    if name == "adamw":
+        return AdamW(schedule=schedule, **kwargs)
+    if name == "adafactor":
+        return Adafactor(schedule=schedule, **kwargs)
+    raise KeyError(name)

@@ -1,0 +1,137 @@
+"""train_step / serve_step builders — the functions the launcher jits.
+
+``build_train_step`` supports:
+  * gradient-accumulation microbatching (scan over batch slices),
+  * optional int8 gradient compression with error feedback on the DP
+    reduction path,
+  * logical-axis sharding constraints threaded via ShardingCtx.
+
+``build_serve_steps`` returns (prefill_step, decode_step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.train.optimizer import AdamW, Adafactor, make_optimizer, warmup_cosine
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: str = "adamw"
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    num_microbatches: int = 1
+    grad_compression: bool = False
+
+    def make_optimizer(self):
+        sched = warmup_cosine(self.peak_lr, self.warmup_steps, self.total_steps)
+        if self.optimizer == "adamw":
+            return AdamW(schedule=sched, weight_decay=self.weight_decay,
+                         clip_norm=self.clip_norm)
+        return Adafactor(schedule=sched)
+
+
+def build_train_step(model: Model, train_config: TrainConfig, *, ctx=None
+                     ) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params", "opt", ["err_fb"]}.
+    """
+    optimizer = train_config.make_optimizer()
+    n_mb = train_config.num_microbatches
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss_fn(params, batch, ctx=ctx)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if n_mb == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+        # microbatch accumulation: split the global batch along dim 0
+        def split(x):
+            B = x.shape[0]
+            assert B % n_mb == 0, (B, n_mb)
+            return x.reshape((n_mb, B // n_mb) + x.shape[1:])
+
+        mbs = jax.tree.map(split, batch)
+
+        def mb_step(carry, mb):
+            acc, loss_acc = carry
+            (loss, metrics), grads = grad_fn(params, mb)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / n_mb, acc, grads)
+            return (acc, loss_acc + loss / n_mb), metrics
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss), metrics = jax.lax.scan(mb_step, (zero, 0.0), mbs)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss, metrics, grads
+
+    def train_step(state: Dict[str, Any], batch) -> Tuple[Dict[str, Any], dict]:
+        params, opt_state = state["params"], state["opt"]
+        loss, metrics, grads = compute_grads(params, batch)
+        if ctx is not None:
+            # constrain grads to the param sharding: the DP reduction lowers
+            # to reduce-scatter (each shard only needs its own grads for the
+            # optimizer update) instead of a full all-reduce
+            grads = jax.tree.map(lambda g, a: ctx.shard(g, a),
+                                 grads, model.param_axes())
+        if train_config.grad_compression:
+            from repro.distributed.compression import compress_with_feedback
+
+            grads, err_fb = compress_with_feedback(grads, state["err_fb"])
+        new_params, new_opt, opt_info = optimizer.apply(grads, opt_state, params)
+        if ctx is not None:
+            axes = model.param_axes()
+            new_params = jax.tree.map(
+                lambda p, a: ctx.shard(p, a), new_params, axes)
+        new_state = dict(state, params=new_params, opt=new_opt)
+        if train_config.grad_compression:
+            new_state["err_fb"] = err_fb
+        out_metrics = {"loss": loss, **metrics, **opt_info}
+        return new_state, out_metrics
+
+    return train_step
+
+
+def init_train_state(model: Model, train_config: TrainConfig, rng) -> Dict[str, Any]:
+    params = model.init(rng)
+    optimizer = train_config.make_optimizer()
+    state = {"params": params, "opt": optimizer.init(params)}
+    if train_config.grad_compression:
+        from repro.distributed.compression import init_error_feedback
+
+        state["err_fb"] = init_error_feedback(params)
+    return state
+
+
+def train_state_axes(model: Model, train_config: TrainConfig):
+    axes = model.param_axes()
+    optimizer = train_config.make_optimizer()
+    state_axes = {"params": axes, "opt": optimizer.state_axes(axes)}
+    if train_config.grad_compression:
+        state_axes["err_fb"] = axes
+    return state_axes
+
+
+def build_serve_steps(model: Model, *, ctx=None):
+    def prefill_step(params, batch):
+        logits, _ = model.forward(params, batch, ctx=ctx)
+        return logits
+
+    def decode_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens, ctx=ctx)
+
+    return prefill_step, decode_step

@@ -1,0 +1,13 @@
+"""Vizier <-> trainer integration: tuning workers + shardtune."""
+
+from repro.tuning.worker import TuningTask, TuningWorker, apply_parameters
+from repro.tuning.shardtune import (
+    evaluate_cell,
+    overrides_from_parameters,
+    shardtune_study_config,
+)
+
+__all__ = [
+    "TuningTask", "TuningWorker", "apply_parameters", "evaluate_cell",
+    "overrides_from_parameters", "shardtune_study_config",
+]

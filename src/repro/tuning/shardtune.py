@@ -1,0 +1,91 @@
+"""shardtune — Vizier optimizes the framework itself (beyond-paper feature).
+
+The blackbox objective is the dry-run roofline: given an (arch × shape) cell,
+a trial assigns {remat policy, MoE chunk count, attention chunk sizes,
+microbatches, SP on/off} → lower + compile → optimistic step time
+max(compute, memory, collective) from the loop-corrected HLO analysis,
+penalized when the per-device footprint exceeds HBM. Because compiles are
+expensive and the service is fault-tolerant, trials run under the normal
+client loop — exactly the paper's "expensive, minutes-per-eval" regime.
+
+This module is both a real tool (drives §Perf hillclimbing) and the
+demonstration that the reproduced service closes the loop on its own
+framework.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Dict, Optional
+
+from repro.core.search_space import ScaleType
+from repro.core.study_config import StudyConfig
+from repro.launch.mesh import HBM_BYTES
+
+log = logging.getLogger(__name__)
+
+
+def shardtune_study_config(*, include_microbatches: bool = True,
+                           algorithm: str = "GP_UCB") -> StudyConfig:
+    cfg = StudyConfig()
+    root = cfg.search_space.select_root()
+    root.add_categorical_param("remat", ["none", "block", "full"],
+                               default_value="block")
+    root.add_discrete_param("moe_chunks", [1, 2, 4, 8, 16, 32])
+    root.add_discrete_param("attn_q_chunk", [256, 512, 1024, 2048],
+                            scale_type=None)
+    root.add_discrete_param("attn_kv_chunk", [256, 512, 1024, 2048])
+    if include_microbatches:
+        root.add_discrete_param("num_microbatches", [1, 2, 4, 8])
+    cfg.metrics.add("step_time_s", "MINIMIZE")
+    cfg.algorithm = algorithm
+    cfg.observation_noise = cfg.observation_noise.LOW
+    return cfg
+
+
+def overrides_from_parameters(params: Dict) -> Dict:
+    """Vizier parameters -> ArchConfig dataclasses.replace overrides."""
+    out = {}
+    if "remat" in params:
+        out["remat"] = str(params["remat"])
+    for key in ("moe_chunks",):
+        if key in params:
+            # moe_chunks lives inside MoEConfig; handled by evaluate_cell
+            out[key] = int(params[key])
+    for key in ("attn_q_chunk", "attn_kv_chunk", "num_microbatches"):
+        if key in params:
+            out[key] = int(params[key])
+    return out
+
+
+def evaluate_cell(arch_id: str, shape_name: str, params: Dict,
+                  *, multi_pod: bool = False,
+                  hbm_penalty_weight: float = 10.0) -> Dict[str, float]:
+    """Lower+compile one cell with trial overrides; returns metrics.
+
+    NOTE: must run in a fresh process with 512 virtual devices (the dryrun
+    entrypoint handles that); in-process use is for tests with small meshes.
+    """
+    import dataclasses as dc
+
+    from repro.configs import get_arch
+    from repro.launch.dryrun import lower_cell
+
+    ov = overrides_from_parameters(params)
+    moe_chunks = ov.pop("moe_chunks", None)
+    cfg = get_arch(arch_id)
+    if moe_chunks is not None and cfg.moe is not None:
+        ov["moe"] = dc.replace(cfg.moe, moe_chunks=moe_chunks)
+    record = lower_cell(arch_id, shape_name, multi_pod=multi_pod, overrides=ov)
+    step_time = record["roofline"]["step_time_s"]
+    mem = record["memory"]["total_per_device"]
+    over = max(0.0, mem - HBM_BYTES) / HBM_BYTES
+    return {
+        "step_time_s": step_time + hbm_penalty_weight * over,
+        "raw_step_time_s": step_time,
+        "mem_gb": mem / 1e9,
+        "compute_s": record["roofline"]["compute_s"],
+        "memory_s": record["roofline"]["memory_s"],
+        "collective_s": record["roofline"]["collective_s"],
+    }

@@ -1,0 +1,110 @@
+"""Vizier ⇄ JAX-trainer integration (the paper's technique as a first-class
+framework feature).
+
+A TuningWorker is one of N parallel clients (paper §5): it pulls a suggestion,
+maps parameters onto TrainConfig/ArchConfig fields, runs real training steps,
+streams the learning curve back as intermediate measurements (heartbeats!),
+polls early stopping, and reports the final objective. Crash-and-rebind works
+end-to-end: a worker restarted with the same client_id resumes its ACTIVE
+trial and its training checkpoint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import math
+import os
+from typing import Callable, Dict, Optional
+
+from repro.configs.base import ArchConfig
+from repro.core.study import TrialState
+from repro.models import build_model
+from repro.service.client import VizierClient
+from repro.train.data import DataConfig
+from repro.train.step import TrainConfig
+from repro.train.train_loop import LoopConfig, LoopResult, train
+
+log = logging.getLogger(__name__)
+
+
+@dataclasses.dataclass
+class TuningTask:
+    arch: ArchConfig
+    data: DataConfig
+    total_steps: int = 60
+    report_every: int = 10
+    objective: str = "loss"           # minimized
+    checkpoint_root: Optional[str] = None
+
+
+def apply_parameters(train_config: TrainConfig, params: Dict) -> TrainConfig:
+    """Maps Vizier parameters onto TrainConfig fields (by name)."""
+    fields = {f.name for f in dataclasses.fields(TrainConfig)}
+    updates = {k: v for k, v in params.items() if k in fields}
+    return dataclasses.replace(train_config, **updates)
+
+
+class TuningWorker:
+    def __init__(self, target, study_name: str, client_id: str,
+                 task: TuningTask):
+        self.client = VizierClient(target, study_name, client_id)
+        self.task = task
+        self.client_id = client_id
+
+    def evaluate_trial(self, trial) -> Optional[float]:
+        """Trains with the trial's hyperparameters; returns final loss."""
+        task = self.task
+        params = trial.parameters.as_dict()
+        tc = apply_parameters(
+            TrainConfig(total_steps=task.total_steps, warmup_steps=max(
+                1, task.total_steps // 10)), params)
+        model = build_model(task.arch)
+        ckpt_dir = None
+        if task.checkpoint_root:
+            ckpt_dir = os.path.join(task.checkpoint_root,
+                                    f"trial_{trial.id}")
+
+        last: Dict[str, float] = {}
+
+        def report(step: int, metrics: Dict[str, float]) -> bool:
+            last.update(metrics)
+            if step % task.report_every:
+                return False
+            if not math.isfinite(metrics["loss"]):
+                return True
+            self.client.report_intermediate_objective_value(
+                {task.objective: metrics["loss"]}, trial_id=trial.id, step=step)
+            try:
+                return self.client.should_trial_stop(trial.id)
+            except Exception:  # noqa: BLE001 — stopping is best-effort
+                return False
+
+        result: LoopResult = train(
+            model, tc, task.data,
+            LoopConfig(total_steps=task.total_steps,
+                       checkpoint_every=max(1, task.report_every),
+                       checkpoint_dir=ckpt_dir, log_every=10**9),
+            report_fn=report)
+        if not result.losses or not math.isfinite(result.losses[-1]):
+            return None
+        return float(result.losses[-1])
+
+    def run(self, max_trials: int = 10**9) -> int:
+        """Paper Code Block 1 loop. Returns #trials completed."""
+        completed = 0
+        while completed < max_trials:
+            suggestions = self.client.get_suggestions(count=1)
+            if not suggestions:
+                break
+            for trial in suggestions:
+                final = self.evaluate_trial(trial)
+                if final is None:
+                    self.client.complete_trial(
+                        trial_id=trial.id,
+                        infeasibility_reason="non-finite loss")
+                else:
+                    self.client.complete_trial(
+                        {self.task.objective: final}, trial_id=trial.id)
+                completed += 1
+        return completed

@@ -1,0 +1,47 @@
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest
+
+from repro.core import (
+    Measurement,
+    ObjectiveMetricGoal,
+    ScaleType,
+    StudyConfig,
+    Trial,
+)
+
+
+@pytest.fixture
+def basic_config() -> StudyConfig:
+    cfg = StudyConfig()
+    root = cfg.search_space.select_root()
+    root.add_float_param("lr", 1e-4, 1e-1, scale_type=ScaleType.LOG)
+    root.add_int_param("layers", 1, 8)
+    root.add_categorical_param("act", ["relu", "gelu", "silu"])
+    cfg.metrics.add("acc", ObjectiveMetricGoal.MAXIMIZE)
+    cfg.algorithm = "RANDOM_SEARCH"
+    return cfg
+
+
+@pytest.fixture
+def conditional_config() -> StudyConfig:
+    cfg = StudyConfig()
+    root = cfg.search_space.select_root()
+    model = root.add_categorical_param("model", ["linear", "dnn", "forest"])
+    dnn = model.select_values(["dnn"])
+    dnn.add_int_param("num_layers", 1, 5)
+    dnn.add_float_param("dropout", 0.0, 0.5)
+    forest = model.select_values(["forest"])
+    forest.add_int_param("num_trees", 10, 100)
+    cfg.metrics.add("acc", ObjectiveMetricGoal.MAXIMIZE)
+    cfg.algorithm = "RANDOM_SEARCH"
+    return cfg
+
+
+def completed_trial(uid: int, params: dict, metrics: dict) -> Trial:
+    t = Trial(id=uid, parameters=params)
+    t.complete(Measurement(metrics=metrics))
+    return t

@@ -1,0 +1,126 @@
+"""Datastore contract tests (both implementations)."""
+
+import threading
+
+import pytest
+
+from repro.core import Measurement, Metadata, StudyConfig, Trial, TrialState
+from repro.core.study import Study
+from repro.service.datastore import (
+    InMemoryDatastore,
+    KeyAlreadyExistsError,
+    NotFoundError,
+    SQLiteDatastore,
+)
+
+
+@pytest.fixture(params=["memory", "sqlite", "sqlite_file"])
+def ds(request, tmp_path):
+    if request.param == "memory":
+        return InMemoryDatastore()
+    if request.param == "sqlite":
+        return SQLiteDatastore(":memory:")
+    return SQLiteDatastore(str(tmp_path / "v.db"))
+
+
+def make_study(name="owners/o/studies/s", basic_config=None) -> Study:
+    cfg = basic_config or StudyConfig()
+    if not cfg.metrics:
+        cfg.search_space.select_root().add_float_param("x", 0, 1)
+        cfg.metrics.add("m", "MAXIMIZE")
+    return Study(name=name, display_name="s", study_config=cfg)
+
+
+def test_study_crud(ds):
+    s = make_study()
+    assert ds.create_study(s) == s.name
+    with pytest.raises(KeyAlreadyExistsError):
+        ds.create_study(s)
+    got = ds.get_study(s.name)
+    assert got.name == s.name
+    assert len(ds.list_studies("owners/o")) == 1
+    assert ds.list_studies("owners/other") == []
+    ds.delete_study(s.name)
+    with pytest.raises(NotFoundError):
+        ds.get_study(s.name)
+
+
+def test_trial_sequential_ids_and_filters(ds):
+    s = make_study()
+    ds.create_study(s)
+    for i in range(5):
+        t = Trial(parameters={"x": i / 10}, client_id=f"c{i % 2}")
+        created = ds.create_trial(s.name, t)
+        assert created.id == i + 1
+    t3 = ds.get_trial(s.name, 3)
+    t3.complete(Measurement(metrics={"m": 0.5}))
+    ds.update_trial(s.name, t3)
+    assert len(ds.list_trials(s.name)) == 5
+    assert [t.id for t in ds.list_trials(s.name, states=[TrialState.COMPLETED])] == [3]
+    assert [t.id for t in ds.list_trials(s.name, client_id="c0")] == [1, 3, 5]
+    assert [t.id for t in ds.list_trials(s.name, min_trial_id=4)] == [4, 5]
+    assert ds.max_trial_id(s.name) == 5
+    ds.delete_trial(s.name, 5)
+    assert ds.max_trial_id(s.name) == 4
+
+
+def test_metadata_updates(ds):
+    s = make_study()
+    ds.create_study(s)
+    t = ds.create_trial(s.name, Trial(parameters={"x": 0.1}))
+    md = Metadata()
+    md.abs_ns("pythia")["state"] = "abc"
+    ds.update_study_metadata(s.name, md)
+    ds.update_trial_metadata(s.name, t.id, md)
+    assert ds.get_study(s.name).study_config.metadata.abs_ns("pythia")["state"] == "abc"
+    assert ds.get_trial(s.name, t.id).metadata.abs_ns("pythia")["state"] == "abc"
+
+
+def test_operations(ds):
+    s = make_study()
+    ds.create_study(s)
+    op = {"name": f"{s.name}/operations/1", "study_name": s.name,
+          "client_id": "c", "done": False, "create_time": 1.0, "type": "suggest"}
+    ds.put_operation(op)
+    assert ds.get_operation(op["name"])["done"] is False
+    assert len(ds.list_operations(s.name, only_pending=True)) == 1
+    op["done"] = True
+    ds.put_operation(op)
+    assert ds.list_operations(s.name, only_pending=True) == []
+    assert ds.get_operation(op["name"])["done"] is True
+
+
+def test_sqlite_survives_reopen(tmp_path):
+    path = str(tmp_path / "durable.db")
+    ds1 = SQLiteDatastore(path)
+    s = make_study()
+    ds1.create_study(s)
+    ds1.create_trial(s.name, Trial(parameters={"x": 0.5}))
+    ds1.close()
+    ds2 = SQLiteDatastore(path)  # "server restart"
+    assert len(ds2.list_trials(s.name)) == 1
+    ds2.close()
+
+
+def test_concurrent_trial_creation(ds):
+    s = make_study()
+    ds.create_study(s)
+    ids, errs = [], []
+    lock = threading.Lock()
+
+    def create(n):
+        try:
+            for _ in range(n):
+                t = ds.create_trial(s.name, Trial(parameters={"x": 0.1}))
+                with lock:
+                    ids.append(t.id)
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=create, args=(10,)) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert sorted(ids) == list(range(1, 41))  # unique sequential ids

@@ -1,0 +1,170 @@
+"""Designers & policies: feasibility, convergence, O(1) state recovery."""
+
+import math
+
+import pytest
+
+from repro.core import (
+    CompletedTrials,
+    Measurement,
+    Metadata,
+    ObjectiveMetricGoal,
+    ScaleType,
+    StudyConfig,
+    Trial,
+)
+from repro.pythia.baseline_designers import (
+    GridSearchDesigner,
+    HaltonDesigner,
+    RandomSearchDesigner,
+)
+from repro.pythia.cmaes import CMAESDesigner
+from repro.pythia.designers import SerializableDesignerPolicy
+from repro.pythia.evolution import NSGA2Designer, RegularizedEvolutionDesigner
+from repro.pythia.policy import StudyDescriptor, SuggestRequest
+from repro.pythia.registry import make_policy, registered_algorithms
+from repro.pythia.supporter import DatastorePolicySupporter
+from repro.service.datastore import InMemoryDatastore
+from repro.core.study import Study
+
+
+def quadratic(params) -> float:
+    """Max at lr=0.01, layers=4."""
+    lr = params.get_value("lr")
+    layers = params.get_value("layers")
+    return -((math.log10(lr) + 2) ** 2) - 0.2 * (layers - 4) ** 2
+
+
+def evolve(designer, config, n=60, batch=4):
+    best = -1e9
+    uid = 0
+    for _ in range(n // batch):
+        suggestions = designer.suggest(batch)
+        completed = []
+        for s in suggestions:
+            uid += 1
+            config.search_space.validate_parameters(s.parameters)
+            t = Trial(id=uid, parameters=s.parameters, metadata=s.metadata)
+            val = quadratic(s.parameters)
+            t.complete(Measurement(metrics={"acc": val}))
+            best = max(best, val)
+            completed.append(t)
+        designer.update(CompletedTrials(completed))
+    return best
+
+
+@pytest.mark.parametrize("cls", [RandomSearchDesigner, RegularizedEvolutionDesigner,
+                                 CMAESDesigner, HaltonDesigner])
+def test_designer_improves_quadratic(cls, basic_config):
+    best = evolve(cls(basic_config), basic_config)
+    assert best > -2.0, f"{cls.__name__} best={best}"
+
+
+def test_grid_covers_space(basic_config):
+    d = GridSearchDesigner(basic_config, double_grid_resolution=3)
+    seen = set()
+    while True:
+        batch = d.suggest(7)
+        if not batch:
+            break
+        for s in batch:
+            basic_config.search_space.validate_parameters(s.parameters)
+            seen.add(tuple(sorted(s.parameters.as_dict().items())))
+    assert len(seen) == d.grid_size  # exhaustive, no duplicates
+
+
+def test_evolution_respects_conditionals(conditional_config):
+    d = RegularizedEvolutionDesigner(conditional_config, population_size=8)
+    uid = 0
+    for _ in range(10):
+        batch = d.suggest(4)
+        completed = []
+        for s in batch:
+            conditional_config.search_space.validate_parameters(s.parameters)
+            uid += 1
+            t = Trial(id=uid, parameters=s.parameters)
+            t.complete(Measurement(metrics={"acc": float(uid % 7)}))
+            completed.append(t)
+        d.update(CompletedTrials(completed))
+
+
+def test_nsga2_pareto(basic_config):
+    cfg = StudyConfig()
+    cfg.search_space.select_root().add_float_param("x", 0.0, 1.0)
+    cfg.metrics.add("f1", ObjectiveMetricGoal.MAXIMIZE)
+    cfg.metrics.add("f2", ObjectiveMetricGoal.MAXIMIZE)
+    d = NSGA2Designer(cfg, population_size=16)
+    uid = 0
+    for _ in range(15):
+        batch = d.suggest(4)
+        completed = []
+        for s in batch:
+            uid += 1
+            x = s.parameters.get_value("x")
+            t = Trial(id=uid, parameters=s.parameters)
+            # concave front: f1 = x, f2 = 1 - x^2
+            t.complete(Measurement(metrics={"f1": x, "f2": 1 - x * x}))
+            completed.append(t)
+        d.update(CompletedTrials(completed))
+    front = d.pareto_front()
+    assert len(front) >= 5  # spread along the front
+
+
+def test_serializable_state_roundtrip(basic_config):
+    d1 = RegularizedEvolutionDesigner(basic_config, population_size=6, seed=3)
+    evolve(d1, basic_config, n=12, batch=4)
+    md = d1.dump()
+    d2 = RegularizedEvolutionDesigner(basic_config, population_size=6, seed=3)
+    d2.load(md)
+    assert d2._population == d1._population
+
+    c1 = CMAESDesigner(basic_config, seed=1)
+    evolve(c1, basic_config, n=12, batch=6)
+    c2 = CMAESDesigner(basic_config, seed=1)
+    c2.load(c1.dump())
+    assert (c2._mean == c1._mean).all() and c2._gen == c1._gen
+
+
+def test_serializable_policy_incremental_restore(basic_config):
+    """Paper §6.3: restore is O(new trials), not O(all trials)."""
+    ds = InMemoryDatastore()
+    basic_config.algorithm = "REGULARIZED_EVOLUTION"
+    study = Study(name="owners/o/studies/s", study_config=basic_config)
+    ds.create_study(study)
+    supporter = DatastorePolicySupporter(ds, study.name)
+    total = 0
+    for round_idx in range(3):
+        study = ds.get_study(study.name)
+        policy = SerializableDesignerPolicy(
+            supporter, lambda cfg: RegularizedEvolutionDesigner(cfg),
+            RegularizedEvolutionDesigner)
+        request = SuggestRequest(
+            study_descriptor=StudyDescriptor(config=study.study_config,
+                                             guid=study.name), count=3)
+        decision = policy.suggest(request)
+        assert policy.last_restore_was_incremental == (round_idx > 0)
+        # after the first round, only the NEW trials are loaded
+        if round_idx > 0:
+            assert policy.last_trials_loaded == 3
+        for s in decision.suggestions:
+            total += 1
+            t = Trial(parameters=s.parameters, metadata=s.metadata)
+            t = ds.create_trial(study.name, t)
+            t.complete(Measurement(metrics={"acc": 0.1 * total}))
+            ds.update_trial(study.name, t)
+
+
+def test_registry_all_algorithms_suggest(basic_config):
+    ds = InMemoryDatastore()
+    study = Study(name="owners/o/studies/reg", study_config=basic_config)
+    ds.create_study(study)
+    supporter = DatastorePolicySupporter(ds, study.name)
+    for name in registered_algorithms():
+        policy = make_policy(name, supporter, basic_config)
+        request = SuggestRequest(
+            study_descriptor=StudyDescriptor(config=basic_config,
+                                             guid=study.name), count=2)
+        decision = policy.suggest(request)
+        assert len(decision.suggestions) == 2, name
+        for s in decision.suggestions:
+            basic_config.search_space.validate_parameters(s.parameters)

@@ -1,0 +1,92 @@
+"""Automated stopping rules (paper Appendix B.1)."""
+
+from repro.core import (
+    AutomatedStoppingConfig,
+    Measurement,
+    StudyConfig,
+    Trial,
+)
+from repro.core.early_stopping import should_stop
+
+
+def curve_trial(uid, values, final=None) -> Trial:
+    t = Trial(id=uid)
+    for i, v in enumerate(values):
+        t.add_measurement(Measurement(metrics={"acc": v}, steps=(i + 1) * 10))
+    if final is not None:
+        t.complete(Measurement(metrics={"acc": final}))
+    return t
+
+
+def config_with(stopping) -> StudyConfig:
+    cfg = StudyConfig()
+    cfg.search_space.select_root().add_float_param("x", 0, 1)
+    cfg.metrics.add("acc", "MAXIMIZE")
+    cfg.automated_stopping = stopping
+    return cfg
+
+
+def test_median_rule_stops_bad_trial():
+    cfg = config_with(
+        AutomatedStoppingConfig.median_automated_stopping_config(min_completed_trials=2))
+    completed = [curve_trial(i, [0.5 + 0.05 * j for j in range(6)], final=0.8)
+                 for i in range(1, 4)]
+    bad = curve_trial(10, [0.1, 0.12, 0.13])
+    good = curve_trial(11, [0.55, 0.65, 0.75])
+    assert should_stop(bad, completed + [bad], cfg) is True
+    assert should_stop(good, completed + [good], cfg) is False
+
+
+def test_median_rule_needs_min_completed():
+    cfg = config_with(
+        AutomatedStoppingConfig.median_automated_stopping_config(min_completed_trials=5))
+    completed = [curve_trial(i, [0.5, 0.6], final=0.7) for i in range(1, 3)]
+    bad = curve_trial(10, [0.01])
+    assert should_stop(bad, completed + [bad], cfg) is False
+
+
+def test_decay_curve_stops_plateaued_trial():
+    cfg = config_with(
+        AutomatedStoppingConfig.decay_curve_stopping_config(probability_threshold=0.2))
+    completed = [curve_trial(i, [0.4, 0.6, 0.7, 0.75, 0.78, 0.79], final=0.8)
+                 for i in range(1, 4)]
+    plateaued = curve_trial(10, [0.1, 0.12, 0.125, 0.125, 0.125, 0.125])
+    rising = curve_trial(11, [0.3, 0.55, 0.7, 0.78, 0.83, 0.86])
+    assert should_stop(plateaued, completed + [plateaued], cfg) is True
+    assert should_stop(rising, completed + [rising], cfg) is False
+
+
+def test_stopping_disabled_and_multiobjective_noop():
+    cfg = config_with(AutomatedStoppingConfig())
+    bad = curve_trial(1, [0.0])
+    assert should_stop(bad, [bad], cfg) is False
+    cfg2 = config_with(
+        AutomatedStoppingConfig.median_automated_stopping_config())
+    cfg2.metrics.add("second", "MINIMIZE")
+    assert should_stop(bad, [bad], cfg2) is False
+
+
+def test_early_stopping_through_service(basic_config):
+    from repro.core import AutomatedStoppingType
+    from repro.service import VizierClient
+    from repro.service.datastore import InMemoryDatastore
+    from repro.service.vizier_service import VizierService
+
+    basic_config.automated_stopping = (
+        AutomatedStoppingConfig.median_automated_stopping_config(
+            min_completed_trials=1))
+    svc = VizierService(InMemoryDatastore())
+    client = VizierClient.load_or_create_study("es", basic_config,
+                                               client_id="c", target=svc)
+    # one good completed trial
+    (t,) = client.get_suggestions(count=1)
+    for step, v in [(10, 0.5), (20, 0.7), (30, 0.9)]:
+        client.report_intermediate_objective_value({"acc": v}, trial_id=t.id,
+                                                   step=step)
+    client.complete_trial({"acc": 0.9}, trial_id=t.id)
+    # a clearly-worse pending trial should be told to stop
+    (bad,) = client.get_suggestions(count=1)
+    client.report_intermediate_objective_value({"acc": 0.05}, trial_id=bad.id, step=10)
+    client.report_intermediate_objective_value({"acc": 0.06}, trial_id=bad.id, step=20)
+    assert client.should_trial_stop(bad.id) is True
+    svc.shutdown()

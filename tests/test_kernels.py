@@ -1,0 +1,143 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.gram import matern52_gram_pallas
+from repro.kernels.mamba2_ssd import ssd_core_pallas, ssd_scan_pallas
+from repro.models.mamba2 import ssd_chunked
+
+RNG = np.random.RandomState(42)
+
+
+# -- gram -----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,m,d", [(7, 5, 3), (64, 64, 8), (130, 257, 17),
+                                   (256, 256, 128), (300, 40, 64)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_gram_sweep(n, m, d, dtype):
+    x1 = RNG.randn(n, d).astype(np.float32)
+    x2 = RNG.randn(m, d).astype(np.float32)
+    K_ref = ref.matern52_gram(jnp.asarray(x1), jnp.asarray(x2), 2.3)
+    K_pal = matern52_gram_pallas(jnp.asarray(x1), jnp.asarray(x2),
+                                 jnp.asarray(2.3), interpret=True)
+    np.testing.assert_allclose(np.asarray(K_ref), np.asarray(K_pal),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gram_psd_diagonal():
+    x = RNG.randn(20, 4).astype(np.float32)
+    K = np.asarray(matern52_gram_pallas(jnp.asarray(x), jnp.asarray(x),
+                                        jnp.asarray(1.0), interpret=True))
+    np.testing.assert_allclose(np.diag(K), 1.0, atol=1e-5)
+    evals = np.linalg.eigvalsh(K + 1e-5 * np.eye(20))
+    assert evals.min() > 0
+
+
+# -- flash attention ---------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "B,Sq,Sk,Hq,Hkv,D,causal,off",
+    [
+        (2, 64, 64, 4, 2, 32, True, 0),
+        (1, 48, 80, 4, 1, 16, True, 32),     # MQA + decode-style offset
+        (2, 32, 32, 2, 2, 64, False, 0),     # bidirectional (whisper encoder)
+        (1, 100, 100, 6, 2, 24, True, 0),    # non-power-of-two everything
+        (1, 16, 128, 8, 8, 128, True, 112),  # chunked prefill tail
+    ])
+def test_flash_sweep(B, Sq, Sk, Hq, Hkv, D, causal, off):
+    q = jnp.asarray(RNG.randn(B, Sq, Hq, D), jnp.float32)
+    k = jnp.asarray(RNG.randn(B, Sk, Hkv, D), jnp.float32)
+    v = jnp.asarray(RNG.randn(B, Sk, Hkv, D), jnp.float32)
+    o_ref = ref.attention(q, k, v, causal=causal, q_offset=off)
+    o_pal = flash_attention_pallas(q, k, v, causal=causal, q_offset=off,
+                                   bq=16, bk=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_pal),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_bf16():
+    q = jnp.asarray(RNG.randn(1, 32, 2, 32), jnp.bfloat16)
+    k = jnp.asarray(RNG.randn(1, 32, 2, 32), jnp.bfloat16)
+    v = jnp.asarray(RNG.randn(1, 32, 2, 32), jnp.bfloat16)
+    o_ref = ref.attention(q, k, v, causal=True)
+    o_pal = flash_attention_pallas(q, k, v, causal=True, bq=16, bk=16,
+                                   interpret=True)
+    np.testing.assert_allclose(np.asarray(o_ref, np.float32),
+                               np.asarray(o_pal, np.float32), rtol=0.05, atol=0.05)
+
+
+def test_chunked_attention_matches_ref_various_chunks():
+    from repro.models.attention import chunked_attention
+
+    q = jnp.asarray(RNG.randn(2, 70, 4, 16), jnp.float32)
+    k = jnp.asarray(RNG.randn(2, 70, 2, 16), jnp.float32)
+    v = jnp.asarray(RNG.randn(2, 70, 2, 16), jnp.float32)
+    o_ref = ref.attention(q, k, v, causal=True)
+    for qc, kc in [(16, 16), (32, 8), (70, 70), (128, 128)]:
+        o = chunked_attention(q, k, v, causal=True, q_chunk=qc, kv_chunk=kc)
+        np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o),
+                                   rtol=2e-3, atol=2e-3, err_msg=f"qc={qc} kc={kc}")
+
+
+# -- SSD -----------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,S,H,P,G,N,chunk",
+                         [(2, 64, 4, 8, 2, 16, 16), (1, 32, 2, 16, 1, 8, 8),
+                          (2, 128, 4, 32, 4, 32, 32), (1, 96, 6, 16, 3, 8, 16)])
+def test_ssd_kernel_sweep(B, S, H, P, G, N, chunk):
+    x = jnp.asarray(RNG.randn(B, S, H, P), jnp.float32)
+    dt = jnp.asarray(RNG.rand(B, S, H) * 0.5 + 0.01, jnp.float32)
+    A = jnp.asarray(-np.abs(RNG.rand(H)) * 2 - 0.1, jnp.float32)
+    Bm = jnp.asarray(RNG.randn(B, S, G, N) * 0.3, jnp.float32)
+    Cm = jnp.asarray(RNG.randn(B, S, G, N) * 0.3, jnp.float32)
+    h0 = jnp.asarray(RNG.randn(B, H, P, N) * 0.1, jnp.float32)
+    y_ref, h_ref = ref.ssd_scan(x, dt, A, Bm, Cm, init_state=h0)
+    y_pal, h_pal = ssd_scan_pallas(x, dt, A, Bm, Cm, init_state=h0,
+                                   chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_pal),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(h_ref), np.asarray(h_pal),
+                               rtol=2e-3, atol=2e-3)
+
+
+@given(st.integers(min_value=1, max_value=3), st.sampled_from([16, 32, 48]),
+       st.sampled_from([2, 4]), st.sampled_from([8, 16]))
+@settings(max_examples=10, deadline=None)
+def test_ssd_xla_vs_sequential_property(B, S, H, P):
+    """Property: chunked XLA path == sequential scan for random shapes."""
+    rng = np.random.RandomState(B * 1000 + S)
+    G, N = H // 2 or 1, 8
+    x = jnp.asarray(rng.randn(B, S, H, P), jnp.float32)
+    dt = jnp.asarray(rng.rand(B, S, H) * 0.3 + 0.01, jnp.float32)
+    A = jnp.asarray(-np.abs(rng.rand(H)) - 0.1, jnp.float32)
+    Bm = jnp.asarray(rng.randn(B, S, G, N) * 0.3, jnp.float32)
+    Cm = jnp.asarray(rng.randn(B, S, G, N) * 0.3, jnp.float32)
+    y_ref, h_ref = ref.ssd_scan(x, dt, A, Bm, Cm)
+    y_chk, h_chk = ssd_chunked(x, dt, A, Bm, Cm, chunk=16)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_chk),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_kernel_matches_xla_chunked_path():
+    """kernels.ops dispatch: pallas-interpret == xla impl == ref."""
+    from repro.kernels import ops as kops
+
+    B, S, H, P, G, N = 1, 64, 2, 8, 1, 8
+    x = jnp.asarray(RNG.randn(B, S, H, P), jnp.float32)
+    dt = jnp.asarray(RNG.rand(B, S, H) * 0.4 + 0.01, jnp.float32)
+    A = jnp.asarray(np.array([-0.5, -1.5]), jnp.float32)
+    Bm = jnp.asarray(RNG.randn(B, S, G, N) * 0.3, jnp.float32)
+    Cm = jnp.asarray(RNG.randn(B, S, G, N) * 0.3, jnp.float32)
+    y_x, _ = kops.ssd_scan(x, dt, A, Bm, Cm, impl="xla", chunk=16)
+    y_p, _ = kops.ssd_scan(x, dt, A, Bm, Cm, impl="pallas_interpret", chunk=16)
+    np.testing.assert_allclose(np.asarray(y_x), np.asarray(y_p),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,99 @@
+"""Wire-format roundtrips for Trials/Measurements/StudyConfigs (hypothesis)."""
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Measurement,
+    Metadata,
+    MetricInformation,
+    ObjectiveMetricGoal,
+    StudyConfig,
+    Trial,
+    TrialState,
+    converters,
+)
+
+metric_values = st.floats(allow_nan=False, allow_infinity=False,
+                          min_value=-1e12, max_value=1e12)
+param_values = st.one_of(
+    st.floats(allow_nan=False, allow_infinity=False, min_value=-1e9, max_value=1e9),
+    st.integers(min_value=-10**9, max_value=10**9),
+    st.text(min_size=0, max_size=20),
+)
+
+
+@st.composite
+def measurements(draw):
+    metrics = draw(st.dictionaries(st.text(min_size=1, max_size=10),
+                                   metric_values, max_size=4))
+    return Measurement(metrics=metrics,
+                       steps=draw(st.integers(min_value=0, max_value=10**6)),
+                       elapsed_secs=draw(st.floats(min_value=0, max_value=1e6)))
+
+
+@st.composite
+def trials(draw):
+    t = Trial(
+        id=draw(st.integers(min_value=1, max_value=10**6)),
+        parameters=draw(st.dictionaries(st.text(min_size=1, max_size=8),
+                                        param_values, max_size=5)),
+    )
+    for m in draw(st.lists(measurements(), max_size=3)):
+        t.add_measurement(m)
+    if draw(st.booleans()):
+        t.complete(draw(measurements()))
+    elif draw(st.booleans()):
+        t.complete(infeasibility_reason="broken")
+    t.metadata.ns("algo")["state"] = draw(st.text(max_size=30))
+    return t
+
+
+@given(trials())
+@settings(max_examples=150, deadline=None)
+def test_trial_roundtrip(trial):
+    proto = trial.to_proto()
+    back = Trial.from_proto(proto)
+    assert back.to_proto() == proto
+    assert back.id == trial.id
+    assert back.state == trial.state
+    assert back.parameters.as_dict() == trial.parameters.as_dict()
+    assert back.metadata == trial.metadata
+
+
+@given(measurements())
+@settings(max_examples=100, deadline=None)
+def test_measurement_roundtrip(m):
+    assert Measurement.from_proto(m.to_proto()).to_proto() == m.to_proto()
+
+
+def test_study_config_roundtrip(basic_config):
+    proto = basic_config.to_proto()
+    back = StudyConfig.from_proto(proto)
+    assert back.to_proto() == proto
+    assert back.algorithm == basic_config.algorithm
+    assert [m.name for m in back.metrics] == [m.name for m in basic_config.metrics]
+
+
+def test_converter_objects_match_paper_table2(basic_config):
+    t = Trial(id=3, parameters={"a": 1.5})
+    assert converters.TrialConverter.from_proto(
+        converters.TrialConverter.to_proto(t)).id == 3
+    protos = converters.TrialConverter.to_protos([t, t])
+    assert len(converters.TrialConverter.from_protos(protos)) == 2
+    mi = MetricInformation("m", ObjectiveMetricGoal.MINIMIZE)
+    assert converters.MetricInformationConverter.from_proto(mi.to_proto()).goal \
+        == ObjectiveMetricGoal.MINIMIZE
+
+
+def test_metadata_namespaces():
+    md = Metadata()
+    md["top"] = "1"
+    sub = md.ns("gp")
+    sub["state"] = "xyz"
+    sub2 = md.ns("gp")
+    assert sub2["state"] == "xyz"
+    assert "top" not in sub2
+    proto = md.to_proto()
+    back = Metadata.from_proto(proto)
+    assert back == md
+    assert back.ns("gp")["state"] == "xyz"

@@ -1,0 +1,135 @@
+"""RPC transport: framing, retries, deadlines, reconnect, error mapping."""
+
+import threading
+import time
+
+import pytest
+
+from repro.service.rpc import (
+    RpcClient,
+    RpcServer,
+    Servicer,
+    StatusCode,
+    VizierRpcError,
+)
+
+
+class EchoServicer(Servicer):
+    def __init__(self):
+        super().__init__()
+        self.calls = 0
+        self.expose("Echo", self.echo)
+        self.expose("Slow", self.slow)
+        self.expose("Boom", self.boom)
+        self.expose("FlakyOnce", self.flaky)
+        self._flaky_done = False
+
+    def echo(self, params):
+        self.calls += 1
+        return {"echo": params}
+
+    def slow(self, params):
+        time.sleep(params.get("seconds", 1.0))
+        return {}
+
+    def boom(self, params):
+        raise ValueError("kaboom")
+
+    def flaky(self, params):
+        if not self._flaky_done:
+            self._flaky_done = True
+            raise VizierRpcError(StatusCode.UNAVAILABLE, "try again")
+        return {"ok": 1}
+
+
+@pytest.fixture
+def server():
+    servicer = EchoServicer()
+    srv = RpcServer(servicer).start()
+    yield srv, servicer
+    srv.stop()
+
+
+def test_echo_roundtrip(server):
+    srv, _ = server
+    client = RpcClient(srv.address)
+    result = client.call("Echo", {"x": 1, "nested": {"b": b"bytes", "s": "str"}})
+    assert result["echo"]["nested"]["b"] == b"bytes"
+    client.close()
+
+
+def test_unknown_method(server):
+    srv, _ = server
+    client = RpcClient(srv.address)
+    with pytest.raises(VizierRpcError) as e:
+        client.call("Nope", {})
+    assert e.value.code == StatusCode.UNIMPLEMENTED
+
+
+def test_application_error_maps_to_internal(server):
+    srv, _ = server
+    client = RpcClient(srv.address)
+    with pytest.raises(VizierRpcError) as e:
+        client.call("Boom", {})
+    assert e.value.code == StatusCode.INTERNAL
+    assert "kaboom" in e.value.message
+    # the connection stays usable after an error
+    assert client.call("Echo", {"a": 1})["echo"]["a"] == 1
+
+
+def test_deadline(server):
+    srv, _ = server
+    client = RpcClient(srv.address)
+    with pytest.raises(VizierRpcError) as e:
+        client.call("Slow", {"seconds": 5.0}, timeout=0.3)
+    assert e.value.code in (StatusCode.DEADLINE_EXCEEDED, StatusCode.UNAVAILABLE)
+
+
+def test_retry_on_unavailable(server):
+    srv, servicer = server
+    client = RpcClient(srv.address)
+    assert client.call("FlakyOnce", {})["ok"] == 1  # retried transparently
+
+
+def test_reconnect_after_server_restart():
+    servicer = EchoServicer()
+    srv = RpcServer(servicer).start()
+    addr = srv.address
+    client = RpcClient(addr, max_retries=8, backoff_base=0.05)
+    assert client.call("Echo", {"n": 1})["echo"]["n"] == 1
+    srv.stop()
+    host, port = addr.rsplit(":", 1)
+
+    def restart():
+        time.sleep(0.3)
+        srv2 = RpcServer(EchoServicer(), host=host, port=int(port)).start()
+        restart.srv2 = srv2
+
+    t = threading.Thread(target=restart)
+    t.start()
+    # client reconnects once the server is back (client-side fault tolerance)
+    assert client.call("Echo", {"n": 2}, timeout=10)["echo"]["n"] == 2
+    t.join()
+    restart.srv2.stop()
+
+
+def test_concurrent_clients(server):
+    srv, servicer = server
+    errs = []
+
+    def worker(i):
+        try:
+            c = RpcClient(srv.address)
+            for j in range(20):
+                assert c.call("Echo", {"i": i, "j": j})["echo"]["j"] == j
+            c.close()
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert servicer.calls == 160

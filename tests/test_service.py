@@ -1,0 +1,236 @@
+"""Service-level behavior: the paper's §3 and §5 guarantees."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    Measurement,
+    ObjectiveMetricGoal,
+    StudyConfig,
+    StudyState,
+    Trial,
+    TrialState,
+)
+from repro.pythia.policy import Policy, SuggestDecision
+from repro.service import (
+    DefaultVizierServer,
+    DistributedVizierServer,
+    InMemoryDatastore,
+    SQLiteDatastore,
+    VizierClient,
+    VizierService,
+)
+from repro.service.vizier_service import InProcessPythia
+
+
+@pytest.fixture(params=["memory", "sqlite"])
+def datastore(request, tmp_path):
+    if request.param == "memory":
+        return InMemoryDatastore()
+    return SQLiteDatastore(str(tmp_path / "vizier.db"))
+
+
+def make_local(datastore, **kw) -> VizierService:
+    return VizierService(datastore, InProcessPythia(datastore), **kw)
+
+
+def test_suggest_complete_cycle(basic_config, datastore):
+    svc = make_local(datastore)
+    client = VizierClient.load_or_create_study(
+        "s1", basic_config, client_id="c0", target=svc)
+    for _ in range(3):
+        (trial,) = client.get_suggestions(count=1)
+        assert trial.state == TrialState.ACTIVE
+        assert trial.client_id == "c0"
+        client.complete_trial({"acc": 0.5}, trial_id=trial.id)
+    assert len(client.list_trials(states=[TrialState.COMPLETED])) == 3
+    svc.shutdown()
+
+
+def test_client_rebind_same_trial(basic_config, datastore):
+    """Paper §5: restarted worker with the same client_id resumes its trial."""
+    svc = make_local(datastore)
+    c1 = VizierClient.load_or_create_study("s1", basic_config, client_id="w",
+                                           target=svc)
+    (t1,) = c1.get_suggestions(count=1)
+    c2 = VizierClient(svc, c1.study_name, "w")  # "restarted" worker
+    (t2,) = c2.get_suggestions(count=1)
+    assert t1.id == t2.id
+    # a different client gets a different trial
+    c3 = VizierClient(svc, c1.study_name, "other")
+    (t3,) = c3.get_suggestions(count=1)
+    assert t3.id != t1.id
+    svc.shutdown()
+
+
+def test_server_crash_operation_recovery(basic_config, tmp_path):
+    """Paper §3.2: ops persisted in the datastore restart after a crash."""
+
+    class NeverFinishes(Policy):
+        def suggest(self, request):
+            time.sleep(999)
+
+    ds = SQLiteDatastore(str(tmp_path / "crash.db"))
+    svc1 = make_local(ds)
+
+    class BlockedPythia(InProcessPythia):
+        def suggest(self, study, count, client_id):
+            time.sleep(999)
+
+    svc1._pythia = BlockedPythia(ds)
+    client = VizierClient.load_or_create_study("s1", basic_config,
+                                               client_id="c0", target=svc1)
+    # request suggestions; op gets stuck "mid-computation"
+    result = svc1.dispatch({"id": "1", "method": "SuggestTrials",
+                            "params": {"parent": client.study_name,
+                                       "suggestion_count": 1, "client_id": "c0"}})
+    op_name = result["result"]["operation"]["name"]
+    assert not result["result"]["operation"]["done"]
+    svc1.shutdown()  # server crash — op is still pending in the datastore
+
+    # new server process over the same durable datastore
+    svc2 = make_local(ds)
+    recovered = svc2.recover_pending_operations()
+    assert recovered >= 1
+    deadline = time.time() + 30
+    while time.time() < deadline:
+        op = ds.get_operation(op_name)
+        if op["done"]:
+            break
+        time.sleep(0.05)
+    assert op["done"] and not op.get("error"), op
+    assert op["result"]["trials"], "recovered op produced suggestions"
+    svc2.shutdown()
+
+
+def test_stalled_trial_reassignment(basic_config, datastore):
+    """Paper §5: trials from dead clients are reassigned after a timeout."""
+    svc = make_local(datastore, reassign_stalled_after=0.2)
+    c1 = VizierClient.load_or_create_study("s1", basic_config, client_id="dead",
+                                           target=svc)
+    (t1,) = c1.get_suggestions(count=1)
+    time.sleep(0.4)  # dead client stops heartbeating
+    c2 = VizierClient(svc, c1.study_name, "alive")
+    (t2,) = c2.get_suggestions(count=1)
+    assert t2.id == t1.id, "stalled trial should be handed to the live client"
+    assert t2.client_id == "alive"
+    svc.shutdown()
+
+
+def test_heartbeat_prevents_reassignment(basic_config, datastore):
+    svc = make_local(datastore, reassign_stalled_after=0.4)
+    c1 = VizierClient.load_or_create_study("s1", basic_config, client_id="slow",
+                                           target=svc)
+    (t1,) = c1.get_suggestions(count=1)
+    for _ in range(3):  # intermediate measurements act as heartbeats
+        time.sleep(0.2)
+        c1.report_intermediate_objective_value({"acc": 0.1}, trial_id=t1.id, step=1)
+    c2 = VizierClient(svc, c1.study_name, "thief")
+    (t2,) = c2.get_suggestions(count=1)
+    assert t2.id != t1.id
+    svc.shutdown()
+
+
+def test_infeasible_trial(basic_config, datastore):
+    svc = make_local(datastore)
+    client = VizierClient.load_or_create_study("s1", basic_config,
+                                               client_id="c", target=svc)
+    (t,) = client.get_suggestions(count=1)
+    done = client.complete_trial(trial_id=t.id, infeasibility_reason="OOM")
+    assert done.state == TrialState.INFEASIBLE
+    assert done.infeasibility_reason == "OOM"
+    # infeasible trials are excluded from optimal trials
+    assert client.list_optimal_trials() == []
+    svc.shutdown()
+
+
+def test_multiobjective_optimal_trials(datastore):
+    cfg = StudyConfig()
+    cfg.search_space.select_root().add_float_param("x", 0, 1)
+    cfg.metrics.add("cost", ObjectiveMetricGoal.MINIMIZE)
+    cfg.metrics.add("quality", ObjectiveMetricGoal.MAXIMIZE)
+    cfg.algorithm = "RANDOM_SEARCH"
+    svc = make_local(datastore)
+    client = VizierClient.load_or_create_study("mo", cfg, client_id="c",
+                                               target=svc)
+    points = [(1.0, 1.0), (2.0, 2.0), (1.5, 0.5), (3.0, 2.5), (2.5, 1.0)]
+    for cost, quality in points:
+        (t,) = client.get_suggestions(count=1)
+        client.complete_trial({"cost": cost, "quality": quality}, trial_id=t.id)
+    optimal = client.list_optimal_trials()
+    got = sorted((t.final_objective("cost"), t.final_objective("quality"))
+                 for t in optimal)
+    assert got == [(1.0, 1.0), (2.0, 2.0), (3.0, 2.5)]
+    svc.shutdown()
+
+
+def test_study_state_stops_suggestions(basic_config, datastore):
+    svc = make_local(datastore)
+    client = VizierClient.load_or_create_study("s1", basic_config,
+                                               client_id="c", target=svc)
+    (t,) = client.get_suggestions(count=1)
+    client.complete_trial({"acc": 1.0}, trial_id=t.id)
+    client.set_study_state(StudyState.COMPLETED)
+    assert client.get_suggestions(count=1) == []  # loop terminates
+    svc.shutdown()
+
+
+def test_add_trial_for_transfer(basic_config, datastore):
+    svc = make_local(datastore)
+    client = VizierClient.load_or_create_study("s1", basic_config,
+                                               client_id="c", target=svc)
+    prior = Trial(parameters={"lr": 0.01, "layers": 2, "act": "relu"})
+    prior.complete(Measurement(metrics={"acc": 0.9}))
+    added = client.add_trial(prior)
+    assert added.id == 1
+    assert client.get_trial(added.id).final_objective("acc") == 0.9
+    svc.shutdown()
+
+
+def test_tcp_and_distributed_topologies(basic_config):
+    server = DefaultVizierServer()
+    client = VizierClient.load_or_create_study("t", basic_config,
+                                               client_id="c",
+                                               target=server.address)
+    (t,) = client.get_suggestions(count=1)
+    client.complete_trial({"acc": 0.3}, trial_id=t.id)
+    server.stop()
+
+    dist = DistributedVizierServer()
+    client = VizierClient.load_or_create_study("t2", basic_config,
+                                               client_id="c",
+                                               target=dist.address)
+    (t,) = client.get_suggestions(count=1)
+    client.complete_trial({"acc": 0.4}, trial_id=t.id)
+    assert len(client.list_trials()) == 1
+    dist.stop()
+
+
+def test_parallel_clients_unique_trials(basic_config, datastore):
+    svc = make_local(datastore)
+    client = VizierClient.load_or_create_study("par", basic_config,
+                                               client_id="seed", target=svc)
+    ids, errs = [], []
+    lock = threading.Lock()
+
+    def worker(wid):
+        try:
+            c = VizierClient(svc, client.study_name, f"w{wid}")
+            for _ in range(3):
+                (t,) = c.get_suggestions(count=1)
+                with lock:
+                    ids.append(t.id)
+                c.complete_trial({"acc": 0.1 * wid}, trial_id=t.id)
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs, errs
+    assert len(ids) == 12 and len(set(ids)) == 12, "every trial unique"
+    svc.shutdown()

@@ -1,0 +1,80 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The full loop: distributed topology (separate Pythia service over RPC),
+GP-bandit algorithm, three parallel workers evaluating real (tiny) JAX
+training jobs, one worker crash + rebind, early stopping enabled — i.e.
+Figure 2 of the paper exercised in one test.
+"""
+
+import dataclasses
+import threading
+
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import (
+    AutomatedStoppingConfig,
+    ScaleType,
+    StudyConfig,
+    TrialState,
+)
+from repro.service import DistributedVizierServer, VizierClient
+from repro.train.data import DataConfig
+from repro.tuning import TuningTask, TuningWorker
+
+
+def test_full_system_distributed_tuning():
+    server = DistributedVizierServer()
+    try:
+        config = StudyConfig()
+        root = config.search_space.select_root()
+        root.add_float_param("peak_lr", 1e-4, 1e-2, scale_type=ScaleType.LOG)
+        root.add_float_param("weight_decay", 0.0, 0.2)
+        config.metrics.add("loss", "MINIMIZE")
+        config.algorithm = "GP_UCB"
+        config.automated_stopping = (
+            AutomatedStoppingConfig.median_automated_stopping_config(
+                min_completed_trials=2))
+
+        admin = VizierClient.load_or_create_study(
+            "system-e2e", config, client_id="admin", target=server.address)
+
+        arch = dataclasses.replace(
+            get_arch("phi4_mini_3p8b", reduced=True),
+            n_layers=2, d_model=32, n_heads=2, n_kv_heads=1, d_ff=64,
+            vocab_size=64, attn_q_chunk=32, attn_kv_chunk=32, remat="none")
+        task = TuningTask(
+            arch=arch,
+            data=DataConfig(vocab_size=arch.vocab_size, seq_len=16,
+                            global_batch=2),
+            total_steps=6, report_every=3)
+
+        # worker crash + rebind before the fleet starts
+        w = TuningWorker(server.address, admin.study_name, "w0", task)
+        (t_before,) = w.client.get_suggestions(count=1)
+        del w  # crash
+        w0 = TuningWorker(server.address, admin.study_name, "w0", task)
+        (t_after,) = w0.client.get_suggestions(count=1)
+        assert t_after.id == t_before.id
+
+        workers = [w0] + [
+            TuningWorker(server.address, admin.study_name, f"w{i}", task)
+            for i in (1, 2)
+        ]
+        threads = [threading.Thread(target=wk.run, kwargs={"max_trials": 2})
+                   for wk in workers]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=600)
+
+        completed = admin.list_trials(states=[TrialState.COMPLETED])
+        assert len(completed) >= 5
+        assert all(np.isfinite(t.final_objective("loss")) for t in completed)
+        assert {t.client_id for t in completed} >= {"w0", "w1", "w2"}
+        assert all(len(t.measurements) >= 1 for t in completed)
+        best = admin.list_optimal_trials()
+        assert len(best) == 1
+    finally:
+        server.stop()

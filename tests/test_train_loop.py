@@ -1,0 +1,130 @@
+"""Train loop fault tolerance + serve engine + tuning integration."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import build_model
+from repro.serve import DecodeEngine, Request
+from repro.train.data import DataConfig
+from repro.train.step import TrainConfig, build_train_step, init_train_state
+from repro.train.train_loop import LoopConfig, train
+
+
+def tiny_arch():
+    return dataclasses.replace(
+        get_arch("phi4_mini_3p8b", reduced=True),
+        n_layers=2, d_model=32, n_heads=2, n_kv_heads=1, d_ff=64, vocab_size=64,
+        attn_q_chunk=32, attn_kv_chunk=32, remat="none")
+
+
+def test_train_descends_and_resumes(tmp_path):
+    cfg = tiny_arch()
+    model = build_model(cfg)
+    tc = TrainConfig(peak_lr=3e-3, warmup_steps=2, total_steps=40)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4)
+    ckpt = str(tmp_path / "ckpt")
+
+    r1 = train(model, tc, dc, LoopConfig(total_steps=20, checkpoint_every=10,
+                                         checkpoint_dir=ckpt, log_every=100))
+    assert r1.final_step == 20 and r1.resumed_from is None
+    assert r1.losses[-1] < r1.losses[0]
+
+    # crash + restart: resumes from the checkpoint, not step 0
+    r2 = train(model, tc, dc, LoopConfig(total_steps=30, checkpoint_every=10,
+                                         checkpoint_dir=ckpt, log_every=100))
+    assert r2.resumed_from == 20
+    assert r2.final_step == 30
+    assert len(r2.losses) == 10  # only the new steps
+
+
+def test_train_early_stop_hook(tmp_path):
+    cfg = tiny_arch()
+    model = build_model(cfg)
+    tc = TrainConfig(peak_lr=1e-3, warmup_steps=1, total_steps=50)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=2)
+    calls = []
+
+    def report(step, metrics):
+        calls.append(step)
+        return step >= 7  # tuner says stop
+
+    r = train(model, tc, dc, LoopConfig(total_steps=50, log_every=100),
+              report_fn=report)
+    assert r.final_step == 7
+    assert calls == list(range(1, 8))
+
+
+def test_microbatching_matches_full_batch():
+    cfg = tiny_arch()
+    model = build_model(cfg)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=8)
+    from repro.train.data import make_dataset
+
+    batch = {k: jnp.asarray(v) for k, v in make_dataset(dc).batch_at(0).items()}
+    losses = {}
+    for n_mb in (1, 4):
+        tc = TrainConfig(peak_lr=1e-3, warmup_steps=1, num_microbatches=n_mb)
+        state = init_train_state(model, tc, jax.random.PRNGKey(0))
+        step = jax.jit(build_train_step(model, tc))
+        _, metrics = step(state, batch)
+        losses[n_mb] = float(metrics["loss"])
+    assert abs(losses[1] - losses[4]) < 0.02, losses
+
+
+def test_grad_compression_trains():
+    cfg = tiny_arch()
+    model = build_model(cfg)
+    tc = TrainConfig(peak_lr=3e-3, warmup_steps=2, grad_compression=True)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4)
+    r = train(model, tc, dc, LoopConfig(total_steps=15, log_every=100))
+    assert r.losses[-1] < r.losses[0]
+
+
+def test_serve_engine_continuous_batching():
+    cfg = tiny_arch()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = DecodeEngine(model, params, batch_size=2, max_seq=32)
+    for uid in range(5):
+        engine.submit(Request(uid=uid, prompt=[1, 2, 3], max_new_tokens=4))
+    done = engine.run_until_done()
+    assert len(done) == 5
+    for req in done:
+        assert len(req.output) == 4
+        assert all(0 <= t < cfg.vocab_size for t in req.output)
+
+
+def test_tuning_worker_end_to_end(tmp_path):
+    from repro.core import ScaleType, StudyConfig, TrialState
+    from repro.service import VizierClient
+    from repro.service.datastore import InMemoryDatastore
+    from repro.service.vizier_service import VizierService
+    from repro.tuning import TuningTask, TuningWorker
+
+    study_cfg = StudyConfig()
+    study_cfg.search_space.select_root().add_float_param(
+        "peak_lr", 1e-4, 1e-2, scale_type=ScaleType.LOG)
+    study_cfg.metrics.add("loss", "MINIMIZE")
+    study_cfg.algorithm = "RANDOM_SEARCH"
+
+    svc = VizierService(InMemoryDatastore())
+    client = VizierClient.load_or_create_study("tw", study_cfg, client_id="a",
+                                               target=svc)
+    arch = tiny_arch()
+    task = TuningTask(
+        arch=arch,
+        data=DataConfig(vocab_size=arch.vocab_size, seq_len=16, global_batch=2),
+        total_steps=8, report_every=4)
+    worker = TuningWorker(svc, client.study_name, "worker_0", task)
+    n = worker.run(max_trials=2)
+    assert n == 2
+    completed = client.list_trials(states=[TrialState.COMPLETED])
+    assert len(completed) == 2
+    for t in completed:
+        assert t.final_objective("loss") is not None
+        assert len(t.measurements) >= 1  # learning curve was streamed
+    svc.shutdown()
