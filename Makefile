@@ -1,0 +1,21 @@
+# Test/CI entry points. PYTHONPATH=src matches the ROADMAP tier-1 command.
+PY ?= python
+export PYTHONPATH := src
+
+.PHONY: test test-fast smoke bench-batched
+
+# tier-1: the full suite (what the driver runs)
+test:
+	$(PY) -m pytest -x -q
+
+# marker split: everything except the heavyweight model/system tests
+test-fast:
+	$(PY) -m pytest -q -m "not slow"
+
+# collection-only smoke: catches import regressions (e.g. a jax API moving
+# out from under launch/mesh.py) in ~1s without running anything
+smoke:
+	$(PY) -m pytest --collect-only -q
+
+bench-batched:
+	PYTHONPATH=.:src $(PY) benchmarks/service_throughput.py --batched

@@ -2,15 +2,22 @@
 
 suggestions/sec and RPC latency vs #concurrent clients, plus the time for a
 freshly-restarted server (same durable datastore) to recover pending ops.
+
+``--batched`` additionally runs the batched-suggestion scenario: the same
+per-(study, client) workload issued through BatchSuggestTrials /
+BatchCompleteTrials (one RPC + one coalesced Pythia dispatch per round)
+instead of one thread + one SuggestTrials poll-loop per client, at 1, 8 and
+64 concurrent clients.
 """
 
+import argparse
 import threading
 import time
 
 from benchmarks.bench_util import emit
 
 from repro.core import ScaleType, StudyConfig
-from repro.service import DefaultVizierServer, VizierClient
+from repro.service import DefaultVizierServer, VizierBatchClient, VizierClient
 from repro.service.datastore import SQLiteDatastore
 from repro.service.vizier_service import VizierService
 
@@ -60,6 +67,47 @@ def bench_throughput(n_clients: int, n_trials: int = 12) -> None:
     server.stop()
 
 
+def bench_batched_throughput(n_clients: int, n_rounds: int = 12) -> None:
+    """suggestions/sec with server-side coalescing: each round is ONE
+    BatchSuggestTrials RPC covering every (study, client) pair, then ONE
+    BatchCompleteTrials for the evaluations."""
+    server = DefaultVizierServer()
+    studies = []
+    for i in range(n_clients):
+        c = VizierClient.load_or_create_study(
+            f"btput-{n_clients}-{i}", _config(), client_id="seed",
+            target=server.address)
+        studies.append(c.study_name)
+        c.close()
+
+    batch = VizierBatchClient(server.address)
+    requests = [
+        {"study_name": s, "client_id": f"w{i}", "count": 1}
+        for i, s in enumerate(studies)
+    ]
+    latencies = []
+    t0 = time.perf_counter()
+    for _ in range(n_rounds):
+        r0 = time.perf_counter()
+        per_req = batch.get_suggestions(requests)
+        batch.complete_trials([
+            {"study_name": s, "trial_name": f"{s}/trials/{trials[0].id}",
+             "metrics": {"obj": 0.1}}
+            for s, trials in zip(studies, per_req)
+        ])
+        latencies.append(time.perf_counter() - r0)
+    wall = time.perf_counter() - t0
+    total = n_clients * n_rounds
+    latencies.sort()
+    p50 = latencies[len(latencies) // 2] * 1e3
+    p95 = latencies[int(len(latencies) * 0.95)] * 1e3
+    emit(f"fig2.batched_throughput.clients={n_clients}", wall / total * 1e6,
+         f"suggestions_per_sec={total/wall:.1f} round_p50={p50:.1f}ms "
+         f"round_p95={p95:.1f}ms")
+    batch.close()
+    server.stop()
+
+
 def bench_crash_recovery(tmpdir="/tmp/bench_crash.db") -> None:
     import os
 
@@ -92,6 +140,14 @@ def bench_crash_recovery(tmpdir="/tmp/bench_crash.db") -> None:
 
 
 def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--batched", action="store_true",
+                        help="run the BatchSuggestTrials coalescing scenario")
+    args = parser.parse_args()
+    if args.batched:
+        for n in (1, 8, 64):
+            bench_batched_throughput(n)
+        return
     for n in (1, 4, 16):
         bench_throughput(n)
     bench_crash_recovery()

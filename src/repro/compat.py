@@ -1,0 +1,61 @@
+"""JAX version-compatibility shims.
+
+Compat policy: the repo targets the newest JAX APIs but must import and run
+on the JAX baked into the container. Anything newer than the installed
+version gets a guarded import here, with a graceful fallback that preserves
+call-site semantics. Call sites never import version-gated symbols from
+``jax.*`` directly — they go through this module, so a JAX upgrade means
+deleting shims, not hunting imports.
+
+Currently shimmed:
+
+* ``jax.sharding.AxisType`` (added after 0.4.x) — falls back to a sentinel
+  enum with the same member names; ``HAS_AXIS_TYPE`` tells callers whether
+  the real thing is available.
+* ``axis_types=`` kwarg of ``jax.make_mesh`` — ``make_mesh`` below forwards
+  it only when the installed signature accepts it.
+"""
+
+from __future__ import annotations
+
+import enum
+import inspect
+from typing import Optional, Sequence
+
+import jax
+
+try:  # jax >= 0.5: explicit/auto/manual mesh axis types
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+
+    HAS_AXIS_TYPE = True
+except ImportError:  # older jax: every axis behaves like Auto
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    HAS_AXIS_TYPE = False
+
+
+_MAKE_MESH_TAKES_AXIS_TYPES = "axis_types" in inspect.signature(jax.make_mesh).parameters
+
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    axis_types: Optional[Sequence] = None,
+    devices=None,
+):
+    """``jax.make_mesh`` that tolerates JAX versions without ``axis_types``.
+
+    On older JAX every mesh axis is implicitly Auto, which is exactly what
+    the fallback provides — callers requesting Auto axes lose nothing.
+    """
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if axis_types is not None and HAS_AXIS_TYPE and _MAKE_MESH_TAKES_AXIS_TYPES:
+        kwargs["axis_types"] = tuple(axis_types)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)

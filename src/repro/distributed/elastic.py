@@ -22,7 +22,6 @@ import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
-from jax.sharding import AxisType
 
 from repro.distributed.sharding import ShardingCtx, make_rules, tree_shardings
 

@@ -26,15 +26,37 @@ def _default_impl() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
+# Candidate pools at or above this row count go through the blocked path:
+# K(x1, x2) is built in (n, GRAM_BLOCK_ROWS) column strips, bounding the
+# per-call workspace (Pallas grid / XLA temp) instead of materializing one
+# n x m product for arbitrarily large acquisition batches.
+GRAM_BLOCK_ROWS = 4096
+
+
 def matern52_gram(
     x1: jnp.ndarray,
     x2: jnp.ndarray,
     amplitude=1.0,
     *,
     impl: Impl = "auto",
+    block_rows: Optional[int] = None,
 ) -> jnp.ndarray:
-    """Matérn-5/2 Gram matrix of lengthscale-scaled features."""
+    """Matérn-5/2 Gram matrix of lengthscale-scaled features.
+
+    ``block_rows``: strip width over x2's rows. None = auto (blocked once
+    x2 has >= GRAM_BLOCK_ROWS rows); 0 = never block.
+    """
     impl = _default_impl() if impl == "auto" else impl
+    m = x2.shape[0]
+    if block_rows is None:
+        block_rows = GRAM_BLOCK_ROWS if m >= GRAM_BLOCK_ROWS else 0
+    if block_rows and m > block_rows:
+        strips = [
+            matern52_gram(x1, x2[i:i + block_rows], amplitude,
+                          impl=impl, block_rows=0)
+            for i in range(0, m, block_rows)
+        ]
+        return jnp.concatenate(strips, axis=1)
     if impl == "xla":
         return ref.matern52_gram(x1, x2, amplitude)
     from repro.kernels.gram import matern52_gram_pallas

@@ -1,20 +1,22 @@
 """Production mesh definition (multi-pod dry-run contract).
 
 A FUNCTION, not a module-level constant: importing this module never touches
-jax device state.
+jax device state. Axis types go through repro.compat so the module imports
+on JAX versions without jax.sharding.AxisType.
 """
 
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips/pod; multi_pod adds a leading pure-DP 'pod' axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
@@ -22,8 +24,8 @@ def make_local_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     if data * model > n:
         data, model = n, 1
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((data, model), ("data", "model"),
+                     axis_types=(AxisType.Auto, AxisType.Auto))
 
 
 # TPU v5e hardware constants (roofline targets)

@@ -116,6 +116,22 @@ class PolicySupporter(abc.ABC):
     def SendMetadata(self, delta: MetadataDelta) -> None:
         """Persists algorithm state into the database (paper §6.3)."""
 
+    def GetTrialsMulti(
+        self,
+        study_guids: List[str],
+        *,
+        status_matches: Optional[str] = None,
+    ) -> "dict[str, List[Trial]]":
+        """Trials for several studies at once (batched suggestion path).
+
+        Default loops over GetTrials; datastore-backed supporters override
+        with a single multi-study query.
+        """
+        return {
+            guid: self.GetTrials(guid, status_matches=status_matches)
+            for guid in study_guids
+        }
+
     # convenience used by most policies
     def CompletedTrials(self, study_guid: str, min_trial_id: Optional[int] = None):
         return self.GetTrials(

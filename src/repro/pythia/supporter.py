@@ -5,13 +5,17 @@
 * RemotePolicySupporter — used when Pythia runs as a *separate service*
   (paper Fig. 2): reads via RPCs back to the API server, so the algorithm
   binary needs no database access.
+* PrefetchedPolicySupporter — wraps another supporter with a trial snapshot
+  prefetched for a whole coalesced BatchSuggestTrials dispatch, so N
+  policies run against one multi-study datastore read instead of issuing
+  N x (completed + active) queries.
 
-Both support cross-study reads (transfer learning / meta-learning).
+All support cross-study reads (transfer learning / meta-learning).
 """
 
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 from repro.core.metadata import MetadataDelta
 from repro.core.study import Trial, TrialState
@@ -59,6 +63,58 @@ class DatastorePolicySupporter(PolicySupporter):
         self._ds.update_study_metadata(self._study_guid, delta.on_study)
         for trial_id, md in delta.on_trials.items():
             self._ds.update_trial_metadata(self._study_guid, trial_id, md)
+
+    def GetTrialsMulti(
+        self, study_guids: List[str], *, status_matches: Optional[str] = None
+    ) -> Dict[str, List[Trial]]:
+        return self._ds.list_trials_multi(
+            study_guids, states=_states_arg(status_matches)
+        )
+
+
+class PrefetchedPolicySupporter(PolicySupporter):
+    """Serves GetTrials from a prefetched multi-study snapshot.
+
+    ``snapshot`` maps study_guid -> state-name -> trials, as produced by one
+    ``Datastore.list_trials_multi`` call per state of interest. Filters the
+    snapshot can answer (status + id-range over a prefetched study/state) are
+    served from memory; anything else falls through to ``base``. Writes
+    (SendMetadata) always go to ``base``.
+    """
+
+    def __init__(self, base: PolicySupporter,
+                 snapshot: Dict[str, Dict[str, List[Trial]]]):
+        self._base = base
+        self._snapshot = snapshot
+
+    def GetStudyConfig(self, study_guid: str) -> StudyConfig:
+        return self._base.GetStudyConfig(study_guid)
+
+    def GetTrials(
+        self,
+        study_guid: str,
+        *,
+        status_matches: Optional[str] = None,
+        min_trial_id: Optional[int] = None,
+        max_trial_id: Optional[int] = None,
+    ) -> List[Trial]:
+        by_state = self._snapshot.get(study_guid)
+        if by_state is None or status_matches not in by_state:
+            return self._base.GetTrials(
+                study_guid,
+                status_matches=status_matches,
+                min_trial_id=min_trial_id,
+                max_trial_id=max_trial_id,
+            )
+        trials = by_state[status_matches]
+        if min_trial_id is not None:
+            trials = [t for t in trials if t.id >= min_trial_id]
+        if max_trial_id is not None:
+            trials = [t for t in trials if t.id <= max_trial_id]
+        return list(trials)
+
+    def SendMetadata(self, delta: MetadataDelta) -> None:
+        self._base.SendMetadata(delta)
 
 
 class RemotePolicySupporter(PolicySupporter):

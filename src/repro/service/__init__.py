@@ -1,6 +1,6 @@
 """Distributed fault-tolerant service layer (paper §3)."""
 
-from repro.service.client import VizierClient
+from repro.service.client import BatchSuggestionError, VizierBatchClient, VizierClient
 from repro.service.datastore import (
     Datastore,
     InMemoryDatastore,
@@ -24,7 +24,8 @@ from repro.service.vizier_service import (
 )
 
 __all__ = [
-    "VizierClient", "Datastore", "InMemoryDatastore", "KeyAlreadyExistsError",
+    "BatchSuggestionError", "VizierBatchClient", "VizierClient", "Datastore",
+    "InMemoryDatastore", "KeyAlreadyExistsError",
     "NotFoundError", "SQLiteDatastore", "RpcClient", "RpcServer", "Servicer",
     "StatusCode", "VizierRpcError", "DefaultVizierServer",
     "DistributedVizierServer", "InProcessPythia", "PythiaConnector",

@@ -10,6 +10,11 @@
 The client hides the SuggestTrials -> GetOperation polling loop, retries
 transport failures, and (by re-using its client_id) resumes its own ACTIVE
 trials after a crash.
+
+Batched suggestions: ``VizierBatchClient`` fans many (study, client) pairs'
+suggestion requests into one BatchSuggestTrials RPC (one server-side Pythia
+dispatch) and polls all resulting operations with pipelined GetOperation
+frames — the high-throughput path for schedulers driving many studies.
 """
 
 from __future__ import annotations
@@ -196,6 +201,151 @@ class VizierClient:
 
     def delete_study(self) -> None:
         self._rpc.call("DeleteStudy", {"name": self._study_name})
+
+    def close(self) -> None:
+        self._rpc.close()
+
+
+class BatchSuggestionError(Exception):
+    """A sub-request of a batched call failed.
+
+    .errors  — per-item error dicts (None where the item succeeded)
+    .results — per-item successful payloads (None where the item failed);
+               for get_suggestions these are the Trial lists of the
+               sub-requests that DID succeed, so callers don't orphan
+               work the server already scheduled.
+    """
+
+    def __init__(self, message: str, errors, results=None):
+        super().__init__(message)
+        self.errors = errors
+        self.results = results
+
+
+class VizierBatchClient:
+    """Fan-in client: one RPC round trip for N studies' suggestions.
+
+        batch = VizierBatchClient(target)
+        results = batch.get_suggestions([
+            {"study_name": s1, "client_id": "w0", "count": 2},
+            {"study_name": s2, "client_id": "w1"},
+        ])
+        # results[i] is the list of Trials for request i
+
+    Unlike VizierClient, this is not bound to one study — it is meant for
+    schedulers/launchers that coordinate many studies (or many workers'
+    client_ids) and want the server to coalesce the Pythia work.
+    """
+
+    def __init__(
+        self,
+        target,
+        *,
+        poll_interval: float = 0.02,
+        poll_backoff: float = 1.3,
+        max_poll_interval: float = 2.0,
+    ):
+        self._rpc = RpcClient(target)
+        self._poll = (poll_interval, poll_backoff, max_poll_interval)
+
+    def get_suggestions(
+        self, requests: List[Dict], *, timeout: float = 600.0
+    ) -> List[List[Trial]]:
+        """requests: [{"study_name", "client_id", "count"?}] -> trials per item."""
+        wire = [
+            {
+                "parent": r["study_name"],
+                "suggestion_count": int(r.get("count", 1)),
+                "client_id": r.get("client_id") or "default_client",
+            }
+            for r in requests
+        ]
+        if not wire:
+            return []
+        result = self._rpc.call("BatchSuggestTrials", {"requests": wire})
+        errors = result.get("errors") or [None] * len(wire)
+        ops = {
+            i: op for i, op in enumerate(result["operations"]) if op is not None
+        }
+        # poll even when some sub-requests errored: the valid ones were
+        # already dispatched server-side and must not be orphaned
+        done = self._poll_operations(ops, timeout)
+        trials_by_index = {
+            i: [
+                Trial.from_proto(p)
+                for p in (op.get("result") or {}).get("trials", [])
+            ]
+            for i, op in done.items()
+            if not op.get("error")
+        }
+        op_failures = {i: op["error"] for i, op in done.items() if op.get("error")}
+        if any(errors):
+            raise BatchSuggestionError(
+                "batched suggestion had failures",
+                errors,
+                results=[trials_by_index.get(i) for i in range(len(wire))],
+            )
+        if op_failures:
+            raise OperationFailedError(f"batched suggestion failures: {op_failures}")
+        return [trials_by_index[i] for i in range(len(wire))]
+
+    def _poll_operations(self, ops: Dict[int, dict], timeout: float) -> Dict[int, dict]:
+        """Polls all pending operations to completion with pipelined frames."""
+        done: Dict[int, dict] = {}
+        interval, backoff, max_interval = self._poll
+        deadline = time.monotonic() + timeout
+        while True:
+            for i, op in list(ops.items()):
+                if op.get("done"):
+                    done[i] = ops.pop(i)
+            if not ops:
+                return done
+            if time.monotonic() > deadline:
+                raise OperationFailedError(
+                    f"{len(ops)} batched suggestion operations timed out"
+                )
+            time.sleep(interval)
+            interval = min(interval * backoff, max_interval)
+            idx = sorted(ops)
+            # pipelined poll: N GetOperation frames, one network round trip
+            polled = self._rpc.call_many(
+                "GetOperation", [{"name": ops[i]["name"]} for i in idx]
+            )
+            for i, r in zip(idx, polled):
+                ops[i] = r["operation"]
+
+    def complete_trials(
+        self, completions: List[Dict]
+    ) -> List[Optional[Trial]]:
+        """completions: [{"trial_name", "metrics"?, "infeasibility_reason"?}].
+
+        Returns the completed Trial per item (None where that item failed;
+        failures raise BatchSuggestionError with per-item errors attached
+        only if *all* items failed — partial failure is surfaced in-band so
+        a scheduler can retry just the failed completions).
+        """
+        wire = []
+        for c in completions:
+            p: dict = {"name": c["trial_name"]}
+            if c.get("infeasibility_reason") is not None:
+                p["trial_infeasible"] = True
+                p["infeasible_reason"] = c["infeasibility_reason"]
+            elif c.get("metrics") is not None:
+                m = c["metrics"]
+                m = m if isinstance(m, Measurement) else Measurement(metrics=m)
+                p["final_measurement"] = m.to_proto()
+            wire.append(p)
+        if not wire:
+            return []
+        result = self._rpc.call("BatchCompleteTrials", {"requests": wire})
+        trials = [
+            Trial.from_proto(p) if p is not None else None
+            for p in result["trials"]
+        ]
+        errors = result.get("errors") or []
+        if trials and all(t is None for t in trials):
+            raise BatchSuggestionError("all batched completions failed", errors)
+        return trials
 
     def close(self) -> None:
         self._rpc.close()

@@ -10,6 +10,13 @@ Two implementations behind one interface:
 
 Server-side fault tolerance rests on this layer: `Operation`s are persisted
 with enough information to restart suggestion computations after a crash.
+
+Batched reads: ``list_trials_multi`` fetches the trials of N studies in one
+call (one SQL query / one lock acquisition) so the batched suggestion path
+(BatchSuggestTrials) can assemble feature matrices for a whole coalesced
+request without N round-trips into the store. Secondary indexes cover the
+(study_name, state) and (study_name, client_id) filters plus the pending-
+operation scan used by crash recovery.
 """
 
 from __future__ import annotations
@@ -78,6 +85,21 @@ class Datastore:
 
     def max_trial_id(self, study_name: str) -> int:
         raise NotImplementedError
+
+    def list_trials_multi(
+        self,
+        study_names: List[str],
+        *,
+        states: Optional[List[TrialState]] = None,
+    ) -> Dict[str, List[Trial]]:
+        """Trials of several studies in one call (batched suggestion path).
+
+        Returns {study_name: [trials sorted by id]}; every requested study is
+        a key (possibly mapping to []). Raises NotFoundError naming the first
+        missing study. Default implementation loops; backends override with a
+        single query / single lock acquisition.
+        """
+        return {name: self.list_trials(name, states=states) for name in study_names}
 
     # operations (long-running computations; paper §3.2)
     def put_operation(self, op: dict) -> None:
@@ -210,6 +232,23 @@ class InMemoryDatastore(Datastore):
                 raise NotFoundError(study_name)
             return max(bucket) if bucket else 0
 
+    def list_trials_multi(self, study_names, *, states=None):
+        # one lock acquisition for the whole batch: a consistent snapshot
+        # across studies, which the coalesced Pythia dispatch relies on
+        with self._lock:
+            out: Dict[str, List[Trial]] = {}
+            state_values = {s.value for s in states} if states else None
+            for name in study_names:
+                bucket = self._trials.get(name)
+                if bucket is None:
+                    raise NotFoundError(name)
+                out[name] = [
+                    Trial.from_proto(bucket[tid])
+                    for tid in sorted(bucket)
+                    if state_values is None or bucket[tid].get("state") in state_values
+                ]
+            return out
+
     # ops -------------------------------------------------------------------------
     def put_operation(self, op: dict) -> None:
         with self._lock:
@@ -268,6 +307,14 @@ class SQLiteDatastore(Datastore):
             self._conn.execute(
                 "CREATE INDEX IF NOT EXISTS trials_by_state"
                 " ON trials (study_name, state)"
+            )
+            self._conn.execute(
+                "CREATE INDEX IF NOT EXISTS trials_by_client"
+                " ON trials (study_name, client_id)"
+            )
+            self._conn.execute(
+                "CREATE INDEX IF NOT EXISTS ops_pending"
+                " ON operations (study_name, done)"
             )
 
     # studies --------------------------------------------------------------------
@@ -408,6 +455,34 @@ class SQLiteDatastore(Datastore):
                 (study_name,),
             ).fetchone()
         return int(row[0])
+
+    def list_trials_multi(self, study_names, *, states=None):
+        study_names = list(study_names)
+        if not study_names:
+            return {}
+        marks = ",".join("?" * len(study_names))
+        query = f"SELECT study_name, proto FROM trials WHERE study_name IN ({marks})"
+        args: list = list(study_names)
+        if states:
+            smarks = ",".join("?" * len(states))
+            query += f" AND state IN ({smarks})"
+            args += [s.value for s in states]
+        query += " ORDER BY study_name, trial_id"
+        with self._lock:
+            known = {
+                r[0]
+                for r in self._conn.execute(
+                    f"SELECT name FROM studies WHERE name IN ({marks})", study_names
+                ).fetchall()
+            }
+            for name in study_names:
+                if name not in known:
+                    raise NotFoundError(name)
+            rows = self._conn.execute(query, args).fetchall()
+        out: Dict[str, List[Trial]] = {name: [] for name in study_names}
+        for study_name, blob in rows:
+            out[study_name].append(Trial.from_proto(msgpack.unpackb(blob, raw=False)))
+        return out
 
     # ops ---------------------------------------------------------------------------
     def put_operation(self, op: dict) -> None:

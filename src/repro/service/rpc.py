@@ -13,6 +13,12 @@ we reproduce the *protocol semantics* over a small, robust transport:
   UNAVAILABLE/connection errors, per-call deadlines. Retry semantics mirror
   gRPC: only idempotent failures (transport-level) are retried; application
   errors surface as VizierRpcError.
+* Batching: ``RpcClient.call_many`` pipelines N requests over one connection
+  (send all frames, then read all responses in order — the server processes
+  frames sequentially per connection), collapsing N network round-trips into
+  one. The batched service methods (BatchSuggestTrials / BatchCompleteTrials)
+  ride on top of single frames carrying request lists; call_many is the
+  transport-level complement used e.g. to poll many operations at once.
 
 A LocalTransport dispatches in-process — the paper notes the server may run
 in the same process as the client when evaluation is cheap (§3.2).
@@ -91,6 +97,10 @@ class Transport:
     def call_raw(self, request: dict, timeout: float) -> dict:
         raise NotImplementedError
 
+    def call_raw_many(self, requests: "list[dict]", timeout: float) -> "list[dict]":
+        """Issue N requests, responses in request order. Default: sequential."""
+        return [self.call_raw(r, timeout) for r in requests]
+
     def close(self) -> None:
         pass
 
@@ -127,6 +137,23 @@ class TcpTransport(Transport):
                 self._sock.settimeout(timeout)
                 self._sock.sendall(_pack(request))
                 return _read_frame(self._sock)
+            except (OSError, ConnectionError, struct.error) as e:
+                self._drop()
+                raise VizierRpcError(StatusCode.UNAVAILABLE, f"transport: {e}") from e
+
+    def call_raw_many(self, requests: "list[dict]", timeout: float) -> "list[dict]":
+        """Pipelined: all frames go out, then all responses are read in order.
+
+        Correct because the server handler loop reads/serves/replies one frame
+        at a time per connection, so response order == request order.
+        """
+        with self._lock:
+            try:
+                if self._sock is None:
+                    self._sock = self._connect(timeout)
+                self._sock.settimeout(timeout)
+                self._sock.sendall(b"".join(_pack(r) for r in requests))
+                return [_read_frame(self._sock) for _ in requests]
             except (OSError, ConnectionError, struct.error) as e:
                 self._drop()
                 raise VizierRpcError(StatusCode.UNAVAILABLE, f"transport: {e}") from e
@@ -201,6 +228,64 @@ class RpcClient:
                 time.sleep(delay * (0.5 + random.random()))
                 continue
             raise VizierRpcError(code, err.get("message", "unknown error"))
+
+    def call_many(
+        self,
+        method: str,
+        params_list: "list[dict]",
+        *,
+        timeout: Optional[float] = None,
+    ) -> "list[Any]":
+        """N calls of one method, pipelined over a single connection.
+
+        Results come back in params order. Transport failures retry the whole
+        batch (callers should only batch idempotent methods, e.g. polling
+        GetOperation); the first application error is raised after all
+        responses are read, so the connection stays frame-aligned.
+        """
+        if not params_list:
+            return []
+        timeout = timeout if timeout is not None else self.default_timeout
+        deadline = time.monotonic() + timeout
+        requests = [
+            {
+                "id": uuid.uuid4().hex,
+                "method": method,
+                "params": params,
+                "deadline_ms": int(timeout * 1000),
+            }
+            for params in params_list
+        ]
+        attempt = 0
+        while True:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise VizierRpcError(StatusCode.DEADLINE_EXCEEDED, f"{method} deadline")
+            try:
+                responses = self._transport.call_raw_many(requests, remaining)
+            except VizierRpcError as e:
+                if e.code != StatusCode.UNAVAILABLE or attempt >= self.max_retries:
+                    raise
+                attempt += 1
+                delay = min(self.backoff_cap, self.backoff_base * (2**attempt))
+                time.sleep(delay * (0.5 + random.random()))
+                continue
+            results = []
+            first_error: Optional[VizierRpcError] = None
+            for resp in responses:
+                if resp.get("ok"):
+                    results.append(resp.get("result"))
+                    continue
+                err = resp.get("error") or {}
+                if first_error is None:
+                    first_error = VizierRpcError(
+                        err.get("code", StatusCode.INTERNAL),
+                        err.get("message", "unknown error"),
+                    )
+                results.append(None)
+            if first_error is not None:
+                raise first_error
+            return results
 
     def close(self) -> None:
         self._transport.close()

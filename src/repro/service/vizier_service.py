@@ -4,10 +4,21 @@ Implements the RPC surface with Vertex-Vizier method names:
 
   CreateStudy / GetStudy / ListStudies / DeleteStudy / SetStudyState
   SuggestTrials -> Operation           (Pythia runs in a server thread)
+  BatchSuggestTrials -> [Operation]    (N studies' suggestions, one dispatch)
   GetOperation                         (client polling loop)
   CompleteTrial / AddTrialMeasurement / GetTrial / ListTrials / DeleteTrial
+  BatchCompleteTrials                  (N completions, one round trip)
   CheckTrialEarlyStoppingState -> Operation
   StopTrial / ListOptimalTrials / UpdateMetadata / ListAlgorithms
+
+Batched suggestion path: BatchSuggestTrials coalesces the suggestion
+operations of many (study, client) pairs arriving in one request into a
+single Pythia dispatch — one thread-pool job, one multi-study datastore
+prefetch (Datastore.list_trials_multi), one policy construction per study —
+instead of one job + per-study query fan-out per call. Fast paths (own
+ACTIVE trials, stalled-trial reassignment, idempotent pending ops) are
+evaluated per sub-request exactly as in SuggestTrials, so batched and
+sequential calls observe identical protocol semantics.
 
 Key semantics reproduced from the paper:
   * client_id trial binding — a SuggestTrials call first returns the caller's
@@ -43,7 +54,7 @@ from repro.core.study import (
 from repro.core.study_config import StudyConfig
 from repro.pythia.policy import StudyDescriptor, SuggestRequest, EarlyStopRequest
 from repro.pythia.registry import make_policy, registered_algorithms
-from repro.pythia.supporter import DatastorePolicySupporter
+from repro.pythia.supporter import DatastorePolicySupporter, PrefetchedPolicySupporter
 from repro.service import operations as ops_lib
 from repro.service.datastore import Datastore, KeyAlreadyExistsError, NotFoundError
 from repro.service.rpc import Servicer, StatusCode, VizierRpcError
@@ -58,6 +69,22 @@ class PythiaConnector:
 
     def suggest(self, study: Study, count: int, client_id: str):
         raise NotImplementedError
+
+    def suggest_batch(self, items: "List[tuple]"):
+        """items: [(study, count, client_id)] -> per-item (suggestions, delta)
+        or the Exception that item raised (per-item fault isolation).
+
+        Default loops over suggest(); InProcessPythia overrides with a
+        shared multi-study prefetch so one coalesced dispatch issues O(1)
+        datastore queries instead of O(N).
+        """
+        out = []
+        for study, count, client_id in items:
+            try:
+                out.append(self.suggest(study, count, client_id))
+            except Exception as e:  # noqa: BLE001 — isolate per study
+                out.append(e)
+        return out
 
     def early_stop(self, study: Study, trial_ids: List[int]):
         raise NotImplementedError
@@ -83,6 +110,56 @@ class InProcessPythia(PythiaConnector):
         decision = policy.suggest(request)
         return decision.suggestions, decision.metadata
 
+    def _prefetch_snapshot(self, study_names: List[str]) -> dict:
+        """Two multi-study queries (completed + active). A study deleted
+        mid-flight must not poison the whole prefetch: fall back to
+        per-study reads and let the missing study's own item fail."""
+        try:
+            completed = self._ds.list_trials_multi(
+                study_names, states=[TrialState.COMPLETED])
+            active = self._ds.list_trials_multi(
+                study_names, states=[TrialState.ACTIVE])
+        except NotFoundError:
+            completed, active = {}, {}
+            for name in study_names:
+                try:
+                    completed[name] = self._ds.list_trials(
+                        name, states=[TrialState.COMPLETED])
+                    active[name] = self._ds.list_trials(
+                        name, states=[TrialState.ACTIVE])
+                except NotFoundError:
+                    pass  # absent from the snapshot; its item raises alone
+        return {
+            name: {
+                TrialState.COMPLETED.value: completed[name],
+                TrialState.ACTIVE.value: active[name],
+            }
+            for name in study_names
+            if name in completed and name in active
+        }
+
+    def suggest_batch(self, items: "List[tuple]"):
+        study_names = list({study.name for study, _, _ in items})
+        # one multi-study query per state the policies read (completed for
+        # the regressor fit, active for pending-trial fantasies)
+        snapshot = self._prefetch_snapshot(study_names)
+        out = []
+        for study, count, client_id in items:
+            try:
+                supporter = PrefetchedPolicySupporter(
+                    DatastorePolicySupporter(self._ds, study.name), snapshot
+                )
+                policy = make_policy(
+                    study.study_config.algorithm, supporter, study.study_config
+                )
+                decision = policy.suggest(
+                    SuggestRequest(study_descriptor=self._descriptor(study), count=count)
+                )
+                out.append((decision.suggestions, decision.metadata))
+            except Exception as e:  # noqa: BLE001 — isolate per study
+                out.append(e)
+        return out
+
     def early_stop(self, study: Study, trial_ids: List[int]):
         supporter = DatastorePolicySupporter(self._ds, study.name)
         policy = make_policy(study.study_config.algorithm, supporter, study.study_config)
@@ -93,7 +170,12 @@ class InProcessPythia(PythiaConnector):
 
 
 class RemotePythia(PythiaConnector):
-    """Pythia as a separate service reached over RPC (paper Figure 2)."""
+    """Pythia as a separate service reached over RPC (paper Figure 2).
+
+    suggest_batch uses the base per-item loop: each study still costs one
+    RPC to the Pythia service, but the client-facing coalescing (one
+    BatchSuggestTrials round trip, one pool job) is preserved.
+    """
 
     def __init__(self, rpc_client):
         self._rpc = rpc_client
@@ -144,7 +226,8 @@ class VizierService(Servicer):
         self._locks_guard = threading.Lock()
         for method in (
             "CreateStudy", "GetStudy", "ListStudies", "DeleteStudy", "SetStudyState",
-            "SuggestTrials", "GetOperation", "CompleteTrial", "AddTrialMeasurement",
+            "SuggestTrials", "BatchSuggestTrials", "GetOperation", "CompleteTrial",
+            "BatchCompleteTrials", "AddTrialMeasurement",
             "GetTrial", "ListTrials", "DeleteTrial", "CreateTrial",
             "CheckTrialEarlyStoppingState", "StopTrial", "ListOptimalTrials",
             "UpdateMetadata", "ListAlgorithms", "Ping",
@@ -217,10 +300,13 @@ class VizierService(Servicer):
         return {"study": study.to_proto()}
 
     # -- suggestion flow -------------------------------------------------------------
-    def SuggestTrials(self, params: dict) -> dict:
-        study_name = params["parent"]
-        client_id = params.get("client_id") or "default_client"
-        count = int(params.get("suggestion_count", 1))
+    def _prepare_suggest_op(self, study_name: str, client_id: str, count: int):
+        """Shared SuggestTrials protocol. Returns (op, needs_computation).
+
+        Fast paths 1-4 return an op that is already done (or already pending
+        elsewhere); only path 5 needs a Pythia dispatch. Caller must hold no
+        locks; this takes the study lock itself.
+        """
         study = self._get_study_or_rpc_error(study_name)
 
         with self._study_lock(study_name):
@@ -229,7 +315,7 @@ class VizierService(Servicer):
                 op = ops_lib.new_suggest_operation(study_name, client_id, count)
                 op = ops_lib.complete_operation(op, {"trials": []})
                 self._ds.put_operation(op)
-                return {"operation": op}
+                return op, False
 
             # 2. client already owns ACTIVE trials -> return them immediately
             #    (client-side fault tolerance, paper §5)
@@ -242,7 +328,7 @@ class VizierService(Servicer):
                     op, {"trials": [t.to_proto() for t in mine[:count]]}
                 )
                 self._ds.put_operation(op)
-                return {"operation": op}
+                return op, False
 
             # 3. reassign stalled trials from dead clients (paper §5)
             if self._reassign_after is not None:
@@ -264,7 +350,7 @@ class VizierService(Servicer):
                         op, {"trials": [t.to_proto() for t in grabbed]}
                     )
                     self._ds.put_operation(op)
-                    return {"operation": op}
+                    return op, False
 
             # 4. an identical pending op may already exist (idempotent retry)
             pending = self._ds.list_operations(
@@ -272,13 +358,92 @@ class VizierService(Servicer):
             )
             for op in pending:
                 if op.get("type") == "suggest":
-                    return {"operation": op}
+                    return op, False
 
             # 5. schedule fresh Pythia computation
             op = ops_lib.new_suggest_operation(study_name, client_id, count)
             self._ds.put_operation(op)
-        self._pool.submit(self._run_suggest_op, op)
+            return op, True
+
+    def SuggestTrials(self, params: dict) -> dict:
+        study_name = params["parent"]
+        client_id = params.get("client_id") or "default_client"
+        count = int(params.get("suggestion_count", 1))
+        op, needs_run = self._prepare_suggest_op(study_name, client_id, count)
+        if needs_run:
+            self._pool.submit(self._run_suggest_op, op)
         return {"operation": op}
+
+    def BatchSuggestTrials(self, params: dict) -> dict:
+        """N sub-requests -> N operations, at most ONE Pythia dispatch job.
+
+        params: {"requests": [{"parent", "suggestion_count", "client_id"}...]}
+        Sub-requests that hit a fast path (own ACTIVE trials, reassignment,
+        idempotent retry) complete inline exactly as SuggestTrials would; the
+        remainder are coalesced — grouped by study, one policy invocation per
+        study with the summed count — into a single pool job. Per-sub-request
+        failures (e.g. unknown study) surface as error entries, not a failed
+        batch.
+        """
+        requests = params.get("requests") or []
+        operations: List[Optional[dict]] = []
+        errors: List[Optional[dict]] = []
+        to_run: List[dict] = []
+        for r in requests:
+            try:
+                study_name = r["parent"]
+                client_id = r.get("client_id") or "default_client"
+                count = int(r.get("suggestion_count", 1))
+                op, needs_run = self._prepare_suggest_op(study_name, client_id, count)
+            except VizierRpcError as e:
+                operations.append(None)
+                errors.append({"code": e.code, "message": e.message})
+                continue
+            except (KeyError, TypeError, ValueError) as e:
+                operations.append(None)
+                errors.append({
+                    "code": StatusCode.INVALID_ARGUMENT,
+                    "message": f"malformed sub-request: {type(e).__name__}: {e}",
+                })
+                continue
+            operations.append(op)
+            errors.append(None)
+            if needs_run:
+                to_run.append(op)
+        if to_run:
+            self._pool.submit(self._run_suggest_ops_coalesced, to_run)
+        return {"operations": operations, "errors": errors}
+
+    def _apply_delta_locked(self, study_name: str, delta) -> None:
+        """Apply policy metadata (algorithm state; paper §6.3). Lock held."""
+        if delta is not None and not delta.empty():
+            self._ds.update_study_metadata(study_name, delta.on_study)
+            for tid, md in delta.on_trials.items():
+                try:
+                    self._ds.update_trial_metadata(study_name, tid, md)
+                except NotFoundError:
+                    pass
+
+    def _create_trials_locked(self, study_name: str, client_id: str,
+                              suggestions) -> List[Trial]:
+        """Materialize suggestions as ACTIVE trials bound to client. Lock held."""
+        trials = []
+        for sug in suggestions:
+            trial = Trial(
+                parameters=sug.parameters,
+                metadata=sug.metadata,
+                state=TrialState.ACTIVE,
+                client_id=client_id,
+            )
+            self._touch_heartbeat(trial)
+            trial = self._ds.create_trial(study_name, trial)
+            trials.append(trial)
+        return trials
+
+    def _fail_op(self, op: dict, e: Exception) -> None:
+        self._ds.put_operation(
+            ops_lib.fail_operation(op, StatusCode.INTERNAL, f"{type(e).__name__}: {e}")
+        )
 
     def _run_suggest_op(self, op: dict) -> None:
         study_name = op["study_name"]
@@ -289,34 +454,93 @@ class VizierService(Servicer):
                 study, op["suggestion_count"], client_id
             )
             with self._study_lock(study_name):
-                # apply policy metadata (algorithm state; paper §6.3)
-                if delta is not None and not delta.empty():
-                    self._ds.update_study_metadata(study_name, delta.on_study)
-                    for tid, md in delta.on_trials.items():
-                        try:
-                            self._ds.update_trial_metadata(study_name, tid, md)
-                        except NotFoundError:
-                            pass
-                trials = []
-                for sug in suggestions:
-                    trial = Trial(
-                        parameters=sug.parameters,
-                        metadata=sug.metadata,
-                        state=TrialState.ACTIVE,
-                        client_id=client_id,
-                    )
-                    self._touch_heartbeat(trial)
-                    trial = self._ds.create_trial(study_name, trial)
-                    trials.append(trial)
+                self._apply_delta_locked(study_name, delta)
+                trials = self._create_trials_locked(study_name, client_id, suggestions)
                 done = ops_lib.complete_operation(
                     op, {"trials": [t.to_proto() for t in trials]}
                 )
                 self._ds.put_operation(done)
         except Exception as e:  # noqa: BLE001 — op must terminate
             log.exception("suggest op %s failed", op["name"])
-            self._ds.put_operation(
-                ops_lib.fail_operation(op, StatusCode.INTERNAL, f"{type(e).__name__}: {e}")
-            )
+            self._fail_op(op, e)
+
+    def _run_suggest_ops_coalesced(self, ops: List[dict]) -> None:
+        """One pool job for a whole BatchSuggestTrials dispatch.
+
+        Groups ops by study, asks Pythia for each study's summed count in one
+        policy invocation, then splits the suggestion batch across the ops in
+        arrival order (each trial bound to its requester's client_id). A
+        failed study fails only its own ops.
+        """
+        by_study: Dict[str, List[dict]] = {}
+        for op in ops:
+            by_study.setdefault(op["study_name"], []).append(op)
+
+        items = []
+        for study_name, group in by_study.items():
+            try:
+                study = self._ds.get_study(study_name)
+            except Exception as e:  # noqa: BLE001 — study may be deleted
+                for op in group:
+                    self._fail_op(op, e)
+                continue
+            total = sum(int(op["suggestion_count"]) for op in group)
+            items.append((study, total, group[0]["client_id"]))
+
+        try:
+            results = self._pythia.suggest_batch(items)
+        except Exception as e:  # noqa: BLE001 — whole dispatch failed
+            log.exception("batch suggest dispatch failed")
+            for study, _, _ in items:
+                for op in by_study[study.name]:
+                    self._fail_op(op, e)
+            return
+
+        for (study, _, _), result in zip(items, results):
+            group = by_study[study.name]
+            if isinstance(result, Exception):
+                log.error("batch suggest for %s failed: %s", study.name, result)
+                for op in group:
+                    self._fail_op(op, result)
+                continue
+            suggestions, delta = result
+            try:
+                with self._study_lock(study.name):
+                    self._apply_delta_locked(study.name, delta)
+                    cursor = 0
+                    for op in group:
+                        want = int(op["suggestion_count"])
+                        take = suggestions[cursor:cursor + want]
+                        cursor += len(take)
+                        if want and not take:
+                            # the policy under-delivered and this op got
+                            # nothing: an empty *successful* op would make
+                            # the client's suggestion loop terminate, so
+                            # fail it (client may retry) instead
+                            self._fail_op(op, RuntimeError(
+                                f"policy returned {len(suggestions)} suggestions "
+                                f"for a coalesced request; none left for this op"))
+                            continue
+                        if len(take) < want:
+                            log.warning(
+                                "coalesced op %s got %d/%d suggestions",
+                                op["name"], len(take), want)
+                        trials = self._create_trials_locked(
+                            study.name, op["client_id"], take
+                        )
+                        done = ops_lib.complete_operation(
+                            op, {"trials": [t.to_proto() for t in trials]}
+                        )
+                        self._ds.put_operation(done)
+            except Exception as e:  # noqa: BLE001 — ops must terminate
+                log.exception("batch suggest finalize for %s failed", study.name)
+                for op in group:
+                    try:
+                        if self._ds.get_operation(op["name"]).get("done"):
+                            continue
+                    except NotFoundError:
+                        pass
+                    self._fail_op(op, e)
 
     def GetOperation(self, params: dict) -> dict:
         try:
@@ -385,28 +609,63 @@ class VizierService(Servicer):
     def CompleteTrial(self, params: dict) -> dict:
         study_name, trial_id = self._parse_trial_name(params["name"])
         with self._study_lock(study_name):
-            trial = self._ds.get_trial(study_name, trial_id)
-            if trial.state.is_terminal:
-                raise VizierRpcError(
-                    StatusCode.FAILED_PRECONDITION, f"trial {trial_id} already terminal"
-                )
-            if params.get("trial_infeasible"):
-                trial.complete(
-                    infeasibility_reason=params.get("infeasible_reason", "infeasible")
-                )
-            else:
-                fm = Measurement.from_proto(params.get("final_measurement"))
-                if fm is None:
-                    # fall back to the last intermediate measurement
-                    if not trial.measurements:
-                        raise VizierRpcError(
-                            StatusCode.INVALID_ARGUMENT,
-                            "no final_measurement and no intermediate measurements",
-                        )
-                    fm = trial.measurements[-1]
-                trial.complete(fm)
-            self._ds.update_trial(study_name, trial)
+            trial = self._complete_trial_locked(study_name, trial_id, params)
         return {"trial": trial.to_proto()}
+
+    def _complete_trial_locked(self, study_name: str, trial_id: int,
+                               params: dict) -> Trial:
+        trial = self._ds.get_trial(study_name, trial_id)
+        if trial.state.is_terminal:
+            raise VizierRpcError(
+                StatusCode.FAILED_PRECONDITION, f"trial {trial_id} already terminal"
+            )
+        if params.get("trial_infeasible"):
+            trial.complete(
+                infeasibility_reason=params.get("infeasible_reason", "infeasible")
+            )
+        else:
+            fm = Measurement.from_proto(params.get("final_measurement"))
+            if fm is None:
+                # fall back to the last intermediate measurement
+                if not trial.measurements:
+                    raise VizierRpcError(
+                        StatusCode.INVALID_ARGUMENT,
+                        "no final_measurement and no intermediate measurements",
+                    )
+                fm = trial.measurements[-1]
+            trial.complete(fm)
+        self._ds.update_trial(study_name, trial)
+        return trial
+
+    def BatchCompleteTrials(self, params: dict) -> dict:
+        """N CompleteTrial sub-requests in one round trip.
+
+        params: {"requests": [CompleteTrial params...]}. Returns parallel
+        "trials"/"errors" lists — a failed completion (unknown trial, already
+        terminal) yields an error entry without failing its siblings.
+        """
+        trials: List[Optional[dict]] = []
+        errors: List[Optional[dict]] = []
+        for r in params.get("requests") or []:
+            try:
+                study_name, trial_id = self._parse_trial_name(r["name"])
+                with self._study_lock(study_name):
+                    trial = self._complete_trial_locked(study_name, trial_id, r)
+                trials.append(trial.to_proto())
+                errors.append(None)
+            except VizierRpcError as e:
+                trials.append(None)
+                errors.append({"code": e.code, "message": e.message})
+            except NotFoundError as e:
+                trials.append(None)
+                errors.append({"code": StatusCode.NOT_FOUND, "message": str(e)})
+            except (KeyError, TypeError, ValueError) as e:
+                trials.append(None)
+                errors.append({
+                    "code": StatusCode.INVALID_ARGUMENT,
+                    "message": f"malformed sub-request: {type(e).__name__}: {e}",
+                })
+        return {"trials": trials, "errors": errors}
 
     def DeleteTrial(self, params: dict) -> dict:
         study_name, trial_id = self._parse_trial_name(params["name"])

@@ -1,0 +1,195 @@
+"""Deterministic stand-in for the `hypothesis` API subset used by this suite.
+
+The container has no `hypothesis` wheel and dependencies cannot be added, so
+property tests import this shim as a fallback:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_shim import given, settings, strategies as st
+
+Semantics: @given runs the test body `max_examples` times (capped by
+SHIM_MAX_EXAMPLES, default 50) with values drawn from a per-example
+`random.Random` seeded by (test name, example index) — fully deterministic
+across runs, no example database, no shrinking. Numeric strategies bias
+toward boundary values so edge cases are exercised on every run.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import random
+import string
+import zlib
+from types import SimpleNamespace
+
+_MAX_EXAMPLES_CAP = int(os.environ.get("SHIM_MAX_EXAMPLES", "50"))
+
+
+class settings:
+    """Decorator recording (max_examples, deadline); deadline is ignored."""
+
+    def __init__(self, max_examples: int = 50, deadline=None, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._shim_settings = self
+        return fn
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw_fn = draw_fn
+
+    def example(self, rng: random.Random):
+        return self._draw_fn(rng)
+
+
+def _integers(min_value=-(2**63), max_value=2**63 - 1) -> _Strategy:
+    def draw(rng):
+        r = rng.random()
+        if r < 0.05:
+            return min_value
+        if r < 0.10:
+            return max_value
+        if r < 0.15 and min_value <= 0 <= max_value:
+            return 0
+        return rng.randint(min_value, max_value)
+
+    return _Strategy(draw)
+
+
+def _floats(min_value=None, max_value=None, allow_nan=True, allow_infinity=True,
+            **_ignored) -> _Strategy:
+    lo = -1e300 if min_value is None else float(min_value)
+    hi = 1e300 if max_value is None else float(max_value)
+
+    def draw(rng):
+        r = rng.random()
+        if r < 0.05:
+            return lo
+        if r < 0.10:
+            return hi
+        if r < 0.15 and lo <= 0.0 <= hi:
+            return 0.0
+        if r < 0.30:
+            # small-magnitude values near the low end of the range
+            span = hi - lo
+            return lo + span * (10.0 ** rng.uniform(-9, 0))
+        return rng.uniform(lo, hi)
+
+    return _Strategy(draw)
+
+
+_ALPHABET = string.ascii_letters + string.digits + " _-./:é中α"
+
+
+def _text(min_size=0, max_size=20, **_ignored) -> _Strategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return "".join(rng.choice(_ALPHABET) for _ in range(n))
+
+    return _Strategy(draw)
+
+
+def _booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def _sampled_from(options) -> _Strategy:
+    options = list(options)
+    return _Strategy(lambda rng: options[rng.randrange(len(options))])
+
+
+def _one_of(*strategies) -> _Strategy:
+    return _Strategy(lambda rng: strategies[rng.randrange(len(strategies))].example(rng))
+
+
+def _tuples(*strategies) -> _Strategy:
+    return _Strategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+def _lists(elements: _Strategy, min_size=0, max_size=10, unique=False,
+           **_ignored) -> _Strategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        if not unique:
+            return [elements.example(rng) for _ in range(n)]
+        out, seen = [], set()
+        for _ in range(n * 20):
+            if len(out) >= n:
+                break
+            v = elements.example(rng)
+            if v not in seen:
+                seen.add(v)
+                out.append(v)
+        return out
+
+    return _Strategy(draw)
+
+
+def _dictionaries(keys: _Strategy, values: _Strategy, min_size=0, max_size=10,
+                  **_ignored) -> _Strategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        out = {}
+        for _ in range(n * 2):  # oversample: key collisions shrink the dict
+            if len(out) >= n:
+                break
+            out[keys.example(rng)] = values.example(rng)
+        return out
+
+    return _Strategy(draw)
+
+
+def _composite(fn):
+    """@st.composite — fn(draw, *args) becomes a strategy factory."""
+
+    @functools.wraps(fn)
+    def factory(*args, **kwargs):
+        def draw_value(rng):
+            return fn(lambda strategy: strategy.example(rng), *args, **kwargs)
+
+        return _Strategy(draw_value)
+
+    return factory
+
+
+strategies = SimpleNamespace(
+    integers=_integers,
+    floats=_floats,
+    text=_text,
+    booleans=_booleans,
+    sampled_from=_sampled_from,
+    one_of=_one_of,
+    tuples=_tuples,
+    lists=_lists,
+    dictionaries=_dictionaries,
+    composite=_composite,
+)
+
+
+def given(*arg_strategies, **kw_strategies):
+    def decorate(fn):
+        # NOT functools.wraps: copying __wrapped__ would expose the original
+        # signature and make pytest treat strategy parameters as fixtures.
+        def wrapper():
+            cfg = getattr(fn, "_shim_settings", None) or getattr(
+                wrapper, "_shim_settings", None
+            )
+            n = min(cfg.max_examples if cfg else 50, _MAX_EXAMPLES_CAP)
+            for i in range(n):
+                seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}:{i}".encode())
+                rng = random.Random(seed)
+                drawn = [s.example(rng) for s in arg_strategies]
+                drawn_kw = {k: s.example(rng) for k, s in kw_strategies.items()}
+                fn(*drawn, **drawn_kw)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return decorate

@@ -1,0 +1,255 @@
+"""Batched suggestion pipeline: coalescing, re-binding, equivalence."""
+
+import threading
+
+import pytest
+
+from repro.core import Measurement, ScaleType, StudyConfig
+from repro.core.study import Study, TrialState
+from repro.service import (
+    DefaultVizierServer,
+    VizierBatchClient,
+    VizierClient,
+)
+from repro.service.client import BatchSuggestionError
+from repro.service.datastore import InMemoryDatastore
+from repro.service.rpc import RpcClient, RpcServer
+from repro.service.vizier_service import InProcessPythia, VizierService
+
+
+def _gp_config() -> StudyConfig:
+    cfg = StudyConfig()
+    root = cfg.search_space.select_root()
+    root.add_float_param("x", 0.0, 1.0, scale_type=ScaleType.LINEAR)
+    root.add_float_param("y", 0.0, 1.0, scale_type=ScaleType.LINEAR)
+    cfg.metrics.add("obj", "MAXIMIZE")
+    cfg.algorithm = "GP_UCB"
+    return cfg
+
+
+def _seed_study(target, name, n_completed=6, client_id="seeder"):
+    """Create a study and complete n trials so GP_UCB leaves cold start."""
+    client = VizierClient.load_or_create_study(
+        name, _gp_config(), client_id=client_id, target=target)
+    for i in range(n_completed):
+        (t,) = client.get_suggestions(count=1)
+        client.complete_trial({"obj": -(i / n_completed - 0.4) ** 2}, trial_id=t.id)
+    return client
+
+
+@pytest.fixture
+def server():
+    s = DefaultVizierServer()
+    yield s
+    s.stop()
+
+
+def test_batch_coalesces_same_study(server):
+    """Two clients on one study in one batch: distinct trials, one dispatch."""
+    seed = _seed_study(server.address, "coalesce")
+    batch = VizierBatchClient(server.address)
+    results = batch.get_suggestions([
+        {"study_name": seed.study_name, "client_id": "a", "count": 2},
+        {"study_name": seed.study_name, "client_id": "b", "count": 1},
+    ])
+    assert [len(r) for r in results] == [2, 1]
+    ids = [t.id for trials in results for t in trials]
+    assert len(set(ids)) == 3, ids  # all distinct (coalesced, not duplicated)
+    assert {t.client_id for t in results[0]} == {"a"}
+    assert {t.client_id for t in results[1]} == {"b"}
+    params = [
+        (t.parameters["x"].as_float, t.parameters["y"].as_float)
+        for trials in results for t in trials
+    ]
+    assert len(set(params)) == 3, params  # one policy call saw the full batch
+    batch.close()
+    seed.close()
+
+
+def test_batch_multi_study(server):
+    names = [
+        _seed_study(server.address, f"multi-{i}").study_name for i in range(3)
+    ]
+    batch = VizierBatchClient(server.address)
+    results = batch.get_suggestions(
+        [{"study_name": n, "client_id": f"w{i}"} for i, n in enumerate(names)]
+    )
+    assert [len(r) for r in results] == [1, 1, 1]
+    for i, trials in enumerate(results):
+        assert trials[0].study_name == names[i]
+    batch.close()
+
+
+def test_batch_client_id_rebinding(server):
+    """A crashed worker's ACTIVE trial comes back through the batched path."""
+    seed = _seed_study(server.address, "rebind")
+    worker = VizierClient(server.address, seed.study_name, "worker_7")
+    (orig,) = worker.get_suggestions(count=1)  # worker "crashes" here
+
+    batch = VizierBatchClient(server.address)
+    (again,) = batch.get_suggestions(
+        [{"study_name": seed.study_name, "client_id": "worker_7"}]
+    )
+    assert [t.id for t in again] == [orig.id]  # same trial, not a new one
+    assert again[0].client_id == "worker_7"
+    batch.close()
+    worker.close()
+    seed.close()
+
+
+def test_batched_equals_sequential_on_fixed_seed():
+    """Identical datastore state -> batched == sequential suggestions.
+
+    GP_UCB is deterministic given the completed-trial set (its rng is seeded
+    by the policy seed + trial count), so a batched dispatch over one study
+    must produce exactly the suggestion the sequential path produces.
+    """
+    def build():
+        from repro.core import Trial
+
+        server = DefaultVizierServer()
+        client = VizierClient.load_or_create_study(
+            "equiv", _gp_config(), client_id="seeder", target=server.address)
+        # deterministic pre-evaluated trials -> bit-identical datastore state
+        for i in range(6):
+            x = (i + 1) / 7.0
+            t = Trial(parameters={"x": x, "y": ((i * 3) % 7) / 7.0})
+            t.complete(Measurement(metrics={"obj": -(x - 0.4) ** 2}))
+            client.add_trial(t)
+        return server, client
+
+    server_a, client_a = build()
+    (seq,) = client_a.get_suggestions(count=1)
+
+    server_b, _ = build()
+    batch = VizierBatchClient(server_b.address)
+    ((bat,),) = batch.get_suggestions(
+        [{"study_name": client_a.study_name, "client_id": "seeder2"}]
+    )
+    assert seq.parameters.as_dict() == bat.parameters.as_dict()
+    batch.close()
+    server_a.stop()
+    server_b.stop()
+
+
+def test_batch_complete_trials_roundtrip(server):
+    seed = _seed_study(server.address, "bct")
+    batch = VizierBatchClient(server.address)
+    (trials,) = batch.get_suggestions(
+        [{"study_name": seed.study_name, "client_id": "w", "count": 2}]
+    )
+    done = batch.complete_trials([
+        {"trial_name": f"{seed.study_name}/trials/{trials[0].id}",
+         "metrics": {"obj": 0.9}},
+        {"trial_name": f"{seed.study_name}/trials/{trials[1].id}",
+         "infeasibility_reason": "nan loss"},
+    ])
+    assert done[0].state == TrialState.COMPLETED
+    assert done[1].state == TrialState.INFEASIBLE
+    batch.close()
+    seed.close()
+
+
+def test_batch_complete_partial_failure(server):
+    seed = _seed_study(server.address, "bct-err")
+    batch = VizierBatchClient(server.address)
+    (trials,) = batch.get_suggestions(
+        [{"study_name": seed.study_name, "client_id": "w"}]
+    )
+    done = batch.complete_trials([
+        {"trial_name": f"{seed.study_name}/trials/99999", "metrics": {"obj": 1.0}},
+        {"trial_name": f"{seed.study_name}/trials/{trials[0].id}",
+         "metrics": {"obj": 0.5}},
+    ])
+    assert done[0] is None  # unknown trial fails alone
+    assert done[1] is not None and done[1].state == TrialState.COMPLETED
+    batch.close()
+    seed.close()
+
+
+def test_batch_unknown_study_isolated(server):
+    """A bad sub-request errors without failing its siblings' operations —
+    and the siblings' already-dispatched work is polled and surfaced on the
+    exception instead of being orphaned server-side."""
+    seed = _seed_study(server.address, "isolate")
+    batch = VizierBatchClient(server.address)
+    with pytest.raises(BatchSuggestionError) as ei:
+        batch.get_suggestions([
+            {"study_name": seed.study_name, "client_id": "w"},
+            {"study_name": "owners/x/studies/nope", "client_id": "w"},
+        ])
+    errors = ei.value.errors
+    assert errors[0] is None and errors[1] is not None
+    results = ei.value.results
+    assert results[1] is None
+    assert results[0] is not None and len(results[0]) == 1  # usable handle
+    assert results[0][0].client_id == "w"
+    batch.close()
+    seed.close()
+
+
+def test_batch_malformed_subrequest_isolated(server):
+    """Missing required fields error per-item, not per-batch."""
+    seed = _seed_study(server.address, "malformed")
+    rpc = RpcClient(server.address)
+    result = rpc.call("BatchSuggestTrials", {"requests": [
+        {"parent": seed.study_name, "suggestion_count": 1, "client_id": "w"},
+        {"client_id": "w"},  # no "parent"
+    ]})
+    assert result["errors"][0] is None
+    assert result["errors"][1] is not None
+    assert result["operations"][0] is not None
+
+    result = rpc.call("BatchCompleteTrials", {"requests": [
+        {"metrics": {}},  # no "name"
+    ]})
+    assert result["trials"] == [None]
+    assert result["errors"][0] is not None
+    rpc.close()
+    seed.close()
+
+
+def test_batch_over_tcp_pipelined():
+    """call_many pipelines frames over one socket (server round-trips them)."""
+    ds = InMemoryDatastore()
+    servicer = VizierService(ds, InProcessPythia(ds))
+    rpc_server = RpcServer(servicer).start()
+    try:
+        rpc = RpcClient(rpc_server.address)
+        results = rpc.call_many("Ping", [{} for _ in range(16)])
+        assert len(results) == 16
+        assert all("time" in r for r in results)
+        rpc.close()
+    finally:
+        servicer.shutdown()
+        rpc_server.stop()
+
+
+def test_batch_concurrent_batched_clients(server):
+    """Many VizierBatchClients hammering one server stay consistent."""
+    names = [_seed_study(server.address, f"conc-{i}").study_name for i in range(2)]
+    errs = []
+
+    def worker(wid):
+        try:
+            batch = VizierBatchClient(server.address)
+            for r in range(3):
+                results = batch.get_suggestions([
+                    {"study_name": n, "client_id": f"c{wid}", "count": 1}
+                    for n in names
+                ])
+                batch.complete_trials([
+                    {"trial_name": f"{n}/trials/{trials[0].id}",
+                     "metrics": {"obj": 0.1 * wid + 0.01 * r}}
+                    for n, trials in zip(names, results)
+                ])
+            batch.close()
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs, errs

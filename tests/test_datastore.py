@@ -102,6 +102,77 @@ def test_sqlite_survives_reopen(tmp_path):
     ds2.close()
 
 
+def test_list_trials_multi(ds):
+    """One call fetches N studies' trials with state filtering."""
+    names = []
+    for i in range(3):
+        s = make_study(name=f"owners/o/studies/m{i}")
+        ds.create_study(s)
+        names.append(s.name)
+        for j in range(i + 1):
+            t = ds.create_trial(s.name, Trial(parameters={"x": j / 10}))
+            if j % 2 == 0:
+                t.complete(Measurement(metrics={"m": 0.5}))
+                ds.update_trial(s.name, t)
+
+    out = ds.list_trials_multi(names)
+    assert sorted(out) == sorted(names)
+    assert [len(out[n]) for n in names] == [1, 2, 3]
+    # per-study ordering by trial id
+    assert all([t.id for t in v] == sorted(t.id for t in v) for v in out.values())
+
+    completed = ds.list_trials_multi(names, states=[TrialState.COMPLETED])
+    assert [len(completed[n]) for n in names] == [1, 1, 2]
+    assert all(t.state == TrialState.COMPLETED
+               for v in completed.values() for t in v)
+
+    active = ds.list_trials_multi(names, states=[TrialState.ACTIVE])
+    assert [len(active[n]) for n in names] == [0, 1, 1]
+
+    assert ds.list_trials_multi([]) == {}
+
+
+def test_list_trials_multi_missing_study(ds):
+    s = make_study()
+    ds.create_study(s)
+    with pytest.raises(NotFoundError):
+        ds.list_trials_multi([s.name, "owners/o/studies/ghost"])
+
+
+def test_operation_crash_recovery(tmp_path):
+    """Pending ops persisted by a crashed server complete after restart."""
+    from repro.service.vizier_service import VizierService
+    import repro.service.operations as ops_lib
+
+    path = str(tmp_path / "crash.db")
+    ds1 = SQLiteDatastore(path)
+    svc1 = VizierService(ds1)
+    s = make_study()
+    ds1.create_study(s)
+    # a suggest op persisted but never computed (server "crashes" first)
+    op = ops_lib.new_suggest_operation(s.name, "cl", 1)
+    ds1.put_operation(op)
+    svc1.shutdown()
+    ds1.close()
+
+    ds2 = SQLiteDatastore(path)
+    assert len(ds2.list_operations(s.name, only_pending=True)) == 1
+    svc2 = VizierService(ds2)
+    assert svc2.recover_pending_operations() == 1
+    import time as _time
+
+    deadline = _time.time() + 20
+    while _time.time() < deadline:
+        if ds2.get_operation(op["name"])["done"]:
+            break
+        _time.sleep(0.01)
+    finished = ds2.get_operation(op["name"])
+    assert finished["done"] and not finished.get("error"), finished
+    assert len(finished["result"]["trials"]) == 1
+    svc2.shutdown()
+    ds2.close()
+
+
 def test_concurrent_trial_creation(ds):
     s = make_study()
     ds.create_study(s)

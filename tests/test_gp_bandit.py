@@ -4,7 +4,7 @@ import math
 
 import numpy as np
 
-from repro.core import Measurement, ScaleType, StudyConfig, Trial
+from repro.core import Measurement, ScaleType, StudyConfig, Trial, TrialState
 from repro.pythia.gp_bandit import GPBanditPolicy, GaussianProcessBandit
 from repro.pythia.policy import StudyDescriptor, SuggestRequest
 from repro.pythia.supporter import DatastorePolicySupporter
@@ -29,6 +29,114 @@ def test_gp_posterior_interpolates():
                           jnp.asarray(y, jnp.float32),
                           jnp.asarray(xq, jnp.float32))
     assert float(std_q[0]) < 0.5  # near-data uncertainty is small
+
+
+def test_vmapped_ucb_matches_per_candidate_reference():
+    """Vectorized pool scoring == per-candidate loop oracle within 1e-5."""
+    rng = np.random.RandomState(3)
+    gp = GaussianProcessBandit(dim=4, fit_steps=40)
+    x = rng.rand(15, 4)
+    y = np.sin(2 * x.sum(axis=1))
+    raw = gp.fit(x, y)
+    xq = rng.rand(128, 4)
+    vectorized = np.asarray(gp.ucb(raw, x, y, xq))
+    reference = gp.ucb_reference(raw, x, y, xq)
+    np.testing.assert_allclose(vectorized, reference, atol=1e-5, rtol=1e-5)
+
+
+def test_blocked_gram_matches_unblocked():
+    """Candidate pools >= 4096 rows take the column-strip path, bit-equal."""
+    import jax.numpy as jnp
+    from repro.kernels import ops as kops
+
+    rng = np.random.RandomState(0)
+    x1 = jnp.asarray(rng.rand(23, 6), jnp.float32)
+    x2 = jnp.asarray(rng.rand(kops.GRAM_BLOCK_ROWS + 500, 6), jnp.float32)
+    unblocked = kops.matern52_gram(x1, x2, 1.7, impl="xla", block_rows=0)
+    blocked = kops.matern52_gram(x1, x2, 1.7, impl="xla")  # auto-blocks
+    assert blocked.shape == (23, kops.GRAM_BLOCK_ROWS + 500)
+    np.testing.assert_allclose(np.asarray(blocked), np.asarray(unblocked),
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_fantasized_ucb_vmap_regression():
+    """Fantasization: deterministic for a fixed rng, penalizes the pending
+    region's uncertainty bonus, and agrees with a per-fantasy loop."""
+    import jax.numpy as jnp
+    from repro.pythia.gp_bandit import _posterior, _ucb
+
+    rng = np.random.RandomState(7)
+    gp = GaussianProcessBandit(dim=2, fit_steps=40)
+    x = rng.rand(10, 2)
+    y = -((x[:, 0] - 0.5) ** 2) - ((x[:, 1] - 0.5) ** 2)
+    raw = gp.fit(x, y)
+    pending = np.array([[0.9, 0.9], [0.1, 0.85]])
+    xq = rng.rand(64, 2)
+
+    s1 = np.asarray(gp.ucb_fantasized(raw, x, y, pending, xq,
+                                      np.random.RandomState(11)))
+    s2 = np.asarray(gp.ucb_fantasized(raw, x, y, pending, xq,
+                                      np.random.RandomState(11)))
+    np.testing.assert_array_equal(s1, s2)  # fixed rng -> fixed fantasies
+
+    # oracle: loop over the same fantasy draws, score one fantasy at a time
+    F = 4
+    mean_p, std_p = _posterior(raw, jnp.asarray(x, jnp.float32),
+                               jnp.asarray(y, jnp.float32),
+                               jnp.asarray(pending, jnp.float32))
+    eps = np.random.RandomState(11).randn(F, len(pending)).astype(np.float32)
+    per_fantasy = []
+    for f in range(F):
+        y_aug = np.concatenate(
+            [y, np.asarray(mean_p) + np.asarray(std_p) * eps[f]])
+        x_aug = np.vstack([x, pending])
+        per_fantasy.append(np.asarray(
+            _ucb(raw, jnp.asarray(x_aug, jnp.float32),
+                 jnp.asarray(y_aug, jnp.float32),
+                 jnp.asarray(xq, jnp.float32), jnp.float32(gp.ucb_beta))))
+    oracle = np.mean(per_fantasy, axis=0)
+    np.testing.assert_allclose(s1, oracle, atol=1e-5, rtol=1e-5)
+
+    # regression: conditioning on pending points kills their exploration
+    # bonus — candidates at the pending locations score lower than under the
+    # pending-blind acquisition
+    at_pending = np.asarray(gp.ucb_fantasized(
+        raw, x, y, pending, pending, np.random.RandomState(11)))
+    blind = np.asarray(gp.ucb(raw, x, y, pending))
+    assert (at_pending < blind + 1e-6).all(), (at_pending, blind)
+
+
+def test_gp_bandit_fantasizes_pending_trials():
+    """With a pending trial at the argmax, the next suggestion moves away."""
+    cfg = StudyConfig()
+    cfg.search_space.select_root().add_float_param("x", 0.0, 1.0)
+    cfg.metrics.add("y", "MAXIMIZE")
+    cfg.algorithm = "GP_UCB"
+    ds = InMemoryDatastore()
+    study = Study(name="owners/o/studies/pend", study_config=cfg)
+    ds.create_study(study)
+    for i in range(8):
+        x = (i + 1) / 9.0
+        t = Trial(parameters={"x": x})
+        t = ds.create_trial(study.name, t)
+        t.complete(Measurement(metrics={"y": -(x - 0.55) ** 2}))
+        ds.update_trial(study.name, t)
+
+    supporter = DatastorePolicySupporter(ds, study.name)
+    policy = GPBanditPolicy(supporter, n_candidates=600, min_completed=4)
+    request = SuggestRequest(
+        study_descriptor=StudyDescriptor(config=cfg, guid=study.name), count=1)
+    (first,) = policy.suggest(request).suggestions
+    x_first = first.parameters.get_value("x")
+
+    # park an ACTIVE (pending) trial exactly at the chosen point
+    pend = Trial(parameters={"x": x_first})
+    pend.state = TrialState.ACTIVE
+    ds.create_trial(study.name, pend)
+
+    (second,) = policy.suggest(request).suggestions
+    x_second = second.parameters.get_value("x")
+    assert abs(x_second - x_first) > 1e-3, (x_first, x_second)
 
 
 def test_gp_bandit_converges_1d():

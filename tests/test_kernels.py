@@ -4,7 +4,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container has no hypothesis wheel; see shim docstring
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas

@@ -11,6 +11,9 @@ import pytest
 from repro.configs import ARCH_IDS, SHAPES, get_arch
 from repro.models import build_model
 
+pytestmark = pytest.mark.slow  # full-model tests; deselect with -m "not slow"
+
+
 SMOKE_SHAPE = dataclasses.replace(SHAPES["train_4k"], seq_len=64, global_batch=2)
 
 
@@ -52,7 +55,12 @@ def test_arch_smoke_decode_step(arch_id):
 @pytest.mark.parametrize("arch_id", ["yi_34b", "zamba2_1p2b", "olmoe_1b_7b",
                                      "xlstm_350m", "deepseek_v2_236b"])
 def test_decode_matches_prefill(arch_id):
-    cfg = get_arch(arch_id, reduced=True)
+    # float32: in bf16 the MoE router's near-tie top-k can flip an expert
+    # between the prefill and decode paths (reduction-order noise), which is
+    # a property of low-precision routing, not of the decode-path structure
+    # this test checks.
+    cfg = dataclasses.replace(
+        get_arch(arch_id, reduced=True), param_dtype="float32")
     if cfg.moe is not None:
         cfg = dataclasses.replace(
             cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=100.0))

@@ -1,7 +1,10 @@
 """Pareto utilities: frontier invariants (hypothesis) + hypervolume."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container has no hypothesis wheel; see shim docstring
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.pareto import (
     crowding_distance,

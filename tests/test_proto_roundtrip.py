@@ -1,6 +1,9 @@
 """Wire-format roundtrips for Trials/Measurements/StudyConfigs (hypothesis)."""
 
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container has no hypothesis wheel; see shim docstring
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core import (
     Measurement,

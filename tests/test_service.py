@@ -120,12 +120,17 @@ def test_stalled_trial_reassignment(basic_config, datastore):
 
 
 def test_heartbeat_prevents_reassignment(basic_config, datastore):
-    svc = make_local(datastore, reassign_stalled_after=0.4)
+    # Margins matter in both directions: heartbeats span MORE than the stall
+    # threshold (1.8s > 1.2s — without them the trial WOULD be reassigned,
+    # so the test cannot pass vacuously), while each heartbeat gap (0.3s)
+    # stays far enough under the threshold to tolerate scheduler stalls on
+    # a loaded box.
+    svc = make_local(datastore, reassign_stalled_after=1.2)
     c1 = VizierClient.load_or_create_study("s1", basic_config, client_id="slow",
                                            target=svc)
     (t1,) = c1.get_suggestions(count=1)
-    for _ in range(3):  # intermediate measurements act as heartbeats
-        time.sleep(0.2)
+    for _ in range(6):  # intermediate measurements act as heartbeats
+        time.sleep(0.3)
         c1.report_intermediate_objective_value({"acc": 0.1}, trial_id=t1.id, step=1)
     c2 = VizierClient(svc, c1.study_name, "thief")
     (t2,) = c2.get_suggestions(count=1)

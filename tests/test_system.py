@@ -24,6 +24,9 @@ from repro.train.data import DataConfig
 from repro.tuning import TuningTask, TuningWorker
 
 
+pytestmark = pytest.mark.slow  # full-model tests; deselect with -m "not slow"
+
+
 def test_full_system_distributed_tuning():
     server = DistributedVizierServer()
     try:

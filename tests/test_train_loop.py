@@ -5,6 +5,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_arch
 from repro.models import build_model
@@ -12,6 +13,9 @@ from repro.serve import DecodeEngine, Request
 from repro.train.data import DataConfig
 from repro.train.step import TrainConfig, build_train_step, init_train_state
 from repro.train.train_loop import LoopConfig, train
+
+
+pytestmark = pytest.mark.slow  # full-model tests; deselect with -m "not slow"
 
 
 def tiny_arch():
