@@ -2,11 +2,23 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-fast smoke bench-batched
+.PHONY: test test-fast smoke test-dist cov-service bench-batched bench-remote-pythia
 
-# tier-1: the full suite (what the driver runs)
+# tier-1: the full suite (what the driver runs), then the service-layer
+# coverage floor (pytest --cov=repro.service --cov-fail-under=80 when
+# pytest-cov is installed; stdlib-trace fallback otherwise)
 test:
 	$(PY) -m pytest -x -q
+	$(PY) tools/check_coverage.py --fail-under 80
+
+# distributed-topology tests only (Figure-2 split: real sockets, fault
+# injection, cross-process end-to-end) — includes the slow-marked e2e
+test-dist:
+	$(PY) -m pytest -q -m dist
+
+# the service-layer coverage floor on its own
+cov-service:
+	$(PY) tools/check_coverage.py --fail-under 80
 
 # marker split: everything except the heavyweight model/system tests
 test-fast:
@@ -19,3 +31,6 @@ smoke:
 
 bench-batched:
 	PYTHONPATH=.:src $(PY) benchmarks/service_throughput.py --batched
+
+bench-remote-pythia:
+	PYTHONPATH=.:src $(PY) benchmarks/service_throughput.py --remote-pythia

@@ -16,8 +16,13 @@ import time
 
 from benchmarks.bench_util import emit
 
-from repro.core import ScaleType, StudyConfig
-from repro.service import DefaultVizierServer, VizierBatchClient, VizierClient
+from repro.core import Measurement, ScaleType, StudyConfig, Trial
+from repro.service import (
+    DefaultVizierServer,
+    DistributedVizierServer,
+    VizierBatchClient,
+    VizierClient,
+)
 from repro.service.datastore import SQLiteDatastore
 from repro.service.vizier_service import VizierService
 
@@ -108,6 +113,63 @@ def bench_batched_throughput(n_clients: int, n_rounds: int = 12) -> None:
     server.stop()
 
 
+def bench_remote_pythia(n_clients: int, n_rounds: int = 10,
+                        n_seed_trials: int = 200) -> float:
+    """Figure-2 topology (separate Pythia service): coalesced
+    PythiaBatchSuggest vs the per-study PythiaSuggest baseline.
+
+    Each round is one BatchSuggestTrials covering every (study, client)
+    pair. The baseline forwards that batch to the Pythia service one study
+    at a time with the pre-batch wire pattern (each PythiaSuggest re-fetches
+    the study and the full trial list for max_trial_id, then the policy
+    re-fetches per state); the coalesced path ships the whole work-list in
+    one PythiaBatchSuggest frame backed by a single
+    GetTrialsMulti(include_studies) prefetch shared by every policy.
+    Returns the coalesced/baseline suggestions-per-sec ratio.
+    """
+    rates = {}
+    for coalesce in (False, True):
+        server = DistributedVizierServer(coalesce_remote=coalesce,
+                                         pythia_single_fetch=coalesce)
+        studies = []
+        for i in range(n_clients):
+            c = VizierClient.load_or_create_study(
+                f"rmt-{coalesce}-{n_clients}-{i}", _config(), client_id="seed",
+                target=server.address)
+            for j in range(n_seed_trials):  # realistic trial payloads
+                t = Trial(parameters={"x": (j + 1) / (n_seed_trials + 1)})
+                t.complete(Measurement(metrics={"obj": 0.1 * j}))
+                c.add_trial(t)
+            studies.append(c.study_name)
+            c.close()
+
+        batch = VizierBatchClient(server.address, poll_interval=0.001)
+        requests = [
+            {"study_name": s, "client_id": f"w{i}", "count": 1}
+            for i, s in enumerate(studies)
+        ]
+        t0 = time.perf_counter()
+        for r in range(n_rounds):
+            per_req = batch.get_suggestions(requests)
+            batch.complete_trials([
+                {"trial_name": f"{s}/trials/{trials[0].id}",
+                 "metrics": {"obj": 0.1}}
+                for s, trials in zip(studies, per_req)
+            ])
+        wall = time.perf_counter() - t0
+        total = n_clients * n_rounds
+        rates[coalesce] = total / wall
+        label = "coalesced" if coalesce else "per_study_rpc"
+        emit(f"fig2.remote_pythia.{label}.clients={n_clients}",
+             wall / total * 1e6, f"suggestions_per_sec={total/wall:.1f}")
+        batch.close()
+        server.stop()
+    ratio = rates[True] / rates[False]
+    emit(f"fig2.remote_pythia.speedup.clients={n_clients}", ratio,
+         f"coalesced_vs_per_study_rpc={ratio:.2f}x")
+    return ratio
+
+
 def bench_crash_recovery(tmpdir="/tmp/bench_crash.db") -> None:
     import os
 
@@ -143,10 +205,17 @@ def main() -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--batched", action="store_true",
                         help="run the BatchSuggestTrials coalescing scenario")
+    parser.add_argument("--remote-pythia", action="store_true",
+                        help="run the Figure-2 remote-Pythia scenario "
+                             "(coalesced vs per-study-RPC dispatch)")
     args = parser.parse_args()
     if args.batched:
         for n in (1, 8, 64):
             bench_batched_throughput(n)
+        return
+    if args.remote_pythia:
+        for n in (1, 8, 64):
+            bench_remote_pythia(n)
         return
     for n in (1, 4, 16):
         bench_throughput(n)

@@ -118,11 +118,56 @@ class PrefetchedPolicySupporter(PolicySupporter):
 
 
 class RemotePolicySupporter(PolicySupporter):
-    """Backed by RPCs to the API server (for the standalone Pythia service)."""
+    """Backed by RPCs to the API server (for the standalone Pythia service).
 
-    def __init__(self, rpc_client, study_guid: str):
+    ``prefetched`` (study_guid -> full, state-unfiltered list of *raw trial
+    protos*) enables the coalesced-dispatch mode: the Pythia servicer
+    fetches every batched study's trials in ONE GetTrialsMulti frame up
+    front, and policies then filter locally instead of re-RPCing for trials
+    the service already holds. Materialization is lazy and cached per study:
+    a policy that never reads trials (e.g. random search) costs zero
+    Trial.from_proto work. Studies absent from the prefetch (e.g.
+    cross-study transfer reads) still go over the wire.
+
+    ``buffer_metadata=True`` (the coalesced-dispatch mode) queues SendMetadata
+    deltas in ``buffered_deltas`` instead of issuing an UpdateMetadata frame
+    per policy; the batch servicer merges them into the response's
+    metadata_delta, which the API server applies under the study lock when it
+    finalizes the operation.
+    """
+
+    def __init__(self, rpc_client, study_guid: str, *,
+                 prefetched: Optional[Dict[str, List[dict]]] = None,
+                 buffer_metadata: bool = False):
         self._rpc = rpc_client
         self._study_guid = study_guid
+        self._prefetched = prefetched or {}
+        self._buffer_metadata = buffer_metadata
+        self.buffered_deltas: List[MetadataDelta] = []
+        # trial-id -> Trial, materialized on demand from the raw protos
+        self._materialized: Dict[str, Dict[int, Trial]] = {}
+
+    def _select_prefetched(self, study_guid: str, status_matches,
+                           min_trial_id, max_trial_id) -> List[Trial]:
+        """Filter on the raw protos, materialize only the matches (cached
+        per trial): an incremental read of 1 new trial out of a 1000-trial
+        prefetch costs one Trial.from_proto, not a thousand."""
+        states = _states_arg(status_matches)
+        state_values = {s.value for s in states} if states is not None else None
+        cache = self._materialized.setdefault(study_guid, {})
+        out = []
+        for proto in self._prefetched[study_guid]:
+            tid = int(proto.get("id", 0))
+            if state_values is not None and proto.get("state") not in state_values:
+                continue
+            if min_trial_id is not None and tid < min_trial_id:
+                continue
+            if max_trial_id is not None and tid > max_trial_id:
+                continue
+            if tid not in cache:
+                cache[tid] = Trial.from_proto(proto)
+            out.append(cache[tid])
+        return out
 
     def GetStudyConfig(self, study_guid: str) -> StudyConfig:
         result = self._rpc.call("GetStudy", {"name": study_guid})
@@ -136,6 +181,9 @@ class RemotePolicySupporter(PolicySupporter):
         min_trial_id: Optional[int] = None,
         max_trial_id: Optional[int] = None,
     ) -> List[Trial]:
+        if study_guid in self._prefetched:
+            return self._select_prefetched(study_guid, status_matches,
+                                           min_trial_id, max_trial_id)
         params = {"parent": study_guid}
         if status_matches is not None:
             st = _states_arg(status_matches)[0]
@@ -148,8 +196,34 @@ class RemotePolicySupporter(PolicySupporter):
             trials = [t for t in trials if t.id <= max_trial_id]
         return trials
 
+    def GetTrialsMulti(
+        self, study_guids: List[str], *, status_matches: Optional[str] = None
+    ) -> Dict[str, List[Trial]]:
+        out: Dict[str, List[Trial]] = {}
+        missing = []
+        for guid in study_guids:
+            if guid in self._prefetched:
+                out[guid] = self._select_prefetched(guid, status_matches,
+                                                    None, None)
+            else:
+                missing.append(guid)
+        if missing:
+            params: dict = {"parents": missing}
+            if status_matches is not None:
+                params["states"] = [_states_arg(status_matches)[0].value]
+            result = self._rpc.call("GetTrialsMulti", params)
+            for guid in missing:
+                out[guid] = [
+                    Trial.from_proto(p)
+                    for p in result["trials_by_study"].get(guid, [])
+                ]
+        return out
+
     def SendMetadata(self, delta: MetadataDelta) -> None:
         if delta.empty():
+            return
+        if self._buffer_metadata:
+            self.buffered_deltas.append(delta)
             return
         self._rpc.call(
             "UpdateMetadata",

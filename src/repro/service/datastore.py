@@ -101,6 +101,27 @@ class Datastore:
         """
         return {name: self.list_trials(name, states=states) for name in study_names}
 
+    def list_trials_multi_raw(
+        self,
+        study_names: List[str],
+        *,
+        states: Optional[List[TrialState]] = None,
+    ) -> Dict[str, List[dict]]:
+        """Like list_trials_multi but returns wire protos, not Trial objects.
+
+        The GetTrialsMulti RPC is proto-in/proto-out: materializing a Trial
+        per row on the server just to call to_proto() again doubles the
+        serialization cost of the coalesced prefetch. Backends serve the
+        stored proto dicts directly (trials are written by whole-proto
+        replacement, so returned dicts are never mutated in place). Default
+        implementation falls back through Trial objects.
+        """
+        return {
+            name: [t.to_proto() for t in trials]
+            for name, trials in self.list_trials_multi(
+                study_names, states=states).items()
+        }
+
     # operations (long-running computations; paper §3.2)
     def put_operation(self, op: dict) -> None:
         raise NotImplementedError
@@ -244,6 +265,21 @@ class InMemoryDatastore(Datastore):
                     raise NotFoundError(name)
                 out[name] = [
                     Trial.from_proto(bucket[tid])
+                    for tid in sorted(bucket)
+                    if state_values is None or bucket[tid].get("state") in state_values
+                ]
+            return out
+
+    def list_trials_multi_raw(self, study_names, *, states=None):
+        with self._lock:
+            out: Dict[str, List[dict]] = {}
+            state_values = {s.value for s in states} if states else None
+            for name in study_names:
+                bucket = self._trials.get(name)
+                if bucket is None:
+                    raise NotFoundError(name)
+                out[name] = [
+                    bucket[tid]
                     for tid in sorted(bucket)
                     if state_values is None or bucket[tid].get("state") in state_values
                 ]
@@ -456,7 +492,8 @@ class SQLiteDatastore(Datastore):
             ).fetchone()
         return int(row[0])
 
-    def list_trials_multi(self, study_names, *, states=None):
+    def _fetch_trial_blobs_multi(self, study_names, states) -> Dict[str, list]:
+        """Shared single-query/single-lock fetch for the multi-study reads."""
         study_names = list(study_names)
         if not study_names:
             return {}
@@ -479,10 +516,25 @@ class SQLiteDatastore(Datastore):
                 if name not in known:
                     raise NotFoundError(name)
             rows = self._conn.execute(query, args).fetchall()
-        out: Dict[str, List[Trial]] = {name: [] for name in study_names}
+        out: Dict[str, list] = {name: [] for name in study_names}
         for study_name, blob in rows:
-            out[study_name].append(Trial.from_proto(msgpack.unpackb(blob, raw=False)))
+            out[study_name].append(blob)
         return out
+
+    def list_trials_multi(self, study_names, *, states=None):
+        return {
+            name: [Trial.from_proto(msgpack.unpackb(blob, raw=False))
+                   for blob in blobs]
+            for name, blobs in self._fetch_trial_blobs_multi(
+                study_names, states).items()
+        }
+
+    def list_trials_multi_raw(self, study_names, *, states=None):
+        return {
+            name: [msgpack.unpackb(blob, raw=False) for blob in blobs]
+            for name, blobs in self._fetch_trial_blobs_multi(
+                study_names, states).items()
+        }
 
     # ops ---------------------------------------------------------------------------
     def put_operation(self, op: dict) -> None:

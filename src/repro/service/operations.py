@@ -56,3 +56,19 @@ def fail_operation(op: dict, code: int, message: str) -> dict:
     op["done"] = True
     op["complete_time"] = time.time()
     return op
+
+
+def fail_operation_from_exception(op: dict, e: Exception,
+                                  default_code: int = 13) -> dict:
+    """Fail an op preserving the RPC status code when the cause carries one.
+
+    A remote Pythia dispatch surfaces per-study failures as VizierRpcError
+    objects (e.g. NOT_FOUND for a study deleted mid-flight); collapsing them
+    all to INTERNAL would hide whether a client should retry. Duck-typed on
+    ``.code`` so this module stays transport-agnostic.
+    """
+    code = getattr(e, "code", None)
+    if not isinstance(code, int):
+        code = default_code
+    message = getattr(e, "message", None) or f"{type(e).__name__}: {e}"
+    return fail_operation(op, code, message)

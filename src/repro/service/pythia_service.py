@@ -1,72 +1,254 @@
 """Standalone Pythia service (paper Figure 2: "Pythia may run as a separate
 service from the API service").
 
-Hosts the algorithm registry behind two RPC methods; reads trials through a
+Hosts the algorithm registry behind three RPC methods; reads trials through a
 RemotePolicySupporter that RPCs *back* to the API server, so the algorithm
 binary needs no datastore of its own and can be written in any language that
 speaks the wire format.
+
+Coalesced dispatch: PythiaBatchSuggest takes a whole BatchSuggestTrials
+work-list in one frame. The servicer loads every batched study's
+config/descriptor/trials exactly once — ONE GetTrialsMulti frame back to the
+API server (include_studies folds the config fetch in) — then runs each
+policy against the prefetched raw-proto snapshot, so policies never re-RPC
+for trials the service already holds, and SendMetadata writes are folded
+into the response instead of costing a frame per policy. Per-item failures
+(deleted study, policy bug) come back as error entries, never as a failed
+batch: the same isolation contract as the API server's in-process coalesced
+path. The per-study PythiaSuggest method is kept as a back-compat shim for
+non-batch callers; with single_fetch=True (default) it rides the same
+one-frame loader (previously it listed trials once for max_trial_id and the
+policy supporter re-fetched them over the wire).
 """
 
 from __future__ import annotations
 
 import logging
-from typing import Optional
+from typing import Dict, List, Tuple, Union
 
-from repro.core.metadata import MetadataDelta
+from repro.core.metadata import Metadata, MetadataDelta
 from repro.core.study_config import StudyConfig
 from repro.core.study import Trial, TrialState
 from repro.pythia.policy import EarlyStopRequest, StudyDescriptor, SuggestRequest
 from repro.pythia.registry import make_policy
 from repro.pythia.supporter import RemotePolicySupporter
-from repro.service.rpc import RpcClient, RpcServer, Servicer
+from repro.service.rpc import (
+    RpcClient,
+    RpcServer,
+    Servicer,
+    StatusCode,
+    VizierRpcError,
+)
 
 log = logging.getLogger(__name__)
 
+# name -> (config, descriptor, raw trial protos) | the error that study hit.
+# Trial protos stay raw until a policy actually reads them (the supporter
+# materializes lazily) — random-search-style policies pay nothing.
+_LoadedStudy = Union[Tuple[StudyConfig, StudyDescriptor, List[dict]], VizierRpcError]
+
 
 class PythiaServicer(Servicer):
-    def __init__(self, api_server_target):
-        """api_server_target: address string or in-process VizierService."""
+    def __init__(self, api_server_target, *, single_fetch: bool = True):
+        """api_server_target: address string or in-process VizierService.
+
+        single_fetch=False restores the pre-batch wire pattern (one
+        ListTrials just to compute max_trial_id, policies re-fetching the
+        same trials per state) — the per-study-RPC baseline the throughput
+        benchmark quantifies the coalesced dispatch against.
+        """
         super().__init__()
         self._api_target = api_server_target
+        self._single_fetch = single_fetch
         self.expose("PythiaSuggest", self.PythiaSuggest)
+        self.expose("PythiaBatchSuggest", self.PythiaBatchSuggest)
         self.expose("PythiaEarlyStop", self.PythiaEarlyStop)
 
     def _rpc(self) -> RpcClient:
         return RpcClient(self._api_target)
 
+    def _load_many(self, rpc: RpcClient, study_names: List[str]
+                   ) -> Dict[str, _LoadedStudy]:
+        """Configs + descriptors + trials for N studies, isolated per study.
+
+        Exactly ONE GetTrialsMulti frame back to the API server regardless
+        of N: include_studies folds the config fetch in, and max_trial_id
+        comes from the fetched list itself — no separate GetStudy round, no
+        ListTrials just to compute the id watermark.
+        """
+        out: Dict[str, _LoadedStudy] = {}
+        fetched = rpc.call("GetTrialsMulti", {
+            "parents": study_names, "allow_missing": True,
+            "include_studies": True,
+        })
+        by_study = fetched["trials_by_study"]
+        study_protos = fetched["studies"]
+        for name in study_names:
+            if name not in study_protos:
+                out[name] = VizierRpcError(
+                    StatusCode.NOT_FOUND, f"study {name!r}")
+                continue
+            config = StudyConfig.from_proto(study_protos[name]["study_spec"])
+            raw_trials = by_study.get(name, [])
+            max_id = max((int(t["id"]) for t in raw_trials), default=0)
+            descriptor = StudyDescriptor(
+                config=config, guid=name, max_trial_id=max_id)
+            out[name] = (config, descriptor, raw_trials)
+        return out
+
     def _load(self, rpc: RpcClient, study_name: str):
+        loaded = self._load_many(rpc, [study_name])[study_name]
+        if isinstance(loaded, VizierRpcError):
+            raise loaded
+        return loaded
+
+    def _suggest_one(self, rpc: RpcClient, loaded, count: int,
+                     snapshot: Dict[str, List[dict]], *,
+                     buffer_metadata: bool = True) -> dict:
+        config, descriptor, _ = loaded
+        supporter = RemotePolicySupporter(rpc, descriptor.guid,
+                                          prefetched=snapshot,
+                                          buffer_metadata=buffer_metadata)
+        policy = make_policy(config.algorithm, supporter, config)
+        decision = policy.suggest(
+            SuggestRequest(study_descriptor=descriptor, count=count)
+        )
+        suggestions = []
+        for s in decision.suggestions:
+            t = Trial(parameters=s.parameters, metadata=s.metadata,
+                      state=TrialState.REQUESTED)
+            suggestions.append(t.to_proto())
+        # SendMetadata writes were buffered instead of RPC'd; fold any the
+        # policy did not also return into the wire delta so the API server
+        # persists everything when it finalizes the operation.
+        delta = decision.metadata
+        extras = [d for d in supporter.buffered_deltas if d is not delta]
+        if extras:
+            merged = MetadataDelta()
+            for d in extras + [delta]:
+                merged.on_study.attach(d.on_study)
+                for tid, md in d.on_trials.items():
+                    merged.on_trials.setdefault(tid, Metadata()).attach(md)
+            delta = merged
+        return {
+            "suggestions": suggestions,
+            "metadata_delta": delta.to_proto(),
+        }
+
+    def _load_legacy(self, rpc: RpcClient, study_name: str):
+        """Pre-batch loader: a full ListTrials only to compute max_trial_id
+        (the double-fetch PythiaBatchSuggest eliminates)."""
         study_proto = rpc.call("GetStudy", {"name": study_name})["study"]
         config = StudyConfig.from_proto(study_proto["study_spec"])
         trials = rpc.call("ListTrials", {"parent": study_name})["trials"]
         max_id = max((int(t["id"]) for t in trials), default=0)
-        return config, StudyDescriptor(config=config, guid=study_name, max_trial_id=max_id)
+        return config, StudyDescriptor(config=config, guid=study_name,
+                                       max_trial_id=max_id), None
 
     def PythiaSuggest(self, params: dict) -> dict:
         rpc = self._rpc()
         try:
-            config, descriptor = self._load(rpc, params["study_name"])
-            supporter = RemotePolicySupporter(rpc, params["study_name"])
-            policy = make_policy(config.algorithm, supporter, config)
-            decision = policy.suggest(
-                SuggestRequest(study_descriptor=descriptor, count=int(params["count"]))
-            )
-            suggestions = []
-            for s in decision.suggestions:
-                t = Trial(parameters=s.parameters, metadata=s.metadata,
-                          state=TrialState.REQUESTED)
-                suggestions.append(t.to_proto())
-            return {
-                "suggestions": suggestions,
-                "metadata_delta": decision.metadata.to_proto(),
+            name = params["study_name"]
+            if self._single_fetch:
+                loaded = self._load(rpc, name)
+                snapshot = {name: loaded[2]}
+            else:
+                loaded = self._load_legacy(rpc, name)
+                snapshot = {}  # policy re-RPCs per state, as before
+            return self._suggest_one(rpc, loaded, int(params["count"]),
+                                     snapshot,
+                                     buffer_metadata=self._single_fetch)
+        finally:
+            rpc.close()
+
+    def PythiaBatchSuggest(self, params: dict) -> dict:
+        """N sub-requests -> N parallel result entries, one shared prefetch.
+
+        params: {"requests": [{"study_name", "count", "client_id"?}...]}
+        Result: {"results": [{"suggestions", "metadata_delta"} |
+                             {"error": {"code", "message"}}]}
+
+        Same-study sub-requests are coalesced exactly like the API server's
+        _run_suggest_ops_coalesced: ONE policy invocation with the summed
+        count, suggestions split across the sub-requests in arrival order
+        (so two clients batched onto one study never receive the duplicate
+        points a deterministic policy would produce if invoked twice on the
+        same snapshot). The study's metadata delta rides the group's first
+        result entry. A failed study fails only its own entries.
+        """
+        requests = params.get("requests") or []
+        rpc = self._rpc()
+        try:
+            # group by study preserving arrival order: name -> [(index, count)]
+            groups: Dict[str, list] = {}
+            results: list = [None] * len(requests)
+            for i, r in enumerate(requests):
+                name = r.get("study_name")
+                if not name:
+                    results[i] = {"error": {
+                        "code": StatusCode.INVALID_ARGUMENT,
+                        "message": "sub-request missing study_name",
+                    }}
+                    continue
+                groups.setdefault(name, []).append((i, int(r.get("count", 1))))
+            loaded = self._load_many(rpc, list(groups)) if groups else {}
+            snapshot = {
+                n: entry[2] for n, entry in loaded.items()
+                if not isinstance(entry, VizierRpcError)
             }
+            for name, members in groups.items():
+                entry = loaded[name]
+                if isinstance(entry, VizierRpcError):
+                    for i, _ in members:
+                        results[i] = {"error": {
+                            "code": entry.code, "message": entry.message,
+                        }}
+                    continue
+                total = sum(count for _, count in members)
+                try:
+                    one = self._suggest_one(rpc, entry, total, snapshot)
+                except Exception as e:  # noqa: BLE001 — isolate per study
+                    log.exception("batched suggest for %s failed", name)
+                    for i, _ in members:
+                        results[i] = {"error": {
+                            "code": StatusCode.INTERNAL,
+                            "message": f"{type(e).__name__}: {e}",
+                        }}
+                    continue
+                suggestions = one["suggestions"]
+                cursor = 0
+                for k, (i, want) in enumerate(members):
+                    take = suggestions[cursor:cursor + want]
+                    cursor += len(take)
+                    if want and not take:
+                        results[i] = {"error": {
+                            "code": StatusCode.INTERNAL,
+                            "message": (
+                                f"policy returned {len(suggestions)} "
+                                f"suggestions for a coalesced request of "
+                                f"{total}; none left for this sub-request"),
+                        }}
+                        continue
+                    if len(take) < want:
+                        log.warning("coalesced sub-request %d got %d/%d "
+                                    "suggestions", i, len(take), want)
+                    results[i] = {
+                        "suggestions": take,
+                        # the study's delta is applied once, via the first entry
+                        "metadata_delta": one["metadata_delta"] if k == 0
+                        else MetadataDelta().to_proto(),
+                    }
+            return {"results": results}
         finally:
             rpc.close()
 
     def PythiaEarlyStop(self, params: dict) -> dict:
         rpc = self._rpc()
         try:
-            config, descriptor = self._load(rpc, params["study_name"])
-            supporter = RemotePolicySupporter(rpc, params["study_name"])
+            name = params["study_name"]
+            config, descriptor, trials = self._load(rpc, name)
+            supporter = RemotePolicySupporter(rpc, name,
+                                              prefetched={name: trials})
             policy = make_policy(config.algorithm, supporter, config)
             decisions = policy.early_stop(
                 EarlyStopRequest(

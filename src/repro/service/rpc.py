@@ -235,13 +235,17 @@ class RpcClient:
         params_list: "list[dict]",
         *,
         timeout: Optional[float] = None,
+        return_exceptions: bool = False,
     ) -> "list[Any]":
         """N calls of one method, pipelined over a single connection.
 
         Results come back in params order. Transport failures retry the whole
         batch (callers should only batch idempotent methods, e.g. polling
         GetOperation); the first application error is raised after all
-        responses are read, so the connection stays frame-aligned.
+        responses are read, so the connection stays frame-aligned. With
+        ``return_exceptions=True`` application errors are returned in-place
+        as VizierRpcError objects instead — per-item fault isolation for
+        pipelined reads where one bad key must not fail its siblings.
         """
         if not params_list:
             return []
@@ -277,13 +281,14 @@ class RpcClient:
                     results.append(resp.get("result"))
                     continue
                 err = resp.get("error") or {}
+                error = VizierRpcError(
+                    err.get("code", StatusCode.INTERNAL),
+                    err.get("message", "unknown error"),
+                )
                 if first_error is None:
-                    first_error = VizierRpcError(
-                        err.get("code", StatusCode.INTERNAL),
-                        err.get("message", "unknown error"),
-                    )
-                results.append(None)
-            if first_error is not None:
+                    first_error = error
+                results.append(error if return_exceptions else None)
+            if first_error is not None and not return_exceptions:
                 raise first_error
             return results
 
@@ -297,17 +302,36 @@ class RpcClient:
 
 
 class Servicer:
-    """Registry of method handlers. Subclasses register via expose()."""
+    """Registry of method handlers. Subclasses register via expose().
+
+    Every dispatched frame is tallied in ``method_counts`` — the
+    frame-counting regression tests assert the coalesced suggestion path
+    really does collapse to one GetTrialsMulti + one PythiaBatchSuggest
+    frame per batch.
+    """
 
     def __init__(self):
         self._methods: Dict[str, Callable[[dict], Any]] = {}
+        self._counts: Dict[str, int] = {}
+        self._counts_lock = threading.Lock()
 
     def expose(self, name: str, fn: Callable[[dict], Any]) -> None:
         self._methods[name] = fn
 
+    def method_counts(self) -> Dict[str, int]:
+        """Frames dispatched per method since construction (or last reset)."""
+        with self._counts_lock:
+            return dict(self._counts)
+
+    def reset_method_counts(self) -> None:
+        with self._counts_lock:
+            self._counts.clear()
+
     def dispatch(self, request: dict) -> dict:
         rid = request.get("id")
         method = request.get("method", "")
+        with self._counts_lock:
+            self._counts[method] = self._counts.get(method, 0) + 1
         fn = self._methods.get(method)
         if fn is None:
             return {

@@ -54,7 +54,16 @@ class DefaultVizierServer:
 
 
 class DistributedVizierServer:
-    """API service + standalone Pythia service (paper Figure 2)."""
+    """API service + standalone Pythia service (paper Figure 2).
+
+    ``coalesce_remote=False`` forces the per-study PythiaSuggest loop instead
+    of the single-frame PythiaBatchSuggest dispatch — the baseline the
+    throughput benchmark compares against. ``stop_pythia``/``restart_pythia``
+    exist for fault-injection tests: the Pythia service can be killed and
+    brought back on the same port mid-operation, and in-flight suggestion
+    operations must ride the RPC client's retry/backoff to completion (the
+    paper's "remains fully fault-tolerant" claim for the Figure-2 split).
+    """
 
     def __init__(
         self,
@@ -62,6 +71,8 @@ class DistributedVizierServer:
         *,
         database_path: Optional[str] = None,
         reassign_stalled_after: Optional[float] = None,
+        coalesce_remote: bool = True,
+        pythia_single_fetch: bool = True,
     ):
         self.datastore: Datastore = (
             SQLiteDatastore(database_path) if database_path else InMemoryDatastore()
@@ -72,10 +83,19 @@ class DistributedVizierServer:
         )
         self._api_server = RpcServer(self.servicer, host=host, port=0).start()
         # 2. Pythia server, pointed at the API server.
-        self.pythia_servicer = PythiaServicer(self._api_server.address)
+        self._host = host
+        self._pythia_single_fetch = pythia_single_fetch
+        self.pythia_servicer = PythiaServicer(
+            self._api_server.address, single_fetch=pythia_single_fetch)
         self._pythia_server = RpcServer(self.pythia_servicer, host=host, port=0).start()
-        # 3. Rewire the API server's connector to the remote Pythia.
-        self.servicer._pythia = RemotePythia(RpcClient(self._pythia_server.address))
+        # 3. Rewire the API server's connector to the remote Pythia. The
+        # enlarged retry budget (8 attempts, capped exponential backoff)
+        # lets in-flight suggest ops ride out a Pythia restart of roughly
+        # ten seconds; see stop_pythia/restart_pythia.
+        self.servicer._pythia = RemotePythia(
+            RpcClient(self._pythia_server.address, max_retries=8),
+            coalesce=coalesce_remote,
+        )
         self.servicer.recover_pending_operations()
 
     @property
@@ -85,6 +105,25 @@ class DistributedVizierServer:
     @property
     def pythia_address(self) -> str:
         return self._pythia_server.address
+
+    def stop_pythia(self) -> None:
+        """Kill the Pythia service (fault injection). The API server keeps
+        running; in-flight suggest dispatches retry with capped exponential
+        backoff (8 attempts, ~10 s of tolerance) — an outage that outlives
+        the retry budget fails those ops with UNAVAILABLE, and the client
+        surfaces the error so callers can re-request (their op is
+        persisted, so recover_pending_operations also re-runs any op that
+        never reached dispatch)."""
+        self._pythia_server.stop()
+
+    def restart_pythia(self) -> None:
+        """Bring Pythia back on the SAME address a client already dials."""
+        port = int(self._pythia_server.address.rsplit(":", 1)[1])
+        self.pythia_servicer = PythiaServicer(
+            self._api_server.address, single_fetch=self._pythia_single_fetch)
+        self._pythia_server = RpcServer(
+            self.pythia_servicer, host=self._host, port=port
+        ).start()
 
     def stop(self) -> None:
         self.servicer.shutdown()

@@ -172,27 +172,66 @@ class InProcessPythia(PythiaConnector):
 class RemotePythia(PythiaConnector):
     """Pythia as a separate service reached over RPC (paper Figure 2).
 
-    suggest_batch uses the base per-item loop: each study still costs one
-    RPC to the Pythia service, but the client-facing coalescing (one
-    BatchSuggestTrials round trip, one pool job) is preserved.
+    suggest_batch dispatches the whole coalesced work-list in ONE
+    PythiaBatchSuggest frame: the Pythia service loads every study's
+    config/trials once (a single GetTrialsMulti(include_studies) frame back
+    to the API server) and returns per-item results with isolated errors —
+    the same contract as InProcessPythia.suggest_batch, so the coalesced
+    operation runner needs no per-backend branching.
+    Against an older Pythia binary without the batch method (UNIMPLEMENTED)
+    it falls back to the per-study PythiaSuggest loop.
     """
 
-    def __init__(self, rpc_client):
+    def __init__(self, rpc_client, *, coalesce: bool = True):
         self._rpc = rpc_client
+        self._coalesce = coalesce
 
-    def suggest(self, study: Study, count: int, client_id: str):
+    @staticmethod
+    def _parse_suggestions(result: dict):
         from repro.core.study import TrialSuggestion
 
-        result = self._rpc.call(
-            "PythiaSuggest",
-            {"study_name": study.name, "count": count, "client_id": client_id},
-            timeout=600.0,
-        )
         suggestions = []
         for p in result["suggestions"]:
             t = Trial.from_proto(p)
             suggestions.append(TrialSuggestion(parameters=t.parameters, metadata=t.metadata))
         return suggestions, MetadataDelta.from_proto(result.get("metadata_delta"))
+
+    def suggest(self, study: Study, count: int, client_id: str):
+        result = self._rpc.call(
+            "PythiaSuggest",
+            {"study_name": study.name, "count": count, "client_id": client_id},
+            timeout=600.0,
+        )
+        return self._parse_suggestions(result)
+
+    def suggest_batch(self, items: "List[tuple]"):
+        if not items:
+            return []
+        if not self._coalesce:
+            return super().suggest_batch(items)
+        requests = [
+            {"study_name": study.name, "count": int(count), "client_id": client_id}
+            for study, count, client_id in items
+        ]
+        try:
+            result = self._rpc.call(
+                "PythiaBatchSuggest", {"requests": requests}, timeout=600.0
+            )
+        except VizierRpcError as e:
+            if e.code != StatusCode.UNIMPLEMENTED:
+                raise
+            return super().suggest_batch(items)  # pre-batch Pythia binary
+        out = []
+        for r in result["results"]:
+            err = r.get("error")
+            if err:
+                out.append(VizierRpcError(
+                    err.get("code", StatusCode.INTERNAL),
+                    err.get("message", "unknown error"),
+                ))
+            else:
+                out.append(self._parse_suggestions(r))
+        return out
 
     def early_stop(self, study: Study, trial_ids: List[int]):
         from repro.pythia.policy import EarlyStopDecision
@@ -228,7 +267,7 @@ class VizierService(Servicer):
             "CreateStudy", "GetStudy", "ListStudies", "DeleteStudy", "SetStudyState",
             "SuggestTrials", "BatchSuggestTrials", "GetOperation", "CompleteTrial",
             "BatchCompleteTrials", "AddTrialMeasurement",
-            "GetTrial", "ListTrials", "DeleteTrial", "CreateTrial",
+            "GetTrial", "ListTrials", "GetTrialsMulti", "DeleteTrial", "CreateTrial",
             "CheckTrialEarlyStoppingState", "StopTrial", "ListOptimalTrials",
             "UpdateMetadata", "ListAlgorithms", "Ping",
         ):
@@ -442,7 +481,8 @@ class VizierService(Servicer):
 
     def _fail_op(self, op: dict, e: Exception) -> None:
         self._ds.put_operation(
-            ops_lib.fail_operation(op, StatusCode.INTERNAL, f"{type(e).__name__}: {e}")
+            ops_lib.fail_operation_from_exception(op, e,
+                                                  default_code=StatusCode.INTERNAL)
         )
 
     def _run_suggest_op(self, op: dict) -> None:
@@ -590,6 +630,47 @@ class VizierService(Servicer):
         except NotFoundError as e:
             raise VizierRpcError(StatusCode.NOT_FOUND, str(e)) from e
         return {"trials": [t.to_proto() for t in trials]}
+
+    def GetTrialsMulti(self, params: dict) -> dict:
+        """Many studies' trials in ONE frame (coalesced Pythia prefetch).
+
+        params: {"parents": [study names], "states": [state values]?,
+                 "allow_missing": bool?, "include_studies": bool?}. Strict
+        by default (any unknown study is NOT_FOUND, matching ListTrials);
+        with allow_missing the unknown names are reported in "missing"
+        instead so one deleted study cannot poison a whole batch's prefetch.
+        include_studies adds a "studies" map so the coalesced Pythia
+        dispatch gets configs + trials for N studies in ONE frame.
+        """
+        parents = list(params.get("parents") or [])
+        states = [TrialState(s) for s in params.get("states", [])] or None
+        missing: List[str] = []
+        try:
+            # raw protos end to end: no Trial materialization server-side
+            by_study = self._ds.list_trials_multi_raw(parents, states=states)
+        except NotFoundError as e:
+            if not params.get("allow_missing"):
+                raise VizierRpcError(StatusCode.NOT_FOUND, str(e)) from e
+            by_study = {}
+            for name in parents:
+                try:
+                    by_study[name] = [
+                        t.to_proto()
+                        for t in self._ds.list_trials(name, states=states)
+                    ]
+                except NotFoundError:
+                    missing.append(name)
+        result: dict = {"trials_by_study": by_study, "missing": missing}
+        if params.get("include_studies"):
+            studies = {}
+            for name in list(by_study):
+                try:
+                    studies[name] = self._ds.get_study(name).to_proto()
+                except NotFoundError:  # deleted between the two reads
+                    del by_study[name]
+                    missing.append(name)
+            result["studies"] = studies
+        return result
 
     def AddTrialMeasurement(self, params: dict) -> dict:
         """Intermediate measurement — also acts as the client heartbeat."""

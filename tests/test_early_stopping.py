@@ -66,6 +66,63 @@ def test_stopping_disabled_and_multiobjective_noop():
     assert should_stop(bad, [bad], cfg2) is False
 
 
+def _stopping_config() -> StudyConfig:
+    cfg = StudyConfig()
+    cfg.search_space.select_root().add_float_param("x", 0, 1)
+    cfg.metrics.add("acc", "MAXIMIZE")
+    cfg.algorithm = "RANDOM_SEARCH"
+    cfg.automated_stopping = (
+        AutomatedStoppingConfig.median_automated_stopping_config(
+            min_completed_trials=1))
+    return cfg
+
+
+def test_early_stopping_remote_pythia():
+    """The PythiaEarlyStop path over the Figure-2 split: the stop decision
+    must match what the in-process policy decides on the same state."""
+    import pytest
+    from repro.service import DistributedVizierServer, VizierClient
+    from repro.service.rpc import RpcClient, StatusCode, VizierRpcError
+
+    server = DistributedVizierServer()
+    try:
+        client = VizierClient.load_or_create_study(
+            "es-remote", _stopping_config(), client_id="c",
+            target=server.address)
+        (t,) = client.get_suggestions(count=1)
+        for step, v in [(10, 0.5), (20, 0.7), (30, 0.9)]:
+            client.report_intermediate_objective_value(
+                {"acc": v}, trial_id=t.id, step=step)
+        client.complete_trial({"acc": 0.9}, trial_id=t.id)
+        (bad,) = client.get_suggestions(count=1)
+        client.report_intermediate_objective_value(
+            {"acc": 0.05}, trial_id=bad.id, step=10)
+        client.report_intermediate_objective_value(
+            {"acc": 0.06}, trial_id=bad.id, step=20)
+        # the early-stop op travels API server -> Pythia service -> back
+        server.pythia_servicer.reset_method_counts()
+        assert client.should_trial_stop(bad.id) is True
+        assert server.pythia_servicer.method_counts().get("PythiaEarlyStop") == 1
+        # the STOPPING state landed in the datastore
+        assert server.datastore.get_trial(
+            client.study_name, bad.id).state.value == "STOPPING"
+
+        rpc = RpcClient(server.pythia_address)
+        # empty trial_ids: a valid no-op, not an error
+        result = rpc.call("PythiaEarlyStop",
+                          {"study_name": client.study_name, "trial_ids": []})
+        assert result["decisions"] == []
+        # unknown study: NOT_FOUND surfaces with its code intact
+        with pytest.raises(VizierRpcError) as ei:
+            rpc.call("PythiaEarlyStop",
+                     {"study_name": "owners/x/studies/nope", "trial_ids": [1]})
+        assert ei.value.code == StatusCode.NOT_FOUND
+        rpc.close()
+        client.close()
+    finally:
+        server.stop()
+
+
 def test_early_stopping_through_service(basic_config):
     from repro.core import AutomatedStoppingType
     from repro.service import VizierClient

@@ -88,6 +88,102 @@ def test_converter_objects_match_paper_table2(basic_config):
         == ObjectiveMetricGoal.MINIMIZE
 
 
+@st.composite
+def search_spaces(draw):
+    """Random search spaces: every parameter kind, every scale type."""
+    from repro.core import ScaleType, SearchSpace
+
+    space = SearchSpace()
+    root = space.select_root()
+    n_params = draw(st.integers(min_value=1, max_value=5))
+    for i in range(n_params):
+        kind = draw(st.sampled_from(["float", "log_float", "int",
+                                     "categorical", "discrete"]))
+        name = f"p{i}_{kind}"
+        if kind == "float":
+            lo = draw(st.floats(min_value=-1e6, max_value=1e6,
+                                allow_nan=False, allow_infinity=False))
+            span = draw(st.floats(min_value=1e-6, max_value=1e6,
+                                  allow_nan=False, allow_infinity=False))
+            root.add_float_param(name, lo, lo + span,
+                                 scale_type=ScaleType.LINEAR)
+        elif kind == "log_float":
+            lo = draw(st.floats(min_value=1e-9, max_value=1e3,
+                                allow_nan=False, allow_infinity=False))
+            factor = draw(st.floats(min_value=1.5, max_value=1e6,
+                                    allow_nan=False, allow_infinity=False))
+            root.add_float_param(name, lo, lo * factor,
+                                 scale_type=ScaleType.LOG)
+        elif kind == "int":
+            lo = draw(st.integers(min_value=-1000, max_value=1000))
+            span = draw(st.integers(min_value=0, max_value=1000))
+            root.add_int_param(name, lo, lo + span)
+        elif kind == "categorical":
+            values = draw(st.lists(st.text(min_size=1, max_size=6),
+                                   min_size=1, max_size=5, unique=True))
+            root.add_categorical_param(name, values)
+        else:
+            values = sorted(draw(st.lists(
+                st.floats(min_value=-1e6, max_value=1e6, allow_nan=False,
+                          allow_infinity=False),
+                min_size=1, max_size=6, unique=True)))
+            root.add_discrete_param(name, values)
+    return space
+
+
+@st.composite
+def study_configs(draw):
+    from repro.core import StudyConfig
+
+    cfg = StudyConfig()
+    cfg.search_space = draw(search_spaces())
+    n_metrics = draw(st.integers(min_value=1, max_value=3))
+    for i in range(n_metrics):
+        cfg.metrics.add(f"m{i}", draw(st.sampled_from(["MAXIMIZE", "MINIMIZE"])))
+    cfg.algorithm = draw(st.sampled_from(
+        ["RANDOM_SEARCH", "GP_UCB", "GRID_SEARCH", "CMA_ES"]))
+    return cfg
+
+
+@given(study_configs())
+@settings(max_examples=40, deadline=None)
+def test_study_config_roundtrip_property(cfg):
+    """Arbitrary StudyConfigs survive the wire format bit-for-bit."""
+    proto = cfg.to_proto()
+    back = StudyConfig.from_proto(proto)
+    assert back.to_proto() == proto
+    assert back.algorithm == cfg.algorithm
+    assert [m.name for m in back.metrics] == [m.name for m in cfg.metrics]
+    assert len(back.search_space.parameters) == len(cfg.search_space.parameters)
+
+
+@given(search_spaces(), st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=40, deadline=None)
+def test_search_space_sampling_within_bounds(space, seed):
+    """Every sampled assignment is feasible: in-bounds for continuous/int
+    params, a member of the feasible set for categorical/discrete — and the
+    space's own validator agrees, before and after a proto roundtrip."""
+    import random as _random
+
+    from repro.core import SearchSpace
+
+    params = space.sample(_random.Random(seed))
+    space.validate_parameters(params)
+    by_name = {c.name: c for c in space.parameters}
+    for name, value in params.items():
+        cfg = by_name[name]
+        if cfg.bounds is not None:
+            lo, hi = cfg.bounds
+            assert lo <= value.as_float <= hi, (name, value)
+        elif cfg.categories is not None:
+            assert value.as_str in cfg.categories
+        else:
+            assert value.as_float in cfg.feasible_values
+    # same space after a wire roundtrip accepts the same assignment
+    back = SearchSpace.from_proto(space.to_proto())
+    back.validate_parameters(params)
+
+
 def test_metadata_namespaces():
     md = Metadata()
     md["top"] = "1"

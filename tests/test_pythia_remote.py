@@ -1,0 +1,457 @@
+"""Figure-2 topology: standalone Pythia service over real sockets.
+
+Covers the coalesced PythiaBatchSuggest dispatch (frame counts, in-process
+equivalence), the fault-tolerance claims (Pythia killed and restarted
+mid-batch, dropped call_many connections), and cross-study error isolation.
+"""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import Measurement, ScaleType, StudyConfig, Trial
+from repro.service import (
+    DistributedVizierServer,
+    DefaultVizierServer,
+    VizierBatchClient,
+    VizierClient,
+)
+from repro.service.client import OperationFailedError
+from repro.service.pythia_service import PythiaServicer
+from repro.service.rpc import (
+    RpcClient,
+    RpcServer,
+    StatusCode,
+    VizierRpcError,
+)
+from repro.service.vizier_service import RemotePythia
+
+
+def _config(algorithm: str = "RANDOM_SEARCH") -> StudyConfig:
+    cfg = StudyConfig()
+    root = cfg.search_space.select_root()
+    root.add_float_param("x", 0.0, 1.0, scale_type=ScaleType.LINEAR)
+    root.add_float_param("y", 0.0, 1.0, scale_type=ScaleType.LINEAR)
+    cfg.metrics.add("obj", "MAXIMIZE")
+    cfg.algorithm = algorithm
+    return cfg
+
+
+def _seed_deterministic(target, name, n=6, algorithm="GP_UCB"):
+    """Create a study with bit-identical pre-evaluated trials on any server."""
+    client = VizierClient.load_or_create_study(
+        name, _config(algorithm), client_id="seeder", target=target)
+    for i in range(n):
+        x = (i + 1) / (n + 1.0)
+        t = Trial(parameters={"x": x, "y": ((i * 3) % 7) / 7.0})
+        t.complete(Measurement(metrics={"obj": -(x - 0.4) ** 2}))
+        client.add_trial(t)
+    return client
+
+
+@pytest.fixture
+def dist_server():
+    s = DistributedVizierServer()
+    yield s
+    s.stop()
+
+
+# ---------------------------------------------------------------------------
+# Frame-counting regressions: the whole point of the coalesced dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_batch_is_one_frame_per_hop(dist_server):
+    """One BatchSuggestTrials -> exactly ONE PythiaBatchSuggest frame to the
+    Pythia service and ONE GetTrialsMulti frame back to the API server,
+    regardless of how many studies are in the batch."""
+    names = []
+    for i in range(3):
+        c = VizierClient.load_or_create_study(
+            f"frames-{i}", _config(), client_id="seed", target=dist_server.address)
+        names.append(c.study_name)
+        c.close()
+    dist_server.servicer.reset_method_counts()
+    dist_server.pythia_servicer.reset_method_counts()
+
+    batch = VizierBatchClient(dist_server.address)
+    results = batch.get_suggestions(
+        [{"study_name": n, "client_id": f"w{i}"} for i, n in enumerate(names)])
+    assert [len(r) for r in results] == [1, 1, 1]
+
+    pythia_counts = dist_server.pythia_servicer.method_counts()
+    api_counts = dist_server.servicer.method_counts()
+    assert pythia_counts.get("PythiaBatchSuggest") == 1
+    assert "PythiaSuggest" not in pythia_counts
+    assert api_counts.get("GetTrialsMulti") == 1
+    # the policies never re-RPC for data the prefetch already holds:
+    # configs ride the GetTrialsMulti frame, trial reads hit the snapshot,
+    # metadata writes are folded into the batch response
+    assert "ListTrials" not in api_counts
+    assert "GetStudy" not in api_counts
+    assert "UpdateMetadata" not in api_counts
+    batch.close()
+
+
+def test_single_suggest_no_double_fetch(dist_server):
+    """Regression for PythiaServicer._load: one PythiaSuggest used to issue a
+    ListTrials for max_trial_id AND let the supporter re-fetch the same
+    trials; now one GetTrialsMulti feeds both."""
+    c = VizierClient.load_or_create_study(
+        "single-fetch", _config(), client_id="w0", target=dist_server.address)
+    dist_server.servicer.reset_method_counts()
+    (t,) = c.get_suggestions(count=1)
+    assert t.id >= 1
+    api_counts = dist_server.servicer.method_counts()
+    assert api_counts.get("GetTrialsMulti") == 1
+    assert "GetStudy" not in api_counts  # config rides the same frame
+    assert "ListTrials" not in api_counts
+    c.close()
+
+
+# ---------------------------------------------------------------------------
+# Semantics of the coalesced remote dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_remote_batch_coalesces_same_study(dist_server):
+    """Two clients on one study: the summed count reaches the policy once."""
+    c = VizierClient.load_or_create_study(
+        "rsame", _config(), client_id="seed", target=dist_server.address)
+    batch = VizierBatchClient(dist_server.address)
+    results = batch.get_suggestions([
+        {"study_name": c.study_name, "client_id": "a", "count": 2},
+        {"study_name": c.study_name, "client_id": "b", "count": 1},
+    ])
+    assert [len(r) for r in results] == [2, 1]
+    ids = [t.id for trials in results for t in trials]
+    assert len(set(ids)) == 3, ids
+    assert {t.client_id for t in results[0]} == {"a"}
+    assert {t.client_id for t in results[1]} == {"b"}
+    batch.close()
+    c.close()
+
+
+def test_remote_matches_in_process_trial_for_trial():
+    """Same deterministic datastore state -> the Figure-2 split suggests
+    exactly what the in-process InProcessPythia run suggests, per trial."""
+    remote = DistributedVizierServer()
+    local = DefaultVizierServer()
+    try:
+        names = []
+        for target in (remote.address, local.address):
+            for i in range(3):
+                c = _seed_deterministic(target, f"equiv-{i}")
+                if target == remote.address:
+                    names.append(c.study_name)
+                c.close()
+        out = {}
+        for target in (remote.address, local.address):
+            batch = VizierBatchClient(target)
+            results = batch.get_suggestions(
+                [{"study_name": n, "client_id": f"w{i}", "count": 2}
+                 for i, n in enumerate(names)])
+            out[target] = [
+                [t.parameters.as_dict() for t in trials] for trials in results
+            ]
+            batch.close()
+        assert out[remote.address] == out[local.address]
+    finally:
+        remote.stop()
+        local.stop()
+
+
+def test_remote_bad_study_isolated(dist_server):
+    """A sub-request whose policy cannot be built fails alone — no error
+    leaks into its siblings' suggestions across the remote dispatch."""
+    keep = VizierClient.load_or_create_study(
+        "iso-keep", _config(), client_id="w", target=dist_server.address)
+    doomed = VizierClient.load_or_create_study(
+        "iso-doomed", _config(), client_id="w", target=dist_server.address)
+    # corrupt the doomed study's algorithm after creation: the API server's
+    # op-creation checks pass, the remote policy construction cannot
+    study = dist_server.datastore.get_study(doomed.study_name)
+    study.study_config.algorithm = "NO_SUCH_ALGORITHM"
+    dist_server.datastore.update_study(study)
+
+    batch = VizierBatchClient(dist_server.address)
+    with pytest.raises(OperationFailedError) as ei:
+        batch.get_suggestions([
+            {"study_name": keep.study_name, "client_id": "w"},
+            {"study_name": doomed.study_name, "client_id": "w"},
+        ])
+    assert "NO_SUCH_ALGORITHM" in str(ei.value)
+    # the doomed op failed with the remote error attached
+    ops = dist_server.datastore.list_operations(doomed.study_name)
+    assert len(ops) == 1 and ops[0]["done"]
+    assert "unknown algorithm" in ops[0]["error"]["message"]
+    # the sibling completed with a real suggestion
+    keep_ops = dist_server.datastore.list_operations(keep.study_name)
+    assert len(keep_ops) == 1 and keep_ops[0]["done"]
+    assert keep_ops[0]["error"] is None
+    assert len(keep_ops[0]["result"]["trials"]) == 1
+    batch.close()
+    keep.close()
+
+
+def test_pythia_batch_coalesces_duplicate_study_subrequests(dist_server):
+    """Direct PythiaBatchSuggest with the same study twice: ONE policy
+    invocation with the summed count, split across the sub-requests — a
+    deterministic policy invoked twice on the identical snapshot would
+    hand both clients duplicate points."""
+    c = _seed_deterministic(dist_server.address, "pbs-dup")
+    rpc = RpcClient(dist_server.pythia_address)
+    result = rpc.call("PythiaBatchSuggest", {"requests": [
+        {"study_name": c.study_name, "count": 2, "client_id": "a"},
+        {"study_name": c.study_name, "count": 1, "client_id": "b"},
+    ]})
+    first, second = result["results"]
+    assert len(first["suggestions"]) == 2
+    assert len(second["suggestions"]) == 1
+    params = [
+        tuple(sorted(Trial.from_proto(p).parameters.as_dict().items()))
+        for p in first["suggestions"] + second["suggestions"]
+    ]
+    assert len(set(params)) == 3, params
+    # the study's metadata delta rides the group's first entry only
+    from repro.core.metadata import MetadataDelta
+
+    assert MetadataDelta.from_proto(second["metadata_delta"]).empty()
+    rpc.close()
+    c.close()
+
+
+def test_pythia_batch_unknown_study_not_found(dist_server):
+    """Direct PythiaBatchSuggest: an unknown study yields a NOT_FOUND error
+    entry while its siblings' suggestions come back normally, and that code
+    survives into a failed operation via fail_operation_from_exception."""
+    c = VizierClient.load_or_create_study(
+        "pbs-known", _config(), client_id="w", target=dist_server.address)
+    rpc = RpcClient(dist_server.pythia_address)
+    result = rpc.call("PythiaBatchSuggest", {"requests": [
+        {"study_name": c.study_name, "count": 2, "client_id": "w"},
+        {"study_name": "owners/x/studies/nope", "count": 1, "client_id": "w"},
+    ]})
+    ok, bad = result["results"]
+    assert len(ok["suggestions"]) == 2 and "error" not in ok
+    assert bad["error"]["code"] == StatusCode.NOT_FOUND
+
+    import repro.service.operations as ops_lib
+
+    op = ops_lib.new_suggest_operation(c.study_name, "w", 1)
+    failed = ops_lib.fail_operation_from_exception(
+        op, VizierRpcError(bad["error"]["code"], bad["error"]["message"]))
+    assert failed["error"]["code"] == StatusCode.NOT_FOUND
+    rpc.close()
+    c.close()
+
+
+def test_old_pythia_binary_fallback():
+    """A Pythia server without PythiaBatchSuggest (pre-batch binary) still
+    serves batched clients through the per-study shim."""
+
+    class OldPythiaServicer(PythiaServicer):
+        def __init__(self, target):
+            super().__init__(target)
+            del self._methods["PythiaBatchSuggest"]
+
+    api = DefaultVizierServer()
+    old_pythia = RpcServer(OldPythiaServicer(api.address)).start()
+    api.servicer._pythia = RemotePythia(RpcClient(old_pythia.address))
+    try:
+        names = []
+        for i in range(2):
+            c = VizierClient.load_or_create_study(
+                f"old-{i}", _config(), client_id="seed", target=api.address)
+            names.append(c.study_name)
+            c.close()
+        batch = VizierBatchClient(api.address)
+        results = batch.get_suggestions(
+            [{"study_name": n, "client_id": f"w{i}"} for i, n in enumerate(names)])
+        assert [len(r) for r in results] == [1, 1]
+        batch.close()
+    finally:
+        old_pythia.stop()
+        api.stop()
+
+
+# ---------------------------------------------------------------------------
+# Fault injection (paper: the Figure-2 split "remains fully fault-tolerant")
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.dist
+def test_pythia_killed_and_restarted_mid_batch(dist_server):
+    """Kill the Pythia service between op creation and dispatch; restart it
+    while the RemotePythia client is inside its retry/backoff loop. The
+    pending operations must complete without client-visible errors."""
+    names = []
+    for i in range(2):
+        c = VizierClient.load_or_create_study(
+            f"kill-{i}", _config(), client_id="seed", target=dist_server.address)
+        names.append(c.study_name)
+        c.close()
+
+    dist_server.stop_pythia()
+
+    def revive():
+        time.sleep(0.5)  # inside the RPC client's backoff window
+        dist_server.restart_pythia()
+
+    reviver = threading.Thread(target=revive)
+    reviver.start()
+    batch = VizierBatchClient(dist_server.address)
+    results = batch.get_suggestions(
+        [{"study_name": n, "client_id": f"w{i}"} for i, n in enumerate(names)],
+        timeout=60.0)
+    reviver.join()
+    assert [len(r) for r in results] == [1, 1]
+    assert all(t.id >= 1 for trials in results for t in trials)
+    batch.close()
+
+
+@pytest.mark.dist
+def test_recovered_op_rides_out_pythia_outage(dist_server):
+    """Crash recovery meets the Figure-2 split: a pending op re-launched by
+    recover_pending_operations() while Pythia is DOWN burns UNAVAILABLE
+    retries until the service is revived, then completes without error."""
+    c = VizierClient.load_or_create_study(
+        "outage", _config(), client_id="w", target=dist_server.address)
+    # Enqueue a pending suggest op directly (as if the server crashed after
+    # persisting it but before the Pythia dispatch ran) — with Pythia dead.
+    import repro.service.operations as ops_lib
+
+    op = ops_lib.new_suggest_operation(c.study_name, "w2", 1)
+    dist_server.datastore.put_operation(op)
+    dist_server.stop_pythia()
+    n = dist_server.servicer.recover_pending_operations()
+    assert n >= 1
+    time.sleep(1.0)  # let the dispatch burn a few UNAVAILABLE retries
+    assert not dist_server.datastore.get_operation(op["name"])["done"]
+    dist_server.restart_pythia()
+    deadline = time.time() + 30
+    while time.time() < deadline:
+        if dist_server.datastore.get_operation(op["name"])["done"]:
+            break
+        time.sleep(0.02)
+    done = dist_server.datastore.get_operation(op["name"])
+    assert done["done"] and done["error"] is None
+    assert len(done["result"]["trials"]) == 1
+    c.close()
+
+
+@pytest.mark.dist
+def test_call_many_survives_dropped_connection():
+    """Drop the TCP connection under call_many (server restarted between
+    batches): the pipelined batch retries transparently on the new socket."""
+    api = DefaultVizierServer()
+    address = api.address
+    client = RpcClient(address)
+    assert len(client.call_many("Ping", [{} for _ in range(4)])) == 4
+
+    # Restart the RPC server on the same port: the client's pooled socket is
+    # now a dead peer, so the next call_many hits a transport error first.
+    host, port = address.rsplit(":", 1)
+    api._server.stop()
+    api._server = RpcServer(api.servicer, host=host, port=int(port)).start()
+
+    results = client.call_many("Ping", [{} for _ in range(4)])
+    assert len(results) == 4 and all("time" in r for r in results)
+    client.close()
+    api.stop()
+
+
+def test_call_many_return_exceptions_isolation():
+    """Per-item application errors come back in-place, frame-aligned."""
+    api = DefaultVizierServer()
+    client = RpcClient(api.address)
+    c = VizierClient.load_or_create_study(
+        "cmre", _config(), client_id="w", target=api.address)
+    results = client.call_many(
+        "GetStudy",
+        [{"name": c.study_name}, {"name": "owners/x/studies/nope"},
+         {"name": c.study_name}],
+        return_exceptions=True,
+    )
+    assert results[0]["study"]["name"] == c.study_name
+    assert isinstance(results[1], VizierRpcError)
+    assert results[1].code == StatusCode.NOT_FOUND
+    assert results[2]["study"]["name"] == c.study_name
+    c.close()
+    client.close()
+    api.stop()
+
+
+# ---------------------------------------------------------------------------
+# Cross-process end-to-end (real sockets, many clients) — slow
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.dist
+def test_end_to_end_three_studies_batched_clients():
+    """3 studies x concurrent batched clients against the full Figure-2
+    split; every suggestion matches the in-process run trial-for-trial on
+    the seeded deterministic policy."""
+    remote = DistributedVizierServer()
+    local = DefaultVizierServer()
+    try:
+        names = []
+        for target in (remote.address, local.address):
+            for i in range(3):
+                c = _seed_deterministic(target, f"e2e-{i}")
+                if target == remote.address:
+                    names.append(c.study_name)
+                c.close()
+
+        def run_rounds(target):
+            """3 rounds of batched suggest+complete across all studies."""
+            batch = VizierBatchClient(target)
+            seen = []
+            for r in range(3):
+                results = batch.get_suggestions(
+                    [{"study_name": n, "client_id": f"w{i}", "count": 1}
+                     for i, n in enumerate(names)])
+                seen.append([
+                    [t.parameters.as_dict() for t in trials]
+                    for trials in results
+                ])
+                batch.complete_trials([
+                    {"trial_name": f"{n}/trials/{trials[0].id}",
+                     "metrics": {"obj": 0.25 + 0.1 * r}}
+                    for n, trials in zip(names, results)
+                ])
+            batch.close()
+            return seen
+
+        assert run_rounds(remote.address) == run_rounds(local.address)
+
+        # and concurrent batched clients on the remote topology stay sane
+        errs = []
+
+        def hammer(wid):
+            try:
+                batch = VizierBatchClient(remote.address)
+                for r in range(2):
+                    results = batch.get_suggestions(
+                        [{"study_name": n, "client_id": f"h{wid}", "count": 1}
+                         for n in names])
+                    batch.complete_trials([
+                        {"trial_name": f"{n}/trials/{trials[0].id}",
+                         "metrics": {"obj": 0.1 * wid + 0.01 * r}}
+                        for n, trials in zip(names, results)
+                    ])
+                batch.close()
+            except Exception as e:  # noqa: BLE001
+                errs.append(e)
+
+        threads = [threading.Thread(target=hammer, args=(i,)) for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errs, errs
+    finally:
+        remote.stop()
+        local.stop()

@@ -13,7 +13,6 @@ from repro.core import (
     Trial,
     TrialState,
 )
-from repro.pythia.policy import Policy, SuggestDecision
 from repro.service import (
     DefaultVizierServer,
     DistributedVizierServer,
@@ -68,16 +67,18 @@ def test_client_rebind_same_trial(basic_config, datastore):
 def test_server_crash_operation_recovery(basic_config, tmp_path):
     """Paper §3.2: ops persisted in the datastore restart after a crash."""
 
-    class NeverFinishes(Policy):
-        def suggest(self, request):
-            time.sleep(999)
-
     ds = SQLiteDatastore(str(tmp_path / "crash.db"))
     svc1 = make_local(ds)
 
+    # Interruptible block: a bare time.sleep(999) leaves the pool worker
+    # alive after the test, and the executor's atexit join then hangs the
+    # whole pytest process for the rest of the sleep.
+    release = threading.Event()
+
     class BlockedPythia(InProcessPythia):
         def suggest(self, study, count, client_id):
-            time.sleep(999)
+            release.wait(999)
+            raise RuntimeError("blocked op released at test teardown")
 
     svc1._pythia = BlockedPythia(ds)
     client = VizierClient.load_or_create_study("s1", basic_config,
@@ -102,6 +103,7 @@ def test_server_crash_operation_recovery(basic_config, tmp_path):
         time.sleep(0.05)
     assert op["done"] and not op.get("error"), op
     assert op["result"]["trials"], "recovered op produced suggestions"
+    release.set()  # unblock svc1's stuck worker so the process can exit
     svc2.shutdown()
 
 
