@@ -2,23 +2,23 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-fast smoke test-dist cov-service bench-batched bench-remote-pythia
+.PHONY: test test-fast smoke test-dist cov-service bench-batched bench-remote-pythia bench-warmstart
 
-# tier-1: the full suite (what the driver runs), then the service-layer
-# coverage floor (pytest --cov=repro.service --cov-fail-under=80 when
-# pytest-cov is installed; stdlib-trace fallback otherwise)
+# tier-1: the full suite (what the driver runs), then the coverage floors
+# (repro.service >= 80%, repro.pythia >= 70%; pytest-cov when installed,
+# stdlib-trace fallback otherwise)
 test:
 	$(PY) -m pytest -x -q
-	$(PY) tools/check_coverage.py --fail-under 80
+	$(PY) tools/check_coverage.py --fail-under 80 --pythia-fail-under 70
 
 # distributed-topology tests only (Figure-2 split: real sockets, fault
 # injection, cross-process end-to-end) — includes the slow-marked e2e
 test-dist:
 	$(PY) -m pytest -q -m dist
 
-# the service-layer coverage floor on its own
+# the service/pythia coverage floors on their own
 cov-service:
-	$(PY) tools/check_coverage.py --fail-under 80
+	$(PY) tools/check_coverage.py --fail-under 80 --pythia-fail-under 70
 
 # marker split: everything except the heavyweight model/system tests
 test-fast:
@@ -34,3 +34,6 @@ bench-batched:
 
 bench-remote-pythia:
 	PYTHONPATH=.:src $(PY) benchmarks/service_throughput.py --remote-pythia
+
+bench-warmstart:
+	PYTHONPATH=.:src $(PY) benchmarks/service_throughput.py --warm-start

@@ -170,6 +170,96 @@ def bench_remote_pythia(n_clients: int, n_rounds: int = 10,
     return ratio
 
 
+def _gp_config() -> StudyConfig:
+    cfg = StudyConfig()
+    root = cfg.search_space.select_root()
+    root.add_float_param("x", 0, 1, scale_type=ScaleType.LINEAR)
+    root.add_float_param("y", 0, 1, scale_type=ScaleType.LINEAR)
+    cfg.metrics.add("obj", "MAXIMIZE")
+    cfg.algorithm = "GP_UCB"
+    return cfg
+
+
+def bench_warm_start(trial_counts=(50, 200, 500), n_repeats=7) -> None:
+    """Warm-started GP-bandit suggest (persisted PolicyState, paper §6.3) vs
+    the cold per-operation refit, at fixed completed-trial counts.
+
+    Each operation constructs a fresh policy (the stateless Pythia lifespan)
+    against the same datastore; the warm scenario keeps the persisted
+    ``repro.gp_bandit`` checkpoint between operations, the cold scenario
+    wipes it first. Reports median fit wall-time and suggest latency, plus
+    the warm-vs-cold fit speedup.
+    """
+    from repro.core.study import Study
+    from repro.pythia.gp_bandit import GPBanditPolicy
+    from repro.pythia.policy import StudyDescriptor, SuggestRequest
+    from repro.pythia.state import GP_BANDIT_NAMESPACE
+    from repro.pythia.supporter import DatastorePolicySupporter
+    from repro.service.datastore import InMemoryDatastore
+
+    med = lambda xs: sorted(xs)[len(xs) // 2]
+    for n in trial_counts:
+        ds = InMemoryDatastore()
+        study = Study(name=f"owners/bench/studies/warm-{n}",
+                      study_config=_gp_config())
+        ds.create_study(study)
+        for i in range(n):  # deterministic smooth objective
+            x = (i + 1) / (n + 1)
+            y = ((i * 7919) % n) / n
+            t = Trial(parameters={"x": x, "y": y})
+            t.complete(Measurement(
+                metrics={"obj": -(x - 0.37) ** 2 - 0.5 * (y - 0.61) ** 2}))
+            ds.create_trial(study.name, t)
+        supporter = DatastorePolicySupporter(ds, study.name)
+
+        def one_suggest():
+            config = ds.get_study(study.name).study_config  # fresh metadata
+            policy = GPBanditPolicy(supporter)
+            t0 = time.perf_counter()
+            policy.suggest(SuggestRequest(
+                study_descriptor=StudyDescriptor(config=config, guid=study.name),
+                count=1))
+            return time.perf_counter() - t0, policy
+
+        def wipe_state():
+            s = ds.get_study(study.name)
+            s.study_config.metadata.clear_ns(GP_BANDIT_NAMESPACE)
+            ds.update_study(s)
+
+        # cold scenario: state wiped before every op (first run untimed: jit)
+        wipe_state()
+        one_suggest()
+        cold_fit, cold_wall = [], []
+        for _ in range(n_repeats):
+            wipe_state()
+            wall, policy = one_suggest()
+            assert not policy.last_fit_warm
+            cold_wall.append(wall)
+            cold_fit.append(policy.last_fit_seconds)
+        # warm scenario: checkpoint persists; two untimed ops let the resumed
+        # trajectory reach the convergence exit (as a live study would)
+        wipe_state()
+        one_suggest()
+        one_suggest()
+        warm_fit, warm_wall = [], []
+        for _ in range(n_repeats):
+            wall, policy = one_suggest()
+            assert policy.last_fit_warm
+            warm_wall.append(wall)
+            warm_fit.append(policy.last_fit_seconds)
+
+        emit(f"warmstart.n={n}.cold", med(cold_fit) * 1e6,
+             f"median_fit_ms={med(cold_fit)*1e3:.2f} "
+             f"suggest_ms={med(cold_wall)*1e3:.2f}")
+        emit(f"warmstart.n={n}.warm", med(warm_fit) * 1e6,
+             f"median_fit_ms={med(warm_fit)*1e3:.2f} "
+             f"suggest_ms={med(warm_wall)*1e3:.2f}")
+        ratio = med(cold_fit) / max(med(warm_fit), 1e-9)
+        verdict = "PASS" if n < 200 or ratio >= 2.0 else "FAIL"
+        emit(f"warmstart.n={n}.fit_speedup", ratio,
+             f"warm_vs_cold={ratio:.1f}x (floor 2x at n>=200) {verdict}")
+
+
 def bench_crash_recovery(tmpdir="/tmp/bench_crash.db") -> None:
     import os
 
@@ -208,6 +298,9 @@ def main() -> None:
     parser.add_argument("--remote-pythia", action="store_true",
                         help="run the Figure-2 remote-Pythia scenario "
                              "(coalesced vs per-study-RPC dispatch)")
+    parser.add_argument("--warm-start", action="store_true",
+                        help="run the warm-started GP-bandit scenario "
+                             "(persisted PolicyState vs cold refit)")
     args = parser.parse_args()
     if args.batched:
         for n in (1, 8, 64):
@@ -216,6 +309,9 @@ def main() -> None:
     if args.remote_pythia:
         for n in (1, 8, 64):
             bench_remote_pythia(n)
+        return
+    if args.warm_start:
+        bench_warm_start()
         return
     for n in (1, 4, 16):
         bench_throughput(n)

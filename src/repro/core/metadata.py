@@ -122,6 +122,12 @@ class Metadata:
         for k, v in other.items():
             self[k] = v
 
+    def clear_ns(self, namespace: Union[str, Namespace, None] = None) -> None:
+        """Drops every key in an absolute namespace (default: the current
+        one). Used e.g. to discard a persisted algorithm-state checkpoint."""
+        ns = self._namespace if namespace is None else Namespace(namespace)
+        self._store.pop(ns.encode(), None)
+
     # -- merge / serialization ----------------------------------------------
     def attach(self, other: "Metadata") -> None:
         """Merges all namespaces of ``other`` into this metadata (last wins)."""

@@ -29,7 +29,6 @@ class StudyDescriptor:
 class SuggestRequest:
     study_descriptor: StudyDescriptor
     count: int = 1
-    checkpoint_metadata: Optional[Metadata] = None
 
     @property
     def study_config(self) -> StudyConfig:
@@ -38,6 +37,14 @@ class SuggestRequest:
     @property
     def study_guid(self) -> str:
         return self.study_descriptor.guid
+
+    @property
+    def study_metadata(self) -> Metadata:
+        """Study-level metadata — where persisted algorithm state lives
+        (paper §6.3). The snapshot embedded in the StudyConfig; both
+        topologies round-trip it with the config (the Figure-2 split ships
+        it on the GetTrialsMulti(include_studies) frame)."""
+        return self.study_descriptor.config.metadata
 
 
 @dataclasses.dataclass

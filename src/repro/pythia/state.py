@@ -1,0 +1,233 @@
+"""Versioned algorithm-state records persisted in study metadata (paper §6.3).
+
+The paper's metadata mechanism exists so "algorithms may store state in the
+database" and resume cheaply across stateless Pythia invocations. This module
+defines the GP-bandit's state record and the namespace conventions around it:
+
+* Namespaces starting with ``repro.`` are RESERVED for built-in policy state;
+  user code must not write them (see ROADMAP "Algorithm-state persistence").
+  The GP bandit owns ``repro.gp_bandit`` and stores one JSON blob under the
+  key ``state``.
+* Records are versioned (``STATE_SCHEMA_VERSION``). Any change to the field
+  set or semantics bumps the version; loaders treat an unknown version as a
+  cold start, never as an error.
+* Loading is defensive end to end: a corrupt, truncated, version-skewed,
+  dimension-mismatched or otherwise hostile blob yields ``None`` (cold fit),
+  never an exception that could fail a suggestion operation.
+
+The record carries the raw kernel hyperparameters, the Adam moments and step
+count (so the fit resumes mid-trajectory, not just from a good point), and a
+trial-count fingerprint guarding against a rewound datastore.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Any, Dict, List, Optional, Union
+
+import numpy as np
+
+from repro.core.metadata import Metadata, MetadataDelta, MetadataValue, Namespace
+
+# Reserved namespace prefix for built-in policy state. Stateless policies
+# (random/grid search, CMA-ES, ...) never write under it.
+RESERVED_NAMESPACE_PREFIX = "repro."
+
+GP_BANDIT_NAMESPACE = "repro.gp_bandit"
+STATE_KEY = "state"
+STATE_SCHEMA_VERSION = 1
+GP_BANDIT_ALGORITHM = "gp_bandit"
+
+# The hyperparameter tree layout shared by raw params and Adam moments:
+# key -> None for scalars, "dim" for (d,)-shaped vectors.
+_TREE_SHAPE = {"log_amp": None, "log_ell": "dim", "log_noise": None}
+
+
+class StateDecodeError(Exception):
+    """The stored blob is absent, corrupt, or incompatible (fall back cold)."""
+
+
+def _as_finite_float(name: str, value: Any) -> float:
+    try:
+        f = float(value)
+    except (TypeError, ValueError) as e:
+        raise StateDecodeError(f"{name}: not a number ({value!r})") from e
+    if not math.isfinite(f):
+        raise StateDecodeError(f"{name}: non-finite value {f!r}")
+    return f
+
+
+def _validate_tree(name: str, tree: Any, dim: int) -> Dict[str, Union[float, List[float]]]:
+    if not isinstance(tree, dict):
+        raise StateDecodeError(f"{name}: expected an object, got {type(tree).__name__}")
+    out: Dict[str, Union[float, List[float]]] = {}
+    for key, shape in _TREE_SHAPE.items():
+        if key not in tree:
+            raise StateDecodeError(f"{name}: missing key {key!r}")
+        value = tree[key]
+        if shape == "dim":
+            if not isinstance(value, (list, tuple)) or len(value) != dim:
+                raise StateDecodeError(
+                    f"{name}.{key}: expected a length-{dim} vector, got {value!r}")
+            out[key] = [_as_finite_float(f"{name}.{key}[{i}]", v)
+                        for i, v in enumerate(value)]
+        else:
+            out[key] = _as_finite_float(f"{name}.{key}", value)
+    return out
+
+
+def _tree_to_py(tree: Dict[str, Any]) -> Dict[str, Union[float, List[float]]]:
+    """jax/numpy hyperparameter tree -> JSON-able floats/lists."""
+    out: Dict[str, Union[float, List[float]]] = {}
+    for key, shape in _TREE_SHAPE.items():
+        arr = np.asarray(tree[key], dtype=np.float64)
+        out[key] = arr.tolist() if shape == "dim" else float(arr)
+    return out
+
+
+@dataclasses.dataclass
+class PolicyState:
+    """One fitted-GP checkpoint: hyperparameters + optimizer trajectory.
+
+    ``num_trials`` is the completed-trial fingerprint at fit time; a stored
+    fingerprint LARGER than the current count means the datastore was rewound
+    (trials deleted) and the state is stale. ``steps_run``/``warm_started``/
+    ``converged`` are observability fields used by tests and benchmarks.
+    """
+
+    dim: int
+    num_trials: int
+    raw: Dict[str, Union[float, List[float]]]
+    adam_m: Dict[str, Union[float, List[float]]]
+    adam_v: Dict[str, Union[float, List[float]]]
+    adam_t: int
+    steps_run: int = 0
+    warm_started: bool = False
+    converged: bool = False
+    version: int = STATE_SCHEMA_VERSION
+    algorithm: str = GP_BANDIT_ALGORITHM
+
+    # -- serialization -------------------------------------------------------
+    def to_value(self) -> str:
+        return json.dumps({
+            "version": self.version,
+            "algorithm": self.algorithm,
+            "dim": self.dim,
+            "num_trials": self.num_trials,
+            "raw": self.raw,
+            "adam_m": self.adam_m,
+            "adam_v": self.adam_v,
+            "adam_t": self.adam_t,
+            "steps_run": self.steps_run,
+            "warm_started": self.warm_started,
+            "converged": self.converged,
+        })
+
+    @classmethod
+    def from_value(cls, value: Optional[MetadataValue]) -> "PolicyState":
+        """Strict decode; raises StateDecodeError on anything suspect."""
+        if value is None:
+            raise StateDecodeError("no stored state")
+        if isinstance(value, bytes):
+            try:
+                value = value.decode("utf-8")
+            except UnicodeDecodeError as e:
+                raise StateDecodeError(f"undecodable bytes: {e}") from e
+        try:
+            obj = json.loads(value)
+        except (json.JSONDecodeError, TypeError) as e:
+            raise StateDecodeError(f"not valid JSON: {e}") from e
+        if not isinstance(obj, dict):
+            raise StateDecodeError(f"expected an object, got {type(obj).__name__}")
+        version = obj.get("version")
+        if version != STATE_SCHEMA_VERSION:
+            raise StateDecodeError(
+                f"schema version skew: stored {version!r}, "
+                f"supported {STATE_SCHEMA_VERSION}")
+        algorithm = obj.get("algorithm")
+        dim = obj.get("dim")
+        if not isinstance(dim, int) or dim <= 0:
+            raise StateDecodeError(f"bad dim {dim!r}")
+        num_trials = obj.get("num_trials")
+        if not isinstance(num_trials, int) or num_trials < 0:
+            raise StateDecodeError(f"bad num_trials {num_trials!r}")
+        adam_t = obj.get("adam_t")
+        if not isinstance(adam_t, int) or adam_t < 0:
+            raise StateDecodeError(f"bad adam_t {adam_t!r}")
+        try:
+            steps_run = int(obj.get("steps_run", 0))
+        except (TypeError, ValueError) as e:
+            raise StateDecodeError(f"bad steps_run {obj.get('steps_run')!r}") from e
+        return cls(
+            dim=dim,
+            num_trials=num_trials,
+            raw=_validate_tree("raw", obj.get("raw"), dim),
+            adam_m=_validate_tree("adam_m", obj.get("adam_m"), dim),
+            adam_v=_validate_tree("adam_v", obj.get("adam_v"), dim),
+            adam_t=adam_t,
+            steps_run=steps_run,
+            warm_started=bool(obj.get("warm_started", False)),
+            converged=bool(obj.get("converged", False)),
+            version=version,
+            algorithm=str(algorithm),
+        )
+
+    # -- use -----------------------------------------------------------------
+    def check_compatible(self, *, dim: int, num_trials: int,
+                         algorithm: str = GP_BANDIT_ALGORITHM) -> None:
+        if self.algorithm != algorithm:
+            raise StateDecodeError(
+                f"algorithm mismatch: stored {self.algorithm!r}, want {algorithm!r}")
+        if self.dim != dim:
+            raise StateDecodeError(
+                f"dimension mismatch: stored {self.dim}, search space has {dim}")
+        if self.num_trials > num_trials:
+            raise StateDecodeError(
+                f"stale fingerprint: stored num_trials={self.num_trials} > "
+                f"current {num_trials} (datastore rewound?)")
+
+    def fit_init(self) -> Dict[str, Any]:
+        """The warm-start init accepted by GaussianProcessBandit.fit."""
+        return {"raw": self.raw, "adam_m": self.adam_m, "adam_v": self.adam_v,
+                "adam_t": self.adam_t}
+
+    @classmethod
+    def from_fit(cls, info, *, dim: int, num_trials: int) -> "PolicyState":
+        """Builds the record from a GaussianProcessBandit FitInfo."""
+        return cls(
+            dim=dim,
+            num_trials=num_trials,
+            raw=_tree_to_py(info.raw),
+            adam_m=_tree_to_py(info.m),
+            adam_v=_tree_to_py(info.v),
+            adam_t=info.t,
+            steps_run=info.steps_run,
+            warm_started=info.warm,
+            converged=info.converged,
+        )
+
+
+def load_state(metadata: Metadata, *, dim: int, num_trials: int,
+               namespace: str = GP_BANDIT_NAMESPACE) -> Optional[PolicyState]:
+    """Reads + validates the stored state; ``None`` on ANY problem.
+
+    This is the only entry point policies use at suggest time, so it must
+    never raise: a hostile or stale blob degrades to a cold fit.
+    """
+    try:
+        value = metadata.abs_ns(Namespace(namespace)).get(STATE_KEY)
+        state = PolicyState.from_value(value)
+        state.check_compatible(dim=dim, num_trials=num_trials)
+        return state
+    except StateDecodeError:
+        return None
+    except Exception:  # noqa: BLE001 — a bad blob must never fail a suggest
+        return None
+
+
+def store_state(delta: MetadataDelta, state: PolicyState,
+                namespace: str = GP_BANDIT_NAMESPACE) -> None:
+    """Writes the record into a policy's outgoing MetadataDelta."""
+    delta.assign(namespace, STATE_KEY, state.to_value())

@@ -58,11 +58,11 @@ class DatastorePolicySupporter(PolicySupporter):
         return trials
 
     def SendMetadata(self, delta: MetadataDelta) -> None:
-        if not delta.on_study._store and not delta.on_trials:
+        if delta.empty():
             return
-        self._ds.update_study_metadata(self._study_guid, delta.on_study)
-        for trial_id, md in delta.on_trials.items():
-            self._ds.update_trial_metadata(self._study_guid, trial_id, md)
+        # one atomic datastore application (policy state saving, paper §6.3):
+        # the backend holds its lock across the read-modify-write
+        self._ds.apply_metadata_delta(self._study_guid, delta)
 
     def GetTrialsMulti(
         self, study_guids: List[str], *, status_matches: Optional[str] = None

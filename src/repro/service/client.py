@@ -22,7 +22,7 @@ from __future__ import annotations
 import time
 from typing import Dict, List, Optional, Union
 
-from repro.core.metadata import Metadata
+from repro.core.metadata import Metadata, MetadataDelta
 from repro.core.study import Measurement, Study, StudyState, Trial, TrialState
 from repro.core.study_config import StudyConfig
 from repro.service.rpc import RpcClient, StatusCode, VizierRpcError
@@ -168,6 +168,27 @@ class VizierClient:
         )
         op = self._await_operation(result["operation"], timeout=timeout)
         return bool((op.get("result") or {}).get("should_stop", False))
+
+    # -- metadata ----------------------------------------------------------------------------
+    def update_metadata(self, delta: "MetadataDelta") -> List[int]:
+        """Pushes a MetadataDelta (study and/or per-trial) to the service.
+
+        Returns the trial ids whose per-trial updates were skipped because
+        the trial no longer exists (the study-level half still applies).
+        Namespaces starting with ``repro.`` are reserved for algorithm state
+        (e.g. the GP-bandit's warm-start checkpoint); writing them from user
+        code risks corrupting policy state — which the policies tolerate (a
+        bad blob degrades to a cold fit) but callers should not rely on.
+        """
+        result = self._rpc.call(
+            "UpdateMetadata",
+            {"name": self._study_name, "delta": delta.to_proto()},
+        )
+        return [int(t) for t in result.get("skipped_trials") or []]
+
+    def get_study_metadata(self) -> Metadata:
+        """The study-level metadata, including persisted algorithm state."""
+        return self.get_study_config().metadata
 
     # -- reads -------------------------------------------------------------------------------
     def get_study_config(self) -> StudyConfig:

@@ -145,6 +145,27 @@ class Datastore:
         trial.metadata.attach(metadata)
         self.update_trial(study_name, trial)
 
+    def apply_metadata_delta(self, study_name: str, delta) -> List[int]:
+        """Applies a policy MetadataDelta (study + per-trial) in one go.
+
+        This is how persisted algorithm state (e.g. the GP-bandit's
+        ``repro.gp_bandit`` checkpoint) reaches the store. Per-trial updates
+        naming a trial that no longer exists are skipped — a policy may
+        reference ids deleted mid-operation — and the skipped ids are
+        returned so RPC callers can surface them. Backends override to hold
+        their lock across the whole read-modify-write so concurrent deltas
+        cannot interleave and lose writes.
+        """
+        if delta.on_study._store:
+            self.update_study_metadata(study_name, delta.on_study)
+        skipped: List[int] = []
+        for trial_id, md in delta.on_trials.items():
+            try:
+                self.update_trial_metadata(study_name, trial_id, md)
+            except NotFoundError:
+                skipped.append(trial_id)
+        return skipped
+
 
 # ---------------------------------------------------------------------------
 
@@ -284,6 +305,19 @@ class InMemoryDatastore(Datastore):
                     if state_values is None or bucket[tid].get("state") in state_values
                 ]
             return out
+
+    # metadata ----------------------------------------------------------------
+    def update_study_metadata(self, study_name: str, metadata: Metadata) -> None:
+        with self._lock:  # atomic read-modify-write (RLock: reentrant)
+            super().update_study_metadata(study_name, metadata)
+
+    def update_trial_metadata(self, study_name, trial_id, metadata) -> None:
+        with self._lock:
+            super().update_trial_metadata(study_name, trial_id, metadata)
+
+    def apply_metadata_delta(self, study_name: str, delta) -> List[int]:
+        with self._lock:
+            return super().apply_metadata_delta(study_name, delta)
 
     # ops -------------------------------------------------------------------------
     def put_operation(self, op: dict) -> None:
@@ -535,6 +569,19 @@ class SQLiteDatastore(Datastore):
             for name, blobs in self._fetch_trial_blobs_multi(
                 study_names, states).items()
         }
+
+    # metadata ----------------------------------------------------------------
+    def update_study_metadata(self, study_name: str, metadata: Metadata) -> None:
+        with self._lock:  # atomic read-modify-write (RLock: reentrant)
+            super().update_study_metadata(study_name, metadata)
+
+    def update_trial_metadata(self, study_name, trial_id, metadata) -> None:
+        with self._lock:
+            super().update_trial_metadata(study_name, trial_id, metadata)
+
+    def apply_metadata_delta(self, study_name: str, delta) -> List[int]:
+        with self._lock:
+            return super().apply_metadata_delta(study_name, delta)
 
     # ops ---------------------------------------------------------------------------
     def put_operation(self, op: dict) -> None:

@@ -110,6 +110,9 @@ class PythiaServicer(Servicer):
                                           prefetched=snapshot,
                                           buffer_metadata=buffer_metadata)
         policy = make_policy(config.algorithm, supporter, config)
+        # persisted algorithm state reaches the policy through the config's
+        # metadata (request.study_metadata), which rode the single
+        # GetTrialsMulti(include_studies) frame — zero extra RPCs
         decision = policy.suggest(
             SuggestRequest(study_descriptor=descriptor, count=count)
         )

@@ -456,12 +456,7 @@ class VizierService(Servicer):
     def _apply_delta_locked(self, study_name: str, delta) -> None:
         """Apply policy metadata (algorithm state; paper §6.3). Lock held."""
         if delta is not None and not delta.empty():
-            self._ds.update_study_metadata(study_name, delta.on_study)
-            for tid, md in delta.on_trials.items():
-                try:
-                    self._ds.update_trial_metadata(study_name, tid, md)
-                except NotFoundError:
-                    pass
+            self._ds.apply_metadata_delta(study_name, delta)
 
     def _create_trials_locked(self, study_name: str, client_id: str,
                               suggestions) -> List[Trial]:
@@ -815,10 +810,11 @@ class VizierService(Servicer):
         study_name = params["name"]
         delta = MetadataDelta.from_proto(params["delta"])
         self._get_study_or_rpc_error(study_name)
-        self._ds.update_study_metadata(study_name, delta.on_study)
-        for tid, md in delta.on_trials.items():
-            self._ds.update_trial_metadata(study_name, tid, md)
-        return {}
+        # atomic under the backend lock; per-trial entries naming deleted
+        # trials are skipped instead of failing a half-applied delta, and
+        # the skipped ids are reported so callers can detect stale targets
+        skipped = self._ds.apply_metadata_delta(study_name, delta)
+        return {"skipped_trials": skipped}
 
     def ListAlgorithms(self, params: dict) -> dict:
         return {"algorithms": registered_algorithms()}

@@ -277,6 +277,63 @@ def test_old_pythia_binary_fallback():
 
 
 # ---------------------------------------------------------------------------
+# Persisted algorithm state on the Figure-2 split (paper §6.3)
+# ---------------------------------------------------------------------------
+
+
+def test_stateless_policies_never_write_gp_state_namespace(dist_server):
+    """RANDOM_SEARCH and CMA-ES must never touch the reserved
+    ``repro.gp_bandit`` namespace — it belongs to the GP-bandit alone."""
+    from repro.pythia.state import GP_BANDIT_NAMESPACE
+
+    for i, algorithm in enumerate(("RANDOM_SEARCH", "CMA_ES")):
+        c = VizierClient.load_or_create_study(
+            f"stateless-{i}", _config(algorithm), client_id="w",
+            target=dist_server.address)
+        for r in range(3):
+            (t,) = c.get_suggestions(count=1)
+            c.complete_trial({"obj": 0.1 * r}, trial_id=t.id)
+        md = dist_server.datastore.get_study(c.study_name).study_config.metadata
+        namespaces = {ns.encode() for ns in md.namespaces()}
+        assert not any(ns.startswith(GP_BANDIT_NAMESPACE) for ns in namespaces), (
+            algorithm, namespaces)
+        # the designer wrappers persist under their own namespace instead
+        assert any(ns.startswith("pythia.designer_state") for ns in namespaces)
+        c.close()
+
+
+@pytest.mark.dist
+def test_warm_state_survives_pythia_restart(dist_server):
+    """Warm-start state lives in the API server's datastore, not the Pythia
+    process: kill and revive Pythia between operations and the next fit must
+    still resume from the persisted checkpoint."""
+    from repro.core.metadata import Namespace
+    from repro.pythia.state import GP_BANDIT_NAMESPACE, STATE_KEY, PolicyState
+
+    c = _seed_deterministic(dist_server.address, "restart-state")
+
+    def stored_state():
+        md = dist_server.datastore.get_study(c.study_name).study_config.metadata
+        blob = md.abs_ns(Namespace(GP_BANDIT_NAMESPACE)).get(STATE_KEY)
+        assert blob is not None
+        return PolicyState.from_value(blob)
+
+    (t1,) = c.get_suggestions(count=1)
+    assert not stored_state().warm_started  # first fit is cold
+    c.complete_trial({"obj": 0.11}, trial_id=t1.id)
+
+    dist_server.stop_pythia()
+    dist_server.restart_pythia()
+
+    (t2,) = c.get_suggestions(count=1)
+    state = stored_state()
+    assert state.warm_started  # the fresh Pythia process resumed the fit
+    assert state.num_trials == 7  # 6 seeded + 1 completed
+    assert t2.id != t1.id
+    c.close()
+
+
+# ---------------------------------------------------------------------------
 # Fault injection (paper: the Figure-2 split "remains fully fault-tolerant")
 # ---------------------------------------------------------------------------
 

@@ -1,18 +1,20 @@
 #!/usr/bin/env python
-"""Coverage floor for the service layer: repro.service must stay >= 80%.
+"""Coverage floors for the service + algorithm layers.
 
-With pytest-cov installed this is exactly
+``repro.service`` must stay >= 80% and ``repro.pythia`` >= 70%. With
+pytest-cov installed this is one run per package of
 
-    pytest --cov=repro.service --cov-fail-under=80 <service tests>
+    pytest --cov=<pkg> --cov-fail-under=<floor> <coverage tests>
 
 This container ships no coverage wheel and dependencies cannot be added, so
 the fallback measures line coverage with the stdlib ``trace`` module over the
-service-focused test modules and enforces the same floor: executable lines
-come from ``trace._find_executable_linenos`` (the same lnotab walk the trace
-CLI uses), executed lines from a count-mode tracer installed on every thread
-(the RPC servers handle frames on worker threads).
+coverage-focused test modules and enforces the same floors in ONE traced
+pytest run: executable lines come from ``trace._find_executable_linenos``
+(the same lnotab walk the trace CLI uses), executed lines from a count-mode
+tracer installed on every thread (the RPC servers handle frames on worker
+threads).
 
-Usage: python tools/check_coverage.py [--fail-under PCT]
+Usage: python tools/check_coverage.py [--fail-under PCT] [--pythia-fail-under PCT]
 """
 
 from __future__ import annotations
@@ -26,34 +28,52 @@ import trace as trace_mod
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(ROOT, "src")
-PKG_DIR = os.path.join(SRC, "repro", "service")
 
-# The tests that exercise the service layer. Slow/distributed markers are
-# excluded: the floor must be cheap enough to run on every `make test`.
-SERVICE_TESTS = [
+# The tests that exercise the measured layers. Slow/distributed markers are
+# excluded: the floors must be cheap enough to run on every `make test`.
+COVERAGE_TESTS = [
     "tests/test_rpc.py",
     "tests/test_datastore.py",
     "tests/test_service.py",
     "tests/test_batch_suggest.py",
     "tests/test_pythia_remote.py",
     "tests/test_early_stopping.py",
+    "tests/test_designers.py",
+    "tests/test_gp_bandit.py",
+    "tests/test_policy_state.py",
 ]
 
 
-def run_with_pytest_cov(fail_under: float) -> int:
+def _packages(args) -> "list[tuple[str, str, float]]":
+    return [
+        ("repro.service", os.path.join(SRC, "repro", "service"), args.fail_under),
+        ("repro.pythia", os.path.join(SRC, "repro", "pythia"),
+         args.pythia_fail_under),
+    ]
+
+
+def run_with_pytest_cov(packages) -> int:
     import pytest
 
-    return pytest.main([
-        "-q", "-m", "not slow",
-        "--cov=repro.service", f"--cov-fail-under={fail_under}",
-        *SERVICE_TESTS,
-    ])
+    # One pytest run per package: --cov-fail-under is a single global floor,
+    # so per-package floors need separate runs (or parsing coverage data,
+    # which cannot be validated in this container — it ships no pytest-cov;
+    # the stdlib-trace fallback below scores both packages in one run).
+    for name, _pkg_dir, floor in packages:
+        rc = pytest.main([
+            "-q", "-m", "not slow",
+            f"--cov={name}", f"--cov-fail-under={floor}",
+            *COVERAGE_TESTS,
+        ])
+        if rc != 0:
+            return int(rc)
+    return 0
 
 
-def run_with_stdlib_trace(fail_under: float) -> int:
+def run_with_stdlib_trace(packages) -> int:
     # Pay the heavy third-party imports BEFORE the tracer is installed: the
     # per-call hook makes jax's import graph crawl, and none of it counts
-    # toward repro.service coverage anyway.
+    # toward the measured packages anyway.
     import msgpack  # noqa: F401
     import pytest
 
@@ -62,67 +82,80 @@ def run_with_stdlib_trace(fail_under: float) -> int:
     except ImportError:
         pass
 
-    # Only repro.service is measured, so skip the line hook everywhere else:
-    # tracing the GP/kernel code (which jax re-traces through Python) would
-    # make this check minutes slower without changing the verdict.
+    # Only the measured packages count, so skip the line hook everywhere
+    # else: tracing the kernel/model code (which jax re-traces through
+    # Python) would make this check minutes slower without changing the
+    # verdict.
+    measured_dirs = [pkg_dir for _, pkg_dir, _ in packages]
     repro_dir = os.path.join(SRC, "repro")
     ignore_dirs = [sys.prefix, sys.exec_prefix] + [
         os.path.join(repro_dir, d) for d in os.listdir(repro_dir)
-        if d != "service" and os.path.isdir(os.path.join(repro_dir, d))
+        if os.path.isdir(os.path.join(repro_dir, d))
+        and os.path.join(repro_dir, d) not in measured_dirs
     ]
     tracer = trace_mod.Trace(count=1, trace=0, ignoredirs=ignore_dirs)
     threading.settrace(tracer.globaltrace)
     sys.settrace(tracer.globaltrace)
     try:
         rc = pytest.main(["-q", "-m", "not slow", "-p", "no:cacheprovider",
-                          *SERVICE_TESTS])
+                          *COVERAGE_TESTS])
     finally:
         sys.settrace(None)
         threading.settrace(None)  # type: ignore[arg-type]
     if rc != 0:
-        print(f"coverage: service tests failed (exit {rc}); no coverage verdict")
+        print(f"coverage: tests failed (exit {rc}); no coverage verdict")
         return int(rc)
 
     executed: dict[str, set] = {}
     for (fname, lineno) in tracer.results().counts:
         fname = os.path.abspath(fname)
-        if fname.startswith(PKG_DIR):
-            executed.setdefault(fname, set()).add(lineno)
+        for _, pkg_dir, _ in packages:
+            if fname.startswith(pkg_dir):
+                executed.setdefault(fname, set()).add(lineno)
+                break
 
-    total_executable = total_executed = 0
-    print(f"\ncoverage of repro.service ({os.path.relpath(PKG_DIR, ROOT)}):")
-    for py in sorted(glob.glob(os.path.join(PKG_DIR, "*.py"))):
-        executable = set(trace_mod._find_executable_linenos(py))
-        if not executable:
-            continue
-        hit = executed.get(os.path.abspath(py), set()) & executable
-        total_executable += len(executable)
-        total_executed += len(hit)
-        pct = 100.0 * len(hit) / len(executable)
-        print(f"  {os.path.basename(py):24s} {len(hit):4d}/{len(executable):4d}"
-              f"  {pct:5.1f}%")
-    pct = 100.0 * total_executed / max(total_executable, 1)
-    verdict = "PASS" if pct >= fail_under else "FAIL"
-    print(f"  {'TOTAL':24s} {total_executed:4d}/{total_executable:4d}"
-          f"  {pct:5.1f}%  (floor {fail_under:.0f}%)  {verdict}")
-    return 0 if pct >= fail_under else 2
+    worst_rc = 0
+    for name, pkg_dir, floor in packages:
+        total_executable = total_executed = 0
+        print(f"\ncoverage of {name} ({os.path.relpath(pkg_dir, ROOT)}):")
+        for py in sorted(glob.glob(os.path.join(pkg_dir, "*.py"))):
+            executable = set(trace_mod._find_executable_linenos(py))
+            if not executable:
+                continue
+            hit = executed.get(os.path.abspath(py), set()) & executable
+            total_executable += len(executable)
+            total_executed += len(hit)
+            pct = 100.0 * len(hit) / len(executable)
+            print(f"  {os.path.basename(py):24s} {len(hit):4d}/{len(executable):4d}"
+                  f"  {pct:5.1f}%")
+        pct = 100.0 * total_executed / max(total_executable, 1)
+        verdict = "PASS" if pct >= floor else "FAIL"
+        print(f"  {'TOTAL':24s} {total_executed:4d}/{total_executable:4d}"
+              f"  {pct:5.1f}%  (floor {floor:.0f}%)  {verdict}")
+        if pct < floor:
+            worst_rc = 2
+    return worst_rc
 
 
 def main() -> int:
     parser = argparse.ArgumentParser(description=__doc__)
-    parser.add_argument("--fail-under", type=float, default=80.0)
+    parser.add_argument("--fail-under", type=float, default=80.0,
+                        help="repro.service floor (default 80)")
+    parser.add_argument("--pythia-fail-under", type=float, default=70.0,
+                        help="repro.pythia floor (default 70)")
     args = parser.parse_args()
     if SRC not in sys.path:
         sys.path.insert(0, SRC)
     os.chdir(ROOT)
+    packages = _packages(args)
     try:
         import pytest_cov  # noqa: F401
         has_pytest_cov = True
     except ImportError:
         has_pytest_cov = False
     if has_pytest_cov:
-        return run_with_pytest_cov(args.fail_under)
-    return run_with_stdlib_trace(args.fail_under)
+        return run_with_pytest_cov(packages)
+    return run_with_stdlib_trace(packages)
 
 
 if __name__ == "__main__":
