@@ -2,23 +2,23 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-fast smoke test-dist cov-service bench-batched bench-remote-pythia bench-warmstart
+.PHONY: test test-fast smoke test-dist cov-service bench-batched bench-remote-pythia bench-warmstart bench-transfer
 
 # tier-1: the full suite (what the driver runs), then the coverage floors
-# (repro.service >= 80%, repro.pythia >= 70%; pytest-cov when installed,
-# stdlib-trace fallback otherwise)
+# (repro.service >= 80%, repro.pythia >= 70%, repro.core >= 70%; pytest-cov
+# when installed, stdlib-trace fallback otherwise)
 test:
 	$(PY) -m pytest -x -q
-	$(PY) tools/check_coverage.py --fail-under 80 --pythia-fail-under 70
+	$(PY) tools/check_coverage.py --fail-under 80 --pythia-fail-under 70 --core-fail-under 70
 
 # distributed-topology tests only (Figure-2 split: real sockets, fault
 # injection, cross-process end-to-end) — includes the slow-marked e2e
 test-dist:
 	$(PY) -m pytest -q -m dist
 
-# the service/pythia coverage floors on their own
+# the service/pythia/core coverage floors on their own
 cov-service:
-	$(PY) tools/check_coverage.py --fail-under 80 --pythia-fail-under 70
+	$(PY) tools/check_coverage.py --fail-under 80 --pythia-fail-under 70 --core-fail-under 70
 
 # marker split: everything except the heavyweight model/system tests
 test-fast:
@@ -37,3 +37,6 @@ bench-remote-pythia:
 
 bench-warmstart:
 	PYTHONPATH=.:src $(PY) benchmarks/service_throughput.py --warm-start
+
+bench-transfer:
+	PYTHONPATH=.:src $(PY) benchmarks/service_throughput.py --transfer

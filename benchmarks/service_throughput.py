@@ -260,6 +260,70 @@ def bench_warm_start(trial_counts=(50, 200, 500), n_repeats=7) -> None:
              f"warm_vs_cold={ratio:.1f}x (floor 2x at n>=200) {verdict}")
 
 
+def bench_transfer(n_prior_trials=60, shift=0.07, tol=0.01, max_trials=25,
+                   n_repeats=3) -> None:
+    """Transfer learning (stacked residual GP over prior studies) vs a cold
+    study, on a shifted-objective family: trials-to-target and the
+    suggestion-latency overhead the prior stack adds.
+
+    A prior study is seeded with ``n_prior_trials`` evaluations of the base
+    objective; the target study optimizes the same family with its optimum
+    shifted by ``shift``. Target reached when the best observed value is
+    within ``tol`` of the optimum (0.0). The transfer study must reach it in
+    no more trials than the cold study (floor, asserted PASS/FAIL).
+    """
+    import numpy as np
+
+    def objective(params, s):
+        x, y = float(params["x"]), float(params["y"])
+        return -((x - (0.30 + s)) ** 2) - 0.5 * ((y - (0.60 - s)) ** 2)
+
+    server = DefaultVizierServer()
+    prior = VizierClient.load_or_create_study(
+        "xfer-prior", _gp_config(), client_id="seed", target=server.address)
+    rng = np.random.RandomState(0)
+    for _ in range(n_prior_trials):
+        p = {"x": float(rng.rand()), "y": float(rng.rand())}
+        t = Trial(parameters=p)
+        t.complete(Measurement(metrics={"obj": objective(p, 0.0)}))
+        prior.add_trial(t)
+
+    def run_to_target(tag, priors):
+        trials_used, suggest_ms = [], []
+        for rep in range(n_repeats):
+            c = VizierClient.load_or_create_study(
+                f"xfer-{tag}-{rep}", _gp_config(), client_id="w",
+                target=server.address, prior_studies=priors)
+            best, used = float("-inf"), max_trials
+            for i in range(1, max_trials + 1):
+                t0 = time.perf_counter()
+                (t,) = c.get_suggestions(count=1)
+                suggest_ms.append((time.perf_counter() - t0) * 1e3)
+                val = objective(t.parameters.as_dict(), shift)
+                c.complete_trial({"obj": val}, trial_id=t.id)
+                best = max(best, val)
+                if best >= -tol:
+                    used = i
+                    break
+            trials_used.append(used)
+            c.close()
+        med = lambda xs: sorted(xs)[len(xs) // 2]
+        return med(trials_used), med(suggest_ms)
+
+    cold_trials, cold_ms = run_to_target("cold", None)
+    xfer_trials, xfer_ms = run_to_target("warm", [prior.study_name])
+    emit("transfer.cold.trials_to_target", cold_trials,
+         f"median over {n_repeats} runs, suggest_p50={cold_ms:.1f}ms")
+    emit("transfer.stacked.trials_to_target", xfer_trials,
+         f"median over {n_repeats} runs, suggest_p50={xfer_ms:.1f}ms")
+    verdict = "PASS" if xfer_trials <= cold_trials else "FAIL"
+    emit("transfer.trials_saved", cold_trials - xfer_trials,
+         f"cold={cold_trials} transfer={xfer_trials} "
+         f"latency_overhead={xfer_ms - cold_ms:+.1f}ms {verdict}")
+    prior.close()
+    server.stop()
+
+
 def bench_crash_recovery(tmpdir="/tmp/bench_crash.db") -> None:
     import os
 
@@ -301,6 +365,10 @@ def main() -> None:
     parser.add_argument("--warm-start", action="store_true",
                         help="run the warm-started GP-bandit scenario "
                              "(persisted PolicyState vs cold refit)")
+    parser.add_argument("--transfer", action="store_true",
+                        help="run the transfer-learning scenario (stacked "
+                             "residual GP over a prior study vs cold, "
+                             "trials-to-target on a shifted objective)")
     args = parser.parse_args()
     if args.batched:
         for n in (1, 8, 64):
@@ -312,6 +380,9 @@ def main() -> None:
         return
     if args.warm_start:
         bench_warm_start()
+        return
+    if args.transfer:
+        bench_transfer()
         return
     for n in (1, 4, 16):
         bench_throughput(n)

@@ -85,14 +85,24 @@ class ParameterValue:
         if isinstance(self.value, bool):
             return {"string_value": "true" if self.value else "false"}
         if isinstance(self.value, (int, float)):
-            return {"number_value": float(self.value)}
+            # native type on the wire: int stays int, float stays float, so
+            # from_proto can reconstruct exactly what the user set
+            return {"number_value": self.value}
         return {"string_value": str(self.value)}
 
     @classmethod
     def from_proto(cls, proto: dict) -> "ParameterValue":
         if "number_value" in proto:
+            # The wire (msgpack/json) distinguishes int from float, so the
+            # user-set type survives the roundtrip: 3.0 stays a float, 3 an
+            # int. (Demoting integral doubles here used to make
+            # ParameterDict.as_dict() return a different type than was set.)
+            # Migration note: blobs persisted before this change stored every
+            # numeric as float, so their INTEGER values now read back as
+            # integral floats — use .as_int when the config says INTEGER.
             v = proto["number_value"]
-            return cls(int(v) if float(v).is_integer() and isinstance(v, (int, float)) and abs(v) < 2**53 and v == int(v) else v)
+            return cls(int(v) if isinstance(v, int) and not isinstance(v, bool)
+                       else float(v))
         return cls(proto.get("string_value", ""))
 
 
@@ -185,14 +195,18 @@ class ParameterConfig:
                 raise ValueError(f"{self.name}: CATEGORICAL requires categories")
             if len(set(self.categories)) != len(self.categories):
                 raise ValueError(f"{self.name}: duplicate categories")
+        # the categorical check must precede the LOG-domain check below: that
+        # one dereferences bounds/feasible_values, which a CATEGORICAL config
+        # has neither of (it used to crash with TypeError before reaching the
+        # intended error)
+        if self.scale_type is not None and self.type == ParameterType.CATEGORICAL:
+            raise ValueError(f"{self.name}: categorical parameters cannot have a scale_type")
         if self.scale_type in (ScaleType.LOG, ScaleType.REVERSE_LOG):
             lo, _ = self.bounds if self.bounds else (min(self.feasible_values), 0)
             if lo <= 0:
                 raise ValueError(
                     f"{self.name}: {self.scale_type} scaling requires strictly positive domain"
                 )
-        if self.scale_type is not None and self.type == ParameterType.CATEGORICAL:
-            raise ValueError(f"{self.name}: categorical parameters cannot have a scale_type")
         if self.default_value is not None and not self.contains(
             ParameterValue(self.default_value)
         ):

@@ -141,6 +141,20 @@ class AutomatedStoppingConfig:
         )
 
 
+def _validate_prior_study_names(names: Sequence[str]) -> List[str]:
+    """Normalizes a prior-study list: non-empty strings, deduplicated with
+    the first occurrence's position kept (stacking order is significant)."""
+    out: List[str] = []
+    for n in names or ():
+        if not isinstance(n, str) or not n:
+            raise ValueError(
+                f"prior_study_names entries must be non-empty study resource "
+                f"names, got {n!r}")
+        if n not in out:
+            out.append(n)
+    return out
+
+
 @dataclasses.dataclass
 class StudyConfig:
     """PyVizier StudyConfig == StudySpec proto + SearchSpace (paper Table 2)."""
@@ -153,10 +167,23 @@ class StudyConfig:
         default_factory=AutomatedStoppingConfig
     )
     metadata: Metadata = dataclasses.field(default_factory=Metadata)
-    # Names of prior studies whose trials seed transfer learning.
+    # Resource names of prior studies whose completed trials seed transfer
+    # learning (stacked residual GP; earlier names are deeper in the stack).
     prior_study_names: List[str] = dataclasses.field(default_factory=list)
 
+    def __post_init__(self):
+        self.prior_study_names = _validate_prior_study_names(self.prior_study_names)
+
     # -- convenience ----------------------------------------------------------
+    @property
+    def prior_studies(self) -> List[str]:
+        """Alias for ``prior_study_names`` (the user-facing transfer API)."""
+        return self.prior_study_names
+
+    @prior_studies.setter
+    def prior_studies(self, names: Sequence[str]) -> None:
+        self.prior_study_names = _validate_prior_study_names(names)
+
     @property
     def metric_information(self) -> MetricsConfig:
         return self.metrics

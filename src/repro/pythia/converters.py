@@ -5,6 +5,15 @@ types; CATEGORICAL parameters are one-hot encoded. Inactive conditional
 parameters are imputed at 0.5 with an extra "active" indicator feature so
 regressors can distinguish inactive from mid-range (paper §4.2 notes the
 independence invariance conditionality conveys).
+
+Imputation policy (featurizer hardening): a parameter value that is missing,
+out of the current domain (e.g. an unknown categorical from a stale or
+cross-study trial), or unparsable featurizes exactly like an *inactive*
+conditional parameter — uniform mass over the one-hot block or the 0.5
+midpoint, with the active indicator at 0 when present. One bad stored value
+must never crash a whole suggest operation; this is also what lets prior
+studies' trials flow through the *current* study's featurizer for transfer
+learning (see ``align_prior_trials``).
 """
 
 from __future__ import annotations
@@ -54,22 +63,38 @@ class TrialToArrayConverter:
     def n_params(self) -> int:
         return len(self._features)
 
+    @property
+    def parameter_names(self) -> List[str]:
+        return [f.config.name for f in self._features]
+
     def to_features(self, parameters_list: Sequence[ParameterDict]) -> np.ndarray:
         out = np.zeros((len(parameters_list), self.dim), dtype=np.float64)
         for i, params in enumerate(parameters_list):
             col = 0
             for f in self._features:
                 cfg = f.config
-                active = cfg.name in params
                 base_w = f.width - (1 if f.conditional else 0)
                 if f.one_hot:
+                    idx = None
+                    if cfg.name in params:
+                        try:
+                            idx = cfg.categories.index(params[cfg.name].as_str)
+                        except ValueError:
+                            idx = None  # out-of-domain category: impute
+                    active = idx is not None
                     if active:
-                        idx = cfg.categories.index(params[cfg.name].as_str)
                         out[i, col + idx] = 1.0
                     else:
                         out[i, col : col + base_w] = 1.0 / base_w
                 else:
-                    out[i, col] = cfg.to_unit(params[cfg.name]) if active else 0.5
+                    u = None
+                    if cfg.name in params:
+                        try:
+                            u = cfg.to_unit(params[cfg.name])
+                        except (TypeError, ValueError):
+                            u = None  # infeasible/unparsable value: impute
+                    active = u is not None
+                    out[i, col] = u if active else 0.5
                 if f.conditional:
                     out[i, col + base_w] = 1.0 if active else 0.0
                 col += f.width
@@ -103,6 +128,43 @@ class TrialToArrayConverter:
                 visit(cfg)
             out.append(params)
         return out
+
+
+def align_prior_trials(
+    prior_trials: Sequence[Trial],
+    prior_config: StudyConfig,
+    converter: TrialToArrayConverter,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Featurizes another study's completed trials through the CURRENT
+    study's converter (transfer learning, stacked residual GP).
+
+    Alignment rules:
+      * only parameters that exist in the current search space contribute;
+        extra parameters carried by a prior trial are ignored;
+      * parameters missing from a prior trial, or whose value is infeasible
+        in the current space (out-of-domain categorical, unparsable number),
+        are imputed by the converter's inactive encoding — never an error;
+      * trials sharing NO parameter name with the current space are dropped
+        (they carry no signal in the current geometry);
+      * the objective is the PRIOR study's own first metric, sign-flipped to
+        larger-is-better by *its* goal; trials it cannot score are dropped.
+
+    Returns (features, objectives) — objectives shaped (n,), un-normalized
+    (each stack level z-scores its own study's labels before fitting).
+    """
+    known = set(converter.parameter_names)
+    rows, ys = [], []
+    for t in prior_trials:
+        obj = prior_config.objective_values(t)
+        if obj is None:
+            continue
+        if not any(name in known for name in t.parameters):
+            continue
+        rows.append(t.parameters)
+        ys.append(obj[0])
+    if not rows:
+        return np.zeros((0, converter.dim)), np.zeros((0,))
+    return converter.to_features(rows), np.asarray(ys, dtype=np.float64)
 
 
 def trials_to_xy(

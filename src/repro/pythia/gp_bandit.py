@@ -33,7 +33,11 @@ from repro.core.metadata import Metadata, MetadataDelta
 from repro.core.study import TrialSuggestion
 from repro.core.study_config import ObservationNoise, StudyConfig
 from repro.kernels import ops as kops
-from repro.pythia.converters import TrialToArrayConverter, trials_to_xy
+from repro.pythia.converters import (
+    TrialToArrayConverter,
+    align_prior_trials,
+    trials_to_xy,
+)
 from repro.pythia.policy import (
     EarlyStopDecision,
     EarlyStopDecisions,
@@ -326,6 +330,109 @@ class GaussianProcessBandit:
         return out
 
 
+@jax.jit
+def _gp_alpha(raw: dict, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """The cached posterior-mean weights alpha = K^-1 y for a fitted level.
+
+    Factorizing once at fit time turns every later mean query from an
+    O(n^3) re-Cholesky into an O(n*m) kernel product (``_level_mean``)."""
+    params = GPParams(**raw)
+    n = x.shape[0]
+    noise = jnp.exp(params.log_noise) + 1e-4
+    K = _kernel(params, x, x) + noise * jnp.eye(n)
+    L = jnp.linalg.cholesky(K)
+    return jax.scipy.linalg.cho_solve((L, True), y)
+
+
+@jax.jit
+def _level_mean(raw: dict, x: jnp.ndarray, alpha: jnp.ndarray,
+                xq: jnp.ndarray) -> jnp.ndarray:
+    return _kernel(GPParams(**raw), x, xq).T @ alpha
+
+
+@dataclasses.dataclass
+class StackLevel:
+    """One fitted level of a residual stack: hyperparameters + the (x, y)
+    design it conditions on. ``y`` is already residual to the levels below;
+    ``alpha`` caches the mean weights so queries skip the Cholesky."""
+
+    raw: dict
+    x: jnp.ndarray      # (n, d) float32, current study's unit space
+    y: jnp.ndarray      # (n,) float32 residual targets
+    alpha: jnp.ndarray  # (n,) float32 K^-1 y
+
+
+def _zscore(y: np.ndarray) -> np.ndarray:
+    """Per-study label normalization (each stack level owns its own scale)."""
+    return (y - float(np.mean(y))) / float(np.std(y) + 1e-9)
+
+
+class StackedResidualGP:
+    """Sequential residual GP stack for transfer learning (paper's transfer
+    capability; stacking per the Vizier GP-bandit design, arXiv:2408.11527).
+
+    ``fit_level`` appends one base GP fitted — via the same vectorized jitted
+    paths as the single-study bandit — on the residuals of the stack so far:
+    level 0 models the first prior study, level 1 the second prior's residual
+    to level 0, ..., and the final level the *current* study's residual to
+    everything below. The stacked posterior has mean = sum of level means and
+    the TOP level's variance (lower levels act as a learned mean prior, they
+    do not inflate predictive uncertainty).
+    """
+
+    def __init__(self, dim: int, *, seed: int = 0):
+        self.dim = dim
+        self.seed = seed
+        self.levels: List[StackLevel] = []
+        self.last_fit: Optional[FitInfo] = None
+
+    @property
+    def depth(self) -> int:
+        return len(self.levels)
+
+    def mean(self, xq, *, below: Optional[int] = None) -> np.ndarray:
+        """Summed posterior mean of the first ``below`` levels (default all)
+        at the query points — one batched ``_posterior`` solve per level."""
+        levels = self.levels if below is None else self.levels[:below]
+        total = np.zeros((len(xq),), np.float32)
+        if not levels:
+            return total
+        xq_j = jnp.asarray(xq, jnp.float32)
+        for lvl in levels:
+            total = total + np.asarray(
+                _level_mean(lvl.raw, lvl.x, lvl.alpha, xq_j))
+        return total
+
+    def fit_level(self, x: np.ndarray, y: np.ndarray,
+                  init: Optional[Dict] = None) -> dict:
+        """Fits the next level on ``y`` minus the stack-so-far mean at ``x``.
+
+        ``y`` must already be label-normalized for its own study. Returns the
+        fitted raw hyperparameters; ``last_fit`` carries the FitInfo (the top
+        level's is what the warm-start checkpoint persists).
+        """
+        resid = np.asarray(y, np.float32) - self.mean(x)
+        gp = GaussianProcessBandit(dim=self.dim, seed=self.seed)
+        raw = gp.fit(x, resid, init=init)
+        self.last_fit = gp.last_fit
+        x_j = jnp.asarray(x, jnp.float32)
+        y_j = jnp.asarray(resid, jnp.float32)
+        self.levels.append(StackLevel(
+            raw=raw, x=x_j, y=y_j, alpha=_gp_alpha(raw, x_j, y_j),
+        ))
+        return raw
+
+    def predict(self, xq) -> "tuple[np.ndarray, np.ndarray]":
+        """Stacked posterior (mean of all levels, std of the top level)."""
+        if not self.levels:
+            raise ValueError("predict() on an empty stack")
+        top = self.levels[-1]
+        m_top, s_top = _posterior(top.raw, top.x, top.y,
+                                  jnp.asarray(xq, jnp.float32))
+        mean = self.mean(xq, below=self.depth - 1) + np.asarray(m_top)
+        return mean, np.asarray(s_top)
+
+
 class GPBanditPolicy(Policy):
     """The paper's GP-bandit example as a full Pythia policy.
 
@@ -335,20 +442,69 @@ class GPBanditPolicy(Policy):
     resumes the fit from it on the next operation — the paper's §6.3 state
     mechanism applied to the hyperparameter optimization. Incompatible or
     corrupt state silently degrades to a cold fit.
+
+    Transfer learning: when the study lists ``prior_study_names``, their
+    completed trials are aligned into the current study's feature space
+    (``align_prior_trials``) and fitted as a sequential residual stack
+    (``StackedResidualGP``) underneath the current study's GP; the
+    acquisition maximizes stacked-mean + beta * top-level-std. A prior study
+    that is missing, deleted, unreadable, or unalignable is skipped — the
+    fully degraded case is exactly the single-study cold fit, never a failed
+    operation. With priors present the policy suggests from the stack even
+    before ``min_completed`` current trials exist (that head start is the
+    point of transfer).
     """
 
     def __init__(self, supporter: PolicySupporter, *, n_candidates: int = 2000,
-                 min_completed: int = 5, seed: int = 0, warm_start: bool = True):
+                 min_completed: int = 5, seed: int = 0, warm_start: bool = True,
+                 min_prior_trials: int = 5):
         self._supporter = supporter
         self._n_candidates = n_candidates
         self._min_completed = min_completed
         self._seed = seed
         self._warm_start = warm_start
+        self._min_prior_trials = min_prior_trials
         # observability for tests/benchmarks (mirrors
         # SerializableDesignerPolicy.last_restore_was_incremental)
         self.last_fit_seconds: float = 0.0
         self.last_fit_steps: int = 0
         self.last_fit_warm: bool = False
+        self.last_transfer_levels: int = 0
+
+    def _load_priors(self, request: SuggestRequest,
+                     converter: TrialToArrayConverter):
+        """[(study name, aligned features, labels)] per usable prior study.
+
+        Defensive end to end: a deleted prior study, a failed multi-read, a
+        config that no longer parses, or a trial set that does not align all
+        degrade to skipping that prior — never to a failed operation.
+        """
+        config = request.study_config
+        names = [n for n in config.prior_study_names if n != request.study_guid]
+        if not names or config.is_multi_objective:
+            return []
+        try:
+            multi = self._supporter.GetTrialsMulti(
+                names, status_matches="SUCCEEDED")
+        except Exception:  # noqa: BLE001 — one bad prior must not kill all
+            multi = {}
+        out = []
+        for name in names:
+            try:
+                trials = multi.get(name)
+                if trials is None:
+                    trials = self._supporter.GetTrials(
+                        name, status_matches="SUCCEEDED")
+                if len(trials) < self._min_prior_trials:
+                    continue
+                prior_config = self._supporter.GetStudyConfig(name)
+                px, py = align_prior_trials(trials, prior_config, converter)
+                if px.shape[0] < self._min_prior_trials:
+                    continue
+                out.append((name, px, py))
+            except Exception:  # noqa: BLE001 — degrade to a colder fit
+                continue
+        return out
 
     def suggest(self, request: SuggestRequest) -> SuggestDecision:
         config = request.study_config
@@ -357,7 +513,15 @@ class GPBanditPolicy(Policy):
         x, y_all = trials_to_xy(completed, config, converter)
         rng = np.random.RandomState(self._seed + len(completed))
 
-        if x.shape[0] < self._min_completed or config.is_multi_objective:
+        priors = self._load_priors(request, converter)
+        self.last_transfer_levels = len(priors)
+        # reset per-operation observability: a priors-only suggest performs
+        # no current-study fit and must not report the previous one's
+        self.last_fit_seconds, self.last_fit_steps, self.last_fit_warm = \
+            0.0, 0, False
+
+        if (x.shape[0] < self._min_completed and not priors) or \
+                config.is_multi_objective:
             # cold start (or scalarize-free multi-objective fallback): random
             suggestions = [
                 TrialSuggestion(parameters=config.search_space.sample())
@@ -365,31 +529,47 @@ class GPBanditPolicy(Policy):
             ]
             return SuggestDecision(suggestions=suggestions)
 
-        y = y_all[:, 0]
-        y_mean, y_std = float(np.mean(y)), float(np.std(y) + 1e-9)
-        yn = (y - y_mean) / y_std
+        prior_fps = {name: int(px.shape[0]) for name, px, _py in priors}
+        stack = StackedResidualGP(dim=converter.dim, seed=self._seed)
+        for _name, px, py in priors:
+            stack.fit_level(px, _zscore(py))
 
-        state = None
-        if self._warm_start:
-            state = load_state(request.study_metadata, dim=converter.dim,
-                               num_trials=x.shape[0])
+        fit_info = None
+        if x.shape[0] >= 1:
+            yn = _zscore(y_all[:, 0])
+            state = None
+            if self._warm_start:
+                state = load_state(request.study_metadata, dim=converter.dim,
+                                   num_trials=x.shape[0],
+                                   prior_fingerprints=prior_fps)
+            stack.fit_level(
+                x, yn, init=state.fit_init() if state is not None else None)
+            fit_info = stack.last_fit
+            self.last_fit_seconds = fit_info.seconds
+            self.last_fit_steps = fit_info.steps_run
+            self.last_fit_warm = fit_info.warm
+        # acquisition works on the TOP level (the current study's residual GP
+        # when any current trials exist, else the deepest prior level); the
+        # levels below contribute a fixed mean shift.
+        top = stack.levels[-1]
+        raw = top.raw
+        n_below = stack.depth - 1
+        xs = np.asarray(top.x, np.float64)
+        ys = np.asarray(top.y, np.float64)
+        mu_xs = stack.mean(xs, below=n_below).astype(np.float64)
+
         gp = GaussianProcessBandit(dim=converter.dim, seed=self._seed)
-        raw = gp.fit(x, yn, init=state.fit_init() if state is not None else None)
-        fit_info = gp.last_fit
-        self.last_fit_seconds = fit_info.seconds
-        self.last_fit_steps = fit_info.steps_run
-        self.last_fit_warm = fit_info.warm
 
         # pending-trial fantasies discourage duplicates when noise is LOW
         pending = self._supporter.ActiveTrials(request.study_guid)
         fantasy_x = converter.to_features([t.parameters for t in pending]) if pending else None
 
         suggestions: List[TrialSuggestion] = []
-        xs, ys = x.copy(), yn.copy()
         for _ in range(request.count):
             cand = rng.rand(self._n_candidates, converter.dim)
             # local perturbations around the incumbent sharpen exploitation
-            best_x = xs[int(np.argmax(ys))]
+            # (incumbent = best STACKED value, not best residual)
+            best_x = xs[int(np.argmax(ys + mu_xs))]
             local = np.clip(
                 best_x[None, :] + 0.08 * rng.randn(self._n_candidates // 4, converter.dim),
                 0.0, 1.0,
@@ -407,6 +587,10 @@ class GPBanditPolicy(Policy):
                     gp.ucb_fantasized(raw, xs, ys, fantasy_x, cand, rng))
             else:
                 scores = np.asarray(gp.ucb(raw, xs, ys, cand))
+            if n_below:
+                # stacked acquisition: UCB in residual space + prior-stack
+                # mean (the top-level std already carries the uncertainty)
+                scores = scores + stack.mean(cand, below=n_below)
             pick = cand[int(np.argmax(scores))]
             params = converter.to_parameters(pick[None, :])[0]
             suggestions.append(TrialSuggestion(parameters=params))
@@ -416,8 +600,10 @@ class GPBanditPolicy(Policy):
                                  jnp.asarray(pick[None, :], jnp.float32))
             xs = np.vstack([xs, pick[None, :]])
             ys = np.concatenate([ys, np.asarray(mean)])
+            mu_xs = np.concatenate(
+                [mu_xs, stack.mean(pick[None, :], below=n_below)])
 
-        if self._warm_start:
+        if self._warm_start and fit_info is not None:
             # persist the fit checkpoint so the next (stateless) invocation
             # resumes Adam instead of refitting from scratch. SendMetadata is
             # the single write path: in-process it applies atomically through
@@ -426,7 +612,8 @@ class GPBanditPolicy(Policy):
             # so the service never applies the same checkpoint twice.
             delta = MetadataDelta()
             store_state(delta, PolicyState.from_fit(
-                fit_info, dim=converter.dim, num_trials=x.shape[0]))
+                fit_info, dim=converter.dim, num_trials=x.shape[0],
+                prior_fingerprints=prior_fps))
             self._supporter.SendMetadata(delta)
         return SuggestDecision(suggestions=suggestions)
 

@@ -37,7 +37,12 @@ RESERVED_NAMESPACE_PREFIX = "repro."
 
 GP_BANDIT_NAMESPACE = "repro.gp_bandit"
 STATE_KEY = "state"
-STATE_SCHEMA_VERSION = 1
+# v2 (transfer learning): adds ``prior_fingerprints`` — aligned-trial counts
+# per prior study at fit time. The persisted trajectory is the TOP (residual)
+# level of the stack, so any change in the prior data it was fit against
+# (priors grew, shrank, or the prior list changed) invalidates it. Per the
+# version-bump policy (ROADMAP), v1 blobs are treated as a cold start.
+STATE_SCHEMA_VERSION = 2
 GP_BANDIT_ALGORITHM = "gp_bandit"
 
 # The hyperparameter tree layout shared by raw params and Adam moments:
@@ -106,6 +111,8 @@ class PolicyState:
     steps_run: int = 0
     warm_started: bool = False
     converged: bool = False
+    # study name -> number of aligned prior trials the stack was fit on (v2)
+    prior_fingerprints: Dict[str, int] = dataclasses.field(default_factory=dict)
     version: int = STATE_SCHEMA_VERSION
     algorithm: str = GP_BANDIT_ALGORITHM
 
@@ -123,6 +130,7 @@ class PolicyState:
             "steps_run": self.steps_run,
             "warm_started": self.warm_started,
             "converged": self.converged,
+            "prior_fingerprints": dict(self.prior_fingerprints),
         })
 
     @classmethod
@@ -160,6 +168,15 @@ class PolicyState:
             steps_run = int(obj.get("steps_run", 0))
         except (TypeError, ValueError) as e:
             raise StateDecodeError(f"bad steps_run {obj.get('steps_run')!r}") from e
+        pf = obj.get("prior_fingerprints", {})
+        if not isinstance(pf, dict):
+            raise StateDecodeError(f"bad prior_fingerprints {pf!r}")
+        prior_fingerprints: Dict[str, int] = {}
+        for k, v in pf.items():
+            if not isinstance(k, str) or not isinstance(v, int) or \
+                    isinstance(v, bool) or v < 0:
+                raise StateDecodeError(f"bad prior_fingerprints entry {k!r}: {v!r}")
+            prior_fingerprints[k] = v
         return cls(
             dim=dim,
             num_trials=num_trials,
@@ -170,13 +187,16 @@ class PolicyState:
             steps_run=steps_run,
             warm_started=bool(obj.get("warm_started", False)),
             converged=bool(obj.get("converged", False)),
+            prior_fingerprints=prior_fingerprints,
             version=version,
             algorithm=str(algorithm),
         )
 
     # -- use -----------------------------------------------------------------
     def check_compatible(self, *, dim: int, num_trials: int,
-                         algorithm: str = GP_BANDIT_ALGORITHM) -> None:
+                         algorithm: str = GP_BANDIT_ALGORITHM,
+                         prior_fingerprints: Optional[Dict[str, int]] = None,
+                         ) -> None:
         if self.algorithm != algorithm:
             raise StateDecodeError(
                 f"algorithm mismatch: stored {self.algorithm!r}, want {algorithm!r}")
@@ -187,6 +207,14 @@ class PolicyState:
             raise StateDecodeError(
                 f"stale fingerprint: stored num_trials={self.num_trials} > "
                 f"current {num_trials} (datastore rewound?)")
+        # the persisted trajectory is the TOP of the residual stack: any
+        # change in the prior data underneath it (a prior grew, vanished, or
+        # the list changed) makes the residual targets different, so the
+        # checkpoint must be discarded — exact equality required
+        if dict(self.prior_fingerprints) != dict(prior_fingerprints or {}):
+            raise StateDecodeError(
+                f"prior-study fingerprint skew: stored "
+                f"{self.prior_fingerprints!r} != current {prior_fingerprints!r}")
 
     def fit_init(self) -> Dict[str, Any]:
         """The warm-start init accepted by GaussianProcessBandit.fit."""
@@ -194,7 +222,9 @@ class PolicyState:
                 "adam_t": self.adam_t}
 
     @classmethod
-    def from_fit(cls, info, *, dim: int, num_trials: int) -> "PolicyState":
+    def from_fit(cls, info, *, dim: int, num_trials: int,
+                 prior_fingerprints: Optional[Dict[str, int]] = None,
+                 ) -> "PolicyState":
         """Builds the record from a GaussianProcessBandit FitInfo."""
         return cls(
             dim=dim,
@@ -206,10 +236,12 @@ class PolicyState:
             steps_run=info.steps_run,
             warm_started=info.warm,
             converged=info.converged,
+            prior_fingerprints=dict(prior_fingerprints or {}),
         )
 
 
 def load_state(metadata: Metadata, *, dim: int, num_trials: int,
+               prior_fingerprints: Optional[Dict[str, int]] = None,
                namespace: str = GP_BANDIT_NAMESPACE) -> Optional[PolicyState]:
     """Reads + validates the stored state; ``None`` on ANY problem.
 
@@ -219,7 +251,8 @@ def load_state(metadata: Metadata, *, dim: int, num_trials: int,
     try:
         value = metadata.abs_ns(Namespace(namespace)).get(STATE_KEY)
         state = PolicyState.from_value(value)
-        state.check_compatible(dim=dim, num_trials=num_trials)
+        state.check_compatible(dim=dim, num_trials=num_trials,
+                               prior_fingerprints=prior_fingerprints)
         return state
     except StateDecodeError:
         return None

@@ -134,15 +134,28 @@ class RemotePolicySupporter(PolicySupporter):
     per policy; the batch servicer merges them into the response's
     metadata_delta, which the API server applies under the study lock when it
     finalizes the operation.
+
+    ``configs`` (study_guid -> StudyConfig) serves GetStudyConfig from the
+    snapshot the single GetTrialsMulti(include_studies) frame already
+    carried — the transfer-learning path reads prior studies' configs with
+    zero extra GetStudy frames. ``known_missing`` lists studies the API
+    server reported absent in that same frame: trial reads for them return
+    empty locally (the policy's defensive prior loading treats "no trials"
+    and "no study" identically — skip the prior) instead of burning an RPC
+    that is known to fail.
     """
 
     def __init__(self, rpc_client, study_guid: str, *,
                  prefetched: Optional[Dict[str, List[dict]]] = None,
-                 buffer_metadata: bool = False):
+                 buffer_metadata: bool = False,
+                 configs: Optional[Dict[str, StudyConfig]] = None,
+                 known_missing=()):
         self._rpc = rpc_client
         self._study_guid = study_guid
         self._prefetched = prefetched or {}
         self._buffer_metadata = buffer_metadata
+        self._configs = dict(configs or {})
+        self._known_missing = set(known_missing)
         self.buffered_deltas: List[MetadataDelta] = []
         # trial-id -> Trial, materialized on demand from the raw protos
         self._materialized: Dict[str, Dict[int, Trial]] = {}
@@ -170,6 +183,8 @@ class RemotePolicySupporter(PolicySupporter):
         return out
 
     def GetStudyConfig(self, study_guid: str) -> StudyConfig:
+        if study_guid in self._configs:
+            return self._configs[study_guid]
         result = self._rpc.call("GetStudy", {"name": study_guid})
         return StudyConfig.from_proto(result["study"]["study_spec"])
 
@@ -181,6 +196,8 @@ class RemotePolicySupporter(PolicySupporter):
         min_trial_id: Optional[int] = None,
         max_trial_id: Optional[int] = None,
     ) -> List[Trial]:
+        if study_guid in self._known_missing:
+            return []  # server already reported it absent on the prefetch
         if study_guid in self._prefetched:
             return self._select_prefetched(study_guid, status_matches,
                                            min_trial_id, max_trial_id)
@@ -202,7 +219,9 @@ class RemotePolicySupporter(PolicySupporter):
         out: Dict[str, List[Trial]] = {}
         missing = []
         for guid in study_guids:
-            if guid in self._prefetched:
+            if guid in self._known_missing:
+                out[guid] = []
+            elif guid in self._prefetched:
                 out[guid] = self._select_prefetched(guid, status_matches,
                                                     None, None)
             else:

@@ -58,8 +58,14 @@ class VizierClient:
         client_id: str,
         target,
         owner: str = "default",
+        prior_studies: Optional[List[str]] = None,
         **kwargs,
     ) -> "VizierClient":
+        """``prior_studies`` (transfer learning): resource names of earlier
+        studies — e.g. ``other_client.study_name`` — whose completed trials
+        warm the GP-bandit as a stacked residual prior. Earlier names sit
+        deeper in the stack. Only applies when the study is created here; a
+        prior study deleted later silently degrades to a cold fit."""
         rpc = RpcClient(target)
         name = f"owners/{owner}/studies/{display_name}"
         try:
@@ -71,6 +77,8 @@ class VizierClient:
                 raise ValueError(
                     f"study {name!r} does not exist and no study_config given"
                 ) from e
+            if prior_studies is not None:
+                study_config.prior_studies = list(prior_studies)
             rpc.call(
                 "CreateStudy",
                 {

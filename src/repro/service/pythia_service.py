@@ -68,47 +68,68 @@ class PythiaServicer(Servicer):
         return RpcClient(self._api_target)
 
     def _load_many(self, rpc: RpcClient, study_names: List[str]
-                   ) -> Dict[str, _LoadedStudy]:
+                   ) -> "Tuple[Dict[str, _LoadedStudy], dict]":
         """Configs + descriptors + trials for N studies, isolated per study.
 
         Exactly ONE GetTrialsMulti frame back to the API server regardless
-        of N: include_studies folds the config fetch in, and max_trial_id
-        comes from the fetched list itself — no separate GetStudy round, no
-        ListTrials just to compute the id watermark.
+        of N: include_studies folds the config fetch in, include_priors
+        folds every study's transfer-learning prior studies in, and
+        max_trial_id comes from the fetched list itself — no separate
+        GetStudy round, no ListTrials just to compute the id watermark.
+
+        Returns (per-study work-list entries, supporter context): the
+        context dict carries the full raw-trial ``snapshot`` (batched
+        studies AND their priors), the parsed ``configs`` for everything the
+        frame returned, and the server-reported ``missing`` names — all of
+        which RemotePolicySupporter serves locally so policies (including
+        the stacked-GP transfer reads) never re-RPC.
         """
         out: Dict[str, _LoadedStudy] = {}
         fetched = rpc.call("GetTrialsMulti", {
             "parents": study_names, "allow_missing": True,
-            "include_studies": True,
+            "include_studies": True, "include_priors": True,
         })
         by_study = fetched["trials_by_study"]
         study_protos = fetched["studies"]
+        configs: Dict[str, StudyConfig] = {}
+        for name, proto in study_protos.items():
+            try:
+                configs[name] = StudyConfig.from_proto(proto["study_spec"])
+            except Exception:  # noqa: BLE001 — a bad prior config is skipped
+                log.exception("unparsable study_spec for %s", name)
         for name in study_names:
-            if name not in study_protos:
+            if name not in configs:
                 out[name] = VizierRpcError(
                     StatusCode.NOT_FOUND, f"study {name!r}")
                 continue
-            config = StudyConfig.from_proto(study_protos[name]["study_spec"])
             raw_trials = by_study.get(name, [])
             max_id = max((int(t["id"]) for t in raw_trials), default=0)
             descriptor = StudyDescriptor(
-                config=config, guid=name, max_trial_id=max_id)
-            out[name] = (config, descriptor, raw_trials)
-        return out
+                config=configs[name], guid=name, max_trial_id=max_id)
+            out[name] = (configs[name], descriptor, raw_trials)
+        context = {
+            "snapshot": dict(by_study),
+            "configs": configs,
+            "missing": list(fetched.get("missing", ())),
+        }
+        return out, context
 
     def _load(self, rpc: RpcClient, study_name: str):
-        loaded = self._load_many(rpc, [study_name])[study_name]
+        loaded_map, context = self._load_many(rpc, [study_name])
+        loaded = loaded_map[study_name]
         if isinstance(loaded, VizierRpcError):
             raise loaded
-        return loaded
+        return loaded, context
 
     def _suggest_one(self, rpc: RpcClient, loaded, count: int,
-                     snapshot: Dict[str, List[dict]], *,
+                     context: dict, *,
                      buffer_metadata: bool = True) -> dict:
         config, descriptor, _ = loaded
         supporter = RemotePolicySupporter(rpc, descriptor.guid,
-                                          prefetched=snapshot,
-                                          buffer_metadata=buffer_metadata)
+                                          prefetched=context.get("snapshot") or {},
+                                          buffer_metadata=buffer_metadata,
+                                          configs=context.get("configs"),
+                                          known_missing=context.get("missing", ()))
         policy = make_policy(config.algorithm, supporter, config)
         # persisted algorithm state reaches the policy through the config's
         # metadata (request.study_metadata), which rode the single
@@ -153,13 +174,12 @@ class PythiaServicer(Servicer):
         try:
             name = params["study_name"]
             if self._single_fetch:
-                loaded = self._load(rpc, name)
-                snapshot = {name: loaded[2]}
+                loaded, context = self._load(rpc, name)
             else:
                 loaded = self._load_legacy(rpc, name)
-                snapshot = {}  # policy re-RPCs per state, as before
+                context = {}  # policy re-RPCs per state, as before
             return self._suggest_one(rpc, loaded, int(params["count"]),
-                                     snapshot,
+                                     context,
                                      buffer_metadata=self._single_fetch)
         finally:
             rpc.close()
@@ -194,11 +214,10 @@ class PythiaServicer(Servicer):
                     }}
                     continue
                 groups.setdefault(name, []).append((i, int(r.get("count", 1))))
-            loaded = self._load_many(rpc, list(groups)) if groups else {}
-            snapshot = {
-                n: entry[2] for n, entry in loaded.items()
-                if not isinstance(entry, VizierRpcError)
-            }
+            if groups:
+                loaded, context = self._load_many(rpc, list(groups))
+            else:
+                loaded, context = {}, {}
             for name, members in groups.items():
                 entry = loaded[name]
                 if isinstance(entry, VizierRpcError):
@@ -209,7 +228,7 @@ class PythiaServicer(Servicer):
                     continue
                 total = sum(count for _, count in members)
                 try:
-                    one = self._suggest_one(rpc, entry, total, snapshot)
+                    one = self._suggest_one(rpc, entry, total, context)
                 except Exception as e:  # noqa: BLE001 — isolate per study
                     log.exception("batched suggest for %s failed", name)
                     for i, _ in members:
@@ -249,9 +268,12 @@ class PythiaServicer(Servicer):
         rpc = self._rpc()
         try:
             name = params["study_name"]
-            config, descriptor, trials = self._load(rpc, name)
-            supporter = RemotePolicySupporter(rpc, name,
-                                              prefetched={name: trials})
+            (config, descriptor, _trials), context = self._load(rpc, name)
+            supporter = RemotePolicySupporter(
+                rpc, name,
+                prefetched=context.get("snapshot") or {},
+                configs=context.get("configs"),
+                known_missing=context.get("missing", ()))
             policy = make_policy(config.algorithm, supporter, config)
             decisions = policy.early_stop(
                 EarlyStopRequest(

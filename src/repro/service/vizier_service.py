@@ -140,9 +140,17 @@ class InProcessPythia(PythiaConnector):
 
     def suggest_batch(self, items: "List[tuple]"):
         study_names = list({study.name for study, _, _ in items})
+        # transfer learning: fold every batched study's prior studies into
+        # the same prefetch so the stacked-GP fit reads them from memory (a
+        # deleted prior just stays absent; the policy skips it)
+        prior_names = []
+        for study, _, _ in items:
+            for pn in getattr(study.study_config, "prior_study_names", ()):
+                if pn not in study_names and pn not in prior_names:
+                    prior_names.append(pn)
         # one multi-study query per state the policies read (completed for
         # the regressor fit, active for pending-trial fantasies)
-        snapshot = self._prefetch_snapshot(study_names)
+        snapshot = self._prefetch_snapshot(study_names + prior_names)
         out = []
         for study, count, client_id in items:
             try:
@@ -630,12 +638,18 @@ class VizierService(Servicer):
         """Many studies' trials in ONE frame (coalesced Pythia prefetch).
 
         params: {"parents": [study names], "states": [state values]?,
-                 "allow_missing": bool?, "include_studies": bool?}. Strict
+                 "allow_missing": bool?, "include_studies": bool?,
+                 "include_priors": bool?}. Strict
         by default (any unknown study is NOT_FOUND, matching ListTrials);
         with allow_missing the unknown names are reported in "missing"
         instead so one deleted study cannot poison a whole batch's prefetch.
         include_studies adds a "studies" map so the coalesced Pythia
         dispatch gets configs + trials for N studies in ONE frame.
+        include_priors (requires include_studies) additionally expands each
+        requested study's ``prior_study_names`` ONE level deep: the prior
+        studies' configs + trials join the same response maps (deleted
+        priors land in "missing", never an error), so a transfer-learning
+        suggest costs zero extra frames.
         """
         parents = list(params.get("parents") or [])
         states = [TrialState(s) for s in params.get("states", [])] or None
@@ -664,6 +678,26 @@ class VizierService(Servicer):
                 except NotFoundError:  # deleted between the two reads
                     del by_study[name]
                     missing.append(name)
+            if params.get("include_priors"):
+                # one-level transfer expansion (priors' own priors are NOT
+                # chased): a deleted prior is reported, never a failure
+                prior_names: List[str] = []
+                for sproto in studies.values():
+                    spec = sproto.get("study_spec") or {}
+                    for pn in spec.get("prior_study_names", ()):
+                        if pn not in by_study and pn not in prior_names \
+                                and pn not in missing:
+                            prior_names.append(pn)
+                for pn in prior_names:
+                    try:
+                        study_proto = self._ds.get_study(pn).to_proto()
+                        trials = self._ds.list_trials_multi_raw(
+                            [pn], states=states)[pn]
+                    except NotFoundError:
+                        missing.append(pn)
+                        continue
+                    studies[pn] = study_proto
+                    by_study[pn] = trials
             result["studies"] = studies
         return result
 

@@ -184,6 +184,71 @@ def test_search_space_sampling_within_bounds(space, seed):
     back.validate_parameters(params)
 
 
+@st.composite
+def conditional_spaces(draw):
+    """Random conditional trees: categorical parents, mixed-kind children,
+    occasional grandchildren."""
+    from repro.core import SearchSpace
+
+    space = SearchSpace()
+    root = space.select_root()
+    for i in range(draw(st.integers(min_value=1, max_value=3))):
+        cats = [f"c{j}" for j in range(draw(st.integers(min_value=2, max_value=4)))]
+        parent = root.add_categorical_param(f"p{i}", cats)
+        for k in range(draw(st.integers(min_value=0, max_value=3))):
+            matches = draw(st.lists(st.sampled_from(cats), min_size=1,
+                                    max_size=len(cats), unique=True))
+            scope = parent.select_values(matches)
+            name = f"p{i}_ch{k}"
+            kind = draw(st.sampled_from(["float", "int", "cat"]))
+            if kind == "float":
+                scope.add_float_param(name, 0.0, 1.0)
+            elif kind == "int":
+                scope.add_int_param(name, 0, 5)
+            else:
+                sub = scope.add_categorical_param(name, ["x", "y"])
+                if draw(st.booleans()):  # grandchild: depth-2 conditionality
+                    sub.select_values(["x"]).add_float_param(
+                        f"{name}_g", 0.0, 2.0)
+    return space
+
+
+def _tree_shape(space):
+    """The conditional tree as a comparable value: names, types, and the
+    parent-value matches guarding each child, recursively."""
+    def shape(cfg):
+        return (cfg.name, cfg.type.value, tuple(
+            (tuple(matches), shape(child)) for matches, child in cfg.children))
+    return tuple(shape(c) for c in space.parameters)
+
+
+@given(conditional_spaces(), st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=40, deadline=None)
+def test_conditional_tree_proto_roundtrip(space, seed):
+    """from_proto(to_proto(space)) preserves the conditional tree exactly,
+    and samples drawn from the roundtripped space validate in the original."""
+    import random as _random
+
+    from repro.core import SearchSpace
+
+    proto = space.to_proto()
+    back = SearchSpace.from_proto(proto)
+    assert back.to_proto() == proto
+    assert _tree_shape(back) == _tree_shape(space)
+    space.validate_parameters(back.sample(_random.Random(seed)))
+
+
+def test_prior_study_names_roundtrip(basic_config):
+    basic_config.prior_studies = [
+        "owners/o/studies/a", "owners/o/studies/b", "owners/o/studies/a"]
+    assert basic_config.prior_study_names == [
+        "owners/o/studies/a", "owners/o/studies/b"]  # deduped, order kept
+    back = StudyConfig.from_proto(basic_config.to_proto())
+    assert back.prior_study_names == basic_config.prior_study_names
+    # empty stays absent from the wire form
+    assert "prior_study_names" not in StudyConfig().to_proto()
+
+
 def test_metadata_namespaces():
     md = Metadata()
     md["top"] = "1"

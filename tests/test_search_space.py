@@ -87,6 +87,33 @@ def test_validation_errors():
                         default_value=11)
 
 
+@pytest.mark.parametrize("scale", [ScaleType.LOG, ScaleType.REVERSE_LOG,
+                                   ScaleType.LINEAR])
+def test_categorical_with_scale_type_raises_clean_valueerror(scale):
+    """Regression: a CATEGORICAL config with a scale_type used to crash with
+    TypeError (min() over feasible_values=None in the LOG-domain check)
+    before reaching the intended ValueError. The check order is now fixed."""
+    with pytest.raises(ValueError, match="cannot have a scale_type"):
+        ParameterConfig("act", ParameterType.CATEGORICAL,
+                        categories=["relu", "gelu"], scale_type=scale)
+
+
+@given(st.one_of(
+    st.floats(min_value=-1e9, max_value=1e9, allow_nan=False,
+              allow_infinity=False),
+    st.integers(min_value=-10**9, max_value=10**9),
+    st.text(max_size=20),
+))
+@settings(max_examples=200, deadline=None)
+def test_parameter_value_proto_roundtrip_preserves_type(v):
+    """Regression: integral DOUBLE values used to demote to int through the
+    wire (3.0 -> 3), so as_dict() returned a different type than was set.
+    (Bools are excluded: they serialize as "true"/"false" strings by design.)"""
+    back = ParameterValue.from_proto(ParameterValue(v).to_proto())
+    assert back.value == v
+    assert type(back.value) is type(v)
+
+
 def test_conditional_activation(conditional_config):
     space = conditional_config.search_space
     p = ParameterDict.from_dict({"model": "dnn", "num_layers": 3, "dropout": 0.1})

@@ -1,8 +1,9 @@
 #!/usr/bin/env python
-"""Coverage floors for the service + algorithm layers.
+"""Coverage floors for the core + service + algorithm layers.
 
-``repro.service`` must stay >= 80% and ``repro.pythia`` >= 70%. With
-pytest-cov installed this is one run per package of
+``repro.service`` must stay >= 80%, ``repro.pythia`` >= 70%, and
+``repro.core`` >= 70%. With pytest-cov installed this is one run per package
+of
 
     pytest --cov=<pkg> --cov-fail-under=<floor> <coverage tests>
 
@@ -41,6 +42,10 @@ COVERAGE_TESTS = [
     "tests/test_designers.py",
     "tests/test_gp_bandit.py",
     "tests/test_policy_state.py",
+    "tests/test_transfer.py",
+    "tests/test_search_space.py",
+    "tests/test_proto_roundtrip.py",
+    "tests/test_pareto.py",
 ]
 
 
@@ -49,6 +54,8 @@ def _packages(args) -> "list[tuple[str, str, float]]":
         ("repro.service", os.path.join(SRC, "repro", "service"), args.fail_under),
         ("repro.pythia", os.path.join(SRC, "repro", "pythia"),
          args.pythia_fail_under),
+        ("repro.core", os.path.join(SRC, "repro", "core"),
+         args.core_fail_under),
     ]
 
 
@@ -143,6 +150,8 @@ def main() -> int:
                         help="repro.service floor (default 80)")
     parser.add_argument("--pythia-fail-under", type=float, default=70.0,
                         help="repro.pythia floor (default 70)")
+    parser.add_argument("--core-fail-under", type=float, default=70.0,
+                        help="repro.core floor (default 70)")
     args = parser.parse_args()
     if SRC not in sys.path:
         sys.path.insert(0, SRC)
