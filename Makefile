@@ -2,23 +2,24 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-fast smoke test-dist cov-service bench-batched bench-remote-pythia bench-warmstart bench-transfer
+.PHONY: test test-fast smoke test-dist cov-service bench-batched bench-remote-pythia bench-warmstart bench-transfer bench-acquisition
 
 # tier-1: the full suite (what the driver runs), then the coverage floors
-# (repro.service >= 80%, repro.pythia >= 70%, repro.core >= 70%; pytest-cov
-# when installed, stdlib-trace fallback otherwise)
+# (repro.service >= 80%, repro.pythia >= 70%, repro.core >= 70%,
+# repro.kernels >= 70%; pytest-cov when installed, stdlib-trace fallback
+# otherwise)
 test:
 	$(PY) -m pytest -x -q
-	$(PY) tools/check_coverage.py --fail-under 80 --pythia-fail-under 70 --core-fail-under 70
+	$(PY) tools/check_coverage.py --fail-under 80 --pythia-fail-under 70 --core-fail-under 70 --kernels-fail-under 70
 
 # distributed-topology tests only (Figure-2 split: real sockets, fault
 # injection, cross-process end-to-end) — includes the slow-marked e2e
 test-dist:
 	$(PY) -m pytest -q -m dist
 
-# the service/pythia/core coverage floors on their own
+# the service/pythia/core/kernels coverage floors on their own
 cov-service:
-	$(PY) tools/check_coverage.py --fail-under 80 --pythia-fail-under 70 --core-fail-under 70
+	$(PY) tools/check_coverage.py --fail-under 80 --pythia-fail-under 70 --core-fail-under 70 --kernels-fail-under 70
 
 # marker split: everything except the heavyweight model/system tests
 test-fast:
@@ -40,3 +41,8 @@ bench-warmstart:
 
 bench-transfer:
 	PYTHONPATH=.:src $(PY) benchmarks/service_throughput.py --transfer
+
+# suggest-op latency: factorized-posterior engine vs the pre-engine path
+# (n in {50,300,1000} x count in {1,8}); writes BENCH_acquisition.json
+bench-acquisition:
+	PYTHONPATH=.:src $(PY) benchmarks/acquisition_latency.py

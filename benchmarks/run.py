@@ -18,6 +18,8 @@ MODULES = [
     ("state_recovery", "paper §6.3 metadata O(1) state restore"),
     ("parallel_tuning", "paper §5 parallel workers + crash rebind"),
     ("kernel_bench", "Pallas kernels (interpret) + analytic FLOPs"),
+    ("acquisition_latency",
+     "GP-bandit suggest-op latency: posterior engine vs pre-engine path"),
     ("roofline_report", "§Roofline table from dry-run artifacts"),
 ]
 

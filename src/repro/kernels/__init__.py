@@ -8,9 +8,10 @@ Layout per kernel:
               on TPU (or interpret=True when forced)
 
 Kernels:
-  gram            Matérn-5/2 Gram matrix — the GP-bandit hot-spot (paper §6.3
-                  notes cubic-cost GP suggestion; the Gram build is the
-                  bandwidth-bound part)
+  gram            Matérn-5/2 Gram matrix + fused Gram·vector (K^T·alpha
+                  without materializing the cross-Gram) — the GP-bandit
+                  hot-spots (paper §6.3 notes cubic-cost GP suggestion; the
+                  Gram build is the bandwidth-bound part)
   flash_attention chunked online-softmax attention for the model zoo
   mamba2_ssd      chunked state-space-dual scan (zamba2 hybrid blocks)
 """

@@ -32,6 +32,10 @@ def _default_impl() -> str:
 # n x m product for arbitrarily large acquisition batches.
 GRAM_BLOCK_ROWS = 4096
 
+# XLA matvec strip width over x1's rows: bounds the temporary cross-Gram to
+# (MATVEC_BLOCK_ROWS, m) — the Pallas path needs no strips at all.
+MATVEC_BLOCK_ROWS = 256
+
 
 def matern52_gram(
     x1: jnp.ndarray,
@@ -64,6 +68,55 @@ def matern52_gram(
     return matern52_gram_pallas(
         x1, x2, jnp.asarray(amplitude), interpret=(impl == "pallas_interpret")
     )
+
+
+def matern52_gram_matvec(
+    x1: jnp.ndarray,
+    x2: jnp.ndarray,
+    alpha: jnp.ndarray,
+    amplitude=1.0,
+    *,
+    impl: Impl = "auto",
+    block_rows: Optional[int] = None,
+) -> jnp.ndarray:
+    """Fused posterior-mean contraction K(x1, x2)^T · alpha -> (m,).
+
+    Never materializes the (n, m) cross-Gram: the Pallas kernel accumulates
+    tile-by-tile on TPU; the XLA path folds x1 row-strips into the output so
+    the peak temporary is (block_rows, m) instead of (n, m).
+
+    ``block_rows``: strip width over x1's rows on the XLA path. None = auto
+    (strips of MATVEC_BLOCK_ROWS once x1 has more rows than that); 0 = one
+    unblocked contraction.
+    """
+    impl = _default_impl() if impl == "auto" else impl
+    if impl != "xla":
+        from repro.kernels.gram import matern52_gram_matvec_pallas
+
+        return matern52_gram_matvec_pallas(
+            x1, x2, alpha, jnp.asarray(amplitude),
+            interpret=(impl == "pallas_interpret"))
+    n = x1.shape[0]
+    if block_rows is None:
+        block_rows = MATVEC_BLOCK_ROWS
+    if not block_rows or n <= block_rows:
+        return ref.matern52_gram_matvec(x1, x2, alpha, amplitude)
+    alpha = alpha.astype(jnp.float32)
+    pad = (-n) % block_rows
+    x1p = jnp.pad(x1.astype(jnp.float32), ((0, pad), (0, 0)))
+    ap = jnp.pad(alpha, (0, pad))  # zero alpha rows contribute nothing
+    strips = n // block_rows + (1 if pad else 0)
+
+    def fold(acc, strip):
+        xs, als = strip
+        return acc + ref.matern52_gram_matvec(xs, x2, als, amplitude), None
+
+    acc0 = jnp.zeros((x2.shape[0],), jnp.float32)
+    out, _ = jax.lax.scan(
+        fold, acc0,
+        (x1p.reshape(strips, block_rows, x1.shape[1]),
+         ap.reshape(strips, block_rows)))
+    return out
 
 
 def flash_attention(

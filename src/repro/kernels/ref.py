@@ -29,6 +29,19 @@ def matern52_gram(x1: jnp.ndarray, x2: jnp.ndarray, amplitude) -> jnp.ndarray:
     return amplitude * (1.0 + a + (a * a) / 3.0) * jnp.exp(-a)
 
 
+def matern52_gram_matvec(
+    x1: jnp.ndarray, x2: jnp.ndarray, alpha: jnp.ndarray, amplitude
+) -> jnp.ndarray:
+    """out[j] = sum_i K(x1_i, x2_j) * alpha[i] — the GP posterior mean at x2.
+
+    x1: (n, d), x2: (m, d), alpha: (n,) -> (m,). The oracle materializes the
+    full cross-Gram; the Pallas kernel (gram.py) and the blocked XLA dispatch
+    (ops.py) compute the same contraction tile-by-tile in O(m) memory.
+    """
+    K = matern52_gram(x1, x2, amplitude)  # (n, m)
+    return K.T @ alpha.astype(jnp.float32)
+
+
 # ---------------------------------------------------------------------------
 # Flash attention (causal / non-causal), GQA-aware
 # ---------------------------------------------------------------------------

@@ -4,18 +4,25 @@ Pipeline per suggestion operation (the Policy's lifespan):
   1. PolicySupporter loads completed trials.
   2. Featurize into [0,1]^d (scaling-aware; one-hot categoricals).
   3. Fit GP hyperparameters (ARD Matérn-5/2 + noise) by maximizing the log
-     marginal likelihood with Adam (jax.grad).
-  4. Maximize UCB over quasi-random candidates + local perturbations of the
-     incumbent; fantasize pending trials to avoid duplicate suggestions when
-     ObservationNoise is LOW (paper Appendix B.2).
+     marginal likelihood with Adam (jax.grad), resuming a persisted Adam
+     trajectory when one is stored (paper §6.3).
+  4. Maximize UCB over scrambled-Halton candidates + local perturbations of
+     the incumbent; fantasize pending trials to avoid duplicate suggestions
+     when ObservationNoise is LOW (paper Appendix B.2).
 
-Acquisition is fully vectorized: one jitted ``_ucb`` call scores the whole
-candidate pool (no per-candidate Python loop — ``ucb_reference`` keeps that
-form around purely as the numerical-equivalence oracle for tests), and
-pending-trial fantasization is a ``jax.vmap`` over fantasy outcome vectors,
-so F fantasized posteriors are evaluated in one batched solve. The Gram
-matrix goes through repro.kernels.ops.matern52_gram (Pallas on TPU, blocked
-column strips for candidate pools >= 4096 rows).
+Acquisition runs on the factorized-posterior engine
+(``repro.pythia.posterior.CholeskyPosterior``): K(X, X) is factorized ONCE
+per suggest operation right after the fit, every mean/std/UCB query is
+served from the cached (L, w), pending fantasies and batch members extend
+the factor with O(n^2) rank-1 appends, and all shapes are padded to
+power-of-two buckets so the jitted kernels stop retracing across
+operations. Stack-level means go through the fused ``matern52_gram_matvec``
+kernel — all levels batched into one device call, no (n, m) cross-Gram
+materialization. The pre-engine path (one full Cholesky per batch member
+inside jitted ``_ucb``/``_posterior``) is kept behind
+``GPBanditPolicy(use_engine=False)`` as the numerical oracle and the
+baseline for ``make bench-acquisition``; ``ucb_reference`` keeps the
+per-candidate loop purely as the equivalence oracle for tests.
 """
 
 from __future__ import annotations
@@ -33,6 +40,7 @@ from repro.core.metadata import Metadata, MetadataDelta
 from repro.core.study import TrialSuggestion
 from repro.core.study_config import ObservationNoise, StudyConfig
 from repro.kernels import ops as kops
+from repro.pythia import halton
 from repro.pythia.converters import (
     TrialToArrayConverter,
     align_prior_trials,
@@ -47,9 +55,23 @@ from repro.pythia.policy import (
     SuggestDecision,
     SuggestRequest,
 )
-from repro.pythia.state import PolicyState, load_state, store_state
+from repro.pythia.posterior import (
+    CholeskyPosterior,
+    pool_bucket,
+    train_bucket,
+)
+from repro.pythia.state import (
+    PolicyState,
+    load_prior_levels,
+    load_state,
+    store_state,
+)
 
 jax.config.update("jax_enable_x64", False)
+
+# acquisition exploration weight (GaussianProcessBandit's default; the
+# policy reads it here instead of constructing a throwaway instance)
+DEFAULT_UCB_BETA = 1.8
 
 
 @dataclasses.dataclass
@@ -67,18 +89,26 @@ def _kernel(params: GPParams, x1: jnp.ndarray, x2: jnp.ndarray) -> jnp.ndarray:
     return kops.matern52_gram(x1 / ell, x2 / ell, amp, impl="auto")
 
 
-@functools.partial(jax.jit, static_argnums=())
-def _neg_mll(raw: dict, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+@jax.jit
+def _neg_mll(raw: dict, x: jnp.ndarray, y: jnp.ndarray,
+             mask: jnp.ndarray) -> jnp.ndarray:
+    """Masked negative log marginal likelihood over a bucket-padded design.
+
+    Padding rows (mask 0, y 0) contribute an identity block to K, zero to
+    the quadratic form and zero to the log-determinant, so the value differs
+    from the unpadded MLL only in nothing at all — while the (x, y) shapes
+    stay constant across trial counts within a bucket (no retrace per op).
+    """
     params = GPParams(**raw)
-    n = x.shape[0]
     noise = jnp.exp(params.log_noise) + 1e-4
-    K = _kernel(params, x, x) + noise * jnp.eye(n)
+    K = _kernel(params, x, x) * (mask[:, None] * mask[None, :])
+    K = K + jnp.diag(noise * mask + (1.0 - mask))
     L = jnp.linalg.cholesky(K)
     alpha = jax.scipy.linalg.cho_solve((L, True), y)
     mll = (
         -0.5 * jnp.dot(y, alpha)
         - jnp.sum(jnp.log(jnp.diagonal(L)))
-        - 0.5 * n * jnp.log(2.0 * jnp.pi)
+        - 0.5 * jnp.sum(mask) * jnp.log(2.0 * jnp.pi)
     )
     # weak log-normal priors keep hyperparameters sane on tiny datasets
     prior = (
@@ -118,8 +148,8 @@ def _ucb_from_posterior(raw: dict, x, y, xq, beta) -> jnp.ndarray:
     return mean + beta * std
 
 
-# UCB over the whole candidate pool in one call (vectorized over xq's rows
-# through the batched posterior solve).
+# Pre-engine pool scoring: one full Cholesky per call. Kept as the legacy
+# baseline (use_engine=False) and the oracle behind ``ucb_reference``.
 _ucb = jax.jit(_ucb_from_posterior)
 
 # Fantasized UCB: vmap over F fantasy outcome vectors for the SAME design
@@ -167,10 +197,15 @@ class GaussianProcessBandit:
     of ``fit_steps``; a cold fit's first ``fit_steps`` steps are
     bit-identical to the pre-warm-start behavior unless it genuinely plateaus
     below ``grad_tol`` (cold trajectories sit well above it in practice).
+
+    The design matrix is bucket-padded (``posterior.train_bucket``) with
+    noise-masked rows before entering the jitted MLL, so the Adam loop
+    compiles once per bucket instead of once per trial count.
     """
 
     def __init__(self, dim: int, *, fit_steps: int = 60, lr: float = 0.08,
-                 ucb_beta: float = 1.8, seed: int = 0, grad_tol: float = 0.01):
+                 ucb_beta: float = DEFAULT_UCB_BETA, seed: int = 0,
+                 grad_tol: float = 0.01):
         self.dim = dim
         self.fit_steps = fit_steps
         self.lr = lr
@@ -199,8 +234,15 @@ class GaussianProcessBandit:
         Adam moments and step count; the optimizer resumes mid-trajectory.
         """
         t_wall = time.perf_counter()
-        y = jnp.asarray(y, jnp.float32)
-        x = jnp.asarray(x, jnp.float32)
+        n, d = np.asarray(x).shape
+        bucket = train_bucket(n)
+        xb = np.zeros((bucket, d), np.float32)
+        yb = np.zeros((bucket,), np.float32)
+        mb = np.zeros((bucket,), np.float32)
+        xb[:n], yb[:n], mb[:n] = x, y, 1.0
+        x = jnp.asarray(xb)
+        y = jnp.asarray(yb)
+        mask = jnp.asarray(mb)
         warm = init is not None
         if warm:
             raw = self._tree_f32(init["raw"])
@@ -215,7 +257,7 @@ class GaussianProcessBandit:
         converged = diverged = False
         loss = float("inf")
         for t in range(t0 + 1, t0 + self.fit_steps + 1):
-            loss, g = _mll_grad(raw, x, y)
+            loss, g = _mll_grad(raw, x, y, mask)
             steps += 1
             loss = float(loss)
             if not np.isfinite(loss):  # singular cholesky: keep best-so-far
@@ -265,7 +307,7 @@ class GaussianProcessBandit:
             result = raw if loss <= best_loss else best_raw
             traj_raw, traj_m, traj_v, traj_t = raw, m, v, t0 + steps
         else:
-            final_loss = float(_mll_grad(raw, x, y)[0])
+            final_loss = float(_mll_grad(raw, x, y, mask)[0])
             if not np.isfinite(final_loss):
                 # the never-evaluated post-update end-point is singular:
                 # persist the best point with cold moments, exactly like the
@@ -331,35 +373,38 @@ class GaussianProcessBandit:
 
 
 @jax.jit
-def _gp_alpha(raw: dict, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
-    """The cached posterior-mean weights alpha = K^-1 y for a fitted level.
+def _stack_means(raw_stack: dict, xs: jnp.ndarray, alphas: jnp.ndarray,
+                 xq: jnp.ndarray) -> jnp.ndarray:
+    """Summed posterior means of a level stack in ONE device call.
 
-    Factorizing once at fit time turns every later mean query from an
-    O(n^3) re-Cholesky into an O(n*m) kernel product (``_level_mean``)."""
-    params = GPParams(**raw)
-    n = x.shape[0]
-    noise = jnp.exp(params.log_noise) + 1e-4
-    K = _kernel(params, x, x) + noise * jnp.eye(n)
-    L = jnp.linalg.cholesky(K)
-    return jax.scipy.linalg.cho_solve((L, True), y)
-
-
-@jax.jit
-def _level_mean(raw: dict, x: jnp.ndarray, alpha: jnp.ndarray,
-                xq: jnp.ndarray) -> jnp.ndarray:
-    return _kernel(GPParams(**raw), x, xq).T @ alpha
+    ``raw_stack`` leaves carry a leading level axis; ``xs`` (levels, B, d)
+    and ``alphas`` (levels, B) are bucket-padded with zero alpha on padding,
+    so padded rows contribute exactly nothing. Each level is a fused
+    ``matern52_gram_matvec`` — the (n, m) cross-Gram is never materialized
+    and there is no per-level host sync.
+    """
+    total = jnp.zeros((xq.shape[0],), jnp.float32)
+    for i in range(xs.shape[0]):  # static depth: unrolled into one program
+        ell = jnp.exp(raw_stack["log_ell"][i])
+        amp = jnp.exp(raw_stack["log_amp"][i])
+        total = total + kops.matern52_gram_matvec(
+            xs[i] / ell, xq / ell, alphas[i], amp, impl="auto")
+    return total
 
 
 @dataclasses.dataclass
 class StackLevel:
     """One fitted level of a residual stack: hyperparameters + the (x, y)
     design it conditions on. ``y`` is already residual to the levels below;
-    ``alpha`` caches the mean weights so queries skip the Cholesky."""
+    ``posterior`` is the level's cached Cholesky factorization (built once
+    at fit time — queries and appends never refactorize) and ``alpha`` its
+    K^-1 y mean weights feeding the fused stack-mean matvec."""
 
     raw: dict
     x: jnp.ndarray      # (n, d) float32, current study's unit space
     y: jnp.ndarray      # (n,) float32 residual targets
     alpha: jnp.ndarray  # (n,) float32 K^-1 y
+    posterior: CholeskyPosterior
 
 
 def _zscore(y: np.ndarray) -> np.ndarray:
@@ -371,13 +416,19 @@ class StackedResidualGP:
     """Sequential residual GP stack for transfer learning (paper's transfer
     capability; stacking per the Vizier GP-bandit design, arXiv:2408.11527).
 
-    ``fit_level`` appends one base GP fitted — via the same vectorized jitted
-    paths as the single-study bandit — on the residuals of the stack so far:
-    level 0 models the first prior study, level 1 the second prior's residual
-    to level 0, ..., and the final level the *current* study's residual to
-    everything below. The stacked posterior has mean = sum of level means and
-    the TOP level's variance (lower levels act as a learned mean prior, they
-    do not inflate predictive uncertainty).
+    ``fit_level`` appends one base GP fitted on the residuals of the stack
+    so far: level 0 models the first prior study, level 1 the second prior's
+    residual to level 0, ..., and the final level the *current* study's
+    residual to everything below. The stacked posterior has mean = sum of
+    level means and the TOP level's variance (lower levels act as a learned
+    mean prior, they do not inflate predictive uncertainty). Passing
+    ``raw=`` reuses persisted hyperparameters (schema v3 per-prior-level
+    checkpoints) and skips the Adam fit entirely — the level then costs one
+    Cholesky instead of ``fit_steps`` likelihood evaluations.
+
+    Level means are served by one batched ``_stack_means`` call over
+    bucket-padded per-level arrays — a single device dispatch regardless of
+    stack depth, with no cross-Gram materialization.
     """
 
     def __init__(self, dim: int, *, seed: int = 0):
@@ -385,63 +436,97 @@ class StackedResidualGP:
         self.seed = seed
         self.levels: List[StackLevel] = []
         self.last_fit: Optional[FitInfo] = None
+        self._stacked_cache: Dict[int, tuple] = {}
 
     @property
     def depth(self) -> int:
         return len(self.levels)
 
+    def _stacked_arrays(self, below: int):
+        """Bucket-padded (raw_stack, xs, alphas) for levels[:below], cached
+        per depth (rebuilt only when a new level is fitted)."""
+        if below not in self._stacked_cache:
+            levels = self.levels[:below]
+            bucket = max(train_bucket(int(lvl.x.shape[0])) for lvl in levels)
+            xs = np.zeros((len(levels), bucket, self.dim), np.float32)
+            alphas = np.zeros((len(levels), bucket), np.float32)
+            for i, lvl in enumerate(levels):
+                n = int(lvl.x.shape[0])
+                xs[i, :n] = np.asarray(lvl.x)
+                alphas[i, :n] = np.asarray(lvl.alpha)[:n]
+            raw_stack = {
+                k: jnp.stack([jnp.asarray(lvl.raw[k], jnp.float32)
+                              for lvl in levels])
+                for k in ("log_amp", "log_ell", "log_noise")
+            }
+            self._stacked_cache[below] = (
+                raw_stack, jnp.asarray(xs), jnp.asarray(alphas))
+        return self._stacked_cache[below]
+
     def mean(self, xq, *, below: Optional[int] = None) -> np.ndarray:
         """Summed posterior mean of the first ``below`` levels (default all)
-        at the query points — one batched ``_posterior`` solve per level."""
-        levels = self.levels if below is None else self.levels[:below]
-        total = np.zeros((len(xq),), np.float32)
-        if not levels:
-            return total
-        xq_j = jnp.asarray(xq, jnp.float32)
-        for lvl in levels:
-            total = total + np.asarray(
-                _level_mean(lvl.raw, lvl.x, lvl.alpha, xq_j))
-        return total
+        at the query points — every level folded into one fused batched
+        gram-matvec dispatch (query shapes bucket-padded, so steady-state
+        calls never retrace)."""
+        below = self.depth if below is None else below
+        m = len(xq)
+        if below <= 0 or m == 0:
+            return np.zeros((m,), np.float32)
+        raw_stack, xs, alphas = self._stacked_arrays(below)
+        xqp = np.zeros((pool_bucket(m), self.dim), np.float32)
+        xqp[:m] = np.asarray(xq, np.float32)
+        return np.asarray(
+            _stack_means(raw_stack, xs, alphas, jnp.asarray(xqp)))[:m]
 
     def fit_level(self, x: np.ndarray, y: np.ndarray,
-                  init: Optional[Dict] = None) -> dict:
+                  init: Optional[Dict] = None, raw: Optional[Dict] = None,
+                  capacity: Optional[int] = None) -> dict:
         """Fits the next level on ``y`` minus the stack-so-far mean at ``x``.
 
-        ``y`` must already be label-normalized for its own study. Returns the
-        fitted raw hyperparameters; ``last_fit`` carries the FitInfo (the top
-        level's is what the warm-start checkpoint persists).
+        ``y`` must already be label-normalized for its own study. ``raw``
+        (persisted v3 prior-level hyperparameters) skips the fit;
+        ``capacity`` reserves rank-1 append headroom in the level's cached
+        factorization (the policy passes pending + batch count for the
+        level that will serve the acquisition). Returns the fitted raw
+        hyperparameters; ``last_fit`` carries the FitInfo of the most recent
+        *fitted* level (the top level's is what the warm-start checkpoint
+        persists).
         """
         resid = np.asarray(y, np.float32) - self.mean(x)
-        gp = GaussianProcessBandit(dim=self.dim, seed=self.seed)
-        raw = gp.fit(x, resid, init=init)
-        self.last_fit = gp.last_fit
-        x_j = jnp.asarray(x, jnp.float32)
-        y_j = jnp.asarray(resid, jnp.float32)
+        if raw is None:
+            gp = GaussianProcessBandit(dim=self.dim, seed=self.seed)
+            raw = gp.fit(x, resid, init=init)
+            self.last_fit = gp.last_fit
+        else:
+            raw = {k: jnp.asarray(v, jnp.float32) for k, v in raw.items()}
+        post = CholeskyPosterior(raw, x, resid, capacity=capacity)
         self.levels.append(StackLevel(
-            raw=raw, x=x_j, y=y_j, alpha=_gp_alpha(raw, x_j, y_j),
+            raw=raw, x=jnp.asarray(x, jnp.float32),
+            y=jnp.asarray(resid, jnp.float32),
+            alpha=post.alpha, posterior=post,
         ))
+        self._stacked_cache.clear()
         return raw
 
     def predict(self, xq) -> "tuple[np.ndarray, np.ndarray]":
-        """Stacked posterior (mean of all levels, std of the top level)."""
+        """Stacked posterior (mean of all levels, std of the top level) —
+        served from the top level's cached factorization, no refit."""
         if not self.levels:
             raise ValueError("predict() on an empty stack")
-        top = self.levels[-1]
-        m_top, s_top = _posterior(top.raw, top.x, top.y,
-                                  jnp.asarray(xq, jnp.float32))
-        mean = self.mean(xq, below=self.depth - 1) + np.asarray(m_top)
-        return mean, np.asarray(s_top)
+        m_top, s_top = self.levels[-1].posterior.query(xq)
+        return self.mean(xq, below=self.depth - 1) + m_top, s_top
 
 
 class GPBanditPolicy(Policy):
     """The paper's GP-bandit example as a full Pythia policy.
 
     With ``warm_start=True`` (default) each suggest operation persists a
-    versioned PolicyState record (kernel hyperparameters + Adam trajectory)
-    into the reserved ``repro.gp_bandit`` study-metadata namespace and
-    resumes the fit from it on the next operation — the paper's §6.3 state
-    mechanism applied to the hyperparameter optimization. Incompatible or
-    corrupt state silently degrades to a cold fit.
+    versioned PolicyState record (kernel hyperparameters + Adam trajectory +
+    per-prior-level hyperparameters) into the reserved ``repro.gp_bandit``
+    study-metadata namespace and resumes the fit from it on the next
+    operation — the paper's §6.3 state mechanism applied to the
+    hyperparameter optimization. Incompatible or corrupt state silently
+    degrades to a cold fit.
 
     Transfer learning: when the study lists ``prior_study_names``, their
     completed trials are aligned into the current study's feature space
@@ -452,24 +537,37 @@ class GPBanditPolicy(Policy):
     fully degraded case is exactly the single-study cold fit, never a failed
     operation. With priors present the policy suggests from the stack even
     before ``min_completed`` current trials exist (that head start is the
-    point of transfer).
+    point of transfer). Prior-level fits are reused from the persisted v3
+    checkpoint for the longest prefix of priors whose aligned-trial
+    fingerprints still match (``last_prior_levels_reused``).
+
+    ``use_engine=False`` switches the acquisition to the pre-engine path —
+    one full Cholesky refactorization per batch member — kept as the
+    numerical baseline for tests and ``make bench-acquisition``. Both paths
+    share the candidate pool (one scrambled-Halton global half + local
+    perturbations of the incumbent, drawn once per operation) and the
+    fantasy outcomes, so their suggestions agree trial-for-trial.
     """
 
     def __init__(self, supporter: PolicySupporter, *, n_candidates: int = 2000,
                  min_completed: int = 5, seed: int = 0, warm_start: bool = True,
-                 min_prior_trials: int = 5):
+                 min_prior_trials: int = 5, use_engine: bool = True,
+                 n_fantasies: int = 4):
         self._supporter = supporter
         self._n_candidates = n_candidates
         self._min_completed = min_completed
         self._seed = seed
         self._warm_start = warm_start
         self._min_prior_trials = min_prior_trials
+        self._use_engine = use_engine
+        self._n_fantasies = n_fantasies
         # observability for tests/benchmarks (mirrors
         # SerializableDesignerPolicy.last_restore_was_incremental)
         self.last_fit_seconds: float = 0.0
         self.last_fit_steps: int = 0
         self.last_fit_warm: bool = False
         self.last_transfer_levels: int = 0
+        self.last_prior_levels_reused: int = 0
 
     def _load_priors(self, request: SuggestRequest,
                      converter: TrialToArrayConverter):
@@ -506,6 +604,19 @@ class GPBanditPolicy(Policy):
                 continue
         return out
 
+    def _draw_pool(self, rng: np.random.RandomState, dim: int,
+                   incumbent: np.ndarray) -> np.ndarray:
+        """One candidate pool per suggest operation: a scrambled-Halton
+        global half (low-discrepancy, seeded by the op rng) plus local
+        perturbations sharpening exploitation around the incumbent."""
+        glob = halton.scrambled_halton(self._n_candidates, dim, rng)
+        local = np.clip(
+            incumbent[None, :]
+            + 0.08 * rng.randn(self._n_candidates // 4, dim),
+            0.0, 1.0,
+        )
+        return np.vstack([glob, local])
+
     def suggest(self, request: SuggestRequest) -> SuggestDecision:
         config = request.study_config
         converter = TrialToArrayConverter(config.search_space)
@@ -519,6 +630,7 @@ class GPBanditPolicy(Policy):
         # no current-study fit and must not report the previous one's
         self.last_fit_seconds, self.last_fit_steps, self.last_fit_warm = \
             0.0, 0, False
+        self.last_prior_levels_reused = 0
 
         if (x.shape[0] < self._min_completed and not priors) or \
                 config.is_multi_objective:
@@ -529,13 +641,32 @@ class GPBanditPolicy(Policy):
             ]
             return SuggestDecision(suggestions=suggestions)
 
+        # pending trials are loaded up front: the top level's factorization
+        # reserves rank-1 headroom for their fantasies + the batch members
+        pending = self._supporter.ActiveTrials(request.study_guid)
+        fantasy_x = converter.to_features(
+            [t.parameters for t in pending]) if pending else None
+        n_pend = 0 if fantasy_x is None else len(fantasy_x)
+        has_current = x.shape[0] >= 1
+        headroom = n_pend + request.count
+
         prior_fps = {name: int(px.shape[0]) for name, px, _py in priors}
+        reusable: List[Dict] = []
+        if self._warm_start and priors:
+            reusable = load_prior_levels(
+                request.study_metadata, dim=converter.dim,
+                priors=[(name, int(px.shape[0])) for name, px, _py in priors])
         stack = StackedResidualGP(dim=converter.dim, seed=self._seed)
-        for _name, px, py in priors:
-            stack.fit_level(px, _zscore(py))
+        for i, (_name, px, py) in enumerate(priors):
+            top_prior = (i == len(priors) - 1) and not has_current
+            stack.fit_level(
+                px, _zscore(py),
+                raw=reusable[i] if i < len(reusable) else None,
+                capacity=px.shape[0] + headroom if top_prior else None)
+        self.last_prior_levels_reused = min(len(reusable), len(priors))
 
         fit_info = None
-        if x.shape[0] >= 1:
+        if has_current:
             yn = _zscore(y_all[:, 0])
             state = None
             if self._warm_start:
@@ -543,7 +674,8 @@ class GPBanditPolicy(Policy):
                                    num_trials=x.shape[0],
                                    prior_fingerprints=prior_fps)
             stack.fit_level(
-                x, yn, init=state.fit_init() if state is not None else None)
+                x, yn, init=state.fit_init() if state is not None else None,
+                capacity=x.shape[0] + headroom)
             fit_info = stack.last_fit
             self.last_fit_seconds = fit_info.seconds
             self.last_fit_steps = fit_info.steps_run
@@ -558,50 +690,51 @@ class GPBanditPolicy(Policy):
         ys = np.asarray(top.y, np.float64)
         mu_xs = stack.mean(xs, below=n_below).astype(np.float64)
 
-        gp = GaussianProcessBandit(dim=converter.dim, seed=self._seed)
+        # one candidate pool per operation (incumbent = best STACKED value,
+        # not best residual); pending-trial dedup with the empty-pool
+        # fallback — a pending trial at every candidate must degrade to the
+        # unfiltered pool, never to an argmax over zero candidates
+        incumbent = xs[int(np.argmax(ys + mu_xs))]
+        pool = self._draw_pool(rng, converter.dim, incumbent)
+        fantasize = fantasy_x is not None and n_pend > 0 and (
+            config.observation_noise != ObservationNoise.HIGH
+        )
+        if fantasize:
+            d = np.linalg.norm(pool[:, None, :] - fantasy_x[None], axis=-1)
+            filtered = pool[np.min(d, axis=1) > 1e-3]
+            if len(filtered):
+                pool = filtered
+        pool_mu = stack.mean(pool, below=n_below) if n_below else \
+            np.zeros((len(pool),), np.float32)
 
-        # pending-trial fantasies discourage duplicates when noise is LOW
-        pending = self._supporter.ActiveTrials(request.study_guid)
-        fantasy_x = converter.to_features([t.parameters for t in pending]) if pending else None
-
-        suggestions: List[TrialSuggestion] = []
-        for _ in range(request.count):
-            cand = rng.rand(self._n_candidates, converter.dim)
-            # local perturbations around the incumbent sharpen exploitation
-            # (incumbent = best STACKED value, not best residual)
-            best_x = xs[int(np.argmax(ys + mu_xs))]
-            local = np.clip(
-                best_x[None, :] + 0.08 * rng.randn(self._n_candidates // 4, converter.dim),
-                0.0, 1.0,
-            )
-            cand = np.vstack([cand, local])
-            fantasize = fantasy_x is not None and len(fantasy_x) and (
-                config.observation_noise != ObservationNoise.HIGH
-            )
-            if fantasize:
-                d = np.linalg.norm(cand[:, None, :] - fantasy_x[None], axis=-1)
-                cand = cand[np.min(d, axis=1) > 1e-3]
-                # pending-trial outcomes fantasized from the posterior; the
-                # whole pool is scored under every fantasy in one vmapped call
-                scores = np.asarray(
-                    gp.ucb_fantasized(raw, xs, ys, fantasy_x, cand, rng))
+        beta = DEFAULT_UCB_BETA
+        y_pend = None
+        if fantasize:
+            # pending outcomes fantasized from the current posterior; UCB is
+            # linear in the mean, so averaging scores over F fantasy vectors
+            # equals scoring once at the fantasy-averaged outcomes
+            if self._use_engine:
+                mean_p, std_p = top.posterior.query(fantasy_x)
             else:
-                scores = np.asarray(gp.ucb(raw, xs, ys, cand))
-            if n_below:
-                # stacked acquisition: UCB in residual space + prior-stack
-                # mean (the top-level std already carries the uncertainty)
-                scores = scores + stack.mean(cand, below=n_below)
-            pick = cand[int(np.argmax(scores))]
-            params = converter.to_parameters(pick[None, :])[0]
-            suggestions.append(TrialSuggestion(parameters=params))
-            # fantasize the new point at the GP mean so batch members differ
-            mean, _ = _posterior(raw, jnp.asarray(xs, jnp.float32),
-                                 jnp.asarray(ys, jnp.float32),
-                                 jnp.asarray(pick[None, :], jnp.float32))
-            xs = np.vstack([xs, pick[None, :]])
-            ys = np.concatenate([ys, np.asarray(mean)])
-            mu_xs = np.concatenate(
-                [mu_xs, stack.mean(pick[None, :], below=n_below)])
+                mp, sp = _posterior(raw, jnp.asarray(xs, jnp.float32),
+                                    jnp.asarray(ys, jnp.float32),
+                                    jnp.asarray(fantasy_x, jnp.float32))
+                mean_p, std_p = np.asarray(mp), np.asarray(sp)
+            eps = rng.randn(self._n_fantasies, n_pend)
+            y_pend = mean_p + std_p * eps.mean(axis=0)
+
+        if self._use_engine:
+            picks = self._suggest_engine(top.posterior, pool, pool_mu, beta,
+                                         fantasy_x if fantasize else None,
+                                         y_pend, request.count)
+        else:
+            picks = self._suggest_legacy(raw, xs, ys, pool, pool_mu, beta,
+                                         fantasy_x if fantasize else None,
+                                         y_pend, request.count)
+        suggestions = [
+            TrialSuggestion(parameters=converter.to_parameters(p[None, :])[0])
+            for p in picks
+        ]
 
         if self._warm_start and fit_info is not None:
             # persist the fit checkpoint so the next (stateless) invocation
@@ -613,9 +746,68 @@ class GPBanditPolicy(Policy):
             delta = MetadataDelta()
             store_state(delta, PolicyState.from_fit(
                 fit_info, dim=converter.dim, num_trials=x.shape[0],
-                prior_fingerprints=prior_fps))
+                prior_fingerprints=prior_fps,
+                prior_levels=[
+                    (name, int(px.shape[0]), stack.levels[i].raw)
+                    for i, (name, px, _py) in enumerate(priors)
+                ]))
             self._supporter.SendMetadata(delta)
         return SuggestDecision(suggestions=suggestions)
+
+    def _suggest_engine(self, post: CholeskyPosterior, pool, pool_mu, beta,
+                        fantasy_x, y_pend, count: int) -> List[np.ndarray]:
+        """Factorized-posterior batch: pending fantasies and picked members
+        extend the op's single Cholesky with rank-1 appends; pool scores
+        refresh in O(n·m) per member from the cached cross-solve."""
+        if fantasy_x is not None:
+            for px, py in zip(fantasy_x, y_pend):
+                post.append(px, py)
+        post.set_pool(pool)
+        picks: List[np.ndarray] = []
+        picked_idx: List[int] = []
+        for k in range(count):
+            scores = post.pool_ucb(beta) + pool_mu
+            scores[picked_idx] = -np.inf
+            i = int(np.argmax(scores))
+            picks.append(pool[i])
+            picked_idx.append(i)
+            if k + 1 < count:
+                # fantasize the new member at its posterior mean (read from
+                # the cached pool means ON DEVICE) so later members avoid it
+                post.append_pool_member(i)
+        return picks
+
+    def _suggest_legacy(self, raw, xs, ys, pool, pool_mu, beta, fantasy_x,
+                        y_pend, count: int) -> List[np.ndarray]:
+        """Pre-engine baseline: one full Cholesky refactorization per batch
+        member (plus one per fantasy-mean query) through the jitted
+        ``_ucb``/``_posterior`` kernels — identical math, redundant
+        factorizations and shape-driven retraces. Kept for
+        ``make bench-acquisition`` and the engine-equivalence tests."""
+        xs_aug = np.asarray(xs, np.float64)
+        ys_aug = np.asarray(ys, np.float64)
+        if fantasy_x is not None:
+            xs_aug = np.vstack([xs_aug, fantasy_x])
+            ys_aug = np.concatenate([ys_aug, y_pend])
+        picks: List[np.ndarray] = []
+        picked_idx: List[int] = []
+        for k in range(count):
+            scores = np.asarray(
+                _ucb(raw, jnp.asarray(xs_aug, jnp.float32),
+                     jnp.asarray(ys_aug, jnp.float32),
+                     jnp.asarray(pool, jnp.float32), jnp.float32(beta))
+            ) + pool_mu
+            scores[picked_idx] = -np.inf
+            i = int(np.argmax(scores))
+            picks.append(pool[i])
+            picked_idx.append(i)
+            if k + 1 < count:
+                mean, _ = _posterior(raw, jnp.asarray(xs_aug, jnp.float32),
+                                     jnp.asarray(ys_aug, jnp.float32),
+                                     jnp.asarray(pool[i][None, :], jnp.float32))
+                xs_aug = np.vstack([xs_aug, pool[i][None, :]])
+                ys_aug = np.concatenate([ys_aug, np.asarray(mean, np.float64)])
+        return picks
 
     def early_stop(self, request: EarlyStopRequest) -> EarlyStopDecisions:
         from repro.core import early_stopping

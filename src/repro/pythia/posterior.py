@@ -1,0 +1,341 @@
+"""Factorized-posterior acquisition engine: one Cholesky per suggest op.
+
+The GP-bandit acquisition used to re-run an O(n^3) Cholesky of the SAME
+K(X, X) once per candidate-pool scoring, once per batch member, once per
+fantasy vector and once per stack level — and every distinct
+(n_trials, pool_size) shape retraced the jitted kernels. This module is the
+replacement hot path:
+
+* ``CholeskyPosterior`` factorizes K(X, X) + noise·I exactly once (reusing
+  the fit's final hyperparameters, so the factorization built right after
+  the fit serves every later query of the operation) and answers all
+  mean/std/UCB queries from the cached (L, w = L^-1 y).
+* Batch members and fantasized pending points extend the factorization with
+  O(n^2) rank-1 ``append`` updates (a new Cholesky row via one triangular
+  solve) instead of refactorizing from scratch; when a candidate pool is
+  attached, each append also folds its new cross-row into the cached pool
+  mean/variance in O(n·m), so a count-k batch costs one factorization + one
+  pool solve + k rank-1 updates rather than k full refactorizations.
+* All device buffers are padded to power-of-two buckets with noise-masked
+  padding rows (padding contributes an identity block to K and zeros to
+  every cross term, so results are exact, not approximate), which keeps the
+  jitted kernel shapes constant across operations: steady-state suggest ops
+  stop retracing. ``TRACE_COUNTS`` counts actual retraces for the
+  regression test.
+
+Bucket rules (documented in ROADMAP): training/design buffers round up to
+the next power of two with a floor of ``MIN_TRAIN_BUCKET`` (64); candidate
+pools round up to multiples of ``POOL_BUCKET_STEP`` (256). The capacity
+bucket is chosen once per operation with headroom for every planned append
+(pending fantasies + batch count), so a suggest op never re-buckets
+mid-flight; ``append`` past capacity refuses loudly instead of silently
+refactorizing.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+# Incremented inside the traced bodies below — a counter ticks only when XLA
+# actually (re)traces the kernel, so tests can pin "no retraces across ops".
+TRACE_COUNTS: "collections.Counter[str]" = collections.Counter()
+
+MIN_TRAIN_BUCKET = 64
+POOL_BUCKET_STEP = 256
+
+_JITTER = 1e-4  # matches the fit's noise floor (gp_bandit._neg_mll)
+
+
+def reset_trace_counts() -> None:
+    TRACE_COUNTS.clear()
+
+
+def train_bucket(n: int) -> int:
+    """Next power-of-two >= n, floored at MIN_TRAIN_BUCKET."""
+    b = MIN_TRAIN_BUCKET
+    while b < n:
+        b *= 2
+    return b
+
+
+def pool_bucket(m: int) -> int:
+    """Next multiple of POOL_BUCKET_STEP >= m (pow-2 buckets would waste up
+    to 2x solve work on pools that are ~fixed-size per policy config)."""
+    return max(POOL_BUCKET_STEP,
+               ((m + POOL_BUCKET_STEP - 1) // POOL_BUCKET_STEP)
+               * POOL_BUCKET_STEP)
+
+
+def _scaled(raw: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    return x / jnp.exp(raw["log_ell"])
+
+
+def _gram(raw: Dict, x1: jnp.ndarray, x2: jnp.ndarray) -> jnp.ndarray:
+    return kops.matern52_gram(_scaled(raw, x1), _scaled(raw, x2),
+                              jnp.exp(raw["log_amp"]), impl="auto")
+
+
+@jax.jit
+def _factor(raw: Dict, xp: jnp.ndarray, yp: jnp.ndarray, mask: jnp.ndarray):
+    """(L, w) of the masked-padded kernel matrix; the op's ONE Cholesky.
+
+    Padding rows (mask 0) contribute an identity block: their K rows/cols
+    are zeroed and the diagonal set to 1, so L embeds the real factor
+    exactly and w is zero on padding (yp is zero there).
+    """
+    TRACE_COUNTS["factor"] += 1
+    noise = jnp.exp(raw["log_noise"]) + _JITTER
+    K = _gram(raw, xp, xp) * (mask[:, None] * mask[None, :])
+    K = K + jnp.diag(noise * mask + (1.0 - mask))
+    L = jnp.linalg.cholesky(K)
+    w = jax.scipy.linalg.solve_triangular(L, yp, lower=True)
+    return L, w
+
+
+@jax.jit
+def _alpha(L: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """alpha = K^-1 y from the cached factor: one O(n^2) back-solve."""
+    TRACE_COUNTS["alpha"] += 1
+    return jax.scipy.linalg.solve_triangular(L.T, w, lower=False)
+
+
+def _cross_solve(raw: Dict, xp: jnp.ndarray, mask: jnp.ndarray,
+                 L: jnp.ndarray, w: jnp.ndarray, xqp: jnp.ndarray):
+    """Shared cross-solve body (traced inside the jitted wrappers):
+    V = L^-1 Kq, mean = V^T w, var = amp - colsum(V^2)."""
+    Kq = _gram(raw, xp, xqp) * mask[:, None]          # (B, M)
+    V = jax.scipy.linalg.solve_triangular(L, Kq, lower=True)
+    mean = V.T @ w
+    var = jnp.exp(raw["log_amp"]) - jnp.sum(V * V, axis=0)
+    return V, mean, var
+
+
+def _append_row(raw: Dict, L: jnp.ndarray, xp: jnp.ndarray,
+                mask: jnp.ndarray, w: jnp.ndarray, xn: jnp.ndarray,
+                yn: jnp.ndarray):
+    """Shared rank-1 append body: the new Cholesky row l = L^-1 k with pivot
+    sqrt(k_ss - l·l), and the new w entry. Padding rows keep their identity
+    block (their k entries are masked to 0), so later appends remain exact.
+    """
+    amp = jnp.exp(raw["log_amp"])
+    noise = jnp.exp(raw["log_noise"]) + _JITTER
+    k = _gram(raw, xp, xn[None, :])[:, 0] * mask          # (B,)
+    l = jax.scipy.linalg.solve_triangular(L, k, lower=True)
+    lss = jnp.sqrt(jnp.maximum(amp + noise - jnp.dot(l, l), 1e-10))
+    wn = (yn - jnp.dot(l, w)) / lss
+    return l, lss, wn
+
+
+def _rescore_row(raw: Dict, V: jnp.ndarray, xqp: jnp.ndarray,
+                 xn: jnp.ndarray, l: jnp.ndarray, lss: jnp.ndarray):
+    """Shared pool-refresh body: the appended row's cross-solve extension
+    r = (k_q - l^T V) / lss, folding into mean/var in O(m)."""
+    kq = _gram(raw, xn[None, :], xqp)[0]                  # (M,)
+    return (kq - l @ V) / lss
+
+
+@jax.jit
+def _attach_pool(raw: Dict, xp: jnp.ndarray, mask: jnp.ndarray,
+                 L: jnp.ndarray, w: jnp.ndarray, xqp: jnp.ndarray):
+    """Cross-solve for a candidate pool, cached so rank-1 appends can
+    update mean/var in O(m) without another solve."""
+    TRACE_COUNTS["attach_pool"] += 1
+    return _cross_solve(raw, xp, mask, L, w, xqp)
+
+
+@jax.jit
+def _query(raw: Dict, xp: jnp.ndarray, mask: jnp.ndarray, L: jnp.ndarray,
+           w: jnp.ndarray, xqp: jnp.ndarray):
+    """One-shot posterior (mean, std) at arbitrary padded query points."""
+    TRACE_COUNTS["query"] += 1
+    _V, mean, var = _cross_solve(raw, xp, mask, L, w, xqp)
+    return mean, jnp.sqrt(jnp.maximum(var, 1e-10))
+
+
+@jax.jit
+def _append(raw: Dict, L: jnp.ndarray, xp: jnp.ndarray, yp: jnp.ndarray,
+            mask: jnp.ndarray, w: jnp.ndarray, idx: jnp.ndarray,
+            xn: jnp.ndarray, yn: jnp.ndarray):
+    """Rank-1 Cholesky append at (traced) row ``idx``: O(n^2), no retrace."""
+    TRACE_COUNTS["append"] += 1
+    l, lss, wn = _append_row(raw, L, xp, mask, w, xn, yn)
+    return (L.at[idx, :].set(l).at[idx, idx].set(lss),
+            xp.at[idx].set(xn), yp.at[idx].set(yn),
+            mask.at[idx].set(1.0), w.at[idx].set(wn), l, lss, wn)
+
+
+@jax.jit
+def _rescore(raw: Dict, V: jnp.ndarray, mean: jnp.ndarray, var: jnp.ndarray,
+             xqp: jnp.ndarray, idx: jnp.ndarray, xn: jnp.ndarray,
+             l: jnp.ndarray, lss: jnp.ndarray, wn: jnp.ndarray):
+    """Fold one appended row into the cached pool posterior: O(n·m)."""
+    TRACE_COUNTS["rescore"] += 1
+    r = _rescore_row(raw, V, xqp, xn, l, lss)
+    return (V.at[idx, :].set(r), mean + r * wn, var - r * r)
+
+
+@jax.jit
+def _append_member(raw: Dict, L: jnp.ndarray, xp: jnp.ndarray,
+                   yp: jnp.ndarray, mask: jnp.ndarray, w: jnp.ndarray,
+                   V: jnp.ndarray, mean: jnp.ndarray, var: jnp.ndarray,
+                   xqp: jnp.ndarray, idx: jnp.ndarray, pool_i: jnp.ndarray):
+    """Fused batch-member append: pool point ``pool_i`` conditioned at its
+    CURRENT cached posterior mean, factor + pool stats updated in ONE
+    dispatch with zero host round-trips (the suggest count-loop hot path).
+    Same math as ``_append`` + ``_rescore`` via the shared bodies.
+    """
+    TRACE_COUNTS["append_member"] += 1
+    xn = xqp[pool_i]
+    yn = mean[pool_i]
+    l, lss, wn = _append_row(raw, L, xp, mask, w, xn, yn)
+    r = _rescore_row(raw, V, xqp, xn, l, lss)
+    return (L.at[idx, :].set(l).at[idx, idx].set(lss),
+            xp.at[idx].set(xn), yp.at[idx].set(yn), mask.at[idx].set(1.0),
+            w.at[idx].set(wn), V.at[idx, :].set(r), mean + r * wn,
+            var - r * r)
+
+
+@jax.jit
+def _pool_scores(mean: jnp.ndarray, var: jnp.ndarray,
+                 beta: jnp.ndarray) -> jnp.ndarray:
+    TRACE_COUNTS["pool_scores"] += 1
+    return mean + beta * jnp.sqrt(jnp.maximum(var, 1e-10))
+
+
+class CholeskyPosterior:
+    """Cached-factorization GP posterior for one suggest operation.
+
+    Factorizes once at construction; every later query (pool scores, point
+    posteriors, UCB, batch/fantasy extensions) reuses (L, w). ``capacity``
+    reserves append headroom so the whole operation lives in one bucket.
+    """
+
+    def __init__(self, raw: Dict, x, y, *, capacity: Optional[int] = None):
+        x = np.asarray(x, np.float32)
+        y = np.asarray(y, np.float32)
+        n, d = x.shape
+        self.raw = {k: jnp.asarray(v, jnp.float32) for k, v in raw.items()}
+        self.capacity = train_bucket(max(capacity or n, n))
+        self.n = n
+        xp = np.zeros((self.capacity, d), np.float32)
+        yp = np.zeros((self.capacity,), np.float32)
+        mask = np.zeros((self.capacity,), np.float32)
+        xp[:n], yp[:n], mask[:n] = x, y, 1.0
+        self._xp = jnp.asarray(xp)
+        self._yp = jnp.asarray(yp)
+        self._mask = jnp.asarray(mask)
+        self._L, self._w = _factor(self.raw, self._xp, self._yp, self._mask)
+        self._alpha_cache: Optional[jnp.ndarray] = None
+        # attached candidate pool (set_pool): padded xq + cached solve
+        self._xqp: Optional[jnp.ndarray] = None
+        self._m = 0
+        self._V = self._pool_mean = self._pool_var = None
+
+    # -- whole-pool scoring --------------------------------------------------
+    def set_pool(self, xq) -> None:
+        """Attach a candidate pool: ONE cross-solve, cached for the op."""
+        xq = np.asarray(xq, np.float32)
+        m = xq.shape[0]
+        mb = pool_bucket(m)
+        xqp = np.zeros((mb, xq.shape[1]), np.float32)
+        xqp[:m] = xq
+        self._xqp = jnp.asarray(xqp)
+        self._m = m
+        self._V, self._pool_mean, self._pool_var = _attach_pool(
+            self.raw, self._xp, self._mask, self._L, self._w, self._xqp)
+
+    def pool_mean(self) -> np.ndarray:
+        return np.asarray(self._pool_mean)[: self._m]
+
+    def pool_std(self) -> np.ndarray:
+        var = np.asarray(self._pool_var)[: self._m]
+        return np.sqrt(np.maximum(var, 1e-10))
+
+    def pool_ucb(self, beta: float) -> np.ndarray:
+        """mean + beta*std for the attached pool: one fused device op and
+        ONE host sync (the count-loop's only per-member transfer)."""
+        return np.asarray(_pool_scores(
+            self._pool_mean, self._pool_var, jnp.float32(beta)))[: self._m]
+
+    # -- extension -----------------------------------------------------------
+    def append(self, x_new, y_new) -> None:
+        """Condition on one more (x, y) via a rank-1 Cholesky append.
+
+        O(n^2) against the cached factor (plus O(n·m) to refresh an
+        attached pool) — the replacement for the per-batch-member and
+        per-fantasy full refactorizations.
+        """
+        if self.n >= self.capacity:
+            raise ValueError(
+                f"CholeskyPosterior capacity {self.capacity} exhausted; "
+                "construct with headroom for every planned append")
+        idx = jnp.asarray(self.n, jnp.int32)
+        xn = jnp.asarray(np.asarray(x_new, np.float32).reshape(-1))
+        yn = jnp.asarray(np.float32(y_new))
+        (self._L, self._xp, self._yp, self._mask, self._w,
+         l, lss, wn) = _append(self.raw, self._L, self._xp, self._yp,
+                               self._mask, self._w, idx, xn, yn)
+        if self._xqp is not None:
+            self._V, self._pool_mean, self._pool_var = _rescore(
+                self.raw, self._V, self._pool_mean, self._pool_var,
+                self._xqp, idx, xn, l, lss, wn)
+        self.n += 1
+        self._alpha_cache = None
+
+    def append_pool_member(self, pool_index: int) -> None:
+        """Condition on pool member ``pool_index`` fantasized at its current
+        cached posterior mean — the batch count-loop's rank-1 step, fused
+        into a single device dispatch (no value ever crosses to the host)."""
+        if self.n >= self.capacity:
+            raise ValueError(
+                f"CholeskyPosterior capacity {self.capacity} exhausted; "
+                "construct with headroom for every planned append")
+        if self._xqp is None:
+            raise ValueError("append_pool_member() requires set_pool() first")
+        idx = jnp.asarray(self.n, jnp.int32)
+        (self._L, self._xp, self._yp, self._mask, self._w, self._V,
+         self._pool_mean, self._pool_var) = _append_member(
+            self.raw, self._L, self._xp, self._yp, self._mask, self._w,
+            self._V, self._pool_mean, self._pool_var, self._xqp, idx,
+            jnp.asarray(pool_index, jnp.int32))
+        self.n += 1
+        self._alpha_cache = None
+
+    # -- point queries ---------------------------------------------------------
+    def query(self, xq) -> "tuple[np.ndarray, np.ndarray]":
+        """(mean, std) at arbitrary points from the cached factor (padded to
+        the pool bucket so repeated shapes never retrace)."""
+        xq = np.asarray(xq, np.float32)
+        m = xq.shape[0]
+        xqp = np.zeros((pool_bucket(m), xq.shape[1]), np.float32)
+        xqp[:m] = xq
+        mean, std = _query(self.raw, self._xp, self._mask, self._L, self._w,
+                           jnp.asarray(xqp))
+        return np.asarray(mean)[:m], np.asarray(std)[:m]
+
+    @property
+    def alpha(self) -> jnp.ndarray:
+        """K^-1 y (real rows only), zero on padding — feeds the fused
+        gram-matvec stack means without refactorizing."""
+        if self._alpha_cache is None:
+            self._alpha_cache = _alpha(self._L, self._w)
+        return self._alpha_cache
+
+    @property
+    def x_padded(self) -> jnp.ndarray:
+        return self._xp
+
+    @property
+    def design_x(self) -> np.ndarray:
+        return np.asarray(self._xp)[: self.n]
+
+    @property
+    def design_y(self) -> np.ndarray:
+        return np.asarray(self._yp)[: self.n]

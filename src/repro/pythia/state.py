@@ -16,8 +16,12 @@ defines the GP-bandit's state record and the namespace conventions around it:
   never an exception that could fail a suggestion operation.
 
 The record carries the raw kernel hyperparameters, the Adam moments and step
-count (so the fit resumes mid-trajectory, not just from a good point), and a
-trial-count fingerprint guarding against a rewound datastore.
+count (so the fit resumes mid-trajectory, not just from a good point), a
+trial-count fingerprint guarding against a rewound datastore, and — since v3
+— the fitted hyperparameters of every PRIOR stack level, each keyed by its
+(study name, aligned-trial count) fingerprint, so transfer operations skip
+the per-prior Adam refit for the longest still-matching prefix
+(``load_prior_levels``).
 """
 
 from __future__ import annotations
@@ -40,9 +44,15 @@ STATE_KEY = "state"
 # v2 (transfer learning): adds ``prior_fingerprints`` — aligned-trial counts
 # per prior study at fit time. The persisted trajectory is the TOP (residual)
 # level of the stack, so any change in the prior data it was fit against
-# (priors grew, shrank, or the prior list changed) invalidates it. Per the
-# version-bump policy (ROADMAP), v1 blobs are treated as a cold start.
-STATE_SCHEMA_VERSION = 2
+# (priors grew, shrank, or the prior list changed) invalidates it.
+# v3 (prior-level checkpoints): adds ``prior_levels`` — the ordered fitted
+# hyperparameters of each PRIOR stack level, keyed by (study name,
+# aligned-trial count). Unlike the top-level trajectory (exact-fingerprint
+# reuse), prior levels reuse PREFIX-wise: level i's residual targets depend
+# only on levels 0..i-1, so the longest matching prefix skips its Adam
+# refits (~60ms/op per prior) even when a later prior changed. Per the
+# version-bump policy (ROADMAP), v1/v2 blobs are treated as a cold start.
+STATE_SCHEMA_VERSION = 3
 GP_BANDIT_ALGORITHM = "gp_bandit"
 
 # The hyperparameter tree layout shared by raw params and Adam moments:
@@ -113,6 +123,10 @@ class PolicyState:
     converged: bool = False
     # study name -> number of aligned prior trials the stack was fit on (v2)
     prior_fingerprints: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # ordered PRIOR stack levels (v3): [{"name", "num_trials", "raw"}, ...];
+    # the raw hyperparameters of level i are valid iff priors 0..i all still
+    # fingerprint-match (prefix reuse, see load_prior_levels)
+    prior_levels: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
     version: int = STATE_SCHEMA_VERSION
     algorithm: str = GP_BANDIT_ALGORITHM
 
@@ -131,6 +145,7 @@ class PolicyState:
             "warm_started": self.warm_started,
             "converged": self.converged,
             "prior_fingerprints": dict(self.prior_fingerprints),
+            "prior_levels": [dict(lvl) for lvl in self.prior_levels],
         })
 
     @classmethod
@@ -177,6 +192,25 @@ class PolicyState:
                     isinstance(v, bool) or v < 0:
                 raise StateDecodeError(f"bad prior_fingerprints entry {k!r}: {v!r}")
             prior_fingerprints[k] = v
+        pl = obj.get("prior_levels", [])
+        if not isinstance(pl, list):
+            raise StateDecodeError(f"bad prior_levels {pl!r}")
+        prior_levels: List[Dict[str, Any]] = []
+        for i, lvl in enumerate(pl):
+            if not isinstance(lvl, dict):
+                raise StateDecodeError(f"prior_levels[{i}]: not an object")
+            name = lvl.get("name")
+            nt = lvl.get("num_trials")
+            if not isinstance(name, str):
+                raise StateDecodeError(f"prior_levels[{i}].name: {name!r}")
+            if not isinstance(nt, int) or isinstance(nt, bool) or nt < 0:
+                raise StateDecodeError(f"prior_levels[{i}].num_trials: {nt!r}")
+            prior_levels.append({
+                "name": name,
+                "num_trials": nt,
+                "raw": _validate_tree(f"prior_levels[{i}].raw",
+                                      lvl.get("raw"), dim),
+            })
         return cls(
             dim=dim,
             num_trials=num_trials,
@@ -188,6 +222,7 @@ class PolicyState:
             warm_started=bool(obj.get("warm_started", False)),
             converged=bool(obj.get("converged", False)),
             prior_fingerprints=prior_fingerprints,
+            prior_levels=prior_levels,
             version=version,
             algorithm=str(algorithm),
         )
@@ -224,8 +259,13 @@ class PolicyState:
     @classmethod
     def from_fit(cls, info, *, dim: int, num_trials: int,
                  prior_fingerprints: Optional[Dict[str, int]] = None,
+                 prior_levels: Optional[List] = None,
                  ) -> "PolicyState":
-        """Builds the record from a GaussianProcessBandit FitInfo."""
+        """Builds the record from a GaussianProcessBandit FitInfo.
+
+        ``prior_levels``: ordered [(study name, aligned-trial count, raw
+        hyperparameter tree), ...] for the fitted PRIOR stack levels.
+        """
         return cls(
             dim=dim,
             num_trials=num_trials,
@@ -237,6 +277,10 @@ class PolicyState:
             warm_started=info.warm,
             converged=info.converged,
             prior_fingerprints=dict(prior_fingerprints or {}),
+            prior_levels=[
+                {"name": name, "num_trials": int(nt), "raw": _tree_to_py(raw)}
+                for name, nt, raw in (prior_levels or [])
+            ],
         )
 
 
@@ -258,6 +302,42 @@ def load_state(metadata: Metadata, *, dim: int, num_trials: int,
         return None
     except Exception:  # noqa: BLE001 — a bad blob must never fail a suggest
         return None
+
+
+def load_prior_levels(metadata: Metadata, *, dim: int,
+                      priors: "List[tuple]",
+                      namespace: str = GP_BANDIT_NAMESPACE) -> List[Dict]:
+    """Reusable prior-level hyperparameters for the longest matching prefix.
+
+    ``priors`` is the ordered [(study name, aligned-trial count), ...] the
+    policy is about to fit. Level i's stored hyperparameters are reusable
+    iff every stored level 0..i matches the current (name, count) — a
+    mismatch invalidates that level AND everything above it (residual
+    targets downstream change), but never the prefix below. Unlike
+    ``load_state`` this deliberately ignores the top-level fingerprint:
+    prior levels stay reusable even when the current study gained trials.
+
+    Defensive like load_state: any problem yields ``[]`` (refit all
+    levels), never an exception.
+    """
+    try:
+        value = metadata.abs_ns(Namespace(namespace)).get(STATE_KEY)
+        state = PolicyState.from_value(value)
+        if state.algorithm != GP_BANDIT_ALGORITHM or state.dim != dim:
+            return []
+        out: List[Dict] = []
+        for i, (name, count) in enumerate(priors):
+            if i >= len(state.prior_levels):
+                break
+            stored = state.prior_levels[i]
+            if stored["name"] != name or stored["num_trials"] != int(count):
+                break
+            out.append(stored["raw"])
+        return out
+    except StateDecodeError:
+        return []
+    except Exception:  # noqa: BLE001 — a bad blob must never fail a suggest
+        return []
 
 
 def store_state(delta: MetadataDelta, state: PolicyState,

@@ -11,7 +11,7 @@ except ImportError:  # container has no hypothesis wheel; see shim docstring
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.gram import matern52_gram_pallas
+from repro.kernels.gram import matern52_gram_matvec_pallas, matern52_gram_pallas
 from repro.kernels.mamba2_ssd import ssd_core_pallas, ssd_scan_pallas
 from repro.models.mamba2 import ssd_chunked
 
@@ -41,6 +41,44 @@ def test_gram_psd_diagonal():
     np.testing.assert_allclose(np.diag(K), 1.0, atol=1e-5)
     evals = np.linalg.eigvalsh(K + 1e-5 * np.eye(20))
     assert evals.min() > 0
+
+
+# -- fused gram-matvec (posterior mean without the (n, m) cross-Gram) ----------
+
+
+@pytest.mark.parametrize("n,m,d", [(5, 7, 2), (64, 64, 8), (300, 257, 17),
+                                   (513, 40, 3)])
+def test_gram_matvec_sweep(n, m, d):
+    x1 = RNG.randn(n, d).astype(np.float32)
+    x2 = RNG.randn(m, d).astype(np.float32)
+    alpha = RNG.randn(n).astype(np.float32)
+    want = np.asarray(ref.matern52_gram_matvec(
+        jnp.asarray(x1), jnp.asarray(x2), jnp.asarray(alpha), 1.9))
+    got = np.asarray(matern52_gram_matvec_pallas(
+        jnp.asarray(x1), jnp.asarray(x2), jnp.asarray(alpha),
+        jnp.asarray(1.9), interpret=True))
+    assert got.shape == (m,)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_gram_matvec_dispatch_blocked_xla_matches_ref():
+    """ops dispatch: the strip-folded XLA path (O(m) peak temporary) equals
+    the materializing oracle, and zero-alpha padding rows contribute 0."""
+    from repro.kernels import ops as kops
+
+    x1 = jnp.asarray(RNG.randn(700, 5), jnp.float32)
+    x2 = jnp.asarray(RNG.randn(123, 5), jnp.float32)
+    alpha = jnp.asarray(RNG.randn(700), jnp.float32)
+    want = np.asarray(ref.matern52_gram_matvec(x1, x2, alpha, 0.8))
+    got = np.asarray(kops.matern52_gram_matvec(x1, x2, alpha, 0.8,
+                                               impl="xla", block_rows=256))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+    # padding neutrality: extra rows with alpha = 0 change nothing
+    x1p = jnp.concatenate([x1, jnp.zeros((41, 5), jnp.float32)])
+    ap = jnp.concatenate([alpha, jnp.zeros((41,), jnp.float32)])
+    got_pad = np.asarray(kops.matern52_gram_matvec(x1p, x2, ap, 0.8,
+                                                   impl="xla", block_rows=256))
+    np.testing.assert_allclose(got_pad, want, rtol=2e-4, atol=2e-4)
 
 
 # -- flash attention ---------------------------------------------------------------

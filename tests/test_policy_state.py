@@ -129,6 +129,69 @@ def test_state_decode_rejects_bad_blobs(blob):
         PolicyState.from_value(blob)
 
 
+def test_state_v3_prior_levels_roundtrip():
+    tree = {"log_amp": 0.1, "log_ell": [0.2, 0.3, 0.4], "log_noise": -4.0}
+    state = _example_state(prior_levels=[
+        {"name": "owners/o/studies/a", "num_trials": 10, "raw": tree}])
+    back = PolicyState.from_value(state.to_value())
+    assert back.prior_levels == [
+        {"name": "owners/o/studies/a", "num_trials": 10, "raw": tree}]
+
+
+@pytest.mark.parametrize("levels", [
+    "not-a-list",
+    ["not-a-dict"],
+    [{"name": 7, "num_trials": 3,
+      "raw": {"log_amp": 0.0, "log_ell": [0.0] * 3, "log_noise": 0.0}}],
+    [{"name": "a", "num_trials": -1,
+      "raw": {"log_amp": 0.0, "log_ell": [0.0] * 3, "log_noise": 0.0}}],
+    [{"name": "a", "num_trials": 3, "raw": {"log_amp": 0.0}}],
+    [{"name": "a", "num_trials": 3,
+      "raw": {"log_amp": 0.0, "log_ell": [0.0] * 99, "log_noise": 0.0}}],
+])
+def test_state_decode_rejects_bad_prior_levels(levels):
+    obj = json.loads(_example_state().to_value())
+    obj["prior_levels"] = levels
+    with pytest.raises(StateDecodeError):
+        PolicyState.from_value(json.dumps(obj))
+
+
+def test_load_prior_levels_prefix_semantics():
+    """Reuse covers the longest matching (name, count) prefix; a mismatch
+    invalidates that level and everything above it, never the prefix below.
+    The top-level fingerprint is deliberately ignored."""
+    from repro.pythia.state import load_prior_levels
+
+    tree_a = {"log_amp": 0.1, "log_ell": [0.1] * 3, "log_noise": -4.0}
+    tree_b = {"log_amp": 0.2, "log_ell": [0.2] * 3, "log_noise": -5.0}
+    state = _example_state(num_trials=999, prior_levels=[
+        {"name": "A", "num_trials": 10, "raw": tree_a},
+        {"name": "B", "num_trials": 20, "raw": tree_b},
+    ])
+    md = Metadata()
+    md.abs_ns(Namespace(GP_BANDIT_NAMESPACE))[STATE_KEY] = state.to_value()
+
+    assert load_prior_levels(md, dim=3, priors=[("A", 10), ("B", 20)]) == \
+        [tree_a, tree_b]
+    # second prior changed: only the first level is reusable
+    assert load_prior_levels(md, dim=3, priors=[("A", 10), ("B", 21)]) == \
+        [tree_a]
+    # first prior changed: nothing is reusable (residuals shifted downstream)
+    assert load_prior_levels(md, dim=3, priors=[("A", 9), ("B", 20)]) == []
+    # prior list reordered / renamed: prefix breaks at the first mismatch
+    assert load_prior_levels(md, dim=3, priors=[("B", 20), ("A", 10)]) == []
+    # more priors than stored levels: the stored prefix still helps
+    assert load_prior_levels(md, dim=3,
+                             priors=[("A", 10), ("B", 20), ("C", 5)]) == \
+        [tree_a, tree_b]
+    # dimension mismatch and corrupt blobs degrade to "refit everything"
+    assert load_prior_levels(md, dim=4, priors=[("A", 10)]) == []
+    md2 = Metadata()
+    md2.abs_ns(Namespace(GP_BANDIT_NAMESPACE))[STATE_KEY] = "{corrupt"
+    assert load_prior_levels(md2, dim=3, priors=[("A", 10)]) == []
+    assert load_prior_levels(Metadata(), dim=3, priors=[("A", 10)]) == []
+
+
 def test_state_compatibility_checks():
     state = _example_state(dim=3, num_trials=12)
     state.check_compatible(dim=3, num_trials=12)

@@ -211,7 +211,9 @@ def test_stack_mean_is_sum_of_levels_and_std_is_top():
 
     top = stack.levels[-1]
     _m, s_top = _posterior(top.raw, top.x, top.y, jnp.asarray(xq, jnp.float32))
-    np.testing.assert_allclose(std, np.asarray(s_top), rtol=1e-6)
+    # predict() serves std from the bucket-padded cached factorization; the
+    # padding is exact in math but reorders f32 ops vs the unpadded oracle
+    np.testing.assert_allclose(std, np.asarray(s_top), rtol=1e-5, atol=1e-6)
     assert std.shape == (10,)
 
 
@@ -329,6 +331,42 @@ def test_prior_growth_invalidates_warm_start_fingerprint():
     assert not policy.last_fit_warm                 # fingerprint skew: cold
     _d, policy = _suggest_once(ds, current)
     assert policy.last_fit_warm                     # stable again: warm
+
+
+def test_prior_level_hyperparams_reused_across_operations():
+    """Schema v3: the second operation resumes the prior level's persisted
+    hyperparameters (no per-prior Adam refit); a grown prior invalidates the
+    reuse, and the fingerprint re-stabilizes on the next operation."""
+    ds, current = _make_ds_with_prior(n_prior=30, n_current=8)
+    _d, p1 = _suggest_once(ds, current)
+    assert p1.last_prior_levels_reused == 0      # first op fits the prior
+    blob = ds.get_study(current.name).study_config.metadata.abs_ns(
+        Namespace(GP_BANDIT_NAMESPACE)).get(STATE_KEY)
+    state = PolicyState.from_value(blob)
+    assert [(l["name"], l["num_trials"]) for l in state.prior_levels] == \
+        [("owners/t/studies/prior", 30)]
+
+    _d, p2 = _suggest_once(ds, current)
+    assert p2.last_prior_levels_reused == 1      # refit skipped
+
+    ds.create_trial("owners/t/studies/prior",
+                    _completed({"x": 0.5, "y": 0.5}, -0.05))  # prior grows
+    _d, p3 = _suggest_once(ds, current)
+    assert p3.last_prior_levels_reused == 0      # stale level: refit
+    _d, p4 = _suggest_once(ds, current)
+    assert p4.last_prior_levels_reused == 1      # stable again
+
+
+def test_prior_level_reuse_survives_current_study_growth():
+    """Prior levels reuse prefix-wise even when the TOP-level trajectory is
+    invalidated (current study gained trials): only the current study's GP
+    refits cold, the prior stack resumes from its checkpoint."""
+    ds, current = _make_ds_with_prior(n_prior=30, n_current=8)
+    _suggest_once(ds, current)
+    ds.create_trial(current.name, _completed({"x": 0.2, "y": 0.8}, -0.1))
+    _d, policy = _suggest_once(ds, current)
+    assert policy.last_prior_levels_reused == 1
+    assert policy.last_fit_warm  # top warm-starts on num_trials growth too
 
 
 def test_priors_only_suggest_resets_fit_observability():
