@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-fast smoke test-dist cov-service bench-batched bench-remote-pythia bench-warmstart bench-transfer bench-acquisition
+.PHONY: test test-fast smoke test-dist cov-service bench-batched bench-remote-pythia bench-warmstart bench-transfer bench-acquisition bench-scaleout
 
 # tier-1: the full suite (what the driver runs), then the coverage floors
 # (repro.service >= 80%, repro.pythia >= 70%, repro.core >= 70%,
@@ -46,3 +46,9 @@ bench-transfer:
 # (n in {50,300,1000} x count in {1,8}); writes BENCH_acquisition.json
 bench-acquisition:
 	PYTHONPATH=.:src $(PY) benchmarks/acquisition_latency.py
+
+# scale-out serving tier: worker-pool throughput (1 vs 8 Pythia workers at
+# 64/256 clients, floor: >= 2x) + WaitOperation long-poll latency (floor:
+# median < the old 20ms first-poll interval); writes BENCH_scaleout.json
+bench-scaleout:
+	PYTHONPATH=.:src $(PY) benchmarks/scaleout.py

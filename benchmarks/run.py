@@ -20,6 +20,8 @@ MODULES = [
     ("kernel_bench", "Pallas kernels (interpret) + analytic FLOPs"),
     ("acquisition_latency",
      "GP-bandit suggest-op latency: posterior engine vs pre-engine path"),
+    ("scaleout",
+     "Pythia worker-pool throughput scaling + WaitOperation long-poll latency"),
     ("roofline_report", "§Roofline table from dry-run artifacts"),
 ]
 

@@ -1,0 +1,204 @@
+"""`make bench-scaleout`: Pythia worker-pool throughput + long-poll latency.
+
+Two claims of the scale-out serving tier, measured end-to-end over real
+sockets and written to ``BENCH_scaleout.json``:
+
+1. **Worker-pool scaling** — suggestions/sec with N threaded clients driving
+   16 studies through one API server, 1 Pythia worker vs 8. The policy is a
+   fixed-cost stand-in (``FIXED_COST_BENCH``: ~4 ms sleep per *suggestion*,
+   releasing the GIL — the shape of per-candidate acquisition work in a
+   model-backed policy), so the pool's shard-parallelism is what moves the
+   number, not Python overhead noise. Floor: **8 workers >= 2x 1 worker at
+   64 and 256 clients**.
+
+2. **WaitOperation long-poll latency** — median end-to-end suggest latency
+   for one client, long-poll vs the legacy GetOperation poll ladder whose
+   first sleep alone was ``poll_interval`` = 20 ms. Floor: **long-poll
+   median < 20 ms** (completion latency is no longer quantized by the
+   client's poll schedule).
+"""
+
+import argparse
+import json
+import os
+import threading
+import time
+
+from benchmarks.bench_util import emit
+
+from repro.core import ScaleType, StudyConfig
+from repro.pythia.baseline_designers import RandomSearchDesigner
+from repro.pythia.policy import Policy, SuggestDecision
+from repro.pythia.registry import register
+from repro.service import DefaultVizierServer, VizierClient
+
+TPUT_FLOOR = 2.0        # 8-worker suggestions/sec >= 2x 1-worker, 64+ clients
+LATENCY_FLOOR_S = 0.02  # long-poll median < the old first poll interval
+
+N_STUDIES = 16
+POLICY_COST_S = 0.004
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(_ROOT, "BENCH_scaleout.json")
+
+
+class _FixedCostPolicy(Policy):
+    """Burns ~4 ms per *suggestion* (sleep releases the GIL), then suggests
+    uniformly — models per-candidate acquisition cost, the shape of a
+    model-backed policy. Per-suggestion (not per-invocation) cost matters:
+    the coalesced dispatch folds a whole shard backlog into one invocation
+    with the summed count, so a per-invocation cost would be amortized away
+    by batching and hide the worker parallelism this benchmark measures."""
+
+    def __init__(self, config: StudyConfig):
+        self._config = config
+
+    def suggest(self, request) -> SuggestDecision:
+        time.sleep(POLICY_COST_S * max(int(request.count), 1))
+        designer = RandomSearchDesigner(request.study_config)
+        return SuggestDecision(suggestions=list(designer.suggest(request.count)))
+
+
+@register("FIXED_COST_BENCH")
+def _fixed_cost(supporter, config):
+    return _FixedCostPolicy(config)
+
+
+def _config() -> StudyConfig:
+    cfg = StudyConfig()
+    root = cfg.search_space.select_root()
+    root.add_float_param("x", 0, 1, scale_type=ScaleType.LINEAR)
+    root.add_float_param("y", 0, 1, scale_type=ScaleType.LINEAR)
+    cfg.metrics.add("obj", "MAXIMIZE")
+    cfg.algorithm = "FIXED_COST_BENCH"
+    return cfg
+
+
+def bench_suggest_tput(n_clients: int, n_workers: int, rounds: int) -> dict:
+    """N threaded clients round-robined over 16 studies; suggestions/sec."""
+    server = DefaultVizierServer(n_pythia_workers=n_workers,
+                                 n_shards=N_STUDIES)
+    names = []
+    for i in range(N_STUDIES):
+        c = VizierClient.load_or_create_study(
+            f"scaleout-{i}", _config(), client_id="seed",
+            target=server.address)
+        names.append(c.study_name)
+        c.close()
+    errs, done = [], [0]
+    lock = threading.Lock()
+
+    def worker(wid):
+        try:
+            c = VizierClient(server.address, names[wid % N_STUDIES],
+                             f"w{wid}")
+            for _ in range(rounds):
+                (t,) = c.get_suggestions(count=1, timeout=120.0)
+                c.complete_trial({"obj": 0.1}, trial_id=t.id)
+                with lock:
+                    done[0] += 1
+            c.close()
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    server.stop()
+    assert not errs, errs[:3]
+    tput = done[0] / wall
+    emit(f"scaleout.tput.clients={n_clients}.workers={n_workers}",
+         wall / done[0] * 1e6,
+         f"suggestions_per_sec={tput:.1f} wall={wall:.2f}s")
+    return {"clients": n_clients, "workers": n_workers,
+            "suggestions": done[0], "wall_s": wall,
+            "suggestions_per_sec": tput}
+
+
+def bench_longpoll_latency(rounds: int = 30) -> dict:
+    """Median end-to-end suggest latency, long-poll vs legacy polling."""
+    server = DefaultVizierServer(n_pythia_workers=1, n_shards=4)
+    seed = VizierClient.load_or_create_study(
+        "longpoll", _config(), client_id="seed", target=server.address)
+    out = {}
+    for mode, long_poll in (("long_poll", True), ("legacy_poll", False)):
+        c = VizierClient(server.address, seed.study_name, f"lat-{mode}",
+                         long_poll=long_poll)
+        lats = []
+        for _ in range(rounds):
+            t0 = time.perf_counter()
+            (t,) = c.get_suggestions(count=1, timeout=60.0)
+            lats.append(time.perf_counter() - t0)
+            c.complete_trial({"obj": 0.1}, trial_id=t.id)
+        c.close()
+        lats.sort()
+        out[mode] = lats[len(lats) // 2]
+        emit(f"scaleout.latency.{mode}", out[mode] * 1e6,
+             f"median_ms={out[mode]*1e3:.2f} p90_ms={lats[int(len(lats)*0.9)]*1e3:.2f}")
+    seed.close()
+    server.stop()
+    return {"long_poll_median_s": out["long_poll"],
+            "legacy_poll_median_s": out["legacy_poll"]}
+
+
+def main() -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--rounds", type=int, default=6,
+                        help="suggest+complete rounds per client thread")
+    parser.add_argument("--clients", default="64,256",
+                        help="comma-separated client counts")
+    parser.add_argument("--out", default=OUT_PATH)
+    args = parser.parse_args()
+    client_counts = [int(x) for x in args.clients.split(",")]
+
+    scenarios = []
+    for n_clients in client_counts:
+        for n_workers in (1, 8):
+            scenarios.append(
+                bench_suggest_tput(n_clients, n_workers, rounds=args.rounds))
+    latency = bench_longpoll_latency()
+
+    by_key = {(s["clients"], s["workers"]): s for s in scenarios}
+    floors = []
+    for n_clients in client_counts:
+        single = by_key[(n_clients, 1)]["suggestions_per_sec"]
+        pooled = by_key[(n_clients, 8)]["suggestions_per_sec"]
+        scaling = pooled / max(single, 1e-9)
+        ok = scaling >= TPUT_FLOOR
+        floors.append(ok)
+        emit(f"scaleout.floor.clients={n_clients}", scaling,
+             f"8w/1w={scaling:.2f}x (floor {TPUT_FLOOR}x) "
+             f"{'PASS' if ok else 'FAIL'}")
+    lat_ok = latency["long_poll_median_s"] < LATENCY_FLOOR_S
+    floors.append(lat_ok)
+    emit("scaleout.floor.longpoll_latency",
+         latency["long_poll_median_s"] * 1e6,
+         f"median={latency['long_poll_median_s']*1e3:.2f}ms "
+         f"(floor {LATENCY_FLOOR_S*1e3:.0f}ms) {'PASS' if lat_ok else 'FAIL'}")
+
+    verdict = "PASS" if all(floors) else "FAIL"
+    payload = {
+        "bench": "scaleout",
+        "unit": "suggestions/sec (throughput), seconds (latency medians)",
+        "policy_cost_s": POLICY_COST_S,
+        "n_studies": N_STUDIES,
+        "floors": {"tput_8w_over_1w": TPUT_FLOOR,
+                   "longpoll_median_s": LATENCY_FLOOR_S},
+        "throughput": scenarios,
+        "latency": latency,
+        "verdict": verdict,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out} verdict={verdict}")
+    return 0 if verdict == "PASS" else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

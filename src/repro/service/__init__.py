@@ -1,6 +1,11 @@
 """Distributed fault-tolerant service layer (paper §3)."""
 
-from repro.service.client import BatchSuggestionError, VizierBatchClient, VizierClient
+from repro.service.client import (
+    BatchSuggestionError,
+    OperationFailedError,
+    VizierBatchClient,
+    VizierClient,
+)
 from repro.service.datastore import (
     Datastore,
     InMemoryDatastore,
@@ -9,6 +14,7 @@ from repro.service.datastore import (
     SQLiteDatastore,
 )
 from repro.service.rpc import (
+    PooledRpcClient,
     RpcClient,
     RpcServer,
     Servicer,
@@ -22,12 +28,14 @@ from repro.service.vizier_service import (
     RemotePythia,
     VizierService,
 )
+from repro.service.work_queue import PythiaWorkerPool, ShardedWorkQueue
 
 __all__ = [
-    "BatchSuggestionError", "VizierBatchClient", "VizierClient", "Datastore",
-    "InMemoryDatastore", "KeyAlreadyExistsError",
-    "NotFoundError", "SQLiteDatastore", "RpcClient", "RpcServer", "Servicer",
-    "StatusCode", "VizierRpcError", "DefaultVizierServer",
-    "DistributedVizierServer", "InProcessPythia", "PythiaConnector",
-    "RemotePythia", "VizierService",
+    "BatchSuggestionError", "OperationFailedError", "VizierBatchClient",
+    "VizierClient", "Datastore", "InMemoryDatastore", "KeyAlreadyExistsError",
+    "NotFoundError", "SQLiteDatastore", "PooledRpcClient", "RpcClient",
+    "RpcServer", "Servicer", "StatusCode", "VizierRpcError",
+    "DefaultVizierServer", "DistributedVizierServer", "InProcessPythia",
+    "PythiaConnector", "RemotePythia", "VizierService", "PythiaWorkerPool",
+    "ShardedWorkQueue",
 ]

@@ -7,14 +7,16 @@
             metrics = evaluate(trial.parameters)
             client.complete_trial(metrics, trial_id=trial.id)
 
-The client hides the SuggestTrials -> GetOperation polling loop, retries
-transport failures, and (by re-using its client_id) resumes its own ACTIVE
-trials after a crash.
+The client hides the SuggestTrials -> WaitOperation long-poll loop (degrading
+to GetOperation polling on servers without WaitOperation), retries transport
+failures, and (by re-using its client_id) resumes its own ACTIVE trials after
+a crash.
 
 Batched suggestions: ``VizierBatchClient`` fans many (study, client) pairs'
 suggestion requests into one BatchSuggestTrials RPC (one server-side Pythia
-dispatch) and polls all resulting operations with pipelined GetOperation
-frames — the high-throughput path for schedulers driving many studies.
+dispatch), parks a WaitOperation long-poll on the first pending op, and
+sweeps the rest with pipelined GetOperation frames — the high-throughput
+path for schedulers driving many studies.
 """
 
 from __future__ import annotations
@@ -29,7 +31,26 @@ from repro.service.rpc import RpcClient, StatusCode, VizierRpcError
 
 
 class OperationFailedError(Exception):
-    pass
+    """A long-running operation failed or timed out.
+
+    Carries the server's structured error, not just its message:
+    ``code`` is the RPC StatusCode (DEADLINE_EXCEEDED for client-side
+    timeouts), ``operation_name`` the op that failed — so schedulers can
+    distinguish a retryable UNAVAILABLE from a permanent INVALID_ARGUMENT
+    without parsing strings.
+    """
+
+    def __init__(self, message: str, *, code: Optional[int] = None,
+                 operation_name: Optional[str] = None):
+        super().__init__(message)
+        self.code = code if code is not None else StatusCode.INTERNAL
+        self.operation_name = operation_name
+
+
+#: one WaitOperation park per round trip; longer client deadlines chunk
+_WAIT_CHUNK_S = 10.0
+#: transport deadline slack over the server-side wait park
+_WAIT_RPC_SLACK_S = 5.0
 
 
 class VizierClient:
@@ -42,11 +63,19 @@ class VizierClient:
         poll_interval: float = 0.02,
         poll_backoff: float = 1.3,
         max_poll_interval: float = 2.0,
+        long_poll: bool = True,
     ):
+        """``long_poll=True`` awaits operations via the WaitOperation RPC
+        (server parks the request until the op completes — latency is no
+        longer quantized by the poll/backoff ladder), degrading permanently
+        to the classic GetOperation polling loop if the server predates
+        WaitOperation (UNIMPLEMENTED)."""
         self._rpc = RpcClient(target)
         self._study_name = study_name
         self._client_id = client_id
         self._poll = (poll_interval, poll_backoff, max_poll_interval)
+        # None = probe on first use; False is sticky after UNIMPLEMENTED
+        self._long_poll: Optional[bool] = None if long_poll else False
 
     # -- construction -------------------------------------------------------------
     @classmethod
@@ -100,7 +129,7 @@ class VizierClient:
 
     # -- suggestion loop -------------------------------------------------------------
     def get_suggestions(self, count: int = 1, *, timeout: float = 600.0) -> List[Trial]:
-        """SuggestTrials + GetOperation polling until the batch is ready."""
+        """SuggestTrials + WaitOperation long-poll until the batch is ready."""
         result = self._rpc.call(
             "SuggestTrials",
             {
@@ -114,18 +143,52 @@ class VizierClient:
         return [Trial.from_proto(p) for p in (op.get("result") or {}).get("trials", [])]
 
     def _await_operation(self, op: dict, *, timeout: float) -> dict:
-        interval, backoff, max_interval = self._poll
         deadline = time.monotonic() + timeout
+        op = self._wait_until_done(op, deadline)
+        if not op.get("done"):
+            # the op is NOT abandoned server-side: it stays pending and a
+            # later GetOperation (or recovery) still finds/completes it
+            raise OperationFailedError(
+                f"operation {op['name']} timed out after {timeout:.3f}s",
+                code=StatusCode.DEADLINE_EXCEEDED,
+                operation_name=op["name"],
+            )
+        if op.get("error"):
+            err = op["error"]
+            raise OperationFailedError(
+                f"operation {op['name']}: {err.get('message')}",
+                code=err.get("code"),
+                operation_name=op["name"],
+            )
+        return op
+
+    def _wait_until_done(self, op: dict, deadline: float) -> dict:
+        """Blocks until the op is done or the deadline lapses (returns the
+        last-seen op either way; the caller decides whether to raise)."""
+        while not op.get("done") and self._long_poll is not False:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                return op
+            chunk = min(remaining, _WAIT_CHUNK_S)
+            try:
+                op = self._rpc.call(
+                    "WaitOperation",
+                    {"name": op["name"], "timeout_ms": int(chunk * 1000)},
+                    timeout=chunk + _WAIT_RPC_SLACK_S,
+                )["operation"]
+                self._long_poll = True
+            except VizierRpcError as e:
+                if e.code != StatusCode.UNIMPLEMENTED:
+                    raise
+                self._long_poll = False  # old server: degrade permanently
+        interval, backoff, max_interval = self._poll
         while not op.get("done"):
-            if time.monotonic() > deadline:
-                raise OperationFailedError(f"operation {op['name']} timed out")
-            time.sleep(interval)
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                return op
+            time.sleep(min(interval, remaining))
             interval = min(interval * backoff, max_interval)
             op = self._rpc.call("GetOperation", {"name": op["name"]})["operation"]
-        if op.get("error"):
-            raise OperationFailedError(
-                f"operation {op['name']}: {op['error'].get('message')}"
-            )
         return op
 
     # -- reporting ---------------------------------------------------------------------
@@ -273,9 +336,11 @@ class VizierBatchClient:
         poll_interval: float = 0.02,
         poll_backoff: float = 1.3,
         max_poll_interval: float = 2.0,
+        long_poll: bool = True,
     ):
         self._rpc = RpcClient(target)
         self._poll = (poll_interval, poll_backoff, max_poll_interval)
+        self._long_poll: Optional[bool] = None if long_poll else False
 
     def get_suggestions(
         self, requests: List[Dict], *, timeout: float = 600.0
@@ -315,11 +380,23 @@ class VizierBatchClient:
                 results=[trials_by_index.get(i) for i in range(len(wire))],
             )
         if op_failures:
-            raise OperationFailedError(f"batched suggestion failures: {op_failures}")
+            first_i = min(op_failures)
+            raise OperationFailedError(
+                f"batched suggestion failures: {op_failures}",
+                code=op_failures[first_i].get("code"),
+                operation_name=done[first_i]["name"],
+            )
         return [trials_by_index[i] for i in range(len(wire))]
 
     def _poll_operations(self, ops: Dict[int, dict], timeout: float) -> Dict[int, dict]:
-        """Polls all pending operations to completion with pipelined frames."""
+        """Awaits all pending operations: long-poll + pipelined sweep.
+
+        Parks one WaitOperation on the lowest-indexed pending op — siblings
+        of a coalesced dispatch complete together, so one long-poll amortizes
+        the whole batch — then sweeps the rest with pipelined GetOperation
+        frames. Falls back to the classic sleep/poll ladder on servers
+        without WaitOperation.
+        """
         done: Dict[int, dict] = {}
         interval, backoff, max_interval = self._poll
         deadline = time.monotonic() + timeout
@@ -329,19 +406,40 @@ class VizierBatchClient:
                     done[i] = ops.pop(i)
             if not ops:
                 return done
-            if time.monotonic() > deadline:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                first = min(ops)
                 raise OperationFailedError(
-                    f"{len(ops)} batched suggestion operations timed out"
+                    f"{len(ops)} batched suggestion operations timed out",
+                    code=StatusCode.DEADLINE_EXCEEDED,
+                    operation_name=ops[first]["name"],
                 )
-            time.sleep(interval)
-            interval = min(interval * backoff, max_interval)
             idx = sorted(ops)
-            # pipelined poll: N GetOperation frames, one network round trip
-            polled = self._rpc.call_many(
-                "GetOperation", [{"name": ops[i]["name"]} for i in idx]
-            )
-            for i, r in zip(idx, polled):
-                ops[i] = r["operation"]
+            if self._long_poll is not False:
+                chunk = min(remaining, _WAIT_CHUNK_S)
+                try:
+                    ops[idx[0]] = self._rpc.call(
+                        "WaitOperation",
+                        {"name": ops[idx[0]]["name"], "timeout_ms": int(chunk * 1000)},
+                        timeout=chunk + _WAIT_RPC_SLACK_S,
+                    )["operation"]
+                    self._long_poll = True
+                except VizierRpcError as e:
+                    if e.code != StatusCode.UNIMPLEMENTED:
+                        raise
+                    self._long_poll = False
+                rest = idx[1:] if self._long_poll else idx
+            else:
+                time.sleep(min(interval, remaining))
+                interval = min(interval * backoff, max_interval)
+                rest = idx
+            if rest:
+                # pipelined poll: N GetOperation frames, one network round trip
+                polled = self._rpc.call_many(
+                    "GetOperation", [{"name": ops[i]["name"]} for i in rest]
+                )
+                for i, r in zip(rest, polled):
+                    ops[i] = r["operation"]
 
     def complete_trials(
         self, completions: List[Dict]

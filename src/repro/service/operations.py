@@ -1,17 +1,50 @@
 """Long-running Operations (paper §3.2).
 
 SuggestTrials returns an Operation immediately; the actual Pythia computation
-runs in a server thread. Clients poll GetOperation until done. Operations are
-persisted in the datastore *before* computation starts and contain enough
-information (study, client, count) to restart the computation after a server
-crash — the paper's server-side fault-tolerance mechanism.
+runs asynchronously server-side. Operations are persisted in the datastore
+*before* computation starts and contain enough information (study, client,
+count) to restart the computation after a server crash — the paper's
+server-side fault-tolerance mechanism.
+
+Execution contract (scale-out serving tier):
+
+* Suggest ops are enqueued on a study-sharded work queue
+  (``shard_of(study_name, n_shards)``; one study always lands on one shard)
+  and executed by a pool of Pythia workers, each leasing one shard's backlog
+  as a coalesced batch (see ``work_queue``). A worker that dies mid-lease has
+  its in-flight ops requeued — ``requeues`` counts how many times an op was
+  handed to a new worker — and re-run idempotently: a requeued op that
+  already completed is skipped, never re-dispatched.
+* Clients learn of completion through the ``WaitOperation`` long-poll RPC
+  (the server parks the request on a per-op event until the op finishes or
+  the wait deadline lapses); the classic ``GetOperation`` polling loop
+  remains for old clients and as the fallback when the server predates
+  WaitOperation.
 """
 
 from __future__ import annotations
 
 import time
 import uuid
+import zlib
 from typing import List, Optional
+
+
+def shard_of(study_name: str, n_shards: int) -> int:
+    """Stable shard key: one study never splits across queue shards.
+
+    CRC32 rather than ``hash()`` because Python salts str hashes per process
+    — the shard of a study must not change across server restarts while its
+    persisted ops are being recovered into the queue.
+    """
+    return zlib.crc32(study_name.encode("utf-8")) % n_shards
+
+
+def note_requeued(op: dict) -> dict:
+    """Stamp an op handed back to the queue after its worker died."""
+    op = dict(op)
+    op["requeues"] = int(op.get("requeues", 0)) + 1
+    return op
 
 
 def new_suggest_operation(study_name: str, client_id: str, count: int) -> dict:
@@ -23,6 +56,7 @@ def new_suggest_operation(study_name: str, client_id: str, count: int) -> dict:
         "suggestion_count": int(count),
         "done": False,
         "create_time": time.time(),
+        "requeues": 0,
         "result": None,
         "error": None,
     }

@@ -19,6 +19,11 @@ path. The per-study PythiaSuggest method is kept as a back-compat shim for
 non-batch callers; with single_fetch=True (default) it rides the same
 one-frame loader (previously it listed trials once for max_trial_id and the
 policy supporter re-fetched them over the wire).
+
+The service is driven concurrently by the API server's Pythia worker pool
+(one coalesced PythiaBatchSuggest in flight per worker); calls back to the
+API server ride a shared thread-affine connection pool — each handler thread
+reuses its own persistent connection instead of dialing per request.
 """
 
 from __future__ import annotations
@@ -33,6 +38,7 @@ from repro.pythia.policy import EarlyStopRequest, StudyDescriptor, SuggestReques
 from repro.pythia.registry import make_policy
 from repro.pythia.supporter import RemotePolicySupporter
 from repro.service.rpc import (
+    PooledRpcClient,
     RpcClient,
     RpcServer,
     Servicer,
@@ -60,12 +66,20 @@ class PythiaServicer(Servicer):
         super().__init__()
         self._api_target = api_server_target
         self._single_fetch = single_fetch
+        # one pooled client for the life of the servicer: each handler
+        # thread keeps its own persistent connection to the API server
+        # (dialing a fresh socket per request was measurable churn once the
+        # worker pool started driving N concurrent batch dispatches)
+        self._api_rpc = PooledRpcClient(api_server_target)
         self.expose("PythiaSuggest", self.PythiaSuggest)
         self.expose("PythiaBatchSuggest", self.PythiaBatchSuggest)
         self.expose("PythiaEarlyStop", self.PythiaEarlyStop)
 
-    def _rpc(self) -> RpcClient:
-        return RpcClient(self._api_target)
+    def _rpc(self) -> PooledRpcClient:
+        return self._api_rpc
+
+    def close(self) -> None:
+        self._api_rpc.close()
 
     def _load_many(self, rpc: RpcClient, study_names: List[str]
                    ) -> "Tuple[Dict[str, _LoadedStudy], dict]":
@@ -171,18 +185,15 @@ class PythiaServicer(Servicer):
 
     def PythiaSuggest(self, params: dict) -> dict:
         rpc = self._rpc()
-        try:
-            name = params["study_name"]
-            if self._single_fetch:
-                loaded, context = self._load(rpc, name)
-            else:
-                loaded = self._load_legacy(rpc, name)
-                context = {}  # policy re-RPCs per state, as before
-            return self._suggest_one(rpc, loaded, int(params["count"]),
-                                     context,
-                                     buffer_metadata=self._single_fetch)
-        finally:
-            rpc.close()
+        name = params["study_name"]
+        if self._single_fetch:
+            loaded, context = self._load(rpc, name)
+        else:
+            loaded = self._load_legacy(rpc, name)
+            context = {}  # policy re-RPCs per state, as before
+        return self._suggest_one(rpc, loaded, int(params["count"]),
+                                 context,
+                                 buffer_metadata=self._single_fetch)
 
     def PythiaBatchSuggest(self, params: dict) -> dict:
         """N sub-requests -> N parallel result entries, one shared prefetch.
@@ -201,95 +212,89 @@ class PythiaServicer(Servicer):
         """
         requests = params.get("requests") or []
         rpc = self._rpc()
-        try:
-            # group by study preserving arrival order: name -> [(index, count)]
-            groups: Dict[str, list] = {}
-            results: list = [None] * len(requests)
-            for i, r in enumerate(requests):
-                name = r.get("study_name")
-                if not name:
+        # group by study preserving arrival order: name -> [(index, count)]
+        groups: Dict[str, list] = {}
+        results: list = [None] * len(requests)
+        for i, r in enumerate(requests):
+            name = r.get("study_name")
+            if not name:
+                results[i] = {"error": {
+                    "code": StatusCode.INVALID_ARGUMENT,
+                    "message": "sub-request missing study_name",
+                }}
+                continue
+            groups.setdefault(name, []).append((i, int(r.get("count", 1))))
+        if groups:
+            loaded, context = self._load_many(rpc, list(groups))
+        else:
+            loaded, context = {}, {}
+        for name, members in groups.items():
+            entry = loaded[name]
+            if isinstance(entry, VizierRpcError):
+                for i, _ in members:
                     results[i] = {"error": {
-                        "code": StatusCode.INVALID_ARGUMENT,
-                        "message": "sub-request missing study_name",
+                        "code": entry.code, "message": entry.message,
+                    }}
+                continue
+            total = sum(count for _, count in members)
+            try:
+                one = self._suggest_one(rpc, entry, total, context)
+            except Exception as e:  # noqa: BLE001 — isolate per study
+                log.exception("batched suggest for %s failed", name)
+                for i, _ in members:
+                    results[i] = {"error": {
+                        "code": StatusCode.INTERNAL,
+                        "message": f"{type(e).__name__}: {e}",
+                    }}
+                continue
+            suggestions = one["suggestions"]
+            cursor = 0
+            for k, (i, want) in enumerate(members):
+                take = suggestions[cursor:cursor + want]
+                cursor += len(take)
+                if want and not take:
+                    results[i] = {"error": {
+                        "code": StatusCode.INTERNAL,
+                        "message": (
+                            f"policy returned {len(suggestions)} "
+                            f"suggestions for a coalesced request of "
+                            f"{total}; none left for this sub-request"),
                     }}
                     continue
-                groups.setdefault(name, []).append((i, int(r.get("count", 1))))
-            if groups:
-                loaded, context = self._load_many(rpc, list(groups))
-            else:
-                loaded, context = {}, {}
-            for name, members in groups.items():
-                entry = loaded[name]
-                if isinstance(entry, VizierRpcError):
-                    for i, _ in members:
-                        results[i] = {"error": {
-                            "code": entry.code, "message": entry.message,
-                        }}
-                    continue
-                total = sum(count for _, count in members)
-                try:
-                    one = self._suggest_one(rpc, entry, total, context)
-                except Exception as e:  # noqa: BLE001 — isolate per study
-                    log.exception("batched suggest for %s failed", name)
-                    for i, _ in members:
-                        results[i] = {"error": {
-                            "code": StatusCode.INTERNAL,
-                            "message": f"{type(e).__name__}: {e}",
-                        }}
-                    continue
-                suggestions = one["suggestions"]
-                cursor = 0
-                for k, (i, want) in enumerate(members):
-                    take = suggestions[cursor:cursor + want]
-                    cursor += len(take)
-                    if want and not take:
-                        results[i] = {"error": {
-                            "code": StatusCode.INTERNAL,
-                            "message": (
-                                f"policy returned {len(suggestions)} "
-                                f"suggestions for a coalesced request of "
-                                f"{total}; none left for this sub-request"),
-                        }}
-                        continue
-                    if len(take) < want:
-                        log.warning("coalesced sub-request %d got %d/%d "
-                                    "suggestions", i, len(take), want)
-                    results[i] = {
-                        "suggestions": take,
-                        # the study's delta is applied once, via the first entry
-                        "metadata_delta": one["metadata_delta"] if k == 0
-                        else MetadataDelta().to_proto(),
-                    }
-            return {"results": results}
-        finally:
-            rpc.close()
+                if len(take) < want:
+                    log.warning("coalesced sub-request %d got %d/%d "
+                                "suggestions", i, len(take), want)
+                results[i] = {
+                    "suggestions": take,
+                    # the study's delta is applied once, via the first entry
+                    "metadata_delta": one["metadata_delta"] if k == 0
+                    else MetadataDelta().to_proto(),
+                }
+        return {"results": results}
 
     def PythiaEarlyStop(self, params: dict) -> dict:
         rpc = self._rpc()
-        try:
-            name = params["study_name"]
-            (config, descriptor, _trials), context = self._load(rpc, name)
-            supporter = RemotePolicySupporter(
-                rpc, name,
-                prefetched=context.get("snapshot") or {},
-                configs=context.get("configs"),
-                known_missing=context.get("missing", ()))
-            policy = make_policy(config.algorithm, supporter, config)
-            decisions = policy.early_stop(
-                EarlyStopRequest(
-                    study_descriptor=descriptor,
-                    trial_ids=[int(t) for t in params["trial_ids"]],
-                )
-            ).decisions
-            return {
-                "decisions": [
-                    {"trial_id": d.trial_id, "should_stop": d.should_stop,
-                     "reason": d.reason}
-                    for d in decisions
-                ]
-            }
-        finally:
-            rpc.close()
+        name = params["study_name"]
+        (config, descriptor, _trials), context = self._load(rpc, name)
+        supporter = RemotePolicySupporter(
+            rpc, name,
+            prefetched=context.get("snapshot") or {},
+            configs=context.get("configs"),
+            known_missing=context.get("missing", ()))
+        policy = make_policy(config.algorithm, supporter, config)
+        decisions = policy.early_stop(
+            EarlyStopRequest(
+                study_descriptor=descriptor,
+                trial_ids=[int(t) for t in params["trial_ids"]],
+            )
+        ).decisions
+        return {
+            "decisions": [
+                {"trial_id": d.trial_id, "should_stop": d.should_stop,
+                 "reason": d.reason}
+                for d in decisions
+            ]
+        }
 
 
 def start_pythia_server(api_server_address: str, host: str = "127.0.0.1",

@@ -195,6 +195,21 @@ class RpcClient:
         self.backoff_base = backoff_base
         self.backoff_cap = backoff_cap
 
+    def _backoff_sleep(self, attempt: int, deadline: float) -> None:
+        """Jittered exponential backoff, clamped to the request deadline.
+
+        Unclamped, the last retry could sleep a full backoff (up to
+        1.5 * backoff_cap) *past* the deadline before the next loop
+        iteration noticed and raised — callers saw DEADLINE_EXCEEDED
+        seconds after their deadline. Clamping the sleep to the remaining
+        budget makes the error surface at the deadline, not after it.
+        """
+        delay = min(self.backoff_cap, self.backoff_base * (2**attempt))
+        delay *= 0.5 + random.random()
+        remaining = deadline - time.monotonic()
+        if remaining > 0:
+            time.sleep(min(delay, remaining))
+
     def call(self, method: str, params: dict, *, timeout: Optional[float] = None) -> Any:
         timeout = timeout if timeout is not None else self.default_timeout
         deadline = time.monotonic() + timeout
@@ -215,8 +230,7 @@ class RpcClient:
                 if e.code != StatusCode.UNAVAILABLE or attempt >= self.max_retries:
                     raise
                 attempt += 1
-                delay = min(self.backoff_cap, self.backoff_base * (2**attempt))
-                time.sleep(delay * (0.5 + random.random()))
+                self._backoff_sleep(attempt, deadline)
                 continue
             if resp.get("ok"):
                 return resp.get("result")
@@ -224,8 +238,7 @@ class RpcClient:
             code = err.get("code", StatusCode.INTERNAL)
             if code == StatusCode.UNAVAILABLE and attempt < self.max_retries:
                 attempt += 1
-                delay = min(self.backoff_cap, self.backoff_base * (2**attempt))
-                time.sleep(delay * (0.5 + random.random()))
+                self._backoff_sleep(attempt, deadline)
                 continue
             raise VizierRpcError(code, err.get("message", "unknown error"))
 
@@ -271,8 +284,7 @@ class RpcClient:
                 if e.code != StatusCode.UNAVAILABLE or attempt >= self.max_retries:
                     raise
                 attempt += 1
-                delay = min(self.backoff_cap, self.backoff_base * (2**attempt))
-                time.sleep(delay * (0.5 + random.random()))
+                self._backoff_sleep(attempt, deadline)
                 continue
             results = []
             first_error: Optional[VizierRpcError] = None
@@ -294,6 +306,46 @@ class RpcClient:
 
     def close(self) -> None:
         self._transport.close()
+
+
+class PooledRpcClient:
+    """Thread-affine RpcClient pool: one connection per calling thread.
+
+    A single RpcClient over TCP serializes concurrent callers on its
+    transport lock — fine for one client thread, a bottleneck for the
+    Pythia worker pool, where N workers dispatch coalesced batches
+    concurrently to the same Pythia service. Each thread lazily gets its own
+    RpcClient (same retry/deadline semantics); close() tears down every
+    connection ever created.
+    """
+
+    def __init__(self, target: "str | Servicer", **client_kwargs):
+        self._target = target
+        self._kwargs = client_kwargs
+        self._local = threading.local()
+        self._all: "list[RpcClient]" = []
+        self._all_lock = threading.Lock()
+
+    def _client(self) -> RpcClient:
+        client = getattr(self._local, "client", None)
+        if client is None:
+            client = RpcClient(self._target, **self._kwargs)
+            self._local.client = client
+            with self._all_lock:
+                self._all.append(client)
+        return client
+
+    def call(self, method: str, params: dict, *, timeout: Optional[float] = None) -> Any:
+        return self._client().call(method, params, timeout=timeout)
+
+    def call_many(self, method: str, params_list: "list[dict]", **kwargs) -> "list[Any]":
+        return self._client().call_many(method, params_list, **kwargs)
+
+    def close(self) -> None:
+        with self._all_lock:
+            clients, self._all = self._all, []
+        for c in clients:
+            c.close()
 
 
 # ---------------------------------------------------------------------------
@@ -373,6 +425,11 @@ class _Handler(socketserver.BaseRequestHandler):
 class _ThreadingTCPServer(socketserver.ThreadingTCPServer):
     daemon_threads = True
     allow_reuse_address = True
+    # the socketserver default backlog of 5 drops SYNs when hundreds of
+    # clients dial at once (the scale-out benchmark's 256-client storm
+    # surfaced as DEADLINE_EXCEEDED on first calls); match a production
+    # listen queue instead
+    request_queue_size = 1024
 
 
 class RpcServer:

@@ -18,7 +18,7 @@ from typing import Optional
 
 from repro.service.datastore import Datastore, InMemoryDatastore, SQLiteDatastore
 from repro.service.pythia_service import PythiaServicer
-from repro.service.rpc import RpcClient, RpcServer
+from repro.service.rpc import PooledRpcClient, RpcServer
 from repro.service.vizier_service import InProcessPythia, RemotePythia, VizierService
 
 
@@ -31,7 +31,13 @@ class DefaultVizierServer:
         database_path: Optional[str] = None,
         reassign_stalled_after: Optional[float] = None,
         recover: bool = True,
+        n_pythia_workers: int = 0,
+        n_shards: int = 8,
     ):
+        """``n_pythia_workers`` > 0 enables the scale-out serving tier: a
+        pool of Pythia workers pulling coalesced batches off an
+        ``n_shards``-way study-sharded work queue (0 keeps the classic
+        direct thread-pool dispatch)."""
         self.datastore: Datastore = (
             SQLiteDatastore(database_path) if database_path else InMemoryDatastore()
         )
@@ -39,6 +45,8 @@ class DefaultVizierServer:
             self.datastore,
             InProcessPythia(self.datastore),
             reassign_stalled_after=reassign_stalled_after,
+            n_pythia_workers=n_pythia_workers,
+            n_shards=n_shards,
         )
         self._server = RpcServer(self.servicer, host=host, port=port).start()
         if recover:
@@ -47,6 +55,13 @@ class DefaultVizierServer:
     @property
     def address(self) -> str:
         return self._server.address
+
+    def stop_pythia_worker(self, worker_id: int) -> int:
+        """Fault injection: kill one Pythia worker; in-flight ops requeue."""
+        return self.servicer.worker_pool.stop_worker(worker_id)
+
+    def restart_pythia_worker(self, worker_id: int) -> None:
+        self.servicer.worker_pool.restart_worker(worker_id)
 
     def stop(self) -> None:
         self.servicer.shutdown()
@@ -73,13 +88,18 @@ class DistributedVizierServer:
         reassign_stalled_after: Optional[float] = None,
         coalesce_remote: bool = True,
         pythia_single_fetch: bool = True,
+        n_pythia_workers: int = 0,
+        n_shards: int = 8,
     ):
         self.datastore: Datastore = (
             SQLiteDatastore(database_path) if database_path else InMemoryDatastore()
         )
         # 1. API server comes up first (Pythia dials back into it).
         self.servicer = VizierService(
-            self.datastore, pythia=None, reassign_stalled_after=reassign_stalled_after
+            self.datastore, pythia=None,
+            reassign_stalled_after=reassign_stalled_after,
+            n_pythia_workers=n_pythia_workers,
+            n_shards=n_shards,
         )
         self._api_server = RpcServer(self.servicer, host=host, port=0).start()
         # 2. Pythia server, pointed at the API server.
@@ -91,9 +111,11 @@ class DistributedVizierServer:
         # 3. Rewire the API server's connector to the remote Pythia. The
         # enlarged retry budget (8 attempts, capped exponential backoff)
         # lets in-flight suggest ops ride out a Pythia restart of roughly
-        # ten seconds; see stop_pythia/restart_pythia.
+        # ten seconds; see stop_pythia/restart_pythia. The pooled client
+        # gives each Pythia worker its own connection, so concurrent
+        # coalesced dispatches don't serialize on one transport lock.
         self.servicer._pythia = RemotePythia(
-            RpcClient(self._pythia_server.address, max_retries=8),
+            PooledRpcClient(self._pythia_server.address, max_retries=8),
             coalesce=coalesce_remote,
         )
         self.servicer.recover_pending_operations()
@@ -119,13 +141,24 @@ class DistributedVizierServer:
     def restart_pythia(self) -> None:
         """Bring Pythia back on the SAME address a client already dials."""
         port = int(self._pythia_server.address.rsplit(":", 1)[1])
+        self.pythia_servicer.close()  # drop the dead servicer's pooled conns
         self.pythia_servicer = PythiaServicer(
             self._api_server.address, single_fetch=self._pythia_single_fetch)
         self._pythia_server = RpcServer(
             self.pythia_servicer, host=self._host, port=port
         ).start()
 
+    def stop_pythia_worker(self, worker_id: int) -> int:
+        """Worker-granular fault injection (vs stop_pythia's whole-process
+        kill): one Pythia worker dies mid-lease; its in-flight ops requeue
+        onto surviving workers. Returns the number of requeued ops."""
+        return self.servicer.worker_pool.stop_worker(worker_id)
+
+    def restart_pythia_worker(self, worker_id: int) -> None:
+        self.servicer.worker_pool.restart_worker(worker_id)
+
     def stop(self) -> None:
         self.servicer.shutdown()
+        self.pythia_servicer.close()
         self._pythia_server.stop()
         self._api_server.stop()

@@ -255,6 +255,9 @@ class RemotePythia(PythiaConnector):
 
 
 class VizierService(Servicer):
+    #: server-side cap on one WaitOperation park; clients chunk longer waits
+    MAX_WAIT_S = 30.0
+
     def __init__(
         self,
         datastore: Datastore,
@@ -262,7 +265,15 @@ class VizierService(Servicer):
         *,
         reassign_stalled_after: Optional[float] = None,
         max_workers: int = 16,
+        n_pythia_workers: int = 0,
+        n_shards: int = 8,
+        lease_timeout: float = 30.0,
     ):
+        """``n_pythia_workers`` > 0 switches suggestion execution from the
+        direct thread-pool submit to the scale-out tier: ops enqueue on a
+        ``n_shards``-way study-sharded work queue and a pool of Pythia
+        workers lease per-shard coalesced batches (see ``work_queue``). The
+        thread pool remains for early-stopping ops either way."""
         super().__init__()
         self._ds = datastore
         self._pythia = pythia or InProcessPythia(datastore)
@@ -271,10 +282,29 @@ class VizierService(Servicer):
                                         thread_name_prefix="pythia")
         self._study_locks: Dict[str, threading.Lock] = {}
         self._locks_guard = threading.Lock()
+        # WaitOperation long-poll: op name -> [Event, waiter refcount]
+        self._op_waiters: Dict[str, list] = {}
+        self._op_waiters_guard = threading.Lock()
+        self._queue = None
+        self.worker_pool = None
+        if n_pythia_workers > 0:
+            from repro.service.work_queue import (
+                PythiaWorkerPool,
+                ShardedWorkQueue,
+            )
+
+            self._queue = ShardedWorkQueue(n_shards,
+                                           lease_timeout=lease_timeout)
+            self.worker_pool = PythiaWorkerPool(
+                self._queue,
+                self._run_suggest_ops_coalesced,
+                self._op_already_done,
+                n_workers=n_pythia_workers,
+            ).start()
         for method in (
             "CreateStudy", "GetStudy", "ListStudies", "DeleteStudy", "SetStudyState",
-            "SuggestTrials", "BatchSuggestTrials", "GetOperation", "CompleteTrial",
-            "BatchCompleteTrials", "AddTrialMeasurement",
+            "SuggestTrials", "BatchSuggestTrials", "GetOperation", "WaitOperation",
+            "CompleteTrial", "BatchCompleteTrials", "AddTrialMeasurement",
             "GetTrial", "ListTrials", "GetTrialsMulti", "DeleteTrial", "CreateTrial",
             "CheckTrialEarlyStoppingState", "StopTrial", "ListOptimalTrials",
             "UpdateMetadata", "ListAlgorithms", "Ping",
@@ -285,6 +315,38 @@ class VizierService(Servicer):
     def _study_lock(self, study_name: str) -> threading.Lock:
         with self._locks_guard:
             return self._study_locks.setdefault(study_name, threading.Lock())
+
+    def _put_op(self, op: dict) -> None:
+        """Single write path for operations: persists, then wakes any
+        WaitOperation long-pollers once the op reaches a terminal state."""
+        self._ds.put_operation(op)
+        if op.get("done"):
+            with self._op_waiters_guard:
+                entry = self._op_waiters.pop(op["name"], None)
+            if entry is not None:
+                entry[0].set()
+
+    def _op_already_done(self, op: dict) -> bool:
+        """Requeue idempotency: a dead worker may have finished this op."""
+        try:
+            return bool(self._ds.get_operation(op["name"]).get("done"))
+        except NotFoundError:
+            return True  # study (and its ops) deleted mid-flight
+
+    def _dispatch_suggest_op(self, op: dict) -> None:
+        """Route a runnable suggest op to the worker-pool queue (scale-out)
+        or the legacy direct thread-pool dispatch."""
+        if self._queue is not None:
+            self._queue.enqueue(op)
+        else:
+            self._pool.submit(self._run_suggest_op, op)
+
+    def _dispatch_suggest_ops(self, ops: List[dict]) -> None:
+        if self._queue is not None:
+            for op in ops:
+                self._queue.enqueue(op)
+        else:
+            self._pool.submit(self._run_suggest_ops_coalesced, ops)
 
     def _get_study_or_rpc_error(self, name: str) -> Study:
         try:
@@ -334,10 +396,16 @@ class VizierService(Servicer):
         return {"studies": [s.to_proto() for s in self._ds.list_studies(prefix)]}
 
     def DeleteStudy(self, params: dict) -> dict:
+        name = params["name"]
         try:
-            self._ds.delete_study(params["name"])
+            self._ds.delete_study(name)
         except NotFoundError as e:
             raise VizierRpcError(StatusCode.NOT_FOUND, str(e)) from e
+        # evict the per-study lock: without this the lock map grows forever
+        # under study churn (create/delete workloads leaked one Lock per
+        # study for the life of the server)
+        with self._locks_guard:
+            self._study_locks.pop(name, None)
         return {}
 
     def SetStudyState(self, params: dict) -> dict:
@@ -361,7 +429,7 @@ class VizierService(Servicer):
             if study.state != StudyState.ACTIVE:
                 op = ops_lib.new_suggest_operation(study_name, client_id, count)
                 op = ops_lib.complete_operation(op, {"trials": []})
-                self._ds.put_operation(op)
+                self._put_op(op)
                 return op, False
 
             # 2. client already owns ACTIVE trials -> return them immediately
@@ -374,7 +442,7 @@ class VizierService(Servicer):
                 op = ops_lib.complete_operation(
                     op, {"trials": [t.to_proto() for t in mine[:count]]}
                 )
-                self._ds.put_operation(op)
+                self._put_op(op)
                 return op, False
 
             # 3. reassign stalled trials from dead clients (paper §5)
@@ -396,7 +464,7 @@ class VizierService(Servicer):
                     op = ops_lib.complete_operation(
                         op, {"trials": [t.to_proto() for t in grabbed]}
                     )
-                    self._ds.put_operation(op)
+                    self._put_op(op)
                     return op, False
 
             # 4. an identical pending op may already exist (idempotent retry)
@@ -409,7 +477,7 @@ class VizierService(Servicer):
 
             # 5. schedule fresh Pythia computation
             op = ops_lib.new_suggest_operation(study_name, client_id, count)
-            self._ds.put_operation(op)
+            self._put_op(op)
             return op, True
 
     def SuggestTrials(self, params: dict) -> dict:
@@ -418,7 +486,7 @@ class VizierService(Servicer):
         count = int(params.get("suggestion_count", 1))
         op, needs_run = self._prepare_suggest_op(study_name, client_id, count)
         if needs_run:
-            self._pool.submit(self._run_suggest_op, op)
+            self._dispatch_suggest_op(op)
         return {"operation": op}
 
     def BatchSuggestTrials(self, params: dict) -> dict:
@@ -458,7 +526,7 @@ class VizierService(Servicer):
             if needs_run:
                 to_run.append(op)
         if to_run:
-            self._pool.submit(self._run_suggest_ops_coalesced, to_run)
+            self._dispatch_suggest_ops(to_run)
         return {"operations": operations, "errors": errors}
 
     def _apply_delta_locked(self, study_name: str, delta) -> None:
@@ -483,7 +551,7 @@ class VizierService(Servicer):
         return trials
 
     def _fail_op(self, op: dict, e: Exception) -> None:
-        self._ds.put_operation(
+        self._put_op(
             ops_lib.fail_operation_from_exception(op, e,
                                                   default_code=StatusCode.INTERNAL)
         )
@@ -502,30 +570,42 @@ class VizierService(Servicer):
                 done = ops_lib.complete_operation(
                     op, {"trials": [t.to_proto() for t in trials]}
                 )
-                self._ds.put_operation(done)
+                self._put_op(done)
         except Exception as e:  # noqa: BLE001 — op must terminate
             log.exception("suggest op %s failed", op["name"])
             self._fail_op(op, e)
 
-    def _run_suggest_ops_coalesced(self, ops: List[dict]) -> None:
-        """One pool job for a whole BatchSuggestTrials dispatch.
+    def _run_suggest_ops_coalesced(self, ops: List[dict], op_guard=None) -> None:
+        """One job for a whole coalesced dispatch (pool job or worker lease).
 
         Groups ops by study, asks Pythia for each study's summed count in one
         policy invocation, then splits the suggestion batch across the ops in
         arrival order (each trial bound to its requester's client_id). A
         failed study fails only its own ops.
+
+        ``op_guard`` (worker-pool path): called per op before any state is
+        written; returning False means this runner's lease was revoked — the
+        op has been requeued to another worker, so a zombie holder must
+        neither create trials nor terminate the op. Paired with the
+        done-recheck under the study lock, a requeued op is finalized exactly
+        once even if the presumed-dead worker is still running.
         """
         by_study: Dict[str, List[dict]] = {}
         for op in ops:
             by_study.setdefault(op["study_name"], []).append(op)
+
+        def fail_group(group, e):
+            for op in group:
+                if op_guard is not None and not op_guard(op):
+                    continue
+                self._fail_op(op, e)
 
         items = []
         for study_name, group in by_study.items():
             try:
                 study = self._ds.get_study(study_name)
             except Exception as e:  # noqa: BLE001 — study may be deleted
-                for op in group:
-                    self._fail_op(op, e)
+                fail_group(group, e)
                 continue
             total = sum(int(op["suggestion_count"]) for op in group)
             items.append((study, total, group[0]["client_id"]))
@@ -535,20 +615,26 @@ class VizierService(Servicer):
         except Exception as e:  # noqa: BLE001 — whole dispatch failed
             log.exception("batch suggest dispatch failed")
             for study, _, _ in items:
-                for op in by_study[study.name]:
-                    self._fail_op(op, e)
+                fail_group(by_study[study.name], e)
             return
 
         for (study, _, _), result in zip(items, results):
             group = by_study[study.name]
             if isinstance(result, Exception):
                 log.error("batch suggest for %s failed: %s", study.name, result)
-                for op in group:
-                    self._fail_op(op, result)
+                fail_group(group, result)
                 continue
             suggestions, delta = result
             try:
                 with self._study_lock(study.name):
+                    if op_guard is not None:
+                        # zombie-lease finalize races are settled under the
+                        # study lock: drop ops whose lease is gone or that a
+                        # successor already finalized
+                        group = [op for op in group
+                                 if op_guard(op) and not self._op_already_done(op)]
+                        if not group:
+                            continue
                     self._apply_delta_locked(study.name, delta)
                     cursor = 0
                     for op in group:
@@ -574,7 +660,7 @@ class VizierService(Servicer):
                         done = ops_lib.complete_operation(
                             op, {"trials": [t.to_proto() for t in trials]}
                         )
-                        self._ds.put_operation(done)
+                        self._put_op(done)
             except Exception as e:  # noqa: BLE001 — ops must terminate
                 log.exception("batch suggest finalize for %s failed", study.name)
                 for op in group:
@@ -583,6 +669,8 @@ class VizierService(Servicer):
                             continue
                     except NotFoundError:
                         pass
+                    if op_guard is not None and not op_guard(op):
+                        continue
                     self._fail_op(op, e)
 
     def GetOperation(self, params: dict) -> dict:
@@ -591,13 +679,51 @@ class VizierService(Servicer):
         except NotFoundError as e:
             raise VizierRpcError(StatusCode.NOT_FOUND, str(e)) from e
 
+    def WaitOperation(self, params: dict) -> dict:
+        """Long-poll GetOperation: parks the request on a per-op event until
+        the op completes or ``timeout_ms`` lapses (capped at MAX_WAIT_S per
+        call; clients chunk longer waits), then returns the current op state.
+        Completion latency stops being quantized by the client poll/backoff
+        ladder — the response leaves the instant the op finishes.
+        """
+        name = params["name"]
+        timeout = min(float(params.get("timeout_ms", 0)) / 1000.0,
+                      self.MAX_WAIT_S)
+        try:
+            op = self._ds.get_operation(name)
+        except NotFoundError as e:
+            raise VizierRpcError(StatusCode.NOT_FOUND, str(e)) from e
+        if op.get("done") or timeout <= 0:
+            return {"operation": op}
+        with self._op_waiters_guard:
+            entry = self._op_waiters.setdefault(name, [threading.Event(), 0])
+            entry[1] += 1
+            event = entry[0]
+        try:
+            event.wait(timeout)
+        finally:
+            with self._op_waiters_guard:
+                cur = self._op_waiters.get(name)
+                if cur is not None and cur[0] is event:
+                    cur[1] -= 1
+                    if cur[1] <= 0:  # last waiter out evicts the entry
+                        del self._op_waiters[name]
+        try:
+            return {"operation": self._ds.get_operation(name)}
+        except NotFoundError as e:  # op's study deleted while parked
+            raise VizierRpcError(StatusCode.NOT_FOUND, str(e)) from e
+
     def recover_pending_operations(self) -> int:
-        """Re-launches computations for not-done ops (crash recovery, §3.2)."""
+        """Re-launches computations for not-done ops (crash recovery, §3.2).
+
+        With the worker pool enabled, recovered suggest ops re-enter the
+        sharded queue like fresh ones — same-study ops land on the same
+        shard and coalesce into one lease."""
         count = 0
         for study in self._ds.list_studies():
             for op in self._ds.list_operations(study.name, only_pending=True):
                 if op.get("type") == "suggest":
-                    self._pool.submit(self._run_suggest_op, op)
+                    self._dispatch_suggest_op(op)
                 elif op.get("type") == "early_stopping":
                     self._pool.submit(self._run_early_stop_op, op)
                 count += 1
@@ -799,7 +925,7 @@ class VizierService(Servicer):
         study_name, trial_id = self._parse_trial_name(params["trial_name"])
         self._get_study_or_rpc_error(study_name)
         op = ops_lib.new_early_stopping_operation(study_name, trial_id)
-        self._ds.put_operation(op)
+        self._put_op(op)
         self._pool.submit(self._run_early_stop_op, op)
         return {"operation": op}
 
@@ -814,12 +940,12 @@ class VizierService(Servicer):
                     if not trial.state.is_terminal:
                         trial.state = TrialState.STOPPING
                         self._ds.update_trial(op["study_name"], trial)
-            self._ds.put_operation(
+            self._put_op(
                 ops_lib.complete_operation(op, {"should_stop": bool(should_stop)})
             )
         except Exception as e:  # noqa: BLE001
             log.exception("early-stop op %s failed", op["name"])
-            self._ds.put_operation(
+            self._put_op(
                 ops_lib.fail_operation(op, StatusCode.INTERNAL, f"{type(e).__name__}: {e}")
             )
 
@@ -857,4 +983,6 @@ class VizierService(Servicer):
         return {"time": time.time()}
 
     def shutdown(self) -> None:
+        if self.worker_pool is not None:
+            self.worker_pool.shutdown()
         self._pool.shutdown(wait=False, cancel_futures=True)

@@ -1,0 +1,366 @@
+"""Scale-out serving tier end-to-end: worker pool, WaitOperation long-poll,
+worker-granular fault injection (kill one of N workers mid-batch).
+
+Extends the PR-2 fault harness (stop_pythia / restart_pythia: whole-process
+kills) down to single workers: a worker killed mid-lease must have its
+in-flight ops requeued onto survivors and re-run idempotently — every op
+completes, no duplicate trials, and the op records how often it was re-handed
+(``requeues``).
+"""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import Measurement, ScaleType, StudyConfig, Trial
+from repro.service import (
+    DefaultVizierServer,
+    OperationFailedError,
+    VizierBatchClient,
+    VizierClient,
+)
+from repro.service.rpc import RpcClient, StatusCode, VizierRpcError
+from repro.service.vizier_service import PythiaConnector
+
+
+def _config(algorithm: str = "RANDOM_SEARCH") -> StudyConfig:
+    cfg = StudyConfig()
+    root = cfg.search_space.select_root()
+    root.add_float_param("x", 0.0, 1.0, scale_type=ScaleType.LINEAR)
+    root.add_float_param("y", 0.0, 1.0, scale_type=ScaleType.LINEAR)
+    cfg.metrics.add("obj", "MAXIMIZE")
+    cfg.algorithm = algorithm
+    return cfg
+
+
+@pytest.fixture
+def pool_server():
+    s = DefaultVizierServer(n_pythia_workers=2, n_shards=4)
+    yield s
+    s.stop()
+
+
+# ---------------------------------------------------------------------------
+# Worker pool: the happy path must be indistinguishable from direct dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_pool_serves_single_client(pool_server):
+    c = VizierClient.load_or_create_study(
+        "pool-basic", _config(), client_id="w0", target=pool_server.address)
+    (t,) = c.get_suggestions(count=1)
+    assert t.id >= 1
+    c.complete_trial({"obj": 0.5}, trial_id=t.id)
+    (t2,) = c.get_suggestions(count=1)
+    assert t2.id != t.id
+    c.close()
+
+
+def test_pool_serves_batched_clients_many_studies(pool_server):
+    names = []
+    for i in range(6):
+        c = VizierClient.load_or_create_study(
+            f"pool-{i}", _config(), client_id="seed",
+            target=pool_server.address)
+        names.append(c.study_name)
+        c.close()
+    batch = VizierBatchClient(pool_server.address)
+    results = batch.get_suggestions(
+        [{"study_name": n, "client_id": f"w{i}", "count": 2}
+         for i, n in enumerate(names)])
+    assert [len(r) for r in results] == [2] * 6
+    # every study got distinct trials bound to its requester
+    for i, trials in enumerate(results):
+        assert {t.client_id for t in trials} == {f"w{i}"}
+    batch.close()
+
+
+def test_pool_recovers_persisted_ops(pool_server):
+    """Crash recovery routes suggest ops through the sharded queue."""
+    import repro.service.operations as ops_lib
+
+    c = VizierClient.load_or_create_study(
+        "pool-recover", _config(), client_id="w", target=pool_server.address)
+    op = ops_lib.new_suggest_operation(c.study_name, "w2", 1)
+    pool_server.datastore.put_operation(op)
+    assert pool_server.servicer.recover_pending_operations() >= 1
+    deadline = time.time() + 10
+    while time.time() < deadline:
+        if pool_server.datastore.get_operation(op["name"])["done"]:
+            break
+        time.sleep(0.02)
+    done = pool_server.datastore.get_operation(op["name"])
+    assert done["done"] and done["error"] is None
+    assert len(done["result"]["trials"]) == 1
+    c.close()
+
+
+# ---------------------------------------------------------------------------
+# WaitOperation long-poll
+# ---------------------------------------------------------------------------
+
+
+def test_wait_operation_semantics(pool_server):
+    import repro.service.operations as ops_lib
+
+    rpc = RpcClient(pool_server.address)
+    c = VizierClient.load_or_create_study(
+        "wait-sem", _config(), client_id="w", target=pool_server.address)
+
+    # unknown op -> NOT_FOUND
+    with pytest.raises(VizierRpcError) as ei:
+        rpc.call("WaitOperation",
+                 {"name": f"{c.study_name}/operations/nope", "timeout_ms": 100})
+    assert ei.value.code == StatusCode.NOT_FOUND
+
+    # pending op + timeout_ms=0 -> immediate return, still pending
+    op = ops_lib.new_suggest_operation(c.study_name, "parked", 1)
+    pool_server.datastore.put_operation(op)
+    got = rpc.call("WaitOperation", {"name": op["name"], "timeout_ms": 0})
+    assert not got["operation"]["done"]
+
+    # a parked wait wakes the moment the op completes, not at its timeout
+    waked = {}
+
+    def parked():
+        t0 = time.monotonic()
+        waked["op"] = rpc.call(
+            "WaitOperation", {"name": op["name"], "timeout_ms": 5000},
+            timeout=10.0)["operation"]
+        waked["latency"] = time.monotonic() - t0
+
+    t = threading.Thread(target=parked)
+    t.start()
+    time.sleep(0.15)  # let the waiter park
+    pool_server.servicer._put_op(
+        ops_lib.complete_operation(dict(op), {"trials": []}))
+    t.join(timeout=5.0)
+    assert waked["op"]["done"]
+    # woke on the event: far below the 5s wait deadline
+    assert waked["latency"] < 1.0, waked["latency"]
+
+    # done op -> immediate return regardless of timeout
+    t0 = time.monotonic()
+    got = rpc.call("WaitOperation", {"name": op["name"], "timeout_ms": 5000})
+    assert got["operation"]["done"]
+    assert time.monotonic() - t0 < 1.0
+
+    # waiter registry is not leaked (refcounted eviction)
+    assert pool_server.servicer._op_waiters == {}
+    rpc.close()
+    c.close()
+
+
+def test_client_falls_back_to_polling_without_wait_operation(pool_server):
+    """Old-server compatibility: a client probing WaitOperation against a
+    server that lacks it degrades (permanently) to GetOperation polling."""
+    del pool_server.servicer._methods["WaitOperation"]
+    c = VizierClient.load_or_create_study(
+        "fallback", _config(), client_id="w", target=pool_server.address)
+    (t,) = c.get_suggestions(count=1)
+    assert t.id >= 1
+    assert c._long_poll is False  # sticky fallback after UNIMPLEMENTED
+    # batch client takes the same fallback
+    batch = VizierBatchClient(pool_server.address)
+    (trials,) = batch.get_suggestions(
+        [{"study_name": c.study_name, "client_id": "w2"}])
+    assert len(trials) == 1
+    assert batch._long_poll is False
+    batch.close()
+    c.close()
+
+
+def test_error_codes_surface_through_operation_failures(pool_server):
+    """Satellite: OperationFailedError carries the op's StatusCode + name so
+    schedulers can tell retryable from permanent failures."""
+    c = VizierClient.load_or_create_study(
+        "codes", _config(), client_id="w", target=pool_server.address)
+    study = pool_server.datastore.get_study(c.study_name)
+    study.study_config.algorithm = "NO_SUCH_ALGORITHM"
+    pool_server.datastore.update_study(study)
+
+    with pytest.raises(OperationFailedError) as ei:
+        c.get_suggestions(count=1, timeout=30.0)
+    assert ei.value.code == StatusCode.INTERNAL
+    assert ei.value.operation_name and "/operations/" in ei.value.operation_name
+
+    batch = VizierBatchClient(pool_server.address)
+    with pytest.raises(OperationFailedError) as ei:
+        batch.get_suggestions(
+            [{"study_name": c.study_name, "client_id": "w9"}], timeout=30.0)
+    assert ei.value.code == StatusCode.INTERNAL
+    assert ei.value.operation_name
+    batch.close()
+    c.close()
+
+
+# ---------------------------------------------------------------------------
+# Client deadline semantics (an op that never completes)
+# ---------------------------------------------------------------------------
+
+
+class _StuckConnector(PythiaConnector):
+    """suggest_batch parks until released — the op never completes."""
+
+    def __init__(self):
+        self.release = threading.Event()
+
+    def suggest_batch(self, items):
+        self.release.wait(30.0)
+        raise RuntimeError("released: fail the op so the server drains")
+
+    def suggest(self, study, count, client_id):
+        return self.suggest_batch(None)
+
+
+@pytest.mark.parametrize("long_poll", [True, False])
+def test_timeout_raises_at_deadline_and_op_survives(long_poll):
+    """An op that never completes must raise DEADLINE_EXCEEDED at ~the
+    client deadline (not a backoff-quantum late), and the op must still be
+    pending server-side — a later GetOperation finds it undone."""
+    server = DefaultVizierServer(n_pythia_workers=1, n_shards=2)
+    stuck = _StuckConnector()
+    server.servicer._pythia = stuck
+    try:
+        c = VizierClient.load_or_create_study(
+            "stuck", _config(), client_id="w", target=server.address,
+            long_poll=long_poll)
+        start = time.monotonic()
+        with pytest.raises(OperationFailedError) as ei:
+            c.get_suggestions(count=1, timeout=0.5)
+        elapsed = time.monotonic() - start
+        assert ei.value.code == StatusCode.DEADLINE_EXCEEDED
+        assert ei.value.operation_name
+        assert 0.45 <= elapsed < 1.0, f"raised {elapsed:.3f}s into a 0.5s deadline"
+        # the timeout abandoned the WAIT, not the op: still pending server-side
+        rpc = RpcClient(server.address)
+        op = rpc.call("GetOperation", {"name": ei.value.operation_name})["operation"]
+        assert not op["done"]
+        rpc.close()
+        c.close()
+    finally:
+        stuck.release.set()
+        time.sleep(0.05)  # let the worker fail the op and drain its lease
+        server.stop()
+
+
+# ---------------------------------------------------------------------------
+# Worker-granular fault injection: kill 1 of N mid-batch
+# ---------------------------------------------------------------------------
+
+
+class _BlockOnceConnector(PythiaConnector):
+    """Delegates to the real connector, but the FIRST dispatch touching the
+    victim study parks until released — holding its worker's lease open so
+    the test can kill that worker mid-batch."""
+
+    def __init__(self, inner, victim_study: str):
+        self._inner = inner
+        self._victim = victim_study
+        self._lock = threading.Lock()
+        self.entered = threading.Event()
+        self.release = threading.Event()
+        self.victim_dispatches = 0
+
+    def suggest(self, study, count, client_id):
+        return self._inner.suggest(study, count, client_id)
+
+    def early_stop(self, study, trial_ids):
+        return self._inner.early_stop(study, trial_ids)
+
+    def suggest_batch(self, items):
+        if any(study.name == self._victim for study, _, _ in items):
+            with self._lock:
+                self.victim_dispatches += 1
+                first = self.victim_dispatches == 1
+            if first:
+                self.entered.set()
+                self.release.wait(30.0)
+        return self._inner.suggest_batch(items)
+
+
+@pytest.mark.dist
+def test_kill_one_of_n_workers_mid_batch_no_duplicate_trials():
+    """The tentpole's acceptance test: kill 1 of N workers mid-batch.
+
+    A worker is parked inside its coalesced dispatch when it is killed; its
+    in-flight ops are requeued and re-run by a surviving worker. Every op
+    completes, the dead worker's zombie thread (released afterwards) is
+    barred from finalizing by the lease-validity guard, and the trial count
+    proves no suggestion was materialized twice.
+    """
+    server = DefaultVizierServer(n_pythia_workers=2, n_shards=4)
+    try:
+        c = VizierClient.load_or_create_study(
+            "victim", _config(), client_id="w", target=server.address)
+        victim = c.study_name
+        blocker = _BlockOnceConnector(server.servicer._pythia, victim)
+        server.servicer._pythia = blocker
+
+        # issue the suggestion from a thread: the client parks in
+        # WaitOperation while the server-side choreography runs
+        got = {}
+
+        def request():
+            got["trials"] = c.get_suggestions(count=3, timeout=30.0)
+
+        requester = threading.Thread(target=request)
+        requester.start()
+
+        assert blocker.entered.wait(10.0), "dispatch never reached Pythia"
+        pool = server.servicer.worker_pool
+        wid = pool.worker_holding(victim)
+        assert wid is not None, "no worker holds the victim's shard"
+
+        # kill the worker that is mid-dispatch; its ops must requeue
+        requeued = server.stop_pythia_worker(wid)
+        assert requeued == 1
+
+        # the survivor re-runs the requeued op (2nd dispatch passes through)
+        requester.join(timeout=20.0)
+        assert not requester.is_alive(), "suggestion never completed"
+        assert len(got["trials"]) == 3
+
+        # now release the zombie: its late finalize must be a guarded no-op
+        blocker.release.set()
+        time.sleep(0.3)
+
+        # exactly one op, completed by the successor, stamped requeues=1
+        ops = server.datastore.list_operations(victim)
+        assert len(ops) == 1
+        assert ops[0]["done"] and ops[0]["error"] is None
+        assert ops[0]["requeues"] == 1
+        assert len(ops[0]["result"]["trials"]) == 3
+
+        # no duplicate trials: the zombie's suggestions were never created
+        trials = server.datastore.list_trials(victim)
+        assert len(trials) == 3, [t.id for t in trials]
+        assert {t.client_id for t in trials} == {"w"}
+
+        # the pool healed: restart the dead slot and serve another round
+        server.restart_pythia_worker(wid)
+        for t in got["trials"]:
+            c.complete_trial({"obj": 0.1}, trial_id=t.id)
+        more = c.get_suggestions(count=2, timeout=30.0)
+        assert len(more) == 2
+        assert blocker.victim_dispatches >= 2  # zombie + successor (+ extra)
+        c.close()
+    finally:
+        blocker.release.set()
+        server.stop()
+
+
+@pytest.mark.dist
+def test_kill_worker_between_batches_is_harmless(pool_server):
+    """Killing an idle worker (no lease held) requeues nothing and the
+    remaining worker keeps serving."""
+    requeued = pool_server.stop_pythia_worker(1)
+    assert requeued == 0
+    c = VizierClient.load_or_create_study(
+        "idle-kill", _config(), client_id="w", target=pool_server.address)
+    (t,) = c.get_suggestions(count=1)
+    assert t.id >= 1
+    pool_server.restart_pythia_worker(1)
+    assert pool_server.servicer.worker_pool.alive_workers() == [0, 1]
+    c.close()

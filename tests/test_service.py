@@ -241,3 +241,25 @@ def test_parallel_clients_unique_trials(basic_config, datastore):
     assert not errs, errs
     assert len(ids) == 12 and len(set(ids)) == 12, "every trial unique"
     svc.shutdown()
+
+
+def test_delete_study_prunes_lock_map(basic_config):
+    """Regression: DeleteStudy never evicted the per-study lock, so a
+    create/delete churn workload leaked one threading.Lock per study for
+    the life of the server. 1k churned studies must leave the map empty."""
+    ds = InMemoryDatastore()
+    svc = make_local(ds)
+    spec = basic_config.to_proto()
+    for i in range(1000):
+        r = svc.CreateStudy(
+            {"owner": "churn", "display_name": f"s{i}", "study_spec": spec})
+        name = r["study"]["name"]
+        # a COMPLETED study's SuggestTrials takes the inline fast path —
+        # it touches (and therefore instantiates) the study's lock without
+        # dispatching Pythia
+        svc.SetStudyState({"name": name, "state": StudyState.COMPLETED.value})
+        op = svc.SuggestTrials({"parent": name, "client_id": "w"})["operation"]
+        assert op["done"] and op["result"] == {"trials": []}
+        svc.DeleteStudy({"name": name})
+    assert len(svc._study_locks) == 0, len(svc._study_locks)
+    svc.shutdown()

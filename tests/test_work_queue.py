@@ -1,0 +1,284 @@
+"""ShardedWorkQueue + PythiaWorkerPool unit tests (scale-out serving tier).
+
+The queue invariants everything else leans on: stable shard keying, exclusive
+shard leases, generation-checked ack, requeue-at-front on worker death, lazy
+lease expiry, and the pool's idempotent re-run filter.
+"""
+
+import threading
+import time
+import zlib
+
+import pytest
+
+from repro.service import operations as ops_lib
+from repro.service.work_queue import PythiaWorkerPool, ShardedWorkQueue
+
+
+def _op(study="owners/o/studies/s", client="c", count=1):
+    return ops_lib.new_suggest_operation(study, client, count)
+
+
+# ---------------------------------------------------------------------------
+# Shard keying
+# ---------------------------------------------------------------------------
+
+
+def test_shard_of_is_stable_crc32():
+    """The shard key must survive a server restart (Python's salted hash()
+    would not): it is CRC32 of the study name, mod n_shards."""
+    name = "owners/o/studies/stable"
+    for n in (1, 2, 8, 13):
+        q = ShardedWorkQueue(n)
+        expected = zlib.crc32(name.encode("utf-8")) % n
+        assert q.shard_of(name) == expected
+        assert ops_lib.shard_of(name, n) == expected
+
+
+def test_same_study_same_shard():
+    q = ShardedWorkQueue(4)
+    sids = {q.enqueue(_op(study="owners/o/studies/x")) for _ in range(10)}
+    assert len(sids) == 1
+
+
+# ---------------------------------------------------------------------------
+# Lease / ack
+# ---------------------------------------------------------------------------
+
+
+def test_lease_takes_whole_backlog_of_one_shard():
+    q = ShardedWorkQueue(4)
+    ops = [_op(client=f"c{i}") for i in range(3)]  # same study -> same shard
+    for op in ops:
+        q.enqueue(op)
+    lease = q.lease(worker_id=0, timeout=1.0)
+    assert lease is not None
+    assert [o["name"] for o in lease.ops] == [o["name"] for o in ops]
+    assert q.pending_count() == 3  # leased ops still count as pending
+    assert q.lease_valid(lease)
+    assert q.ack(lease)
+    assert q.pending_count() == 0
+    assert not q.lease_valid(lease)  # retired
+
+
+def test_leased_shard_is_exclusive():
+    """While one worker holds a shard, a second worker cannot lease it —
+    one study's policy state is never computed on two workers at once."""
+    q = ShardedWorkQueue(2)
+    q.enqueue(_op())
+    lease = q.lease(worker_id=0, timeout=1.0)
+    q.enqueue(_op(client="late"))  # lands on the leased shard's queue
+    assert q.lease(worker_id=1, timeout=0.1) is None
+    q.ack(lease)
+    # the shard is free again: the late op is now leasable
+    second = q.lease(worker_id=1, timeout=1.0)
+    assert second is not None and second.ops[0]["client_id"] == "late"
+    q.ack(second)
+
+
+def test_two_workers_lease_different_shards_concurrently():
+    q = ShardedWorkQueue(8)
+    a, b = "owners/o/studies/aaa", "owners/o/studies/abc"
+    assert q.shard_of(a) != q.shard_of(b)  # distinct shards for this test
+    q.enqueue(_op(study=a))
+    q.enqueue(_op(study=b))
+    l0 = q.lease(worker_id=0, timeout=1.0)
+    l1 = q.lease(worker_id=1, timeout=1.0)
+    assert l0 is not None and l1 is not None
+    assert {l0.ops[0]["study_name"], l1.ops[0]["study_name"]} == {a, b}
+    assert q.ack(l0) and q.ack(l1)
+
+
+def test_lease_blocks_until_enqueue():
+    q = ShardedWorkQueue(2)
+    got = []
+
+    def worker():
+        got.append(q.lease(worker_id=0, timeout=5.0))
+
+    t = threading.Thread(target=worker)
+    t.start()
+    time.sleep(0.05)
+    q.enqueue(_op())
+    t.join(timeout=2.0)
+    assert got and got[0] is not None and len(got[0].ops) == 1
+
+
+# ---------------------------------------------------------------------------
+# Requeue / generations / expiry
+# ---------------------------------------------------------------------------
+
+
+def test_reclaim_worker_requeues_in_order_and_stamps_requeues():
+    q = ShardedWorkQueue(2)
+    ops = [_op(client=f"c{i}") for i in range(3)]
+    for op in ops:
+        q.enqueue(op)
+    lease = q.lease(worker_id=0, timeout=1.0)
+    assert q.reclaim_worker(0) == 3
+    assert not q.lease_valid(lease)
+    assert not q.ack(lease)  # stale ack is a no-op
+    takeover = q.lease(worker_id=1, timeout=1.0)
+    assert [o["client_id"] for o in takeover.ops] == ["c0", "c1", "c2"]
+    assert all(o["requeues"] == 1 for o in takeover.ops)
+    assert q.ack(takeover)
+
+
+def test_requeue_puts_ops_in_front_of_later_arrivals():
+    q = ShardedWorkQueue(1)  # single shard: everything interleaves
+    first = _op(client="first")
+    q.enqueue(first)
+    lease = q.lease(worker_id=0, timeout=1.0)
+    q.enqueue(_op(client="second"))  # arrives while first is in flight
+    q.reclaim_worker(0)
+    takeover = q.lease(worker_id=1, timeout=1.0)
+    assert [o["client_id"] for o in takeover.ops] == ["first", "second"]
+    q.ack(takeover)
+
+
+def test_expired_lease_is_reclaimed_lazily():
+    q = ShardedWorkQueue(2, lease_timeout=0.05)
+    q.enqueue(_op())
+    dead = q.lease(worker_id=0, timeout=1.0)
+    time.sleep(0.1)  # lease outlives its deadline; no reaper thread runs
+    takeover = q.lease(worker_id=1, timeout=1.0)
+    assert takeover is not None
+    assert takeover.ops[0]["requeues"] == 1
+    assert not q.ack(dead)  # the zombie's ack lost the generation race
+    assert q.ack(takeover)
+
+
+def test_close_unblocks_lease():
+    q = ShardedWorkQueue(2)
+    got = []
+
+    def worker():
+        got.append(q.lease(worker_id=0))  # no timeout: blocks until close
+
+    t = threading.Thread(target=worker)
+    t.start()
+    time.sleep(0.05)
+    q.close()
+    t.join(timeout=2.0)
+    assert got == [None]
+
+
+def test_n_shards_validation():
+    with pytest.raises(ValueError):
+        ShardedWorkQueue(0)
+    with pytest.raises(ValueError):
+        PythiaWorkerPool(ShardedWorkQueue(1), lambda ops, g: None,
+                         lambda op: False, n_workers=0)
+
+
+# ---------------------------------------------------------------------------
+# Worker pool
+# ---------------------------------------------------------------------------
+
+
+class _Runner:
+    """Records every batch run; optionally blocks inside the run."""
+
+    def __init__(self):
+        self.batches = []
+        self.lock = threading.Lock()
+        self.block = None  # threading.Event to hold a run open
+        self.entered = threading.Event()
+
+    def run(self, ops, guard):
+        self.entered.set()
+        if self.block is not None:
+            self.block.wait(5.0)
+        with self.lock:
+            self.batches.append([(op["name"], guard(op)) for op in ops])
+
+
+def test_pool_runs_enqueued_ops():
+    q = ShardedWorkQueue(4)
+    runner = _Runner()
+    pool = PythiaWorkerPool(q, runner.run, lambda op: False, n_workers=2).start()
+    try:
+        ops = [_op(study=f"owners/o/studies/s{i}") for i in range(6)]
+        for op in ops:
+            q.enqueue(op)
+        deadline = time.monotonic() + 5
+        while time.monotonic() < deadline and q.pending_count():
+            time.sleep(0.01)
+        assert q.pending_count() == 0
+        ran = {name for batch in runner.batches for name, _ in batch}
+        assert ran == {op["name"] for op in ops}
+        # guards were valid while the lease was held
+        assert all(ok for batch in runner.batches for _, ok in batch)
+        assert pool.alive_workers() == [0, 1]
+    finally:
+        pool.shutdown()
+
+
+def test_pool_skips_already_done_ops():
+    """Idempotent re-run: ops a dead predecessor finished are filtered out
+    before dispatch, so a requeue never re-runs completed work."""
+    q = ShardedWorkQueue(2)
+    runner = _Runner()
+    done = {_op()["name"]}  # placeholder; replaced below
+
+    op_a, op_b = _op(client="a"), _op(client="b")
+    done = {op_a["name"]}
+    pool = PythiaWorkerPool(q, runner.run, lambda op: op["name"] in done,
+                            n_workers=1).start()
+    try:
+        q.enqueue(op_a)
+        q.enqueue(op_b)
+        deadline = time.monotonic() + 5
+        while time.monotonic() < deadline and q.pending_count():
+            time.sleep(0.01)
+        ran = {name for batch in runner.batches for name, _ in batch}
+        assert ran == {op_b["name"]}
+    finally:
+        pool.shutdown()
+
+
+def test_stop_worker_mid_batch_requeues_and_guard_goes_stale():
+    """Kill the worker while it is inside run_batch: its ops requeue (the
+    kill returns the count), its guard turns False (so a zombie finalize is
+    rejected), and a restarted worker re-runs the batch with a valid guard."""
+    q = ShardedWorkQueue(2)
+    runner = _Runner()
+    runner.block = threading.Event()
+    pool = PythiaWorkerPool(q, runner.run, lambda op: False, n_workers=1).start()
+    try:
+        op = _op()
+        q.enqueue(op)
+        assert runner.entered.wait(5.0)  # worker 0 is stuck inside the run
+        assert pool.worker_holding(op["study_name"]) == 0
+        requeued = pool.stop_worker(0)
+        assert requeued == 1
+        assert pool.alive_workers() in ([], [0])  # may still be parked in run
+        # zombie finishes its run: guard evaluates False (lease reclaimed)
+        runner.block.set()
+        deadline = time.monotonic() + 5
+        while time.monotonic() < deadline and not runner.batches:
+            time.sleep(0.01)
+        assert runner.batches[0] == [(op["name"], False)]
+        # successor re-runs the requeued op with a live lease
+        runner.block = None
+        pool.restart_worker(0)
+        deadline = time.monotonic() + 5
+        while time.monotonic() < deadline and len(runner.batches) < 2:
+            time.sleep(0.01)
+        assert runner.batches[1] == [(op["name"], True)]
+        assert q.pending_count() == 0
+    finally:
+        pool.shutdown()
+
+
+def test_restart_worker_refuses_live_worker():
+    q = ShardedWorkQueue(2)
+    pool = PythiaWorkerPool(q, lambda ops, g: None, lambda op: False,
+                            n_workers=1).start()
+    try:
+        with pytest.raises(RuntimeError):
+            pool.restart_worker(0)
+        with pytest.raises(KeyError):
+            pool.stop_worker(99)
+    finally:
+        pool.shutdown()

@@ -38,6 +38,8 @@ COVERAGE_TESTS = [
     "tests/test_service.py",
     "tests/test_batch_suggest.py",
     "tests/test_pythia_remote.py",
+    "tests/test_work_queue.py",
+    "tests/test_scaleout.py",
     "tests/test_early_stopping.py",
     "tests/test_designers.py",
     "tests/test_gp_bandit.py",
