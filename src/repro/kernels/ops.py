@@ -55,11 +55,19 @@ def matern52_gram(
     if block_rows is None:
         block_rows = GRAM_BLOCK_ROWS if m >= GRAM_BLOCK_ROWS else 0
     if block_rows and m > block_rows:
-        strips = [
-            matern52_gram(x1, x2[i:i + block_rows], amplitude,
-                          impl=impl, block_rows=0)
-            for i in range(0, m, block_rows)
-        ]
+        # Every strip is computed at the full block width: the final partial
+        # strip is zero-padded up to ``block_rows`` and its result columns
+        # sliced back off. A ragged tail would hand the jitted kernels a
+        # distinct x2 shape per distinct pool size — one fresh compile per
+        # tail shape, breaking the retrace-free serving invariant.
+        strips = []
+        for i in range(0, m, block_rows):
+            strip = x2[i:i + block_rows]
+            w = strip.shape[0]
+            if w < block_rows:
+                strip = jnp.pad(strip, ((0, block_rows - w), (0, 0)))
+            out = matern52_gram(x1, strip, amplitude, impl=impl, block_rows=0)
+            strips.append(out[:, :w] if w < block_rows else out)
         return jnp.concatenate(strips, axis=1)
     if impl == "xla":
         return ref.matern52_gram(x1, x2, amplitude)
@@ -117,6 +125,53 @@ def matern52_gram_matvec(
         (x1p.reshape(strips, block_rows, x1.shape[1]),
          ap.reshape(strips, block_rows)))
     return out
+
+
+def tri_solve(
+    L: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    trans: bool = False,
+    impl: Impl = "auto",
+) -> jnp.ndarray:
+    """x with L x = b (``trans``: L^T x = b); L (m, m) lower-triangular.
+
+    ``b`` may be (m,) or (m, k); the result matches b's shape. The Pallas
+    path runs the blocked forward-substitution kernel; transposed solves go
+    through the flip trick (reverse both axes of L, transpose, reverse b's
+    rows) so the SAME compiled kernel serves both orientations — no second
+    kernel, no extra compile.
+    """
+    impl = _default_impl() if impl == "auto" else impl
+    if impl == "xla":
+        return ref.tri_solve(L, b, trans=trans)
+    from repro.kernels.tri_solve import tri_solve_pallas
+
+    interpret = impl == "pallas_interpret"
+    vec = b.ndim == 1
+    bm = b[:, None] if vec else b
+    if trans:
+        out = tri_solve_pallas(L[::-1, ::-1].T, bm[::-1],
+                               interpret=interpret)[::-1]
+    else:
+        out = tri_solve_pallas(L, bm, interpret=interpret)
+    return out[:, 0] if vec else out
+
+
+def cholupdate(
+    L: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    impl: Impl = "auto",
+) -> jnp.ndarray:
+    """chol(L L^T + v v^T) in O(m^2): the sparse posterior's rank-1 append
+    against the m×m inducing factor. L (m, m) lower-triangular, v (m,)."""
+    impl = _default_impl() if impl == "auto" else impl
+    if impl == "xla":
+        return ref.cholupdate(L, v)
+    from repro.kernels.tri_solve import cholupdate_pallas
+
+    return cholupdate_pallas(L, v, interpret=(impl == "pallas_interpret"))
 
 
 def flash_attention(

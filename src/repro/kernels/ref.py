@@ -43,6 +43,53 @@ def matern52_gram_matvec(
 
 
 # ---------------------------------------------------------------------------
+# Blocked triangular solve + rank-1 Cholesky update (sparse GP posterior)
+# ---------------------------------------------------------------------------
+
+
+def tri_solve(L: jnp.ndarray, b: jnp.ndarray, *, trans: bool = False) -> jnp.ndarray:
+    """x with L x = b (or L^T x = b when ``trans``), L lower-triangular.
+
+    L: (m, m), b: (m,) or (m, k) -> same shape as b, computed in float32.
+    """
+    return jax.scipy.linalg.solve_triangular(
+        L.astype(jnp.float32), b.astype(jnp.float32),
+        lower=True, trans=1 if trans else 0)
+
+
+def cholupdate(L: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """chol(L L^T + v v^T) by sequential column rotations: O(m^2).
+
+    L: (m, m) lower-triangular with positive diagonal, v: (m,) -> (m, m).
+    Identity-padded trailing rows (diag 1, v 0) pass through untouched, so
+    bucket-padded callers stay exact. The test oracle is a fresh
+    ``jnp.linalg.cholesky`` of the updated matrix; this column sweep is the
+    XLA dispatch path (and the maths the Pallas kernel mirrors).
+    """
+    L = L.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    m = L.shape[0]
+    idx = jnp.arange(m)
+
+    def step(carry, k):
+        Lc, vc = carry
+        col = Lc[:, k]
+        Lkk = col[k]
+        vk = vc[k]
+        r = jnp.sqrt(Lkk * Lkk + vk * vk)
+        c = r / Lkk
+        s = vk / Lkk
+        below = idx > k
+        newcol = jnp.where(idx == k, r,
+                           jnp.where(below, (col + s * vc) / c, col))
+        vc = jnp.where(below, c * vc - s * newcol, vc)
+        return (Lc.at[:, k].set(newcol), vc), None
+
+    (L, _), _ = jax.lax.scan(step, (L, v), idx)
+    return L
+
+
+# ---------------------------------------------------------------------------
 # Flash attention (causal / non-causal), GQA-aware
 # ---------------------------------------------------------------------------
 

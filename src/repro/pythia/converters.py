@@ -28,10 +28,17 @@ from repro.core.search_space import (
     ParameterDict,
     ParameterType,
     ParameterValue,
+    ScaleType,
     SearchSpace,
 )
 from repro.core.study import Trial
 from repro.core.study_config import StudyConfig
+
+# Row-count threshold past which eligible feature columns are encoded with a
+# single vectorized numpy pass instead of a per-trial ``to_unit`` call. The
+# per-(trial, parameter) Python loop dominates featurization once studies
+# reach thousands of trials; small batches keep the loop (less overhead).
+_VECTORIZE_MIN_ROWS = 64
 
 
 @dataclasses.dataclass
@@ -40,6 +47,11 @@ class _Feature:
     one_hot: bool
     width: int
     conditional: bool
+    # True when the column is a plain continuous unit-map (no one-hot block,
+    # no active indicator, no nearest-feasible-value snap) — exactly the
+    # ``_continuous_bounds`` branch of ParameterConfig.to_unit, which
+    # vectorizes over trials
+    fast: bool = False
 
 
 class TrialToArrayConverter:
@@ -53,7 +65,17 @@ class TrialToArrayConverter:
             conditional = cfg.name not in root_names
             if conditional:
                 width += 1  # active indicator
-            self._features.append(_Feature(cfg, onehot, width, conditional))
+            fast = (
+                not onehot
+                and not conditional
+                and cfg.type != ParameterType.CATEGORICAL
+                and not (
+                    cfg.type == ParameterType.DISCRETE
+                    and cfg.scale_type in (None, ScaleType.UNIFORM_DISCRETE)
+                )
+            )
+            self._features.append(
+                _Feature(cfg, onehot, width, conditional, fast))
 
     @property
     def dim(self) -> int:
@@ -68,37 +90,87 @@ class TrialToArrayConverter:
         return [f.config.name for f in self._features]
 
     def to_features(self, parameters_list: Sequence[ParameterDict]) -> np.ndarray:
-        out = np.zeros((len(parameters_list), self.dim), dtype=np.float64)
-        for i, params in enumerate(parameters_list):
-            col = 0
-            for f in self._features:
-                cfg = f.config
-                base_w = f.width - (1 if f.conditional else 0)
-                if f.one_hot:
-                    idx = None
-                    if cfg.name in params:
-                        try:
-                            idx = cfg.categories.index(params[cfg.name].as_str)
-                        except ValueError:
-                            idx = None  # out-of-domain category: impute
-                    active = idx is not None
-                    if active:
-                        out[i, col + idx] = 1.0
-                    else:
-                        out[i, col : col + base_w] = 1.0 / base_w
-                else:
-                    u = None
-                    if cfg.name in params:
-                        try:
-                            u = cfg.to_unit(params[cfg.name])
-                        except (TypeError, ValueError):
-                            u = None  # infeasible/unparsable value: impute
-                    active = u is not None
-                    out[i, col] = u if active else 0.5
-                if f.conditional:
-                    out[i, col + base_w] = 1.0 if active else 0.0
-                col += f.width
+        """(n, dim) unit-cube features. Columns are encoded feature-by-feature;
+        plain continuous columns (``_Feature.fast``) of large batches go
+        through one vectorized numpy pass, everything else through the exact
+        per-trial ``to_unit`` loop — both produce identical values."""
+        n = len(parameters_list)
+        out = np.zeros((n, self.dim), dtype=np.float64)
+        col = 0
+        for f in self._features:
+            if f.fast and n >= _VECTORIZE_MIN_ROWS:
+                out[:, col] = self._unit_column(f.config, parameters_list)
+            else:
+                self._encode_feature(f, parameters_list, out, col)
+            col += f.width
         return out
+
+    def _encode_feature(self, f: _Feature, parameters_list, out: np.ndarray,
+                        col: int) -> None:
+        """Per-trial loop for one feature's columns (the general path)."""
+        cfg = f.config
+        base_w = f.width - (1 if f.conditional else 0)
+        for i, params in enumerate(parameters_list):
+            if f.one_hot:
+                idx = None
+                if cfg.name in params:
+                    try:
+                        idx = cfg.categories.index(params[cfg.name].as_str)
+                    except ValueError:
+                        idx = None  # out-of-domain category: impute
+                active = idx is not None
+                if active:
+                    out[i, col + idx] = 1.0
+                else:
+                    out[i, col : col + base_w] = 1.0 / base_w
+            else:
+                u = None
+                if cfg.name in params:
+                    try:
+                        u = cfg.to_unit(params[cfg.name])
+                    except (TypeError, ValueError):
+                        u = None  # infeasible/unparsable value: impute
+                active = u is not None
+                out[i, col] = u if active else 0.5
+            if f.conditional:
+                out[i, col + base_w] = 1.0 if active else 0.0
+
+    @staticmethod
+    def _unit_column(cfg: ParameterConfig, parameters_list) -> np.ndarray:
+        """Vectorized ``to_unit`` over trials for one continuous parameter:
+        gather raw floats (NaN marks missing/unparsable -> imputed at 0.5),
+        then apply the scale transform to the whole column at once."""
+        name = cfg.name
+        nan = float("nan")
+        raw = []
+        for params in parameters_list:
+            pv = params.get(name)
+            if pv is None:
+                raw.append(nan)
+                continue
+            try:
+                # inlined ParameterValue.as_float (float(bool) == bool path)
+                raw.append(float(pv.value))
+            except (TypeError, ValueError):
+                raw.append(nan)  # unparsable value: impute
+        vals = np.asarray(raw, dtype=np.float64)
+        active = ~np.isnan(vals)
+        column = np.full(len(parameters_list), 0.5)
+        if not active.any():
+            return column
+        lo, hi = cfg._continuous_bounds()
+        v = np.clip(vals[active], lo, hi)
+        if hi == lo:
+            u = np.zeros_like(v)
+        elif cfg.scale_type == ScaleType.LOG:
+            u = (np.log(v) - np.log(lo)) / (np.log(hi) - np.log(lo))
+        elif cfg.scale_type == ScaleType.REVERSE_LOG:
+            u = 1.0 - (np.log(hi + lo - v) - np.log(lo)) / (
+                np.log(hi) - np.log(lo))
+        else:
+            u = (v - lo) / (hi - lo)
+        column[active] = u
+        return column
 
     def to_parameters(self, features: np.ndarray) -> List[ParameterDict]:
         """Array -> parameters. Conditionality is re-derived from parent values

@@ -60,6 +60,11 @@ from repro.pythia.posterior import (
     pool_bucket,
     train_bucket,
 )
+from repro.pythia.sparse_posterior import (
+    N_INDUCING,
+    SPARSE_THRESHOLD,
+    SparsePosterior,
+)
 from repro.pythia.state import (
     PolicyState,
     load_prior_levels,
@@ -72,6 +77,36 @@ jax.config.update("jax_enable_x64", False)
 # acquisition exploration weight (GaussianProcessBandit's default; the
 # policy reads it here instead of constructing a throwaway instance)
 DEFAULT_UCB_BETA = 1.8
+
+# Above SPARSE_THRESHOLD design rows the hyperparameter fit (Adam on the
+# MLL) runs on this many evenly-strided rows instead of the full design —
+# the fit cost stays bounded as the study grows, while the posterior itself
+# still conditions on every observation through the inducing factorization.
+FIT_SUBSAMPLE = 256
+
+# Resumed (warm-started) sparse-path fits are capped at this many Adam
+# steps per operation: the persisted trajectory sits at the optimum and
+# only needs to track the slow drift of the label renormalization, but an
+# uncapped resume occasionally burns 30+ steps chasing that drift and
+# blows the large-n per-op latency budget (each step pays a fused
+# grad+update dispatch whose cholesky dominates). Unconverged ops hand the
+# trajectory to the next op via the persisted state, so the cap bounds
+# per-op work without capping total optimization. Cold fits keep the full
+# budget.
+SPARSE_WARM_FIT_STEPS = 6
+
+
+def _fit_subsample_idx(n: int) -> np.ndarray:
+    """Deterministic evenly-strided row subsample for the sparse-path fit.
+
+    The stride is floor(n / FIT_SUBSAMPLE), so the selected rows are
+    IDENTICAL across consecutive operations while the study grows within a
+    stride bucket — the warm-started fit re-converges in a couple of steps
+    instead of chasing a subsample that shifts under it on every op.
+    """
+    stride = max(1, n // FIT_SUBSAMPLE)
+    idx = np.arange(FIT_SUBSAMPLE, dtype=np.int64) * stride
+    return idx[idx < n]
 
 
 @dataclasses.dataclass
@@ -126,6 +161,42 @@ _mll_grad = jax.jit(jax.value_and_grad(_neg_mll))
 _step_norm = jax.jit(lambda a, b: jnp.sqrt(sum(
     jnp.sum((x - y) ** 2)
     for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))))
+
+
+@jax.jit
+def _fit_step(raw, m, v, x, y, mask, bc1, bc2, lr_t):
+    """One fused Adam step on the negative MLL: grad + moment update +
+    clamped parameter step + convergence norm in a single device dispatch.
+
+    The Python loop used to issue ~20 tiny jax ops and 2 host syncs per
+    step, which dominated warm-fit latency at large n. ``bc1``/``bc2`` are
+    the host-computed bias corrections (1 - beta**t) and ``lr_t`` the
+    decayed learning rate — value changes don't retrace. Returns the
+    updated (raw, m, v) plus a stacked [loss, step_norm] pair so the caller
+    pays ONE transfer per step; on a non-finite loss the caller discards
+    the returned state, preserving the old break-before-update semantics.
+    """
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    loss, g = jax.value_and_grad(_neg_mll)(raw, x, y, mask)
+    g = jax.tree.map(lambda gg: jnp.nan_to_num(gg, nan=0.0,
+                                               posinf=0.0, neginf=0.0), g)
+    m = jax.tree.map(lambda mm, gg: b1 * mm + (1 - b1) * gg, m, g)
+    v = jax.tree.map(lambda vv, gg: b2 * vv + (1 - b2) * gg * gg, v, g)
+    mhat = jax.tree.map(lambda mm: mm / bc1, m)
+    vhat = jax.tree.map(lambda vv: vv / bc2, v)
+    new_raw = jax.tree.map(
+        lambda p, mm, vv: p - lr_t * mm / (jnp.sqrt(vv) + eps),
+        raw, mhat, vhat)
+    # clamp to numerically-safe ranges (f32 cholesky)
+    new_raw = {
+        "log_amp": jnp.clip(new_raw["log_amp"], -4.0, 4.0),
+        "log_ell": jnp.clip(new_raw["log_ell"], jnp.log(0.01), jnp.log(10.0)),
+        "log_noise": jnp.clip(new_raw["log_noise"], -9.0, 0.0),
+    }
+    norm = jnp.sqrt(sum(
+        jnp.sum((a - b) ** 2)
+        for a, b in zip(jax.tree.leaves(new_raw), jax.tree.leaves(raw))))
+    return new_raw, m, v, jnp.stack([loss, norm])
 
 
 @jax.jit
@@ -251,44 +322,30 @@ class GaussianProcessBandit:
             t0 = int(init["adam_t"])
         else:
             raw, m, v, t0 = self._cold_init()
-        b1, b2, eps = 0.9, 0.999, 1e-8
+        b1, b2 = 0.9, 0.999  # mirrored in _fit_step (eps lives there too)
         best_raw, best_loss = raw, float("inf")
         steps = 0
         converged = diverged = False
         loss = float("inf")
         for t in range(t0 + 1, t0 + self.fit_steps + 1):
-            loss, g = _mll_grad(raw, x, y, mask)
-            steps += 1
-            loss = float(loss)
-            if not np.isfinite(loss):  # singular cholesky: keep best-so-far
-                raw = best_raw
-                diverged = True
-                break
-            if loss < best_loss:
-                best_loss, best_raw = loss, raw
-            g = jax.tree.map(lambda gg: jnp.nan_to_num(gg, nan=0.0,
-                                                       posinf=0.0, neginf=0.0), g)
-            m = jax.tree.map(lambda mm, gg: b1 * mm + (1 - b1) * gg, m, g)
-            v = jax.tree.map(lambda vv, gg: b2 * vv + (1 - b2) * gg * gg, v, g)
-            mhat = jax.tree.map(lambda mm: mm / (1 - b1**t), m)
-            vhat = jax.tree.map(lambda vv: vv / (1 - b2**t), v)
             # resumed steps (past the cold budget) decay the lr so the
             # trajectory settles instead of orbiting the optimum forever
             lr_t = self.lr if t <= self.fit_steps else (
                 self.lr * (self.fit_steps / t) ** 0.5)
-            prev = raw
-            raw = jax.tree.map(
-                lambda p, mm, vv: p - lr_t * mm / (jnp.sqrt(vv) + eps), raw, mhat, vhat
-            )
-            # clamp to numerically-safe ranges (f32 cholesky)
-            raw = {
-                "log_amp": jnp.clip(raw["log_amp"], -4.0, 4.0),
-                "log_ell": jnp.clip(raw["log_ell"], jnp.log(0.01), jnp.log(10.0)),
-                "log_noise": jnp.clip(raw["log_noise"], -9.0, 0.0),
-            }
+            new_raw, new_m, new_v, stats = _fit_step(
+                raw, m, v, x, y, mask, 1 - b1**t, 1 - b2**t, lr_t)
+            steps += 1
+            loss, norm = (float(s) for s in np.asarray(stats))
+            if not np.isfinite(loss):  # singular cholesky: keep best-so-far
+                raw = best_raw         # (discard the device-side update)
+                diverged = True
+                break
+            if loss < best_loss:
+                best_loss, best_raw = loss, raw
+            raw, m, v = new_raw, new_m, new_v
             if self.grad_tol > 0.0:
                 # effective gradient: the clamp-projected step / lr
-                if float(_step_norm(raw, prev)) < self.grad_tol * lr_t:
+                if norm < self.grad_tol * lr_t:
                     converged = True  # plateaued: stop descending
                     break
         if diverged:
@@ -396,15 +453,23 @@ def _stack_means(raw_stack: dict, xs: jnp.ndarray, alphas: jnp.ndarray,
 class StackLevel:
     """One fitted level of a residual stack: hyperparameters + the (x, y)
     design it conditions on. ``y`` is already residual to the levels below;
-    ``posterior`` is the level's cached Cholesky factorization (built once
-    at fit time — queries and appends never refactorize) and ``alpha`` its
-    K^-1 y mean weights feeding the fused stack-mean matvec."""
+    ``posterior`` is the level's cached factorization (dense Cholesky up to
+    ``SPARSE_THRESHOLD`` design rows, SGPR inducing-point above — built once
+    at fit time, queries and appends never refactorize). ``mean_x`` /
+    ``mean_alpha`` are the MEAN-BASIS arrays feeding the fused stack-mean
+    matvec: mean(q) = K(q, mean_x) · mean_alpha. For a dense level that is
+    the design itself with K^-1 y weights; for a sparse level it is the
+    (n_inducing, d) inducing set with the inducing-basis weights — an O(m)
+    contraction per level regardless of trial count. ``x``/``y`` always
+    remain the REAL design (incumbent selection reads them)."""
 
     raw: dict
-    x: jnp.ndarray      # (n, d) float32, current study's unit space
-    y: jnp.ndarray      # (n,) float32 residual targets
-    alpha: jnp.ndarray  # (n,) float32 K^-1 y
-    posterior: CholeskyPosterior
+    x: jnp.ndarray          # (n, d) float32, current study's unit space
+    y: jnp.ndarray          # (n,) float32 residual targets
+    alpha: jnp.ndarray      # posterior mean weights in the mean basis
+    posterior: "CholeskyPosterior | SparsePosterior"
+    mean_x: np.ndarray      # (nb, d) mean-basis points (design or Z)
+    mean_alpha: np.ndarray  # (nb,) weights: mean(q) = K(q, mean_x)·mean_alpha
 
 
 def _zscore(y: np.ndarray) -> np.ndarray:
@@ -447,13 +512,14 @@ class StackedResidualGP:
         per depth (rebuilt only when a new level is fitted)."""
         if below not in self._stacked_cache:
             levels = self.levels[:below]
-            bucket = max(train_bucket(int(lvl.x.shape[0])) for lvl in levels)
+            bucket = max(train_bucket(int(lvl.mean_x.shape[0]))
+                         for lvl in levels)
             xs = np.zeros((len(levels), bucket, self.dim), np.float32)
             alphas = np.zeros((len(levels), bucket), np.float32)
             for i, lvl in enumerate(levels):
-                n = int(lvl.x.shape[0])
-                xs[i, :n] = np.asarray(lvl.x)
-                alphas[i, :n] = np.asarray(lvl.alpha)[:n]
+                n = int(lvl.mean_x.shape[0])
+                xs[i, :n] = lvl.mean_x
+                alphas[i, :n] = lvl.mean_alpha
             raw_stack = {
                 k: jnp.stack([jnp.asarray(lvl.raw[k], jnp.float32)
                               for lvl in levels])
@@ -491,19 +557,46 @@ class StackedResidualGP:
         hyperparameters; ``last_fit`` carries the FitInfo of the most recent
         *fitted* level (the top level's is what the warm-start checkpoint
         persists).
+
+        Above ``SPARSE_THRESHOLD`` design rows the level goes sparse: the
+        hyperparameter fit runs on a deterministic evenly-strided subsample
+        (``FIT_SUBSAMPLE`` rows — the MLL stays O(bounded) as the study
+        grows) and the cached factorization is the SGPR inducing-point
+        posterior instead of the n×n Cholesky. At or below the threshold
+        the dense path is bit-for-bit unchanged.
         """
         resid = np.asarray(y, np.float32) - self.mean(x)
+        n = int(np.asarray(x).shape[0])
+        sparse = n > SPARSE_THRESHOLD
         if raw is None:
             gp = GaussianProcessBandit(dim=self.dim, seed=self.seed)
-            raw = gp.fit(x, resid, init=init)
+            if sparse:
+                if init is not None:
+                    gp.fit_steps = min(gp.fit_steps, SPARSE_WARM_FIT_STEPS)
+                idx = _fit_subsample_idx(n)
+                raw = gp.fit(np.asarray(x)[idx], resid[idx], init=init)
+            else:
+                raw = gp.fit(x, resid, init=init)
             self.last_fit = gp.last_fit
         else:
             raw = {k: jnp.asarray(v, jnp.float32) for k, v in raw.items()}
-        post = CholeskyPosterior(raw, x, resid, capacity=capacity)
+        if sparse:
+            post = SparsePosterior(raw, x, resid, n_inducing=N_INDUCING,
+                                   seed=self.seed, capacity=capacity)
+            mean_x = post.inducing_z
+            mean_alpha = np.asarray(post.alpha)
+        else:
+            post = CholeskyPosterior(raw, x, resid, capacity=capacity)
+            mean_x = np.asarray(x, np.float32)
+            mean_alpha = np.asarray(post.alpha)[:n]
+        # x/y stay host-side: every consumer reads them back as numpy, and a
+        # device round-trip of the unpadded (n, d) design would compile a
+        # fresh convert_element_type for every distinct n as the study grows.
         self.levels.append(StackLevel(
-            raw=raw, x=jnp.asarray(x, jnp.float32),
-            y=jnp.asarray(resid, jnp.float32),
+            raw=raw, x=np.asarray(x, np.float32),
+            y=np.asarray(resid, np.float32),
             alpha=post.alpha, posterior=post,
+            mean_x=mean_x, mean_alpha=mean_alpha,
         ))
         self._stacked_cache.clear()
         return raw
@@ -561,6 +654,10 @@ class GPBanditPolicy(Policy):
         self._min_prior_trials = min_prior_trials
         self._use_engine = use_engine
         self._n_fantasies = n_fantasies
+        # per-instance suggest-op counter: part of the acquisition RNG nonce
+        # (see suggest()), so repeated ops on ONE policy object never replay
+        # the same candidate pool even at a fixed trial count
+        self._op_count = 0
         # observability for tests/benchmarks (mirrors
         # SerializableDesignerPolicy.last_restore_was_incremental)
         self.last_fit_seconds: float = 0.0
@@ -568,6 +665,7 @@ class GPBanditPolicy(Policy):
         self.last_fit_warm: bool = False
         self.last_transfer_levels: int = 0
         self.last_prior_levels_reused: int = 0
+        self.last_sparse: bool = False
 
     def _load_priors(self, request: SuggestRequest,
                      converter: TrialToArrayConverter):
@@ -622,7 +720,8 @@ class GPBanditPolicy(Policy):
         converter = TrialToArrayConverter(config.search_space)
         completed = self._supporter.CompletedTrials(request.study_guid)
         x, y_all = trials_to_xy(completed, config, converter)
-        rng = np.random.RandomState(self._seed + len(completed))
+        op_nonce = self._op_count
+        self._op_count += 1
 
         priors = self._load_priors(request, converter)
         self.last_transfer_levels = len(priors)
@@ -647,6 +746,19 @@ class GPBanditPolicy(Policy):
         fantasy_x = converter.to_features(
             [t.parameters for t in pending]) if pending else None
         n_pend = 0 if fantasy_x is None else len(fantasy_x)
+        # Acquisition RNG: seeding by completed count ALONE meant consecutive
+        # suggest ops at an unchanged completed count replayed the identical
+        # Halton scrambling, local perturbations and fantasy draws — repeated
+        # suggestions and zero batch diversity until a trial completed. The
+        # nonce mixes in the pending count (service-side ops observe the
+        # ACTIVE trials earlier suggestions created) and the per-instance op
+        # counter (direct back-to-back suggest() calls on one object). Every
+        # component is a deterministic function of the observed study
+        # snapshot + op index, so identical snapshots still suggest
+        # identically across topologies, replays and warm/cold servers.
+        rng = np.random.RandomState(
+            (self._seed + len(completed) + 1000003 * n_pend
+             + 7919 * op_nonce) % (2 ** 32))
         has_current = x.shape[0] >= 1
         headroom = n_pend + request.count
 
@@ -684,6 +796,7 @@ class GPBanditPolicy(Policy):
         # when any current trials exist, else the deepest prior level); the
         # levels below contribute a fixed mean shift.
         top = stack.levels[-1]
+        self.last_sparse = isinstance(top.posterior, SparsePosterior)
         raw = top.raw
         n_below = stack.depth - 1
         xs = np.asarray(top.x, np.float64)
@@ -754,11 +867,13 @@ class GPBanditPolicy(Policy):
             self._supporter.SendMetadata(delta)
         return SuggestDecision(suggestions=suggestions)
 
-    def _suggest_engine(self, post: CholeskyPosterior, pool, pool_mu, beta,
-                        fantasy_x, y_pend, count: int) -> List[np.ndarray]:
+    def _suggest_engine(self, post: "CholeskyPosterior | SparsePosterior",
+                        pool, pool_mu, beta, fantasy_x, y_pend,
+                        count: int) -> List[np.ndarray]:
         """Factorized-posterior batch: pending fantasies and picked members
-        extend the op's single Cholesky with rank-1 appends; pool scores
-        refresh in O(n·m) per member from the cached cross-solve."""
+        extend the op's single factorization with rank-1 appends (dense: the
+        n×n Cholesky; sparse: the m×m inducing factor); pool scores refresh
+        incrementally per member from the cached cross-solve."""
         if fantasy_x is not None:
             for px, py in zip(fantasy_x, y_pend):
                 post.append(px, py)

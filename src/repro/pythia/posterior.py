@@ -30,6 +30,20 @@ bucket is chosen once per operation with headroom for every planned append
 (pending fantasies + batch count), so a suggest op never re-buckets
 mid-flight; ``append`` past capacity refuses loudly instead of silently
 refactorizing.
+
+This dense engine is the DEFAULT and the exactness oracle: it serves every
+study at or below ``sparse_posterior.SPARSE_THRESHOLD`` design rows.
+Strictly above the threshold ``StackedResidualGP.fit_level`` builds the
+drop-in ``sparse_posterior.SparsePosterior`` instead — an SGPR
+inducing-point factorization whose per-op cost is O(n·m^2) against an m×m
+inducing factor rather than O(n^3). Both classes expose the same
+set_pool/append/append_pool_member/query interface, keep the same bucket
+and retrace invariants, and share ``TRACE_COUNTS``.
+
+The duplicate-append pivot: a rank-1 ``append`` of a point (near-)identical
+to an existing design row has a true Schur complement of ~2·noise, never 0;
+the pivot is floored at the fitted noise variance so the whitened
+observation cannot explode (see ``_append_row``).
 """
 
 from __future__ import annotations
@@ -128,7 +142,14 @@ def _append_row(raw: Dict, L: jnp.ndarray, xp: jnp.ndarray,
     noise = jnp.exp(raw["log_noise"]) + _JITTER
     k = _gram(raw, xp, xn[None, :])[:, 0] * mask          # (B,)
     l = jax.scipy.linalg.solve_triangular(L, k, lower=True)
-    lss = jnp.sqrt(jnp.maximum(amp + noise - jnp.dot(l, l), 1e-10))
+    # Pivot floored at the NOISE scale, not machine epsilon: appending a
+    # near-duplicate of an existing row drives the Schur complement toward
+    # its analytic limit of ~2*noise (independent observation noise keeps
+    # the augmented matrix well-conditioned), but f32 roundoff can push the
+    # computed value far below it — with a 1e-10 floor the pivot collapses
+    # to 1e-5 and wn = (yn - l.w)/lss explodes, poisoning the cached pool
+    # mean/var for the rest of the operation.
+    lss = jnp.sqrt(jnp.maximum(amp + noise - jnp.dot(l, l), noise))
     wn = (yn - jnp.dot(l, w)) / lss
     return l, lss, wn
 

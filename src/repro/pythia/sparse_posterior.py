@@ -1,0 +1,383 @@
+"""SGPR inducing-point posterior: the engine's large-n drop-in.
+
+``SparsePosterior`` mirrors the ``CholeskyPosterior`` interface (set_pool /
+pool_mean / pool_std / pool_ucb / append / append_pool_member / query /
+alpha / x_padded / design_x / design_y / capacity / n) but factorizes the
+m×m inducing matrix instead of the n×n design Gram — O(n·m²) once per
+suggest operation instead of O(n³), with m fixed (``n_inducing``) so the
+factor cost stops growing with the study. The dense path survives untouched
+as the small-n default and the exactness oracle (Z = X makes SGPR exact).
+
+Formulation (Titsias 2009, the GPflow SGPR algebra rearranged around an
+explicit B^-1):
+
+    Kuu = K(Z, Z) + jitter·I           Luu = chol(Kuu)
+    Kuf = K(Z, X)                      sigma2 = noise
+    B   = I + Luu^-1 Kuf Kuf^T Luu^-T / sigma2        LB = chol(B)
+    g   = Luu^-1 (Kuf y)
+    mean(q) = q_u^T B^-1 g / sigma2,       q_u = Luu^-1 K(Z, q)
+    var(q)  = k(q,q) - q_u^T q_u + q_u^T B^-1 q_u
+
+The Gram-product form B = I + Luu^-1 (Kuf Kuf^T) Luu^-T / sigma2 costs one
+(m, n)·(n, m) GEMM plus two m×m triangular solves — the O(m²·n) wide solve
+A = Luu^-1 Kuf is never materialized.
+
+Rank-1 appends (pending fantasies, batch members) keep the engine's append
+semantics against the m×m factor: a new observation (x*, y*) only touches
+B and g —
+
+    u = Luu^-1 K(Z, x*) / sigma
+    LB   <- cholupdate(LB, u)                       (Pallas kernel)
+    B^-1 <- B^-1 - (B^-1 u)(B^-1 u)^T / (1 + u^T B^-1 u)   (Sherman-Morrison)
+    g    <- g + Luu^-1 K(Z, x*) · y*
+
+so one append is O(m²) + an O(m·M) cached-pool refresh — same complexity
+class the dense engine's rank-1 appends have, but independent of n. Both
+factor forms are maintained: ``LB`` (via the cholupdate kernel) serves fresh
+cross-solves, ``B^-1`` serves the incremental pool mean/var updates.
+
+Engine invariants carried over: training buffers bucket-pad to
+``train_bucket`` with masked columns (padding contributes zero to Kuf·y and
+to the Gram product — results are exact), pools pad to ``pool_bucket``, Z
+has the STATIC shape (n_inducing, d), and every jitted body counts its
+(re)traces in ``posterior.TRACE_COUNTS`` under ``sparse_*`` keys so the
+steady-state no-retrace property is pinned by tests. ``append`` past the
+reserved capacity refuses loudly, exactly like the dense engine.
+
+Inducing sites are scrambled-Halton points (``pythia/halton.py``) in the
+unit cube — low-discrepancy coverage of the feature space, deterministic
+per seed, and independent of the trial order so identical study snapshots
+place identical sites in every topology.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.pythia import halton
+from repro.pythia.posterior import (
+    _JITTER,
+    TRACE_COUNTS,
+    _gram,
+    _pool_scores,
+    pool_bucket,
+    train_bucket,
+)
+
+# Design sizes strictly above this threshold switch GPBanditPolicy /
+# StackedResidualGP levels from the dense CholeskyPosterior to the sparse
+# path (documented in ROADMAP's engine rules). At the threshold itself the
+# dense path still runs: small-n behavior — and every existing benchmark
+# number at n <= 1000 — is bit-for-bit unchanged.
+SPARSE_THRESHOLD = 1024
+
+# Inducing-set size: fixed per policy config, so the m×m kernel shapes are
+# static across operations and trial counts (no retrace as the study grows).
+N_INDUCING = 256
+
+
+def inducing_sites(n_inducing: int, dim: int, seed: int) -> np.ndarray:
+    """Scrambled-Halton inducing sites in [0, 1)^d.
+
+    Seeded by the POLICY seed, not the per-operation nonce: sites must be a
+    deterministic function of (config, dim) alone so warm and cold servers,
+    replays, and both Figure-2 topologies place the same Z for the same
+    study snapshot.
+    """
+    rng = np.random.RandomState(seed)
+    return halton.scrambled_halton(n_inducing, dim, rng).astype(np.float32)
+
+
+def _noise(raw: Dict) -> jnp.ndarray:
+    return jnp.exp(raw["log_noise"]) + _JITTER
+
+
+@jax.jit
+def _sfactor(raw: Dict, z: jnp.ndarray, xp: jnp.ndarray, yp: jnp.ndarray,
+             mask: jnp.ndarray):
+    """(Luu, LB, Binv, g): the op's ONE sparse factorization.
+
+    Padding columns of the design (mask 0) zero out of Kuf, so they add
+    nothing to the Gram product or to Kuf·y — padded results are exact.
+    """
+    TRACE_COUNTS["sparse_factor"] += 1
+    m = z.shape[0]
+    sigma2 = _noise(raw)
+    Kuu = _gram(raw, z, z) + _JITTER * jnp.eye(m)
+    Luu = jnp.linalg.cholesky(Kuu)
+    Kuf = _gram(raw, z, xp) * mask[None, :]               # (m, N)
+    G = Kuf @ Kuf.T                                       # (m, m) GEMM
+    S = kops.tri_solve(Luu, G, impl="auto")               # Luu^-1 G
+    S = kops.tri_solve(Luu, S.T, impl="auto")             # Luu^-1 G Luu^-T
+    B = jnp.eye(m) + S / sigma2
+    LB = jnp.linalg.cholesky(B)
+    Y = kops.tri_solve(LB, jnp.eye(m), impl="auto")       # LB^-1
+    Binv = Y.T @ Y
+    g = kops.tri_solve(Luu, Kuf @ yp, impl="auto")
+    return Luu, LB, Binv, g
+
+
+@jax.jit
+def _salpha(raw: Dict, Luu: jnp.ndarray, Binv: jnp.ndarray,
+            g: jnp.ndarray) -> jnp.ndarray:
+    """alpha_u with mean(q) = K(q, Z) · alpha_u — the inducing-basis mean
+    weights feeding the fused gram-matvec stack means."""
+    TRACE_COUNTS["sparse_alpha"] += 1
+    return kops.tri_solve(Luu, Binv @ g, trans=True, impl="auto") / _noise(raw)
+
+
+def _pool_stats(raw: Dict, z: jnp.ndarray, Luu: jnp.ndarray,
+                Binv: jnp.ndarray, g: jnp.ndarray, xqp: jnp.ndarray):
+    """Shared cross-solve body: Q = Luu^-1 K(Z, q), mean/var per column."""
+    sigma2 = _noise(raw)
+    Q = kops.tri_solve(Luu, _gram(raw, z, xqp), impl="auto")  # (m, M)
+    mean = Q.T @ (Binv @ g) / sigma2
+    var = (jnp.exp(raw["log_amp"]) - jnp.sum(Q * Q, axis=0)
+           + jnp.sum(Q * (Binv @ Q), axis=0))
+    return Q, mean, var
+
+
+@jax.jit
+def _sattach_pool(raw: Dict, z: jnp.ndarray, Luu: jnp.ndarray,
+                  Binv: jnp.ndarray, g: jnp.ndarray, xqp: jnp.ndarray):
+    """Candidate-pool cross-solve, cached so appends refresh in O(m·M)."""
+    TRACE_COUNTS["sparse_attach_pool"] += 1
+    return _pool_stats(raw, z, Luu, Binv, g, xqp)
+
+
+@jax.jit
+def _squery(raw: Dict, z: jnp.ndarray, Luu: jnp.ndarray, Binv: jnp.ndarray,
+            g: jnp.ndarray, xqp: jnp.ndarray):
+    """One-shot posterior (mean, std) at arbitrary padded query points."""
+    TRACE_COUNTS["sparse_query"] += 1
+    _Q, mean, var = _pool_stats(raw, z, Luu, Binv, g, xqp)
+    return mean, jnp.sqrt(jnp.maximum(var, 1e-10))
+
+
+def _append_core(raw: Dict, z: jnp.ndarray, Luu: jnp.ndarray,
+                 LB: jnp.ndarray, Binv: jnp.ndarray, g: jnp.ndarray,
+                 xn: jnp.ndarray, yn: jnp.ndarray):
+    """Shared rank-1 append body: cholupdate of LB, Sherman-Morrison of
+    B^-1, and the g refresh — O(m²), independent of n."""
+    sigma2 = _noise(raw)
+    kv = _gram(raw, z, xn[None, :])[:, 0]                 # (m,)
+    qv = kops.tri_solve(Luu, kv, impl="auto")             # Luu^-1 k
+    u = qv / jnp.sqrt(sigma2)
+    LB = kops.cholupdate(LB, u, impl="auto")
+    P = Binv @ u
+    denom = 1.0 + jnp.dot(u, P)
+    Binv = Binv - jnp.outer(P, P) / denom
+    g = g + qv * yn
+    return LB, Binv, g, P, denom
+
+
+def _pool_refresh(raw: Dict, Q: jnp.ndarray, var: jnp.ndarray,
+                  Binv: jnp.ndarray, g: jnp.ndarray, P: jnp.ndarray,
+                  denom: jnp.ndarray):
+    """Fold one append into the cached pool posterior: O(m·M).
+
+    The variance contracts by the Sherman-Morrison correction projected
+    onto the pool cross-solve; the mean is rebuilt from the updated
+    (B^-1, g) — one m-vector solve plus one (M, m) matvec.
+    """
+    t = Q.T @ P                                           # (M,)
+    var = var - t * t / denom
+    mean = Q.T @ (Binv @ g) / _noise(raw)
+    return mean, var
+
+
+@jax.jit
+def _sappend(raw: Dict, z: jnp.ndarray, Luu: jnp.ndarray, LB: jnp.ndarray,
+             Binv: jnp.ndarray, g: jnp.ndarray, xn: jnp.ndarray,
+             yn: jnp.ndarray):
+    """Rank-1 append with no attached pool."""
+    TRACE_COUNTS["sparse_append"] += 1
+    LB, Binv, g, _P, _denom = _append_core(raw, z, Luu, LB, Binv, g, xn, yn)
+    return LB, Binv, g
+
+
+@jax.jit
+def _sappend_rescore(raw: Dict, z: jnp.ndarray, Luu: jnp.ndarray,
+                     LB: jnp.ndarray, Binv: jnp.ndarray, g: jnp.ndarray,
+                     Q: jnp.ndarray, var: jnp.ndarray, xn: jnp.ndarray,
+                     yn: jnp.ndarray):
+    """Append + cached-pool refresh fused into one dispatch."""
+    TRACE_COUNTS["sparse_append_rescore"] += 1
+    LB, Binv, g, P, denom = _append_core(raw, z, Luu, LB, Binv, g, xn, yn)
+    mean, var = _pool_refresh(raw, Q, var, Binv, g, P, denom)
+    return LB, Binv, g, mean, var
+
+
+@jax.jit
+def _sappend_member(raw: Dict, z: jnp.ndarray, Luu: jnp.ndarray,
+                    LB: jnp.ndarray, Binv: jnp.ndarray, g: jnp.ndarray,
+                    Q: jnp.ndarray, mean: jnp.ndarray, var: jnp.ndarray,
+                    xqp: jnp.ndarray, pool_i: jnp.ndarray):
+    """Fused batch-member append: pool point ``pool_i`` conditioned at its
+    CURRENT cached posterior mean, factors + pool stats updated in ONE
+    dispatch with zero host round-trips (the suggest count-loop hot path).
+    """
+    TRACE_COUNTS["sparse_append_member"] += 1
+    xn = xqp[pool_i]
+    yn = mean[pool_i]
+    LB, Binv, g, P, denom = _append_core(raw, z, Luu, LB, Binv, g, xn, yn)
+    mean, var = _pool_refresh(raw, Q, var, Binv, g, P, denom)
+    return LB, Binv, g, mean, var, xn, yn
+
+
+class SparsePosterior:
+    """Cached inducing-point (SGPR) posterior for one suggest operation.
+
+    Drop-in alternative to ``CholeskyPosterior`` above ``SPARSE_THRESHOLD``
+    design rows: factorizes the m×m inducing system once at construction;
+    every later query is served from the cached (Luu, LB, B^-1, g), and
+    batch/fantasy extensions are O(m²) rank-1 appends against those factors.
+    ``capacity`` reserves the same append headroom contract as the dense
+    engine — appends past it refuse loudly.
+    """
+
+    def __init__(self, raw: Dict, x, y, *, n_inducing: int = N_INDUCING,
+                 seed: int = 0, capacity: Optional[int] = None,
+                 z: Optional[np.ndarray] = None):
+        x = np.asarray(x, np.float32)
+        y = np.asarray(y, np.float32)
+        n, d = x.shape
+        self.raw = {k: jnp.asarray(v, jnp.float32) for k, v in raw.items()}
+        self.capacity = max(capacity or n, n)
+        self.n = n
+        self.n_inducing = n_inducing
+        if z is None:
+            z = inducing_sites(n_inducing, d, seed)
+        self._z = jnp.asarray(np.asarray(z, np.float32))
+        bucket = train_bucket(n)
+        xp = np.zeros((bucket, d), np.float32)
+        yp = np.zeros((bucket,), np.float32)
+        mask = np.zeros((bucket,), np.float32)
+        xp[:n], yp[:n], mask[:n] = x, y, 1.0
+        self._Luu, self._LB, self._Binv, self._g = _sfactor(
+            self.raw, self._z, jnp.asarray(xp), jnp.asarray(yp),
+            jnp.asarray(mask))
+        # the growing design stays on the host: appends only touch the m×m
+        # factors, so no bucket-padded device design buffer is needed
+        self._x = x
+        self._y = y
+        self._alpha_cache: Optional[jnp.ndarray] = None
+        self._xqp: Optional[jnp.ndarray] = None
+        self._m = 0
+        self._Q = self._pool_mean = self._pool_var = None
+
+    # -- whole-pool scoring --------------------------------------------------
+    def set_pool(self, xq) -> None:
+        """Attach a candidate pool: ONE cross-solve, cached for the op."""
+        xq = np.asarray(xq, np.float32)
+        m = xq.shape[0]
+        xqp = np.zeros((pool_bucket(m), xq.shape[1]), np.float32)
+        xqp[:m] = xq
+        self._xqp = jnp.asarray(xqp)
+        self._m = m
+        self._Q, self._pool_mean, self._pool_var = _sattach_pool(
+            self.raw, self._z, self._Luu, self._Binv, self._g, self._xqp)
+
+    def pool_mean(self) -> np.ndarray:
+        return np.asarray(self._pool_mean)[: self._m]
+
+    def pool_std(self) -> np.ndarray:
+        var = np.asarray(self._pool_var)[: self._m]
+        return np.sqrt(np.maximum(var, 1e-10))
+
+    def pool_ucb(self, beta: float) -> np.ndarray:
+        """mean + beta*std for the attached pool: one fused device op and
+        ONE host sync (the count-loop's only per-member transfer)."""
+        return np.asarray(_pool_scores(
+            self._pool_mean, self._pool_var, jnp.float32(beta)))[: self._m]
+
+    # -- extension -----------------------------------------------------------
+    def _check_capacity(self) -> None:
+        if self.n >= self.capacity:
+            raise ValueError(
+                f"SparsePosterior capacity {self.capacity} exhausted; "
+                "construct with headroom for every planned append")
+
+    def append(self, x_new, y_new) -> None:
+        """Condition on one more (x, y) via a rank-1 append against the m×m
+        inducing factors: cholupdate of LB + Sherman-Morrison of B^-1, O(m²)
+        regardless of the design size (plus O(m·M) to refresh an attached
+        pool)."""
+        self._check_capacity()
+        xn = np.asarray(x_new, np.float32).reshape(-1)
+        yn = np.float32(y_new)
+        if self._xqp is None:
+            self._LB, self._Binv, self._g = _sappend(
+                self.raw, self._z, self._Luu, self._LB, self._Binv, self._g,
+                jnp.asarray(xn), jnp.asarray(yn))
+        else:
+            (self._LB, self._Binv, self._g, self._pool_mean,
+             self._pool_var) = _sappend_rescore(
+                self.raw, self._z, self._Luu, self._LB, self._Binv, self._g,
+                self._Q, self._pool_var, jnp.asarray(xn), jnp.asarray(yn))
+        self._x = np.vstack([self._x, xn[None, :]])
+        self._y = np.append(self._y, yn)
+        self.n += 1
+        self._alpha_cache = None
+
+    def append_pool_member(self, pool_index: int) -> None:
+        """Condition on pool member ``pool_index`` fantasized at its current
+        cached posterior mean — the batch count-loop's rank-1 step, fused
+        into a single device dispatch (no value ever crosses to the host)."""
+        self._check_capacity()
+        if self._xqp is None:
+            raise ValueError("append_pool_member() requires set_pool() first")
+        (self._LB, self._Binv, self._g, self._pool_mean, self._pool_var,
+         xn, yn) = _sappend_member(
+            self.raw, self._z, self._Luu, self._LB, self._Binv, self._g,
+            self._Q, self._pool_mean, self._pool_var, self._xqp,
+            jnp.asarray(pool_index, jnp.int32))
+        self._x = np.vstack([self._x, np.asarray(xn)[None, :]])
+        self._y = np.append(self._y, np.float32(yn))
+        self.n += 1
+        self._alpha_cache = None
+
+    # -- point queries -------------------------------------------------------
+    def query(self, xq) -> "tuple[np.ndarray, np.ndarray]":
+        """(mean, std) at arbitrary points from the cached factors (padded
+        to the pool bucket so repeated shapes never retrace)."""
+        xq = np.asarray(xq, np.float32)
+        m = xq.shape[0]
+        xqp = np.zeros((pool_bucket(m), xq.shape[1]), np.float32)
+        xqp[:m] = xq
+        mean, std = _squery(self.raw, self._z, self._Luu, self._Binv,
+                            self._g, jnp.asarray(xqp))
+        return np.asarray(mean)[:m], np.asarray(std)[:m]
+
+    @property
+    def alpha(self) -> jnp.ndarray:
+        """Inducing-basis mean weights: mean(q) = K(q, Z) · alpha. Pairs
+        with ``x_padded`` (= Z) to feed the fused gram-matvec stack means —
+        an (m,) contraction instead of (n,), no refactorization."""
+        if self._alpha_cache is None:
+            self._alpha_cache = _salpha(self.raw, self._Luu, self._Binv,
+                                        self._g)
+        return self._alpha_cache
+
+    @property
+    def x_padded(self) -> jnp.ndarray:
+        """The mean-basis points pairing with ``alpha`` — the inducing set
+        Z, whose (n_inducing, d) shape is static across operations."""
+        return self._z
+
+    @property
+    def inducing_z(self) -> np.ndarray:
+        return np.asarray(self._z)
+
+    @property
+    def design_x(self) -> np.ndarray:
+        return self._x
+
+    @property
+    def design_y(self) -> np.ndarray:
+        return self._y

@@ -170,12 +170,41 @@ class Datastore:
 # ---------------------------------------------------------------------------
 
 
+# proto ``state`` values whose trials never change again once stored —
+# safe to cache their materialized Trial objects across list_trials calls
+_TERMINAL_STATE_VALUES = frozenset(
+    s.value for s in TrialState if s.is_terminal)
+
+
 class InMemoryDatastore(Datastore):
     def __init__(self):
         self._lock = threading.RLock()
         self._studies: Dict[str, dict] = {}
         self._trials: Dict[str, Dict[int, dict]] = {}
         self._ops: Dict[str, dict] = {}
+        # Terminal-trial materialization cache: {study: {tid: (proto, Trial)}}.
+        # list_trials deserializes every stored proto on every call, which
+        # dominates suggestion latency once studies reach thousands of
+        # completed trials (the Pythia supporter re-reads the full study per
+        # operation). Terminal trials are immutable by whole-proto
+        # replacement: update_trial swaps the stored dict, so an IDENTITY
+        # check against the cached proto detects any write (including
+        # metadata attach, which goes get_trial -> update_trial) and
+        # invalidates the entry. Non-terminal trials are never cached — the
+        # stalled-trial reassignment path mutates ACTIVE trials it listed.
+        self._term_cache: Dict[str, Dict[int, tuple]] = {}
+
+    def _materialize(self, study_name: str, tid: int, p: dict) -> Trial:
+        """Trial for a stored proto, cached when the trial is terminal."""
+        if p.get("state") not in _TERMINAL_STATE_VALUES:
+            return Trial.from_proto(p)
+        cache = self._term_cache.setdefault(study_name, {})
+        hit = cache.get(tid)
+        if hit is not None and hit[0] is p:
+            return hit[1]
+        trial = Trial.from_proto(p)
+        cache[tid] = (p, trial)
+        return trial
 
     # studies ----------------------------------------------------------------
     def create_study(self, study: Study) -> str:
@@ -212,6 +241,7 @@ class InMemoryDatastore(Datastore):
                 raise NotFoundError(study_name)
             del self._studies[study_name]
             self._trials.pop(study_name, None)
+            self._term_cache.pop(study_name, None)
             self._ops = {k: v for k, v in self._ops.items() if v.get("study_name") != study_name}
 
     # trials -------------------------------------------------------------------
@@ -249,7 +279,7 @@ class InMemoryDatastore(Datastore):
                     continue
                 if min_trial_id is not None and tid < min_trial_id:
                     continue
-                out.append(Trial.from_proto(p))
+                out.append(self._materialize(study_name, tid, p))
             return out
 
     def update_trial(self, study_name: str, trial: Trial) -> None:
@@ -266,6 +296,7 @@ class InMemoryDatastore(Datastore):
             if bucket is None or trial_id not in bucket:
                 raise NotFoundError(f"{study_name}/trials/{trial_id}")
             del bucket[trial_id]
+            self._term_cache.get(study_name, {}).pop(trial_id, None)
 
     def max_trial_id(self, study_name: str) -> int:
         with self._lock:
@@ -285,7 +316,7 @@ class InMemoryDatastore(Datastore):
                 if bucket is None:
                     raise NotFoundError(name)
                 out[name] = [
-                    Trial.from_proto(bucket[tid])
+                    self._materialize(name, tid, bucket[tid])
                     for tid in sorted(bucket)
                     if state_values is None or bucket[tid].get("state") in state_values
                 ]

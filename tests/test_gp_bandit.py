@@ -139,6 +139,48 @@ def test_gp_bandit_fantasizes_pending_trials():
     assert abs(x_second - x_first) > 1e-3, (x_first, x_second)
 
 
+def test_back_to_back_ops_at_fixed_trial_count_differ():
+    """Regression: the acquisition RNG was seeded by the completed-trial
+    count ALONE, so two suggest operations with no completion in between
+    replayed the identical Halton scrambling, local perturbations and
+    fantasy draws — the server kept re-suggesting the same point until a
+    trial completed. The per-op nonce must break the replay while staying a
+    deterministic function of (observed snapshot, op index): a fresh policy
+    over the same snapshot still reproduces the first op exactly."""
+    cfg = StudyConfig()
+    cfg.search_space.select_root().add_float_param("x", 0.0, 1.0)
+    cfg.metrics.add("y", "MAXIMIZE")
+    cfg.algorithm = "GP_UCB"
+    ds = InMemoryDatastore()
+    study = Study(name="owners/o/studies/nonce", study_config=cfg)
+    ds.create_study(study)
+    for i in range(9):
+        x = (i + 0.5) / 9.0
+        t = Trial(parameters={"x": x})
+        t = ds.create_trial(study.name, t)
+        t.complete(Measurement(metrics={"y": -(x - 0.42) ** 2}))
+        ds.update_trial(study.name, t)
+
+    supporter = DatastorePolicySupporter(ds, study.name)
+    request = SuggestRequest(
+        study_descriptor=StudyDescriptor(config=cfg, guid=study.name), count=1)
+
+    policy = GPBanditPolicy(supporter, n_candidates=400, min_completed=4,
+                            warm_start=False)
+    (first,) = policy.suggest(request).suggestions
+    (second,) = policy.suggest(request).suggestions  # no completions between
+    x1 = first.parameters.get_value("x")
+    x2 = second.parameters.get_value("x")
+    assert abs(x1 - x2) > 1e-6, (x1, x2)
+
+    # determinism is preserved: a fresh policy over the identical snapshot
+    # (op counter 0, same pending set) reproduces the FIRST suggestion
+    replay = GPBanditPolicy(supporter, n_candidates=400, min_completed=4,
+                            warm_start=False)
+    (replayed,) = replay.suggest(request).suggestions
+    assert replayed.parameters.get_value("x") == x1
+
+
 def test_dedup_filter_empty_pool_falls_back_to_unfiltered(monkeypatch):
     """Regression: a pending trial at EVERY candidate used to empty the
     dedup-filtered pool and crash np.argmax on a zero-length array; the

@@ -81,6 +81,25 @@ def test_gram_matvec_dispatch_blocked_xla_matches_ref():
     np.testing.assert_allclose(got_pad, want, rtol=2e-4, atol=2e-4)
 
 
+def test_gram_blocked_ragged_tail_compiles_once():
+    """Regression: the blocked gram path handed the final partial strip to
+    the jitted kernel at its ragged width — one fresh compile per distinct
+    tail shape. The strip loop must pad the tail to ``block_rows`` (slicing
+    the result back), so every tail size reuses ONE compiled kernel."""
+    from repro.kernels import ops as kops
+
+    x1 = jnp.asarray(RNG.randn(6, 4), jnp.float32)
+    before = matern52_gram_pallas._cache_size()
+    outs = {}
+    for m in (13, 21, 29):  # three distinct ragged tails for block_rows=8
+        x2 = jnp.asarray(RNG.randn(m, 4), jnp.float32)
+        outs[m] = np.asarray(kops.matern52_gram(
+            x1, x2, 1.3, impl="pallas_interpret", block_rows=8))
+        want = np.asarray(ref.matern52_gram(x1, x2, 1.3))
+        np.testing.assert_allclose(outs[m], want, rtol=1e-4, atol=1e-4)
+    assert matern52_gram_pallas._cache_size() - before == 1
+
+
 # -- flash attention ---------------------------------------------------------------
 
 

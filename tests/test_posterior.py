@@ -130,6 +130,38 @@ def test_cholupdate_equals_full_refactorization_property(n, d, k, seed):
                                atol=5e-3, rtol=5e-3)
 
 
+def test_exact_duplicate_append_matches_fresh_factorization():
+    """Regression: appending a point identical to an existing design row
+    drove the new Cholesky pivot to the sqrt(1e-10) numerical floor, so the
+    whitened observation exploded and every later query/score was corrupt.
+    The pivot is now floored at the noise variance (the true Schur
+    complement of a duplicate row is ~2*noise), so a duplicate append must
+    agree with a fresh factorization of the augmented design."""
+    gp, raw, x, y = _fitted_gp(n=12, d=3)
+    rng = np.random.RandomState(5)
+    dup_x, dup_y = x[4].copy(), float(y[4])
+
+    incremental = CholeskyPosterior(raw, x, y, capacity=x.shape[0] + 1)
+    incremental.append(dup_x, dup_y)
+    fresh = CholeskyPosterior(raw, np.vstack([x, dup_x[None]]),
+                              np.concatenate([y, [dup_y]]))
+    xq = rng.rand(30, 3)
+    m_inc, s_inc = incremental.query(xq)
+    m_new, s_new = fresh.query(xq)
+    assert np.isfinite(m_inc).all() and np.isfinite(s_inc).all()
+    np.testing.assert_allclose(m_inc, m_new, atol=5e-3, rtol=5e-3)
+    np.testing.assert_allclose(s_inc, s_new, atol=5e-3, rtol=5e-3)
+
+    # pool scores survive the duplicate too (this is what the batch loop
+    # consumes right after fantasizing a pending/picked member)
+    incremental2 = CholeskyPosterior(raw, x, y, capacity=x.shape[0] + 1)
+    incremental2.set_pool(xq)
+    incremental2.append(dup_x, dup_y)
+    fresh.set_pool(xq)
+    np.testing.assert_allclose(incremental2.pool_ucb(1.8), fresh.pool_ucb(1.8),
+                               atol=5e-3, rtol=5e-3)
+
+
 def test_append_past_capacity_refuses():
     gp, raw, x, y = _fitted_gp(n=5, d=2)
     post = CholeskyPosterior(raw, x, y, capacity=6)

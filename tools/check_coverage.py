@@ -44,7 +44,9 @@ COVERAGE_TESTS = [
     "tests/test_designers.py",
     "tests/test_gp_bandit.py",
     "tests/test_posterior.py",
+    "tests/test_sparse_posterior.py",
     "tests/test_kernels.py",
+    "tests/test_tri_solve.py",
     "tests/test_policy_state.py",
     "tests/test_transfer.py",
     "tests/test_search_space.py",
