@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-fast smoke test-dist cov-service bench-batched bench-remote-pythia bench-warmstart bench-transfer bench-acquisition bench-scaleout
+.PHONY: test test-fast smoke test-dist cov-service bench-batched bench-remote-pythia bench-warmstart bench-transfer bench-acquisition bench-scaleout bench-multimetric
 
 # tier-1: the full suite (what the driver runs), then the coverage floors
 # (repro.service >= 80%, repro.pythia >= 70%, repro.core >= 70%,
@@ -52,3 +52,9 @@ bench-acquisition:
 # median < the old 20ms first-poll interval); writes BENCH_scaleout.json
 bench-scaleout:
 	PYTHONPATH=.:src $(PY) benchmarks/scaleout.py
+
+# multi-metric sample efficiency: hypervolume-vs-trials on 2- and 3-metric
+# synthetics, GP bandit vs the NSGA-II baseline (floor: GP >= NSGA-II at 50
+# trials on both); writes BENCH_multimetric.json
+bench-multimetric:
+	PYTHONPATH=.:src $(PY) benchmarks/multimetric.py

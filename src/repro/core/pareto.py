@@ -28,16 +28,39 @@ def pareto_dominated_mask(y: jnp.ndarray) -> jnp.ndarray:
 
 
 def pareto_frontier_indices(y) -> List[int]:
-    """Indices of non-dominated points (f64 numpy: denormal-exact)."""
+    """Indices of non-dominated points (f64 numpy: denormal-exact).
+
+    Rows carrying ANY non-finite value (NaN/±inf) are treated as
+    incomparable and never appear on the frontier: every comparison against
+    NaN is False, so a NaN row used to be un-dominatable — it survived every
+    domination test and was served to users as an "optimal" trial. Upstream
+    (``StudyConfig.objective_values``) already refuses to score such trials;
+    this is the defense-in-depth for callers that build Y themselves.
+    """
     y = np.asarray(y, dtype=np.float64)
     if y.ndim != 2:
         raise ValueError(f"expected (n, k) objectives, got shape {y.shape}")
     if y.shape[0] == 0:
         return []
+    finite = np.all(np.isfinite(y), axis=1)
     ge = np.all(y[:, None, :] >= y[None, :, :], axis=-1)
     gt = np.any(y[:, None, :] > y[None, :, :], axis=-1)
-    dominated = np.any(ge & gt, axis=0)
-    return [i for i in range(y.shape[0]) if not dominated[i]]
+    dominated = np.any((ge & gt) & finite[:, None], axis=0)
+    return [i for i in range(y.shape[0]) if finite[i] and not dominated[i]]
+
+
+def default_reference_point(y, *, margin: float = 0.1) -> np.ndarray:
+    """Reference point for hypervolume from observed objectives: the
+    per-metric minimum pushed down by ``margin`` of the per-metric span (so
+    frontier-extreme points still dominate a box of positive volume). Shared
+    by the GP-bandit's hypervolume-scalarized acquisition and the
+    multi-metric benchmark/client reporting."""
+    y = np.asarray(y, dtype=np.float64)
+    if y.ndim != 2 or y.shape[0] == 0:
+        raise ValueError(f"expected non-empty (n, k) objectives, got {y.shape}")
+    lo = np.min(y, axis=0)
+    span = np.maximum(np.max(y, axis=0) - lo, 1e-9)
+    return lo - margin * span
 
 
 @jax.jit

@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import math
 from typing import List, Optional, Sequence
 
 from repro.core.metadata import Metadata
@@ -76,15 +77,24 @@ class MetricsConfig(list):
         *,
         min_value: Optional[float] = None,
         max_value: Optional[float] = None,
+        safety_threshold: Optional[float] = None,
     ) -> MetricInformation:
         mi = MetricInformation(
             name=name,
             goal=ObjectiveMetricGoal(goal) if isinstance(goal, str) else goal,
             min_value=min_value,
             max_value=max_value,
+            safety_threshold=safety_threshold,
         )
-        if any(m.name == name for m in self):
-            raise ValueError(f"duplicate metric {name!r}")
+        return self.add_metric(mi)
+
+    def add_metric(self, mi: MetricInformation) -> MetricInformation:
+        """Appends with the duplicate-id check — the ONLY sanctioned way to
+        grow the config (``from_proto`` routes through here too, so a wire
+        blob carrying duplicate metric ids fails loudly instead of
+        roundtripping a silently ambiguous study)."""
+        if any(m.name == mi.name for m in self):
+            raise ValueError(f"duplicate metric {mi.name!r}")
         self.append(mi)
         return mi
 
@@ -203,13 +213,21 @@ class StudyConfig:
         self.search_space.validate_parameters(trial.parameters)
 
     def objective_values(self, trial: Trial) -> Optional[List[float]]:
-        """Larger-is-better objective vector, or None if not comparable."""
+        """Larger-is-better objective vector, or None if not comparable.
+
+        Non-finite metric values (NaN/±inf) make the whole trial
+        incomparable — same policy as ``early_stopping._curve``. A NaN that
+        leaked through here used to poison GP labels in ``trials_to_xy``
+        and, worse, become un-dominatable in ``pareto_frontier_indices``
+        (every NaN comparison is False), so ``ListOptimalTrials`` served it
+        to users as an "optimal" trial.
+        """
         if trial.final_measurement is None:
             return None
         out = []
         for mi in self.metrics:
             v = trial.final_measurement.metrics.get_value(mi.name)
-            if v is None:
+            if v is None or not math.isfinite(v):
                 return None
             out.append(mi.flip_sign_for_min(v))
         return out
@@ -244,7 +262,10 @@ class StudyConfig:
             prior_study_names=list(p.get("prior_study_names", ())),
         )
         for mp in p.get("metrics", ()):
-            cfg.metrics.append(MetricInformation.from_proto(mp))
+            # through add_metric, NOT a bare append: duplicate metric ids in
+            # a wire blob used to roundtrip silently and leave every
+            # objective lookup ambiguous
+            cfg.metrics.add_metric(MetricInformation.from_proto(mp))
         return cfg
 
 

@@ -19,6 +19,7 @@ learning (see ``align_prior_trials``).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -244,12 +245,19 @@ def trials_to_xy(
     config: StudyConfig,
     converter: Optional[TrialToArrayConverter] = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
-    """(features, larger-is-better objectives) for completed feasible trials."""
+    """(features, larger-is-better objectives) for completed feasible trials.
+
+    ``objective_values`` already refuses trials with missing or non-finite
+    metric values; the explicit finite filter below is defense-in-depth for
+    any caller-constructed config whose scoring path regresses — a NaN label
+    row must NEVER reach a GP fit (it turns the whole Cholesky into NaN and
+    poisons every suggestion of the operation).
+    """
     converter = converter or TrialToArrayConverter(config.search_space)
     rows, ys = [], []
     for t in trials:
         obj = config.objective_values(t)
-        if obj is None:
+        if obj is None or not all(math.isfinite(v) for v in obj):
             continue
         rows.append(t.parameters)
         ys.append(obj)

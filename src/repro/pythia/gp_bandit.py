@@ -5,10 +5,15 @@ Pipeline per suggestion operation (the Policy's lifespan):
   2. Featurize into [0,1]^d (scaling-aware; one-hot categoricals).
   3. Fit GP hyperparameters (ARD Matérn-5/2 + noise) by maximizing the log
      marginal likelihood with Adam (jax.grad), resuming a persisted Adam
-     trajectory when one is stored (paper §6.3).
+     trajectory when one is stored (paper §6.3). Multi-metric studies fit
+     one GP per metric in lockstep through ONE vmapped Adam step per
+     iteration (``MultiMetricGP``), sharing the bucket-padded design.
   4. Maximize UCB over scrambled-Halton candidates + local perturbations of
      the incumbent; fantasize pending trials to avoid duplicate suggestions
-     when ObservationNoise is LOW (paper Appendix B.2).
+     when ObservationNoise is LOW (paper Appendix B.2). Multi-metric
+     studies maximize the hypervolume-scalarized UCB instead — random
+     positive weights per batch member, reference point anchored below the
+     observed Pareto frontier (``_suggest_multi``).
 
 Acquisition runs on the factorized-posterior engine
 (``repro.pythia.posterior.CholeskyPosterior``): K(X, X) is factorized ONCE
@@ -37,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.metadata import Metadata, MetadataDelta
+from repro.core.pareto import default_reference_point, pareto_frontier_indices
 from repro.core.study import TrialSuggestion
 from repro.core.study_config import ObservationNoise, StudyConfig
 from repro.kernels import ops as kops
@@ -67,6 +73,7 @@ from repro.pythia.sparse_posterior import (
 )
 from repro.pythia.state import (
     PolicyState,
+    load_metric_states,
     load_prior_levels,
     load_state,
     store_state,
@@ -77,6 +84,13 @@ jax.config.update("jax_enable_x64", False)
 # acquisition exploration weight (GaussianProcessBandit's default; the
 # policy reads it here instead of constructing a throwaway instance)
 DEFAULT_UCB_BETA = 1.8
+
+# Weight of the linear augmentation term in the hypervolume scalarization:
+# s_w(u) = min_j((u_j - ref_j)/w_j) + HV_AUGMENT * mean_j((u_j - ref_j)/w_j).
+# The min alone is flat wherever one metric's UCB pins the scalarization;
+# the small averaged term breaks those ties toward candidates that improve
+# the OTHER metrics too (the augmented-Chebyshev trick).
+HV_AUGMENT = 0.05
 
 # Above SPARSE_THRESHOLD design rows the hyperparameter fit (Adam on the
 # MLL) runs on this many evenly-strided rows instead of the full design —
@@ -429,6 +443,195 @@ class GaussianProcessBandit:
         return out
 
 
+# Multi-metric fit kernels: the SAME `_fit_step` / `_neg_mll` bodies vmapped
+# over a leading metric axis. raw/adam moments/labels are batched (k, ...);
+# the design, mask and Adam schedule scalars are shared. One device dispatch
+# advances every metric's Adam trajectory one step, and the compiled program
+# depends only on (k, bucket) — a study's k is fixed, so steady-state multi-
+# metric ops compile exactly as often as single-objective ones.
+_fit_step_metrics = jax.jit(jax.vmap(
+    _fit_step, in_axes=(0, 0, 0, None, 0, None, None, None, None)))
+_neg_mll_metrics = jax.jit(jax.vmap(_neg_mll, in_axes=(0, None, 0, None)))
+
+
+def _stack_trees(trees: Sequence[Dict]) -> dict:
+    """k per-metric hyperparameter trees -> one tree with a leading k axis."""
+    return {key: jnp.stack([jnp.asarray(t[key], jnp.float32) for t in trees])
+            for key in ("log_amp", "log_ell", "log_noise")}
+
+
+def _unstack_tree(tree: Dict, k: int) -> List[dict]:
+    """Leading-axis tree -> k per-metric trees (device views, no copies)."""
+    return [{key: tree[key][i] for key in tree} for i in range(k)]
+
+
+def _tree_where(cond_k: jnp.ndarray, a: Dict, b: Dict) -> dict:
+    """Per-metric tree select: ``cond_k`` is a (k,) bool mask broadcast over
+    each leaf's trailing dims (leaves carry the leading metric axis)."""
+    def sel(x, y):
+        c = cond_k.reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.where(c, x, y)
+    return {key: sel(a[key], b[key]) for key in a}
+
+
+@dataclasses.dataclass
+class MultiFitInfo:
+    """Observability + resume record of one MultiMetricGP.fit call.
+
+    Per-metric lists are metric-ordered; ``t`` is the SHARED Adam clock (all
+    metrics step in lockstep through the vmapped kernel). Same best-vs-
+    trajectory split as ``FitInfo``: ``results`` are the returned best-loss
+    hyperparameters, ``raws``/``ms``/``vs``/``t`` the resumable trajectory.
+    """
+
+    results: List[dict]
+    raws: List[dict]
+    ms: List[dict]
+    vs: List[dict]
+    t: int
+    steps_run: int
+    warm: bool
+    converged: bool
+    diverged: bool
+    seconds: float
+
+
+class MultiMetricGP:
+    """k independent GPs (one per objective metric) fitted in lockstep.
+
+    Fitting k metrics used to mean k sequential Adam loops — k compiled-
+    kernel invocations and k host syncs per step. Here every metric shares
+    the engine's bucket-padded design and advances through ONE vmapped
+    ``_fit_step`` dispatch per step, with a single stacked (k, 2) loss/norm
+    transfer. Divergence and best-loss tracking are per metric (a singular
+    Cholesky in one metric's trajectory restores THAT metric to its best
+    point — or the cold init — without discarding the others); the loop
+    exits when every metric's projected step norm is under ``grad_tol``.
+
+    ``fit`` consumes/produces per-metric hyperparameter trees so each
+    metric's ``CholeskyPosterior``/``SparsePosterior`` conditions with its
+    own kernel, while the schema-v4 checkpoint resumes all k trajectories
+    from one shared Adam clock.
+    """
+
+    def __init__(self, dim: int, k: int, *, fit_steps: int = 60,
+                 lr: float = 0.08, seed: int = 0, grad_tol: float = 0.01):
+        self.dim = dim
+        self.k = k
+        self.fit_steps = fit_steps
+        self.lr = lr
+        self.seed = seed
+        self.grad_tol = grad_tol
+        self.last_fit: Optional[MultiFitInfo] = None
+
+    def _cold_stack(self):
+        single = {
+            "log_amp": jnp.asarray(0.0),
+            "log_ell": jnp.full((self.dim,), jnp.log(0.3)),
+            "log_noise": jnp.asarray(jnp.log(1e-2)),
+        }
+        raw = _stack_trees([single] * self.k)
+        zeros = {key: jnp.zeros_like(v) for key, v in raw.items()}
+        return raw, zeros, dict(zeros), 0
+
+    def fit(self, x: np.ndarray, y: np.ndarray,
+            init: Optional[Dict] = None) -> List[dict]:
+        """Per-metric raw hyperparameters after the lockstep Adam fit.
+
+        ``y`` is (n, k), each column already z-scored by the caller. ``init``
+        (optional) is ``PolicyState.metric_fit_init()``: per-metric raw
+        params + Adam moments and the shared step count.
+        """
+        t_wall = time.perf_counter()
+        n, d = np.asarray(x).shape
+        bucket = train_bucket(n)
+        xb = np.zeros((bucket, d), np.float32)
+        yb = np.zeros((self.k, bucket), np.float32)
+        mb = np.zeros((bucket,), np.float32)
+        xb[:n] = x
+        yb[:, :n] = np.asarray(y, np.float32).T
+        mb[:n] = 1.0
+        x = jnp.asarray(xb)
+        yk = jnp.asarray(yb)
+        mask = jnp.asarray(mb)
+        warm = init is not None
+        if warm:
+            raw = _stack_trees(init["raws"])
+            m = _stack_trees(init["adam_m"])
+            v = _stack_trees(init["adam_v"])
+            t0 = int(init["adam_t"])
+        else:
+            raw, m, v, t0 = self._cold_stack()
+        b1, b2 = 0.9, 0.999  # mirrored in _fit_step (eps lives there too)
+        cold_raw, _zm, _zv, _zt = self._cold_stack()
+        best_raw = raw
+        best_loss = np.full((self.k,), np.inf)
+        losses = np.full((self.k,), np.inf)
+        steps = 0
+        converged = diverged = False
+        for t in range(t0 + 1, t0 + self.fit_steps + 1):
+            lr_t = self.lr if t <= self.fit_steps else (
+                self.lr * (self.fit_steps / t) ** 0.5)
+            new_raw, new_m, new_v, stats = _fit_step_metrics(
+                raw, m, v, x, yk, mask, 1 - b1**t, 1 - b2**t, lr_t)
+            steps += 1
+            stats = np.asarray(stats)           # (k, 2): ONE transfer/step
+            losses, norms = stats[:, 0], stats[:, 1]
+            if not np.all(np.isfinite(losses)):
+                # a singular cholesky in >=1 metric: keep best-so-far
+                # everywhere (discard the whole device-side update — the
+                # shared clock means partial acceptance would deschedule)
+                raw = best_raw
+                diverged = True
+                break
+            improved = losses < best_loss
+            if improved.any():
+                best_raw = _tree_where(jnp.asarray(improved), raw, best_raw)
+                best_loss = np.where(improved, losses, best_loss)
+            raw, m, v = new_raw, new_m, new_v
+            if self.grad_tol > 0.0 and np.all(norms < self.grad_tol * lr_t):
+                converged = True  # every metric plateaued
+                break
+        if diverged:
+            # metrics that never saw a finite loss self-heal to the cold init
+            ok = jnp.asarray(np.isfinite(best_loss))
+            best_raw = _tree_where(ok, best_raw, cold_raw)
+            result = best_raw
+            zeros = {key: jnp.zeros_like(val) for key, val in best_raw.items()}
+            traj_raw, traj_m, traj_v, traj_t = best_raw, zeros, dict(zeros), 0
+        elif converged:
+            result = _tree_where(jnp.asarray(losses <= best_loss),
+                                 raw, best_raw)
+            traj_raw, traj_m, traj_v, traj_t = raw, m, v, t0 + steps
+        else:
+            final = np.asarray(_neg_mll_metrics(raw, x, yk, mask))
+            if not np.all(np.isfinite(final)):
+                # never-evaluated post-update end-point singular somewhere:
+                # persist best points with cold moments (see the single-
+                # objective fit for the rationale)
+                ok = jnp.asarray(np.isfinite(best_loss))
+                best_raw = _tree_where(ok, best_raw, cold_raw)
+                raw = best_raw
+                zeros = {key: jnp.zeros_like(val)
+                         for key, val in best_raw.items()}
+                traj_raw, traj_m, traj_v, traj_t = best_raw, zeros, \
+                    dict(zeros), 0
+                result = raw
+            else:
+                traj_raw, traj_m, traj_v, traj_t = raw, m, v, t0 + steps
+                result = _tree_where(jnp.asarray(final <= best_loss),
+                                     raw, best_raw)
+        self.last_fit = MultiFitInfo(
+            results=_unstack_tree(result, self.k),
+            raws=_unstack_tree(traj_raw, self.k),
+            ms=_unstack_tree(traj_m, self.k),
+            vs=_unstack_tree(traj_v, self.k),
+            t=traj_t, steps_run=steps, warm=warm, converged=converged,
+            diverged=diverged, seconds=time.perf_counter() - t_wall,
+        )
+        return self.last_fit.results
+
+
 @jax.jit
 def _stack_means(raw_stack: dict, xs: jnp.ndarray, alphas: jnp.ndarray,
                  xq: jnp.ndarray) -> jnp.ndarray:
@@ -634,11 +837,21 @@ class GPBanditPolicy(Policy):
     checkpoint for the longest prefix of priors whose aligned-trial
     fingerprints still match (``last_prior_levels_reused``).
 
-    ``use_engine=False`` switches the acquisition to the pre-engine path —
-    one full Cholesky refactorization per batch member — kept as the
-    numerical baseline for tests and ``make bench-acquisition``. Both paths
-    share the candidate pool (one scrambled-Halton global half + local
-    perturbations of the incumbent, drawn once per operation) and the
+    Multi-metric studies are first-class (they used to silently degrade to
+    random sampling): ``_suggest_multi`` fits one GP per objective metric —
+    all k Adam trajectories advancing through one vmapped step per
+    iteration — builds one cached posterior per metric over the shared
+    engine buckets, and acquires by hypervolume-scalarized UCB with
+    random-weight Chebyshev scalarizations drawn per batch member. State
+    persists under schema v4 with per-metric trajectories; transfer
+    learning stays single-objective-only (``_load_priors`` skips
+    multi-objective studies).
+
+    ``use_engine=False`` switches the single-objective acquisition to the
+    pre-engine path — one full Cholesky refactorization per batch member —
+    kept as the numerical baseline for tests and ``make bench-acquisition``.
+    Both paths share the candidate pool (one scrambled-Halton global half +
+    local perturbations of the incumbent, drawn once per operation) and the
     fantasy outcomes, so their suggestions agree trial-for-trial.
     """
 
@@ -731,14 +944,17 @@ class GPBanditPolicy(Policy):
             0.0, 0, False
         self.last_prior_levels_reused = 0
 
-        if (x.shape[0] < self._min_completed and not priors) or \
-                config.is_multi_objective:
-            # cold start (or scalarize-free multi-objective fallback): random
+        if x.shape[0] < self._min_completed and not priors:
+            # cold start: random until enough completed trials to fit
             suggestions = [
                 TrialSuggestion(parameters=config.search_space.sample())
                 for _ in range(request.count)
             ]
             return SuggestDecision(suggestions=suggestions)
+
+        if config.is_multi_objective:
+            return self._suggest_multi(request, config, converter, completed,
+                                       x, y_all, op_nonce)
 
         # pending trials are loaded up front: the top level's factorization
         # reserves rank-1 headroom for their fantasies + the batch members
@@ -863,6 +1079,160 @@ class GPBanditPolicy(Policy):
                 prior_levels=[
                     (name, int(px.shape[0]), stack.levels[i].raw)
                     for i, (name, px, _py) in enumerate(priors)
+                ]))
+            self._supporter.SendMetadata(delta)
+        return SuggestDecision(suggestions=suggestions)
+
+    def _suggest_multi(self, request: SuggestRequest, config: StudyConfig,
+                       converter: TrialToArrayConverter, completed,
+                       x: np.ndarray, y_all: np.ndarray,
+                       op_nonce: int) -> SuggestDecision:
+        """Multi-metric acquisition: one GP per metric on the shared engine
+        buckets, hypervolume-scalarized UCB over one candidate pool.
+
+        Fit: all k metrics advance through ONE vmapped Adam step per
+        iteration (``MultiMetricGP``), warm-started from the schema-v4
+        per-metric trajectories. Each metric then gets its own
+        ``CholeskyPosterior``/``SparsePosterior`` over the SAME z-scored
+        design bucket — identical shapes, so every engine kernel stays on
+        its single compiled program regardless of k.
+
+        Acquire: per batch member, draw a positive weight vector w from the
+        op RNG (batch diversity comes from the weights, not greedy
+        fantasization alone) and maximize the hypervolume scalarization
+        s_w(u) = min_j((u_j - ref_j)/w_j) (+ a small averaged term, see
+        ``HV_AUGMENT``) of the per-metric UCB vector u over the pool, with
+        the reference point anchored below the observed frontier
+        (``default_reference_point``). Maximizing E_w[max s_w] targets
+        hypervolume improvement (the Vizier GP-bandit scalarization,
+        arXiv:2408.11527). Pending trials are fantasized per metric with
+        rank-1 appends; picked members fantasize at their per-metric
+        posterior means via ``append_pool_member``.
+        """
+        pending = self._supporter.ActiveTrials(request.study_guid)
+        fantasy_x = converter.to_features(
+            [t.parameters for t in pending]) if pending else None
+        n_pend = 0 if fantasy_x is None else len(fantasy_x)
+        # same acquisition-RNG nonce as the single-objective path (see
+        # suggest()): deterministic per observed snapshot + op index
+        rng = np.random.RandomState(
+            (self._seed + len(completed) + 1000003 * n_pend
+             + 7919 * op_nonce) % (2 ** 32))
+        headroom = n_pend + request.count
+        k = len(config.metrics)
+        metric_names = [mi.name for mi in config.metrics]
+        n = int(x.shape[0])
+
+        # per-metric z-scoring: each objective owns its own scale, so one
+        # wide-range metric cannot drown the others in the scalarization
+        yz = np.stack([_zscore(y_all[:, j]) for j in range(k)], axis=1)
+
+        state = None
+        if self._warm_start:
+            state = load_metric_states(
+                request.study_metadata, dim=converter.dim, num_trials=n,
+                metric_names=metric_names)
+        gp = MultiMetricGP(dim=converter.dim, k=k, seed=self._seed)
+        init = state.metric_fit_init() if state is not None else None
+        sparse = n > SPARSE_THRESHOLD
+        if sparse:
+            if init is not None:
+                gp.fit_steps = min(gp.fit_steps, SPARSE_WARM_FIT_STEPS)
+            idx = _fit_subsample_idx(n)
+            raws = gp.fit(x[idx], yz[idx], init=init)
+        else:
+            raws = gp.fit(x, yz, init=init)
+        fit_info = gp.last_fit
+        self.last_fit_seconds = fit_info.seconds
+        self.last_fit_steps = fit_info.steps_run
+        self.last_fit_warm = fit_info.warm
+        self.last_sparse = sparse
+
+        # one posterior per metric over the SAME design rows and capacity:
+        # identical bucket shapes -> the engine kernels compiled for metric 0
+        # serve metrics 1..k-1 (and every single-objective study) unchanged
+        posts: List = []
+        for j in range(k):
+            if sparse:
+                posts.append(SparsePosterior(
+                    raws[j], x, yz[:, j], n_inducing=N_INDUCING,
+                    seed=self._seed, capacity=n + headroom))
+            else:
+                posts.append(CholeskyPosterior(
+                    raws[j], x, yz[:, j], capacity=n + headroom))
+
+        # incumbent frontier + reference point from the OBSERVED (z-scored)
+        # objectives; the pool sharpens around a balanced frontier member
+        front_idx = pareto_frontier_indices(yz)
+        ref = default_reference_point(yz)                     # (k,)
+        front = yz[front_idx]
+        incumbent = x[front_idx[int(np.argmax(front.sum(axis=1)))]]
+        pool = self._draw_pool(rng, converter.dim, incumbent)
+
+        fantasize = fantasy_x is not None and n_pend > 0 and (
+            config.observation_noise != ObservationNoise.HIGH
+        )
+        if fantasize:
+            d = np.linalg.norm(pool[:, None, :] - fantasy_x[None], axis=-1)
+            filtered = pool[np.min(d, axis=1) > 1e-3]
+            if len(filtered):
+                pool = filtered
+            # per-metric fantasy outcomes, conditioned with rank-1 appends;
+            # ONE eps draw shared across metrics keeps the fantasies
+            # consistent (a lucky pending trial is lucky on every metric)
+            eps = rng.randn(self._n_fantasies, n_pend).mean(axis=0)
+            for post in posts:
+                mean_p, std_p = post.query(fantasy_x)
+                for px, py in zip(fantasy_x, mean_p + std_p * eps):
+                    post.append(px, py)
+
+        for post in posts:
+            post.set_pool(pool)
+
+        beta = DEFAULT_UCB_BETA
+        picks: List[np.ndarray] = []
+        picked_idx: List[int] = []
+        u = np.empty((k, len(pool)), np.float64)
+        for b in range(request.count):
+            # random positive scalarization weights per batch member: each
+            # member chases a different frontier direction
+            w = rng.rand(k) + 1e-3
+            w = w / w.sum()
+            for j, post in enumerate(posts):
+                mean, std = post.pool_mean_std()   # fused, one sync/metric
+                u[j] = mean + beta * std
+            t = (u - ref[:, None]) / w[:, None]
+            scores = np.min(t, axis=0) + HV_AUGMENT * np.mean(t, axis=0)
+            scores[picked_idx] = -np.inf
+            i = int(np.argmax(scores))
+            picks.append(pool[i])
+            picked_idx.append(i)
+            if b + 1 < request.count:
+                # fantasize the member at its posterior mean on EVERY metric
+                for post in posts:
+                    post.append_pool_member(i)
+        suggestions = [
+            TrialSuggestion(parameters=converter.to_parameters(p[None, :])[0])
+            for p in picks
+        ]
+
+        if self._warm_start and fit_info is not None:
+            # schema-v4 checkpoint: metric 0's trajectory doubles as the
+            # top-level record (single-blob layout), metric_states carries
+            # all k trajectories under the shared Adam clock
+            info0 = FitInfo(
+                result=fit_info.results[0], raw=fit_info.raws[0],
+                m=fit_info.ms[0], v=fit_info.vs[0], t=fit_info.t,
+                steps_run=fit_info.steps_run, warm=fit_info.warm,
+                converged=fit_info.converged, diverged=fit_info.diverged,
+                seconds=fit_info.seconds)
+            delta = MetadataDelta()
+            store_state(delta, PolicyState.from_fit(
+                info0, dim=converter.dim, num_trials=n,
+                metric_states=[
+                    (metric_names[j], fit_info.raws[j], fit_info.ms[j],
+                     fit_info.vs[j])
+                    for j in range(k)
                 ]))
             self._supporter.SendMetadata(delta)
         return SuggestDecision(suggestions=suggestions)

@@ -230,6 +230,17 @@ def _pool_scores(mean: jnp.ndarray, var: jnp.ndarray,
     return mean + beta * jnp.sqrt(jnp.maximum(var, 1e-10))
 
 
+@jax.jit
+def _pool_mean_std(mean: jnp.ndarray, var: jnp.ndarray) -> jnp.ndarray:
+    """Stacked (2, M) [mean; std] so both pool statistics cross the host
+    boundary in ONE sync — the multi-metric scalarized acquisition needs
+    mean AND std per metric, and separate pool_mean()/pool_std() calls
+    would double the per-metric transfer count. Shape depends only on the
+    pool bucket, so every metric's posterior reuses the same compilation."""
+    TRACE_COUNTS["pool_mean_std"] += 1
+    return jnp.stack([mean, jnp.sqrt(jnp.maximum(var, 1e-10))])
+
+
 class CholeskyPosterior:
     """Cached-factorization GP posterior for one suggest operation.
 
@@ -284,6 +295,13 @@ class CholeskyPosterior:
         ONE host sync (the count-loop's only per-member transfer)."""
         return np.asarray(_pool_scores(
             self._pool_mean, self._pool_var, jnp.float32(beta)))[: self._m]
+
+    def pool_mean_std(self) -> "tuple[np.ndarray, np.ndarray]":
+        """(mean, std) of the attached pool, fused into one dispatch and one
+        host sync — the per-metric transfer of the multi-metric scalarized
+        acquisition (k metrics cost k syncs per rescoring, not 2k)."""
+        ms = np.asarray(_pool_mean_std(self._pool_mean, self._pool_var))
+        return ms[0, : self._m], ms[1, : self._m]
 
     # -- extension -----------------------------------------------------------
     def append(self, x_new, y_new) -> None:

@@ -25,6 +25,19 @@ PolicyFactory = Callable[[PolicySupporter, StudyConfig], Policy]
 _REGISTRY: Dict[str, PolicyFactory] = {}
 
 
+class PolicyConstructionError(ValueError):
+    """The requested algorithm cannot be built for this study config.
+
+    This is a PERMANENT client error (unknown algorithm name, or an
+    algorithm/config mismatch like a single-objective designer on a
+    multi-metric study), so it carries ``code`` = INVALID_ARGUMENT (3):
+    ``fail_operation_from_exception`` duck-types on ``.code``, and clients
+    stop retrying what used to surface as a retryable INTERNAL (13).
+    """
+
+    code = 3  # StatusCode.INVALID_ARGUMENT (registry stays transport-free)
+
+
 def register(name: str):
     def deco(factory: PolicyFactory) -> PolicyFactory:
         _REGISTRY[name.upper()] = factory
@@ -36,10 +49,17 @@ def register(name: str):
 def make_policy(algorithm: str, supporter: PolicySupporter, config: StudyConfig) -> Policy:
     name = (algorithm or "DEFAULT").upper()
     if name not in _REGISTRY:
-        raise KeyError(
+        raise PolicyConstructionError(
             f"unknown algorithm {algorithm!r}; registered: {sorted(_REGISTRY)}"
         )
-    return _REGISTRY[name](supporter, config)
+    try:
+        return _REGISTRY[name](supporter, config)
+    except (ValueError, KeyError, TypeError) as e:
+        # e.g. REGULARIZED_EVOLUTION explicitly selected on a multi-metric
+        # study: single_objective_metric() raises inside the factory
+        raise PolicyConstructionError(
+            f"algorithm {name!r} cannot serve this study config: "
+            f"{type(e).__name__}: {e}") from e
 
 
 def registered_algorithms():
@@ -72,6 +92,9 @@ def _halton(supporter, config):
 
 @register("REGULARIZED_EVOLUTION")
 def _regevo(supporter, config):
+    # eager mismatch check: the designer itself is built lazily per request,
+    # so validate here where make_policy maps the failure to INVALID_ARGUMENT
+    config.single_objective_metric()
     return SerializableDesignerPolicy(
         supporter,
         lambda cfg: RegularizedEvolutionDesigner(cfg),
@@ -105,8 +128,8 @@ def _gp2(supporter, config):
 
 @register("DEFAULT")
 def _default(supporter, config):
-    """GP bandit for expensive single-objective studies; NSGA-II for
-    multi-objective — mirroring Google Vizier's default behavior."""
-    if config.is_multi_objective:
-        return _REGISTRY["NSGA2"](supporter, config)
+    """GP bandit for expensive studies, single- AND multi-objective: the
+    multi-metric path fits one GP per metric on the shared engine buckets and
+    acquires via hypervolume-scalarized UCB. NSGA-II stays registered as the
+    explicit cheap-evaluation baseline (``algorithm="NSGA2"``)."""
     return GPBanditPolicy(supporter)

@@ -64,6 +64,7 @@ from repro.pythia.posterior import (
     _JITTER,
     TRACE_COUNTS,
     _gram,
+    _pool_mean_std,
     _pool_scores,
     pool_bucket,
     train_bucket,
@@ -295,6 +296,13 @@ class SparsePosterior:
         ONE host sync (the count-loop's only per-member transfer)."""
         return np.asarray(_pool_scores(
             self._pool_mean, self._pool_var, jnp.float32(beta)))[: self._m]
+
+    def pool_mean_std(self) -> "tuple[np.ndarray, np.ndarray]":
+        """(mean, std) of the attached pool, fused into one dispatch and one
+        host sync — shares the dense engine's compiled kernel (shape depends
+        only on the pool bucket)."""
+        ms = np.asarray(_pool_mean_std(self._pool_mean, self._pool_var))
+        return ms[0, : self._m], ms[1, : self._m]
 
     # -- extension -----------------------------------------------------------
     def _check_capacity(self) -> None:

@@ -52,7 +52,16 @@ STATE_KEY = "state"
 # only on levels 0..i-1, so the longest matching prefix skips its Adam
 # refits (~60ms/op per prior) even when a later prior changed. Per the
 # version-bump policy (ROADMAP), v1/v2 blobs are treated as a cold start.
-STATE_SCHEMA_VERSION = 3
+# v4 (multi-metric): adds ``metric_states`` — one ordered
+# {"name", "raw", "adam_m", "adam_v"} entry per objective metric for
+# multi-metric studies (one GP per metric shares the blob's adam_t clock;
+# metric 0's trajectory is ALSO the top-level raw/adam_m/adam_v, keeping
+# the required-field validation identical for both study kinds).
+# Single-objective studies write ``metric_states == []``. v3 blobs are a
+# cold start, and a multi-metric blob is incompatible with the
+# single-objective path (and vice versa) — see check_compatible /
+# load_metric_states.
+STATE_SCHEMA_VERSION = 4
 GP_BANDIT_ALGORITHM = "gp_bandit"
 
 # The hyperparameter tree layout shared by raw params and Adam moments:
@@ -127,6 +136,11 @@ class PolicyState:
     # the raw hyperparameters of level i are valid iff priors 0..i all still
     # fingerprint-match (prefix reuse, see load_prior_levels)
     prior_levels: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    # per-metric GP trajectories (v4): ordered
+    # [{"name", "raw", "adam_m", "adam_v"}, ...] for multi-metric studies
+    # (adam_t is shared — the metrics step in lockstep through one vmapped
+    # fit); [] for single-objective studies
+    metric_states: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
     version: int = STATE_SCHEMA_VERSION
     algorithm: str = GP_BANDIT_ALGORITHM
 
@@ -146,6 +160,7 @@ class PolicyState:
             "converged": self.converged,
             "prior_fingerprints": dict(self.prior_fingerprints),
             "prior_levels": [dict(lvl) for lvl in self.prior_levels],
+            "metric_states": [dict(ms) for ms in self.metric_states],
         })
 
     @classmethod
@@ -211,6 +226,29 @@ class PolicyState:
                 "raw": _validate_tree(f"prior_levels[{i}].raw",
                                       lvl.get("raw"), dim),
             })
+        ms = obj.get("metric_states", [])
+        if not isinstance(ms, list):
+            raise StateDecodeError(f"bad metric_states {ms!r}")
+        if len(ms) == 1:
+            raise StateDecodeError(
+                "metric_states with exactly one entry: multi-metric records "
+                "need k >= 2 metrics, single-objective records need []")
+        metric_states: List[Dict[str, Any]] = []
+        for i, entry in enumerate(ms):
+            if not isinstance(entry, dict):
+                raise StateDecodeError(f"metric_states[{i}]: not an object")
+            name = entry.get("name")
+            if not isinstance(name, str) or not name:
+                raise StateDecodeError(f"metric_states[{i}].name: {name!r}")
+            metric_states.append({
+                "name": name,
+                "raw": _validate_tree(f"metric_states[{i}].raw",
+                                      entry.get("raw"), dim),
+                "adam_m": _validate_tree(f"metric_states[{i}].adam_m",
+                                         entry.get("adam_m"), dim),
+                "adam_v": _validate_tree(f"metric_states[{i}].adam_v",
+                                         entry.get("adam_v"), dim),
+            })
         return cls(
             dim=dim,
             num_trials=num_trials,
@@ -223,6 +261,7 @@ class PolicyState:
             converged=bool(obj.get("converged", False)),
             prior_fingerprints=prior_fingerprints,
             prior_levels=prior_levels,
+            metric_states=metric_states,
             version=version,
             algorithm=str(algorithm),
         )
@@ -231,7 +270,23 @@ class PolicyState:
     def check_compatible(self, *, dim: int, num_trials: int,
                          algorithm: str = GP_BANDIT_ALGORITHM,
                          prior_fingerprints: Optional[Dict[str, int]] = None,
+                         metric_names: Optional[List[str]] = None,
                          ) -> None:
+        """``metric_names=None`` is the single-objective path: a blob carrying
+        per-metric trajectories belongs to a different (multi-metric) study
+        shape and is rejected. The multi-metric path passes the ordered
+        objective names and requires an exact match — a renamed, reordered,
+        added or dropped metric changes every fit target."""
+        stored_names = [ms["name"] for ms in self.metric_states]
+        if metric_names is None:
+            if stored_names:
+                raise StateDecodeError(
+                    f"multi-metric state ({stored_names!r}) on the "
+                    "single-objective path")
+        elif stored_names != list(metric_names):
+            raise StateDecodeError(
+                f"metric skew: stored {stored_names!r}, "
+                f"study has {list(metric_names)!r}")
         if self.algorithm != algorithm:
             raise StateDecodeError(
                 f"algorithm mismatch: stored {self.algorithm!r}, want {algorithm!r}")
@@ -256,15 +311,27 @@ class PolicyState:
         return {"raw": self.raw, "adam_m": self.adam_m, "adam_v": self.adam_v,
                 "adam_t": self.adam_t}
 
+    def metric_fit_init(self) -> Dict[str, Any]:
+        """The warm-start init accepted by MultiMetricGP.fit: per-metric
+        trees in metric order plus the shared Adam clock."""
+        return {"raws": [ms["raw"] for ms in self.metric_states],
+                "adam_m": [ms["adam_m"] for ms in self.metric_states],
+                "adam_v": [ms["adam_v"] for ms in self.metric_states],
+                "adam_t": self.adam_t}
+
     @classmethod
     def from_fit(cls, info, *, dim: int, num_trials: int,
                  prior_fingerprints: Optional[Dict[str, int]] = None,
                  prior_levels: Optional[List] = None,
+                 metric_states: Optional[List] = None,
                  ) -> "PolicyState":
         """Builds the record from a GaussianProcessBandit FitInfo.
 
         ``prior_levels``: ordered [(study name, aligned-trial count, raw
         hyperparameter tree), ...] for the fitted PRIOR stack levels.
+        ``metric_states``: ordered [(metric name, raw, adam_m, adam_v), ...]
+        per-metric trajectories for multi-metric studies (``info`` must then
+        be metric 0's view, so the top-level fields mirror the first entry).
         """
         return cls(
             dim=dim,
@@ -280,6 +347,11 @@ class PolicyState:
             prior_levels=[
                 {"name": name, "num_trials": int(nt), "raw": _tree_to_py(raw)}
                 for name, nt, raw in (prior_levels or [])
+            ],
+            metric_states=[
+                {"name": name, "raw": _tree_to_py(raw),
+                 "adam_m": _tree_to_py(m), "adam_v": _tree_to_py(v)}
+                for name, raw, m, v in (metric_states or [])
             ],
         )
 
@@ -297,6 +369,29 @@ def load_state(metadata: Metadata, *, dim: int, num_trials: int,
         state = PolicyState.from_value(value)
         state.check_compatible(dim=dim, num_trials=num_trials,
                                prior_fingerprints=prior_fingerprints)
+        return state
+    except StateDecodeError:
+        return None
+    except Exception:  # noqa: BLE001 — a bad blob must never fail a suggest
+        return None
+
+
+def load_metric_states(metadata: Metadata, *, dim: int, num_trials: int,
+                       metric_names: List[str],
+                       namespace: str = GP_BANDIT_NAMESPACE,
+                       ) -> Optional[PolicyState]:
+    """Multi-metric counterpart of ``load_state``: the stored record must
+    carry one trajectory per objective metric, names matching in order
+    (plus all the usual dim / fingerprint / algorithm checks). Returns the
+    whole PolicyState — the warm fit consumes ``metric_states`` for the
+    per-metric trees and the top-level ``adam_t`` as the shared clock.
+    ``None`` on ANY problem (cold fit), never an exception.
+    """
+    try:
+        value = metadata.abs_ns(Namespace(namespace)).get(STATE_KEY)
+        state = PolicyState.from_value(value)
+        state.check_compatible(dim=dim, num_trials=num_trials,
+                               metric_names=list(metric_names))
         return state
     except StateDecodeError:
         return None

@@ -281,6 +281,45 @@ class VizierClient:
         result = self._rpc.call("ListOptimalTrials", {"parent": self._study_name})
         return [Trial.from_proto(p) for p in result["optimal_trials"]]
 
+    def pareto_frontier(self) -> "tuple[List[Trial], List[List[float]]]":
+        """(frontier trials, their larger-is-better objective vectors).
+
+        The trial set is the server's ``ListOptimalTrials`` answer (for a
+        single-objective study that is the single best trial); the vectors
+        come from the study config's own scoring, so MINIMIZE metrics arrive
+        sign-flipped exactly as the optimizer saw them. Trials the config
+        cannot score (shouldn't happen for server-returned optima) are
+        dropped from both lists in lockstep.
+        """
+        config = self.get_study_config()
+        trials, vectors = [], []
+        for t in self.list_optimal_trials():
+            obj = config.objective_values(t)
+            if obj is None:
+                continue
+            trials.append(t)
+            vectors.append(obj)
+        return trials, vectors
+
+    def hypervolume(self, reference_point: Optional[List[float]] = None,
+                    ) -> float:
+        """Hypervolume dominated by the study's Pareto frontier.
+
+        ``reference_point`` is in the larger-is-better convention (one value
+        per metric, in config order); omitted, it anchors below the observed
+        objectives via ``default_reference_point`` — fine for tracking
+        progress within one study, but comparisons ACROSS studies or
+        algorithms must pass the same explicit point.
+        """
+        from repro.core.pareto import default_reference_point, hypervolume
+
+        _trials, vectors = self.pareto_frontier()
+        if not vectors:
+            return 0.0
+        if reference_point is None:
+            reference_point = default_reference_point(vectors)
+        return hypervolume(vectors, reference_point)
+
     def add_trial(self, trial: Trial) -> Trial:
         """Registers a pre-evaluated trial (baseline / transfer learning)."""
         result = self._rpc.call(

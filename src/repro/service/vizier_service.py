@@ -377,7 +377,14 @@ class VizierService(Servicer):
     def CreateStudy(self, params: dict) -> dict:
         owner = params.get("owner", "default")
         display_name = params.get("display_name") or f"study-{int(time.time()*1e3)}"
-        config = StudyConfig.from_proto(params["study_spec"])
+        try:
+            config = StudyConfig.from_proto(params["study_spec"])
+        except (ValueError, KeyError, TypeError) as e:
+            # malformed spec (e.g. duplicate metric ids): permanent client
+            # error, not a retryable INTERNAL
+            raise VizierRpcError(
+                StatusCode.INVALID_ARGUMENT,
+                f"invalid study_spec: {type(e).__name__}: {e}") from e
         name = f"owners/{owner}/studies/{display_name}"
         study = Study(name=name, display_name=display_name, study_config=config)
         try:

@@ -1,0 +1,478 @@
+"""Multi-metric GP-bandit: Pareto-aware acquisition on the shared engine.
+
+Covers the schema-v4 per-metric state record (roundtrip, strict decode,
+name-order/dim compatibility, v3 cold start), the multi-metric suggestion
+path end to end through the service (GP path — not the old silent random
+fallback), the engine compile pin (one compiled kernel set regardless of
+metric count k), the remote frame budget (1 GetTrialsMulti + 1
+PythiaBatchSuggest per coalesced batch, unchanged by multi-metric), the
+non-finite-objective regressions (NaN/inf trials never optimal, never in a
+GP fit), and the policy-construction error mapping (INVALID_ARGUMENT, not
+retryable INTERNAL).
+"""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import Measurement, StudyConfig, Trial
+from repro.core.metadata import MetadataDelta, Namespace
+from repro.core.study import Study
+from repro.pythia.converters import TrialToArrayConverter, trials_to_xy
+from repro.pythia.policy import StudyDescriptor, SuggestRequest
+from repro.pythia.posterior import TRACE_COUNTS, reset_trace_counts
+from repro.pythia.registry import PolicyConstructionError, make_policy
+from repro.pythia.state import (
+    GP_BANDIT_NAMESPACE,
+    STATE_KEY,
+    STATE_SCHEMA_VERSION,
+    PolicyState,
+    StateDecodeError,
+    load_metric_states,
+)
+from repro.pythia.supporter import DatastorePolicySupporter
+from repro.service import (
+    DefaultVizierServer,
+    DistributedVizierServer,
+    OperationFailedError,
+    VizierBatchClient,
+    VizierClient,
+)
+from repro.service.datastore import InMemoryDatastore
+
+# -- fixtures ----------------------------------------------------------------
+
+
+def _mm_config(k: int = 2, algorithm: str = "DEFAULT") -> StudyConfig:
+    cfg = StudyConfig()
+    root = cfg.search_space.select_root()
+    root.add_float_param("x", 0.0, 1.0)
+    root.add_float_param("y", 0.0, 1.0)
+    for j in range(k):
+        cfg.metrics.add(f"m{j}", "MAXIMIZE")
+    cfg.algorithm = algorithm
+    return cfg
+
+
+_CENTERS = [(0.2, 0.7), (0.8, 0.3), (0.5, 0.95)]
+
+
+def _objectives(params: dict, k: int) -> dict:
+    return {
+        f"m{j}": -((params["x"] - cx) ** 2 + (params["y"] - cy) ** 2)
+        for j, (cx, cy) in enumerate(_CENTERS[:k])
+    }
+
+
+def _seed_study(client: VizierClient, k: int, n: int = 8) -> None:
+    for i in range(n):
+        params = {"x": (i + 1) / (n + 1.0), "y": ((i * 3) % 7) / 7.0}
+        t = Trial(parameters=params)
+        t.complete(Measurement(metrics=_objectives(params, k)))
+        client.add_trial(t)
+
+
+def _stored_state(datastore, study_name: str) -> PolicyState:
+    md = datastore.get_study(study_name).study_config.metadata
+    blob = md.abs_ns(Namespace(GP_BANDIT_NAMESPACE)).get(STATE_KEY)
+    assert blob is not None, "no persisted GP-bandit state"
+    return PolicyState.from_value(blob)
+
+
+def _policy_loop_setup(k: int, name: str):
+    """Direct datastore + policy, no server: the benchmark-style loop."""
+    cfg = _mm_config(k)
+    ds = InMemoryDatastore()
+    study = Study(name=f"owners/t/studies/{name}", study_config=cfg)
+    ds.create_study(study)
+    supporter = DatastorePolicySupporter(ds, study.name)
+    policy = make_policy("DEFAULT", supporter, cfg)
+    return ds, study, policy
+
+
+def _run_op(ds, study, policy, count: int = 1):
+    config = ds.get_study(study.name).study_config  # fresh metadata
+    return policy.suggest(SuggestRequest(
+        study_descriptor=StudyDescriptor(config=config, guid=study.name),
+        count=count))
+
+
+def _complete(ds, study, params: dict, k: int) -> None:
+    t = Trial(parameters=dict(params))
+    t.complete(Measurement(metrics=_objectives(params, k)))
+    ds.create_trial(study.name, t)
+
+
+def _seed_direct(ds, study, k: int, n: int = 8) -> None:
+    for i in range(n):
+        _complete(ds, study,
+                  {"x": (i + 1) / (n + 1.0), "y": ((i * 3) % 7) / 7.0}, k)
+
+
+# -- end to end through the service ------------------------------------------
+
+
+def test_multi_metric_suggestions_end_to_end():
+    """A 2-metric DEFAULT study served in-process: batch of 3 distinct
+    in-bounds suggestions from the GP path, frontier + hypervolume readable
+    through the client API."""
+    server = DefaultVizierServer()
+    try:
+        c = VizierClient.load_or_create_study(
+            "mm-e2e", _mm_config(k=2), client_id="w", target=server.address)
+        _seed_study(c, k=2)
+        trials = c.get_suggestions(count=3)
+        assert len(trials) == 3
+        seen = set()
+        for t in trials:
+            p = t.parameters.as_dict()
+            assert 0.0 <= p["x"] <= 1.0 and 0.0 <= p["y"] <= 1.0
+            seen.add((round(p["x"], 9), round(p["y"], 9)))
+        assert len(seen) == 3, "batch members collapsed onto one point"
+        for t in trials:
+            c.complete_trial(_objectives(t.parameters.as_dict(), 2),
+                             trial_id=t.id)
+        frontier, vectors = c.pareto_frontier()
+        assert frontier and len(frontier) == len(vectors)
+        assert all(len(v) == 2 and all(math.isfinite(x) for x in v)
+                   for v in vectors)
+        assert c.hypervolume() > 0.0
+        c.close()
+    finally:
+        server.stop()
+
+
+def test_multi_metric_uses_gp_path_and_persists_v4():
+    """The DEFAULT policy on a multi-metric study fits real GPs (it used to
+    silently fall back to random sampling forever): the op persists a
+    schema-v4 checkpoint with one named trajectory per metric, in config
+    order, metric 0 mirrored at the top level; the second op warm-starts."""
+    ds, study, policy = _policy_loop_setup(k=2, name="mm-gp-path")
+    _seed_direct(ds, study, k=2)
+    decision = _run_op(ds, study, policy)
+    assert len(decision.suggestions) == 1
+    state = _stored_state(ds, study.name)
+    assert state.version == STATE_SCHEMA_VERSION == 4
+    assert [ms["name"] for ms in state.metric_states] == ["m0", "m1"]
+    assert state.metric_states[0]["raw"] == state.raw  # mirror layout
+    assert not state.warm_started
+    # per-metric trajectories genuinely differ (k independent fits, one clock)
+    assert state.metric_states[0]["raw"] != state.metric_states[1]["raw"]
+
+    p = decision.suggestions[0].parameters
+    _complete(ds, study, {"x": p["x"].as_float, "y": p["y"].as_float}, k=2)
+    _run_op(ds, study, policy)
+    state2 = _stored_state(ds, study.name)
+    assert state2.warm_started and state2.num_trials == 9
+    assert [ms["name"] for ms in state2.metric_states] == ["m0", "m1"]
+
+
+def test_single_objective_state_has_empty_metric_states():
+    server = DefaultVizierServer()
+    try:
+        cfg = _mm_config(k=1, algorithm="GP_UCB")
+        c = VizierClient.load_or_create_study(
+            "mm-single", cfg, client_id="w", target=server.address)
+        _seed_study(c, k=1)
+        c.get_suggestions(count=1)
+        state = _stored_state(server.datastore, c.study_name)
+        assert state.metric_states == []
+        c.close()
+    finally:
+        server.stop()
+
+
+# -- schema v4 record --------------------------------------------------------
+
+
+def _v4_blob(ds, study, policy) -> dict:
+    """A genuine persisted v4 multi-metric blob, as a json object."""
+    _seed_direct(ds, study, k=2)
+    _run_op(ds, study, policy)
+    return json.loads(_stored_state(ds, study.name).to_value())
+
+
+def test_v4_roundtrip_and_strict_decode():
+    ds, study, policy = _policy_loop_setup(k=2, name="mm-blob")
+    obj = _v4_blob(ds, study, policy)
+    state = PolicyState.from_value(json.dumps(obj))
+    assert PolicyState.from_value(state.to_value()) == state
+    assert len(state.metric_states) == 2
+
+    # exactly one metric_states entry is invalid on its face: multi-metric
+    # records carry k >= 2, single-objective records carry []
+    one = dict(obj, metric_states=obj["metric_states"][:1])
+    with pytest.raises(StateDecodeError):
+        PolicyState.from_value(json.dumps(one))
+    # non-list metric_states
+    with pytest.raises(StateDecodeError):
+        PolicyState.from_value(json.dumps(dict(obj, metric_states={"a": 1})))
+    # entry missing its trees
+    broken = dict(obj, metric_states=[obj["metric_states"][0],
+                                      {"name": "m1"}])
+    with pytest.raises(StateDecodeError):
+        PolicyState.from_value(json.dumps(broken))
+
+
+def test_load_metric_states_compatibility_gates():
+    """Name-set, name-ORDER, and dim mismatches all cold-start (None), and
+    never raise — a stale blob must never fail a suggestion op."""
+    ds, study, policy = _policy_loop_setup(k=2, name="mm-compat")
+    _v4_blob(ds, study, policy)
+    md = ds.get_study(study.name).study_config.metadata
+    good = load_metric_states(md, dim=2, num_trials=8,
+                              metric_names=["m0", "m1"])
+    assert good is not None and len(good.metric_states) == 2
+    assert load_metric_states(md, dim=2, num_trials=8,
+                              metric_names=["m1", "m0"]) is None  # order
+    assert load_metric_states(md, dim=2, num_trials=8,
+                              metric_names=["m0", "renamed"]) is None
+    assert load_metric_states(md, dim=2, num_trials=8,
+                              metric_names=["m0", "m1", "m2"]) is None
+    assert load_metric_states(md, dim=5, num_trials=8,
+                              metric_names=["m0", "m1"]) is None  # dim skew
+    # a single-objective load against the same blob rejects it too
+    from repro.pythia.state import load_state
+    assert load_state(md, dim=2, num_trials=8) is None
+
+
+@pytest.mark.parametrize("blob", [
+    "garbage",
+    json.dumps({"version": 3, "algorithm": "gp_bandit"}),  # pre-multi schema
+])
+def test_v3_or_corrupt_blob_cold_starts_multi(blob):
+    """Schema skew through the live service: plant a v3/corrupt blob, the
+    multi-metric suggestion still succeeds, cold-fits, and overwrites the
+    blob with a fresh v4 checkpoint."""
+    server = DefaultVizierServer()
+    try:
+        c = VizierClient.load_or_create_study(
+            f"mm-skew-{abs(hash(blob)) % 1000}", _mm_config(k=2),
+            client_id="w", target=server.address)
+        _seed_study(c, k=2)
+        delta = MetadataDelta()
+        delta.assign(GP_BANDIT_NAMESPACE, STATE_KEY, blob)
+        c.update_metadata(delta)
+
+        (t,) = c.get_suggestions(count=1)  # must not error
+        assert t.id >= 1
+        state = _stored_state(server.datastore, c.study_name)
+        assert state.version == STATE_SCHEMA_VERSION
+        assert not state.warm_started  # fell back to the cold path
+        assert [ms["name"] for ms in state.metric_states] == ["m0", "m1"]
+        c.close()
+    finally:
+        server.stop()
+
+
+# -- engine compile pin ------------------------------------------------------
+
+
+def test_one_compiled_kernel_set_across_metric_counts():
+    """THE multi-metric engine invariant: ops at k=2 and k=3, at different
+    trial counts and batch sizes, all run on at most ONE compiled program
+    per engine kernel — per-metric posteriors share bucket shapes, so the
+    kernels compiled for metric 0 serve every other metric and k."""
+    ds2, study2, policy2 = _policy_loop_setup(k=2, name="mm-compile-k2")
+    ds3, study3, policy3 = _policy_loop_setup(k=3, name="mm-compile-k3")
+    _seed_direct(ds2, study2, k=2)
+    _seed_direct(ds3, study3, k=3, n=11)  # different n, same 64-bucket
+    reset_trace_counts()
+    d = _run_op(ds2, study2, policy2, count=2)   # batch: rank-1 appends
+    p = d.suggestions[0].parameters
+    _complete(ds2, study2, {"x": p["x"].as_float, "y": p["y"].as_float}, k=2)
+    _run_op(ds2, study2, policy2, count=1)       # n grew within the bucket
+    _run_op(ds3, study3, policy3, count=3)       # k=3 study, larger batch
+    # <= 1, not == 1: process-wide jit caches may already be warm from other
+    # tests — what is pinned is that multi-metric shapes never RETRACE
+    assert all(v <= 1 for v in TRACE_COUNTS.values()), dict(TRACE_COUNTS)
+
+
+def test_pool_mean_std_kernel_ticks_on_fresh_shapes():
+    """Sanity for the fused acquisition read the multi path leans on (the
+    retrace pin above is not vacuously green): a never-seen bucket traces
+    ``pool_mean_std`` exactly once, and the two rows match the separate
+    mean/std reads."""
+    from repro.pythia.posterior import CholeskyPosterior
+
+    rng = np.random.RandomState(0)
+    d = 9  # dimension unused anywhere else in the suite
+    raw = {"log_amp": 0.0, "log_ell": np.zeros(d), "log_noise": -2.0}
+    reset_trace_counts()
+    post = CholeskyPosterior(raw, rng.rand(12, d), rng.randn(12))
+    post.set_pool(rng.rand(40, d))
+    mean, std = post.pool_mean_std()
+    assert TRACE_COUNTS["pool_mean_std"] == 1
+    np.testing.assert_allclose(mean, post.pool_mean(), rtol=1e-6)
+    np.testing.assert_allclose(std, post.pool_std(), rtol=1e-6)
+    post.pool_mean_std()
+    assert TRACE_COUNTS["pool_mean_std"] == 1  # second read: no retrace
+
+
+# -- remote frame budget -----------------------------------------------------
+
+
+def test_remote_frame_budget_unchanged_by_multimetric():
+    """Figure-2 split with k=2: one coalesced batch still costs exactly one
+    GetTrialsMulti prefetch and one PythiaBatchSuggest dispatch — the
+    per-metric GPs add zero frames (no metadata RPC, no config or trial
+    re-fetch)."""
+    server = DistributedVizierServer()
+    try:
+        c = VizierClient.load_or_create_study(
+            "mm-frames", _mm_config(k=2), client_id="w",
+            target=server.address)
+        _seed_study(c, k=2)
+        batch = VizierBatchClient(server.address)
+        (trials,) = batch.get_suggestions(
+            [{"study_name": c.study_name, "client_id": "w", "count": 2}])
+        assert len(trials) == 2
+        for t in trials:
+            c.complete_trial(_objectives(t.parameters.as_dict(), 2),
+                             trial_id=t.id)
+
+        server.servicer.reset_method_counts()
+        server.pythia_servicer.reset_method_counts()
+        (trials2,) = batch.get_suggestions(
+            [{"study_name": c.study_name, "client_id": "w", "count": 2}])
+        assert len(trials2) == 2
+        pythia_counts = server.pythia_servicer.method_counts()
+        api_counts = server.servicer.method_counts()
+        assert pythia_counts.get("PythiaBatchSuggest") == 1
+        assert api_counts.get("GetTrialsMulti") == 1
+        assert "UpdateMetadata" not in api_counts
+        assert "GetStudy" not in api_counts
+        assert "ListTrials" not in api_counts
+        # and the warm-start state still rode those frames (v4, both metrics)
+        state = _stored_state(server.datastore, c.study_name)
+        assert state.warm_started
+        assert len(state.metric_states) == 2
+        batch.close()
+        c.close()
+    finally:
+        server.stop()
+
+
+# -- non-finite objective regressions ----------------------------------------
+
+
+def test_nan_trials_never_optimal_live_server():
+    """S1 regression through the live service: trials completed with NaN or
+    infinite objective values must never appear in ListOptimalTrials — on a
+    single-metric study (best-trial selection) or a multi-metric one
+    (frontier), and the client frontier/hypervolume helpers skip them."""
+    server = DefaultVizierServer()
+    try:
+        # multi-metric: NaN/inf rows are incomparable, never on the frontier
+        c = VizierClient.load_or_create_study(
+            "mm-nan", _mm_config(k=2), client_id="w", target=server.address)
+        good_ids = []
+        for metrics in ({"m0": 1.0, "m1": 1.0}, {"m0": 2.0, "m1": 0.5}):
+            (t,) = c.get_suggestions(count=1)
+            c.complete_trial(metrics, trial_id=t.id)
+            good_ids.append(t.id)
+        bad_ids = []
+        for metrics in ({"m0": float("nan"), "m1": 5.0},
+                        {"m0": float("inf"), "m1": float("inf")},
+                        {"m0": 5.0, "m1": float("-inf")}):
+            (t,) = c.get_suggestions(count=1)
+            c.complete_trial(metrics, trial_id=t.id)
+            bad_ids.append(t.id)
+        optimal = {t.id for t in c.list_optimal_trials()}
+        assert optimal == set(good_ids)
+        frontier, vectors = c.pareto_frontier()
+        assert {t.id for t in frontier} == set(good_ids)
+        assert np.isfinite(np.asarray(vectors)).all()
+        assert math.isfinite(c.hypervolume())
+        c.close()
+
+        # single-metric: a NaN "maximum" must not shadow the real best
+        c1 = VizierClient.load_or_create_study(
+            "mm-nan-single", _mm_config(k=1, algorithm="RANDOM_SEARCH"),
+            client_id="w", target=server.address)
+        (t1,) = c1.get_suggestions(count=1)
+        c1.complete_trial({"m0": 0.7}, trial_id=t1.id)
+        (t2,) = c1.get_suggestions(count=1)
+        c1.complete_trial({"m0": float("nan")}, trial_id=t2.id)
+        assert [t.id for t in c1.list_optimal_trials()] == [t1.id]
+        c1.close()
+    finally:
+        server.stop()
+
+
+def test_nan_trials_never_reach_gp_fit():
+    """Poisoned trials are filtered before the design matrix: the fit (and
+    the persisted num_trials fingerprint) sees only the finite rows, and
+    the suggestion op still succeeds."""
+    ds, study, policy = _policy_loop_setup(k=2, name="mm-nan-fit")
+    _seed_direct(ds, study, k=2)
+    for metrics in ({"m0": float("nan"), "m1": 1.0},
+                    {"m0": 1.0, "m1": float("inf")}):
+        t = Trial(parameters={"x": 0.5, "y": 0.5})
+        t.complete(Measurement(metrics=metrics))
+        ds.create_trial(study.name, t)
+
+    # converter level: the xy matrices exclude the two poisoned trials
+    cfg = ds.get_study(study.name).study_config
+    completed = ds.list_trials(study.name)
+    conv = TrialToArrayConverter(cfg.search_space)
+    x, y = trials_to_xy(completed, cfg, conv)
+    assert x.shape[0] == 8 and np.isfinite(x).all()
+    assert y.shape == (8, 2) and np.isfinite(y).all()
+
+    # policy level: op succeeds, checkpoint fingerprints the finite count
+    decision = _run_op(ds, study, policy)
+    assert len(decision.suggestions) == 1
+    assert _stored_state(ds, study.name).num_trials == 8
+
+
+# -- policy-construction error mapping ---------------------------------------
+
+
+def test_algorithm_config_mismatch_is_invalid_argument():
+    """S3: a single-objective designer explicitly selected on a multi-metric
+    study fails the op with INVALID_ARGUMENT (3) — a permanent client error
+    the caller should fix, not the retryable INTERNAL (13) it used to be."""
+    with pytest.raises(PolicyConstructionError) as ei:
+        make_policy("REGULARIZED_EVOLUTION", None, _mm_config(k=2))
+    assert ei.value.code == 3
+    assert "cannot serve" in str(ei.value)
+
+    server = DefaultVizierServer()
+    try:
+        c = VizierClient.load_or_create_study(
+            "mm-mismatch", _mm_config(k=2, algorithm="REGULARIZED_EVOLUTION"),
+            client_id="w", target=server.address)
+        with pytest.raises(OperationFailedError) as op_err:
+            c.get_suggestions(count=1)
+        assert op_err.value.code == 3
+        ops = server.datastore.list_operations(c.study_name)
+        assert ops[0]["done"] and ops[0]["error"]["code"] == 3
+        c.close()
+
+        # unknown algorithm: same mapping, message pinned for remote clients
+        c2 = VizierClient.load_or_create_study(
+            "mm-unknown", _mm_config(k=2, algorithm="GP_UCB"),
+            client_id="w", target=server.address)
+        study = server.datastore.get_study(c2.study_name)
+        study.study_config.algorithm = "NO_SUCH_ALGORITHM"
+        server.datastore.update_study(study)
+        with pytest.raises(OperationFailedError) as op_err2:
+            c2.get_suggestions(count=1)
+        assert op_err2.value.code == 3
+        assert "unknown algorithm" in str(op_err2.value)
+        c2.close()
+    finally:
+        server.stop()
+
+
+def test_nsga2_still_serves_multimetric_as_explicit_baseline():
+    ds = InMemoryDatastore()
+    cfg = _mm_config(k=2, algorithm="NSGA2")
+    study = Study(name="owners/t/studies/mm-nsga", study_config=cfg)
+    ds.create_study(study)
+    policy = make_policy("NSGA2", DatastorePolicySupporter(ds, study.name), cfg)
+    decision = _run_op(ds, study, policy, count=2)
+    assert len(decision.suggestions) == 2

@@ -139,7 +139,12 @@ def study_configs(draw):
     cfg.search_space = draw(search_spaces())
     n_metrics = draw(st.integers(min_value=1, max_value=3))
     for i in range(n_metrics):
-        cfg.metrics.add(f"m{i}", draw(st.sampled_from(["MAXIMIZE", "MINIMIZE"])))
+        cfg.metrics.add(
+            f"m{i}", draw(st.sampled_from(["MAXIMIZE", "MINIMIZE"])),
+            safety_threshold=draw(st.one_of(
+                st.sampled_from([None]),   # shim-safe st.none()
+                st.floats(min_value=-1e6, max_value=1e6, allow_nan=False,
+                          allow_infinity=False))))
     cfg.algorithm = draw(st.sampled_from(
         ["RANDOM_SEARCH", "GP_UCB", "GRID_SEARCH", "CMA_ES"]))
     return cfg
@@ -148,13 +153,36 @@ def study_configs(draw):
 @given(study_configs())
 @settings(max_examples=40, deadline=None)
 def test_study_config_roundtrip_property(cfg):
-    """Arbitrary StudyConfigs survive the wire format bit-for-bit."""
+    """Arbitrary StudyConfigs — multi-metric, safety thresholds and all —
+    survive the wire format bit-for-bit."""
     proto = cfg.to_proto()
     back = StudyConfig.from_proto(proto)
     assert back.to_proto() == proto
     assert back.algorithm == cfg.algorithm
     assert [m.name for m in back.metrics] == [m.name for m in cfg.metrics]
+    assert [m.safety_threshold for m in back.metrics] == \
+        [m.safety_threshold for m in cfg.metrics]
     assert len(back.search_space.parameters) == len(cfg.search_space.parameters)
+
+
+def test_metrics_add_safety_threshold_and_duplicates():
+    """MetricsConfig.add accepts safety_threshold (it used to silently lack
+    the parameter), and duplicate metric ids are rejected on BOTH build
+    paths — .add() and from_proto (which used to bare-append around the
+    check, roundtripping ambiguous studies)."""
+    import pytest
+
+    cfg = StudyConfig()
+    mi = cfg.metrics.add("safe_m", "MAXIMIZE", safety_threshold=0.25)
+    assert mi.safety_threshold == 0.25
+    assert StudyConfig.from_proto(cfg.to_proto()).metrics[0].safety_threshold \
+        == 0.25
+    with pytest.raises(ValueError, match="duplicate metric"):
+        cfg.metrics.add("safe_m", "MINIMIZE")
+    proto = cfg.to_proto()
+    proto["metrics"].append(dict(proto["metrics"][0]))
+    with pytest.raises(ValueError, match="duplicate metric"):
+        StudyConfig.from_proto(proto)
 
 
 @given(search_spaces(), st.integers(min_value=0, max_value=10**6))

@@ -173,7 +173,9 @@ def test_client_falls_back_to_polling_without_wait_operation(pool_server):
 
 def test_error_codes_surface_through_operation_failures(pool_server):
     """Satellite: OperationFailedError carries the op's StatusCode + name so
-    schedulers can tell retryable from permanent failures."""
+    schedulers can tell retryable from permanent failures. An unknown
+    algorithm is a PERMANENT client error: INVALID_ARGUMENT, not the
+    retryable INTERNAL it used to surface as."""
     c = VizierClient.load_or_create_study(
         "codes", _config(), client_id="w", target=pool_server.address)
     study = pool_server.datastore.get_study(c.study_name)
@@ -182,14 +184,14 @@ def test_error_codes_surface_through_operation_failures(pool_server):
 
     with pytest.raises(OperationFailedError) as ei:
         c.get_suggestions(count=1, timeout=30.0)
-    assert ei.value.code == StatusCode.INTERNAL
+    assert ei.value.code == StatusCode.INVALID_ARGUMENT
     assert ei.value.operation_name and "/operations/" in ei.value.operation_name
 
     batch = VizierBatchClient(pool_server.address)
     with pytest.raises(OperationFailedError) as ei:
         batch.get_suggestions(
             [{"study_name": c.study_name, "client_id": "w9"}], timeout=30.0)
-    assert ei.value.code == StatusCode.INTERNAL
+    assert ei.value.code == StatusCode.INVALID_ARGUMENT
     assert ei.value.operation_name
     batch.close()
     c.close()

@@ -52,6 +52,7 @@ COVERAGE_TESTS = [
     "tests/test_search_space.py",
     "tests/test_proto_roundtrip.py",
     "tests/test_pareto.py",
+    "tests/test_multimetric.py",
 ]
 
 
