@@ -2,20 +2,32 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-fast smoke test-dist cov-service bench-batched bench-remote-pythia bench-warmstart bench-transfer bench-acquisition bench-scaleout bench-multimetric
+.PHONY: test test-fast smoke test-dist test-dist-witness lint-arch cov-service bench-batched bench-remote-pythia bench-warmstart bench-transfer bench-acquisition bench-scaleout bench-multimetric
 
 # tier-1: the full suite (what the driver runs), then the coverage floors
 # (repro.service >= 80%, repro.pythia >= 70%, repro.core >= 70%,
 # repro.kernels >= 70%; pytest-cov when installed, stdlib-trace fallback
 # otherwise)
-test:
+test: lint-arch
 	$(PY) -m pytest -x -q
 	$(PY) tools/check_coverage.py --fail-under 80 --pythia-fail-under 70 --core-fail-under 70 --kernels-fail-under 70
+
+# architecture-invariant analyzer (tools/archlint): lock discipline,
+# retrace hygiene, schema/namespace rules, error discipline. Exit-code
+# clean in <10s; findings must be fixed or carry a reasoned inline disable
+lint-arch:
+	$(PY) tools/archlint
 
 # distributed-topology tests only (Figure-2 split: real sockets, fault
 # injection, cross-process end-to-end) — includes the slow-marked e2e
 test-dist:
 	$(PY) -m pytest -q -m dist
+
+# the dist fault suite under the runtime lock-order witness: every lock in
+# the service tier records its acquisition order and the session fails if
+# the witnessed graph has a cycle (conftest.pytest_sessionfinish)
+test-dist-witness:
+	ARCHLINT_WITNESS=1 $(PY) -m pytest -q -m dist
 
 # the service/pythia/core/kernels coverage floors on their own
 cov-service:
@@ -29,6 +41,7 @@ test-fast:
 # out from under launch/mesh.py) in ~1s without running anything
 smoke:
 	$(PY) -m pytest --collect-only -q
+	$(PY) tools/archlint --fast
 
 bench-batched:
 	PYTHONPATH=.:src $(PY) benchmarks/service_throughput.py --batched

@@ -1,0 +1,230 @@
+"""Runtime lock-order witness (the dynamic half of archlint's lock pass).
+
+The static pass can't see orders that only materialize across threads or
+through dynamic dispatch (e.g. the ``op_guard`` lambda the worker pool hands
+to finalize, which takes the queue CV under the study lock). This module
+records the *actual* acquisition graph while tests run and fails on cycles.
+
+Opt-in: the service creates every lock through the ``make_lock`` /
+``make_rlock`` / ``make_condition`` factories below. They return plain
+``threading`` primitives unless ``ARCHLINT_WITNESS=1`` is set, so production
+code pays zero overhead. Unit tests exercise private :class:`LockWitness`
+instances directly (never the global ``WITNESS``, which the conftest
+session hook audits at the end of a witnessed run).
+
+Witness semantics:
+
+* a thread-local stack tracks the locks each thread currently holds;
+* an edge ``A -> B`` is recorded when a thread holding ``A`` *attempts* to
+  acquire ``B`` (attempt time, not success time — a deadlocked acquire must
+  still contribute its edge);
+* re-acquiring the lock at the top of your own stack (RLock reentrancy,
+  ``Condition`` re-entry) records no edge;
+* edges are keyed by lock *name*, so every per-study lock shares one node —
+  two different studies' locks nesting is exactly the ordering hazard the
+  witness exists to catch.
+
+``assert_acyclic()`` raises :class:`LockOrderViolation` with the offending
+cycle and one sample stack per edge.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from typing import Dict, List, Optional, Set, Tuple
+
+_ENV_FLAG = "ARCHLINT_WITNESS"
+
+
+def witness_enabled() -> bool:
+    return os.environ.get(_ENV_FLAG, "") not in ("", "0")
+
+
+class LockOrderViolation(AssertionError):
+    def __init__(self, cycle: List[str], samples: Dict[Tuple[str, str], str]):
+        self.cycle = cycle
+        edge_lines = []
+        for a, b in zip(cycle, cycle[1:] + cycle[:1]):
+            where = samples.get((a, b), "<unrecorded>")
+            edge_lines.append(f"  {a} -> {b}   (first seen: {where})")
+        super().__init__(
+            "lock-order cycle witnessed at runtime:\n" + "\n".join(edge_lines))
+
+
+class LockWitness:
+    """Process-global acquisition-order recorder."""
+
+    def __init__(self) -> None:
+        self._guard = threading.Lock()      # protects the edge map only
+        self._local = threading.local()
+        # (holder name, acquired name) -> "thread/site" sample
+        self._edges: Dict[Tuple[str, str], str] = {}
+
+    # -- called by _WitnessedLock -------------------------------------------
+    def _stack(self) -> List[Tuple[str, int]]:
+        st = getattr(self._local, "stack", None)
+        if st is None:
+            st = []
+            self._local.stack = st
+        return st
+
+    def note_acquire_attempt(self, name: str, obj_id: int,
+                             reentrant: bool) -> None:
+        stack = self._stack()
+        held_same_object = any(s == (name, obj_id) for s in stack)
+        if held_same_object and reentrant:
+            return              # RLock/Condition re-entry can never block
+        if held_same_object:
+            # non-reentrant self-acquire: certain deadlock; the self-edge
+            # makes the cycle checker report it
+            edge = (name, name)
+        elif stack:
+            # note: two *different* objects sharing a name (two per-study
+            # locks) also produce a (name, name) self-edge here — nesting
+            # distinct study locks IS the ordering hazard
+            edge = (stack[-1][0], name)
+        else:
+            return
+        with self._guard:
+            if edge not in self._edges:
+                t = threading.current_thread().name
+                self._edges[edge] = f"thread {t!r}"
+
+    def note_acquired(self, name: str, obj_id: int) -> None:
+        self._stack().append((name, obj_id))
+
+    def note_release(self, name: str, obj_id: int) -> None:
+        stack = self._stack()
+        # release may be out of LIFO order (rare but legal): drop last match
+        for i in range(len(stack) - 1, -1, -1):
+            if stack[i] == (name, obj_id):
+                del stack[i]
+                return
+
+    # -- inspection ----------------------------------------------------------
+    def edges(self) -> Set[Tuple[str, str]]:
+        with self._guard:
+            return set(self._edges)
+
+    def reset(self) -> None:
+        with self._guard:
+            self._edges.clear()
+
+    def find_cycle(self) -> Optional[List[str]]:
+        with self._guard:
+            graph: Dict[str, Set[str]] = {}
+            for a, b in self._edges:
+                graph.setdefault(a, set()).add(b)
+        WHITE, GREY, BLACK = 0, 1, 2
+        color = {n: WHITE for n in graph}
+        path: List[str] = []
+
+        def dfs(n: str) -> Optional[List[str]]:
+            color[n] = GREY
+            path.append(n)
+            for m in sorted(graph.get(n, ())):
+                if m == n:
+                    return [n]              # self-edge: same-name nesting
+                c = color.get(m, WHITE)
+                if c == GREY:
+                    return path[path.index(m):]
+                if c == WHITE and m in color:
+                    found = dfs(m)
+                    if found is not None:
+                        return found
+            path.pop()
+            color[n] = BLACK
+            return None
+
+        for n in sorted(graph):
+            if color[n] == WHITE:
+                found = dfs(n)
+                if found is not None:
+                    return found
+            path.clear()
+        return None
+
+    def assert_acyclic(self) -> None:
+        cycle = self.find_cycle()
+        if cycle is not None:
+            with self._guard:
+                samples = dict(self._edges)
+            raise LockOrderViolation(cycle, samples)
+
+
+WITNESS = LockWitness()
+
+
+class _WitnessedLock:
+    """Wraps a threading primitive, reporting acquire/release to WITNESS.
+
+    Unknown attributes delegate to the wrapped lock so ``threading.Condition``
+    still finds ``_is_owned`` / ``_release_save`` / ``_acquire_restore`` on a
+    wrapped RLock (Condition's wait/notify protocol probes for them).
+    """
+
+    def __init__(self, inner, name: str, witness: LockWitness,
+                 reentrant: bool = False):
+        self._inner = inner
+        self._name = name
+        self._witness = witness
+        self._reentrant = reentrant
+
+    def acquire(self, *args, **kwargs):
+        self._witness.note_acquire_attempt(
+            self._name, id(self._inner), self._reentrant)
+        ok = self._inner.acquire(*args, **kwargs)
+        if ok:
+            self._witness.note_acquired(self._name, id(self._inner))
+        return ok
+
+    def release(self):
+        self._inner.release()
+        self._witness.note_release(self._name, id(self._inner))
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
+
+    def locked(self):
+        return self._inner.locked()
+
+    def __getattr__(self, item):
+        return getattr(self._inner, item)
+
+    def __repr__(self):
+        return f"<witnessed {self._name} {self._inner!r}>"
+
+
+def make_lock(name: str) -> threading.Lock:
+    if not witness_enabled():
+        return threading.Lock()
+    return _WitnessedLock(threading.Lock(), name, WITNESS)  # type: ignore
+
+
+def make_rlock(name: str) -> threading.RLock:
+    if not witness_enabled():
+        return threading.RLock()
+    return _WitnessedLock(threading.RLock(), name, WITNESS,
+                          reentrant=True)  # type: ignore
+
+
+def make_condition(name: str) -> threading.Condition:
+    """A Condition over a witnessed RLock.
+
+    ``Condition.wait`` releases the underlying lock via ``_release_save`` on
+    the *inner* primitive (reached through ``__getattr__`` delegation), so the
+    witness sees the CV as held for the whole wait. That is intentional: the
+    hazard being witnessed is what else a CV holder tries to acquire, and
+    wait-side wakeups re-acquire before returning to user code.
+    """
+    if not witness_enabled():
+        return threading.Condition()
+    return threading.Condition(
+        _WitnessedLock(threading.RLock(), name, WITNESS,
+                       reentrant=True))  # type: ignore

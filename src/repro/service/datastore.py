@@ -29,6 +29,7 @@ from typing import Dict, List, Optional
 import msgpack
 
 from repro.core.metadata import Metadata
+from repro.service._lockwitness import make_rlock
 from repro.core.study import Study, StudyState, Trial, TrialState
 
 
@@ -178,7 +179,7 @@ _TERMINAL_STATE_VALUES = frozenset(
 
 class InMemoryDatastore(Datastore):
     def __init__(self):
-        self._lock = threading.RLock()
+        self._lock = make_rlock("InMemoryDatastore._lock")
         self._studies: Dict[str, dict] = {}
         self._trials: Dict[str, Dict[int, dict]] = {}
         self._ops: Dict[str, dict] = {}
@@ -383,7 +384,7 @@ class SQLiteDatastore(Datastore):
 
     def __init__(self, path: str = ":memory:"):
         self._path = path
-        self._lock = threading.RLock()
+        self._lock = make_rlock("SQLiteDatastore._lock")
         if path != ":memory:":
             os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
         self._conn = sqlite3.connect(path, check_same_thread=False)

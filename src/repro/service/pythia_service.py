@@ -241,9 +241,16 @@ class PythiaServicer(Servicer):
                 one = self._suggest_one(rpc, entry, total, context)
             except Exception as e:  # noqa: BLE001 — isolate per study
                 log.exception("batched suggest for %s failed", name)
+                # preserve a carried status code (PolicyConstructionError
+                # carries INVALID_ARGUMENT): collapsing everything to
+                # INTERNAL here made permanent config errors retryable in
+                # the remote topology while the local path failed them fast
+                code = getattr(e, "code", None)
+                if not isinstance(code, int):
+                    code = StatusCode.INTERNAL
                 for i, _ in members:
                     results[i] = {"error": {
-                        "code": StatusCode.INTERNAL,
+                        "code": code,
                         "message": f"{type(e).__name__}: {e}",
                     }}
                 continue

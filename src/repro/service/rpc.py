@@ -38,6 +38,8 @@ from typing import Any, Callable, Dict, Optional
 
 import msgpack
 
+from repro.service._lockwitness import make_lock
+
 log = logging.getLogger(__name__)
 
 MAX_FRAME = 256 * 1024 * 1024  # 256 MiB
@@ -122,7 +124,7 @@ class TcpTransport(Transport):
         host, port = address.rsplit(":", 1)
         self._addr = (host, int(port))
         self._sock: Optional[socket.socket] = None
-        self._lock = threading.Lock()
+        self._lock = make_lock("TcpTransport._lock")
 
     def _connect(self, timeout: float) -> socket.socket:
         sock = socket.create_connection(self._addr, timeout=timeout)
@@ -135,6 +137,9 @@ class TcpTransport(Transport):
                 if self._sock is None:
                     self._sock = self._connect(timeout)
                 self._sock.settimeout(timeout)
+                # archlint: disable=lock-blocking-call — this lock IS the
+                # per-connection request serializer; blocking socket I/O under
+                # it is the design (one in-flight frame per transport)
                 self._sock.sendall(_pack(request))
                 return _read_frame(self._sock)
             except (OSError, ConnectionError, struct.error) as e:
@@ -152,6 +157,8 @@ class TcpTransport(Transport):
                 if self._sock is None:
                     self._sock = self._connect(timeout)
                 self._sock.settimeout(timeout)
+                # archlint: disable=lock-blocking-call — pipelined frames ride
+                # the same per-connection serializer lock by design
                 self._sock.sendall(b"".join(_pack(r) for r in requests))
                 return [_read_frame(self._sock) for _ in requests]
             except (OSError, ConnectionError, struct.error) as e:
@@ -324,7 +331,7 @@ class PooledRpcClient:
         self._kwargs = client_kwargs
         self._local = threading.local()
         self._all: "list[RpcClient]" = []
-        self._all_lock = threading.Lock()
+        self._all_lock = make_lock("PooledRpcClient._all_lock")
 
     def _client(self) -> RpcClient:
         client = getattr(self._local, "client", None)
@@ -365,7 +372,7 @@ class Servicer:
     def __init__(self):
         self._methods: Dict[str, Callable[[dict], Any]] = {}
         self._counts: Dict[str, int] = {}
-        self._counts_lock = threading.Lock()
+        self._counts_lock = make_lock("Servicer._counts_lock")
 
     def expose(self, name: str, fn: Callable[[dict], Any]) -> None:
         self._methods[name] = fn
@@ -398,10 +405,15 @@ class Servicer:
             return {"id": rid, "ok": False, "error": {"code": e.code, "message": e.message}}
         except Exception as e:  # noqa: BLE001 - server must not die on handler bugs
             log.exception("handler %s failed", method)
+            # duck-type a carried status code so exceptions like
+            # PolicyConstructionError keep INVALID_ARGUMENT over the wire
+            code = getattr(e, "code", None)
+            if not isinstance(code, int):
+                code = StatusCode.INTERNAL
             return {
                 "id": rid,
                 "ok": False,
-                "error": {"code": StatusCode.INTERNAL, "message": f"{type(e).__name__}: {e}"},
+                "error": {"code": code, "message": f"{type(e).__name__}: {e}"},
             }
 
 

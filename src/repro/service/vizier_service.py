@@ -56,6 +56,7 @@ from repro.pythia.policy import StudyDescriptor, SuggestRequest, EarlyStopReques
 from repro.pythia.registry import make_policy, registered_algorithms
 from repro.pythia.supporter import DatastorePolicySupporter, PrefetchedPolicySupporter
 from repro.service import operations as ops_lib
+from repro.service._lockwitness import make_lock
 from repro.service.datastore import Datastore, KeyAlreadyExistsError, NotFoundError
 from repro.service.rpc import Servicer, StatusCode, VizierRpcError
 
@@ -281,10 +282,10 @@ class VizierService(Servicer):
         self._pool = ThreadPoolExecutor(max_workers=max_workers,
                                         thread_name_prefix="pythia")
         self._study_locks: Dict[str, threading.Lock] = {}
-        self._locks_guard = threading.Lock()
+        self._locks_guard = make_lock("VizierService._locks_guard")
         # WaitOperation long-poll: op name -> [Event, waiter refcount]
         self._op_waiters: Dict[str, list] = {}
-        self._op_waiters_guard = threading.Lock()
+        self._op_waiters_guard = make_lock("VizierService._op_waiters_guard")
         self._queue = None
         self.worker_pool = None
         if n_pythia_workers > 0:
@@ -314,7 +315,8 @@ class VizierService(Servicer):
     # -- helpers ---------------------------------------------------------------
     def _study_lock(self, study_name: str) -> threading.Lock:
         with self._locks_guard:
-            return self._study_locks.setdefault(study_name, threading.Lock())
+            return self._study_locks.setdefault(
+                study_name, make_lock("VizierService._study_lock"))
 
     def _put_op(self, op: dict) -> None:
         """Single write path for operations: persists, then wakes any
@@ -416,9 +418,13 @@ class VizierService(Servicer):
         return {}
 
     def SetStudyState(self, params: dict) -> dict:
-        study = self._get_study_or_rpc_error(params["name"])
-        study.state = StudyState(params["state"])
-        self._ds.update_study(study)
+        # read-modify-write under the study lock: racing a concurrent
+        # _apply_delta_locked / UpdateMetadata would resurrect the stale
+        # study snapshot and silently drop their writes
+        with self._study_lock(params["name"]):
+            study = self._get_study_or_rpc_error(params["name"])
+            study.state = StudyState(params["state"])
+            self._ds.update_study(study)
         return {"study": study.to_proto()}
 
     # -- suggestion flow -------------------------------------------------------------
@@ -632,6 +638,7 @@ class VizierService(Servicer):
                 fail_group(group, result)
                 continue
             suggestions, delta = result
+            shortfalls: List[tuple] = []
             try:
                 with self._study_lock(study.name):
                     if op_guard is not None:
@@ -658,9 +665,8 @@ class VizierService(Servicer):
                                 f"for a coalesced request; none left for this op"))
                             continue
                         if len(take) < want:
-                            log.warning(
-                                "coalesced op %s got %d/%d suggestions",
-                                op["name"], len(take), want)
+                            # log outside the study lock (logging does I/O)
+                            shortfalls.append((op["name"], len(take), want))
                         trials = self._create_trials_locked(
                             study.name, op["client_id"], take
                         )
@@ -679,6 +685,9 @@ class VizierService(Servicer):
                     if op_guard is not None and not op_guard(op):
                         continue
                     self._fail_op(op, e)
+            for op_name, got, want in shortfalls:
+                log.warning("coalesced op %s got %d/%d suggestions",
+                            op_name, got, want)
 
     def GetOperation(self, params: dict) -> dict:
         try:
@@ -952,9 +961,10 @@ class VizierService(Servicer):
             )
         except Exception as e:  # noqa: BLE001
             log.exception("early-stop op %s failed", op["name"])
-            self._put_op(
-                ops_lib.fail_operation(op, StatusCode.INTERNAL, f"{type(e).__name__}: {e}")
-            )
+            # _fail_op maps the carried code (e.g. PolicyConstructionError ->
+            # INVALID_ARGUMENT); hard-coding INTERNAL here made permanent
+            # policy-construction failures look retryable
+            self._fail_op(op, e)
 
     # -- optimal trials / metadata ---------------------------------------------------
     def ListOptimalTrials(self, params: dict) -> dict:
@@ -976,11 +986,14 @@ class VizierService(Servicer):
     def UpdateMetadata(self, params: dict) -> dict:
         study_name = params["name"]
         delta = MetadataDelta.from_proto(params["delta"])
-        self._get_study_or_rpc_error(study_name)
-        # atomic under the backend lock; per-trial entries naming deleted
+        # the study lock orders this against SetStudyState's read-modify-
+        # write (backend atomicity alone can't stop a stale study snapshot
+        # from overwriting the delta); per-trial entries naming deleted
         # trials are skipped instead of failing a half-applied delta, and
         # the skipped ids are reported so callers can detect stale targets
-        skipped = self._ds.apply_metadata_delta(study_name, delta)
+        with self._study_lock(study_name):
+            self._get_study_or_rpc_error(study_name)
+            skipped = self._ds.apply_metadata_delta(study_name, delta)
         return {"skipped_trials": skipped}
 
     def ListAlgorithms(self, params: dict) -> dict:

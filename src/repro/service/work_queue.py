@@ -35,9 +35,10 @@ import logging
 import threading
 import time
 from collections import deque
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.service import operations as ops_lib
+from repro.service._lockwitness import make_condition
 
 log = logging.getLogger(__name__)
 
@@ -84,7 +85,7 @@ class ShardedWorkQueue:
         self.n_shards = n_shards
         self.lease_timeout = lease_timeout
         self._shards = [_Shard() for _ in range(n_shards)]
-        self._cv = threading.Condition()
+        self._cv = make_condition("ShardedWorkQueue._cv")
         self._closed = False
 
     # -- producers -----------------------------------------------------------
@@ -100,13 +101,16 @@ class ShardedWorkQueue:
         return sid
 
     # -- workers -------------------------------------------------------------
-    def _reclaim_expired_locked(self, now: float) -> None:
+    def _reclaim_expired_locked(self, now: float) -> List[Tuple[str, int]]:
+        """Requeue expired leases; returns (lease repr, op count) for each so
+        the caller can log after releasing the CV (logging does I/O)."""
+        reclaimed: List[Tuple[str, int]] = []
         for shard in self._shards:
             lease = shard.lease
             if lease is not None and now > lease.deadline:
-                log.warning("lease %r expired; requeueing %d ops",
-                            lease, len(lease.ops))
+                reclaimed.append((repr(lease), len(lease.ops)))
                 self._requeue_locked(lease)
+        return reclaimed
 
     def _requeue_locked(self, lease: Lease) -> None:
         shard = self._shards[lease.shard_id]
@@ -123,28 +127,37 @@ class ShardedWorkQueue:
               ) -> Optional[Lease]:
         """Claim one free shard's whole backlog; None on timeout/close."""
         deadline = None if timeout is None else time.monotonic() + timeout
-        with self._cv:
-            while True:
-                if self._closed:
-                    return None
-                now = time.monotonic()
-                self._reclaim_expired_locked(now)
-                for sid, shard in enumerate(self._shards):
-                    if shard.queued and shard.lease is None:
-                        ops = list(shard.queued)
-                        shard.queued.clear()
-                        shard.generation += 1
-                        lease = Lease(sid, shard.generation, worker_id, ops,
-                                      now + self.lease_timeout)
-                        shard.lease = lease
-                        return lease
-                if deadline is not None:
-                    remaining = deadline - time.monotonic()
-                    if remaining <= 0:
+        while True:
+            # the wait loop re-acquires the CV each iteration so reclaim
+            # warnings flush outside the critical section
+            reclaimed: List[Tuple[str, int]] = []
+            try:
+                with self._cv:
+                    if self._closed:
                         return None
-                    self._cv.wait(remaining)
-                else:
-                    self._cv.wait()
+                    now = time.monotonic()
+                    reclaimed = self._reclaim_expired_locked(now)
+                    for sid, shard in enumerate(self._shards):
+                        if shard.queued and shard.lease is None:
+                            ops = list(shard.queued)
+                            shard.queued.clear()
+                            shard.generation += 1
+                            lease = Lease(sid, shard.generation, worker_id,
+                                          ops, now + self.lease_timeout)
+                            shard.lease = lease
+                            return lease
+                    if deadline is not None:
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0:
+                            return None
+                        self._cv.wait(remaining)
+                    else:
+                        self._cv.wait()
+            finally:
+                # the with-block has exited (CV released) before this runs
+                for desc, n_ops in reclaimed:
+                    log.warning("lease %s expired; requeueing %d ops",
+                                desc, n_ops)
 
     def lease_valid(self, lease: Lease) -> bool:
         """True while the lease still owns its shard (generation match)."""

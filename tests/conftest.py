@@ -2,8 +2,25 @@ import sys
 import os
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
 
 import pytest
+
+
+def pytest_sessionfinish(session, exitstatus):
+    """Under ARCHLINT_WITNESS=1 the whole run doubles as a lock-order
+    audit: fail the session if the witnessed acquisition graph has a cycle
+    (see tools/archlint/README.md, runtime witness)."""
+    from repro.service import _lockwitness as lw
+
+    if not lw.witness_enabled():
+        return
+    try:
+        lw.WITNESS.assert_acyclic()
+    except lw.LockOrderViolation as e:
+        session.exitstatus = 1
+        print(f"\n[lockwitness] {e}", file=sys.stderr)
+        raise
 
 from repro.core import (
     Measurement,

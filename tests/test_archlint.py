@@ -1,0 +1,991 @@
+"""archlint analyzer + runtime lock-order witness tests.
+
+Three layers:
+
+1. Fixture tests per pass/rule — known-bad snippets are flagged at the right
+   file:line, known-good snippets (every blessed pattern in the tree:
+   bucket-padded jit wrappers, study-lock-guarded RMW, code-consulting
+   handlers, cv.wait on the held CV) stay clean.
+2. Runtime witness semantics — inverted two-lock order fails, consistent
+   order passes, RLock reentrancy records no edge, Condition delegation.
+3. Pinned regressions for the real defects the passes surfaced (ISSUE 9):
+   SetStudyState / UpdateMetadata RMW under the study lock, early-stop and
+   remote batch-suggest preserving carried status codes, dispatch
+   duck-typing ``.code``, and the restructured work-queue lease loop.
+"""
+
+import subprocess
+import textwrap
+import threading
+import time
+from pathlib import Path
+
+import pytest
+
+from archlint import core, error_pass, lock_pass, retrace_pass, schema_pass
+from repro.core import StudyState
+from repro.core.metadata import MetadataDelta
+from repro.service import InMemoryDatastore, VizierClient, VizierService
+from repro.service import _lockwitness as lw
+from repro.service.pythia_service import PythiaServicer
+from repro.service.rpc import Servicer, StatusCode, VizierRpcError
+from repro.service.vizier_service import InProcessPythia
+from repro.service.work_queue import ShardedWorkQueue
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def _src(tmp_path: Path, rel: str, code: str) -> core.SourceFile:
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(code))
+    return core.SourceFile.load(p, tmp_path)
+
+
+def _line_of(src: core.SourceFile, needle: str) -> int:
+    for i, line in enumerate(src.lines, start=1):
+        if needle in line:
+            return i
+    raise AssertionError(f"{needle!r} not in fixture")
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# Lock-discipline pass
+# ---------------------------------------------------------------------------
+
+
+def test_lock_order_cycle_flagged(tmp_path):
+    src = _src(tmp_path, "service/mod.py", """\
+        import threading
+
+        class S:
+            def __init__(self):
+                self._a = threading.Lock()
+                self._b = threading.Lock()
+
+            def one(self):
+                with self._a:
+                    with self._b:
+                        pass
+
+            def two(self):
+                with self._b:
+                    with self._a:
+                        pass
+        """)
+    findings = lock_pass.run([src])
+    assert lock_pass.RULE_ORDER in _rules(findings)
+
+
+def test_lock_order_consistent_is_clean(tmp_path):
+    src = _src(tmp_path, "service/mod.py", """\
+        import threading
+
+        class S:
+            def __init__(self):
+                self._a = threading.Lock()
+                self._b = threading.Lock()
+
+            def one(self):
+                with self._a:
+                    with self._b:
+                        pass
+
+            def two(self):
+                with self._a:
+                    with self._b:
+                        pass
+        """)
+    assert lock_pass.run([src]) == []
+
+
+def test_nonreentrant_self_reacquire_is_a_cycle(tmp_path):
+    src = _src(tmp_path, "service/mod.py", """\
+        import threading
+
+        class T:
+            def __init__(self):
+                self._l = threading.Lock()
+
+            def outer(self):
+                with self._l:
+                    self.inner()
+
+            def inner(self):
+                with self._l:
+                    pass
+        """)
+    findings = lock_pass.run([src])
+    assert lock_pass.RULE_ORDER in _rules(findings)
+
+
+def test_sibling_subclasses_get_no_phantom_cross_edges(tmp_path):
+    # Pins the receiver-context-sensitive dispatch: self._locked_write()
+    # reached through super().save() resolves to exactly the receiver's
+    # implementation. Context-insensitive resolution created a phantom
+    # Mem._lock -> Sql._lock cycle between the two datastore backends.
+    src = _src(tmp_path, "service/mod.py", """\
+        import threading
+
+        class Base:
+            def save(self):
+                self._locked_write()
+
+            def _locked_write(self):
+                raise NotImplementedError
+
+        class Mem(Base):
+            def __init__(self):
+                self._lock = threading.RLock()
+
+            def _locked_write(self):
+                with self._lock:
+                    pass
+
+            def batch(self):
+                with self._lock:
+                    super().save()
+
+        class Sql(Base):
+            def __init__(self):
+                self._lock = threading.RLock()
+
+            def _locked_write(self):
+                with self._lock:
+                    pass
+
+            def batch(self):
+                with self._lock:
+                    super().save()
+        """)
+    findings = lock_pass.run([src])
+    assert lock_pass.RULE_ORDER not in _rules(findings)
+
+
+def test_blocking_calls_under_lock_flagged(tmp_path):
+    src = _src(tmp_path, "service/mod.py", """\
+        import logging
+        import threading
+        import time
+
+        log = logging.getLogger(__name__)
+
+        class S:
+            def __init__(self):
+                self._l = threading.Lock()
+
+            def direct(self):
+                with self._l:
+                    time.sleep(0.1)
+
+            def logs(self):
+                with self._l:
+                    log.warning("held")
+
+            def fine(self):
+                time.sleep(0.1)
+                with self._l:
+                    pass
+                log.warning("released")
+        """)
+    findings = [f for f in lock_pass.run([src])
+                if f.rule == lock_pass.RULE_BLOCKING]
+    lines = {f.line for f in findings}
+    assert _line_of(src, "time.sleep(0.1)") in lines  # first occurrence: direct
+    assert _line_of(src, 'log.warning("held")') in lines
+    assert _line_of(src, 'log.warning("released")') not in lines
+
+
+def test_blocking_reached_interprocedurally(tmp_path):
+    src = _src(tmp_path, "service/mod.py", """\
+        import threading
+        import time
+
+        class C:
+            def __init__(self):
+                self._l = threading.Lock()
+
+            def a(self):
+                with self._l:
+                    self.b()
+
+            def b(self):
+                time.sleep(1)
+        """)
+    findings = [f for f in lock_pass.run([src])
+                if f.rule == lock_pass.RULE_BLOCKING]
+    assert findings, "sleep reached through self.b() under the lock"
+    assert findings[0].line == _line_of(src, "self.b()")
+
+
+def test_cv_wait_on_held_cv_and_bounded_wait_are_clean(tmp_path):
+    src = _src(tmp_path, "service/mod.py", """\
+        import threading
+
+        class Q:
+            def __init__(self):
+                self._cv = threading.Condition()
+                self._evt = threading.Event()
+
+            def sanctioned(self):
+                with self._cv:
+                    self._cv.wait()
+
+            def bounded(self):
+                with self._cv:
+                    self._evt.wait(1.0)
+        """)
+    assert lock_pass.run([src]) == []
+
+
+def test_unbounded_foreign_wait_under_lock_flagged(tmp_path):
+    src = _src(tmp_path, "service/mod.py", """\
+        import threading
+
+        class Q:
+            def __init__(self):
+                self._cv = threading.Condition()
+                self._evt = threading.Event()
+
+            def bad(self):
+                with self._cv:
+                    self._evt.wait()
+        """)
+    findings = lock_pass.run([src])
+    assert _rules(findings) == {lock_pass.RULE_BLOCKING}
+
+
+def test_datastore_call_under_queue_lock_flagged(tmp_path):
+    src = _src(tmp_path, "service/work_mod.py", """\
+        import threading
+
+        class WorkQueue:
+            def __init__(self, ds: FooDatastore):
+                self._cv = threading.Condition()
+                self._ds = ds
+
+            def bad(self, study):
+                with self._cv:
+                    self._ds.update_study(study)
+
+            def fine(self, study):
+                with self._cv:
+                    pass
+                self._ds.update_study(study)
+        """)
+    findings = [f for f in lock_pass.run([src])
+                if f.rule == lock_pass.RULE_QUEUE_DS]
+    assert [f.line for f in findings] == [
+        _line_of(src, "self._ds.update_study(study)")]
+
+
+def test_unguarded_study_write_flagged_and_blessed_patterns_clean(tmp_path):
+    src = _src(tmp_path, "service/mod.py", """\
+        import threading
+
+        class Svc:
+            def __init__(self, ds: FooDatastore):
+                self._ds = ds
+                self._locks = {}
+
+            def _study_lock(self, name):
+                return self._locks.setdefault(name, threading.Lock())
+
+            def bad(self, study):
+                self._ds.update_study(study)
+
+            def guarded(self, study):
+                with self._study_lock(study.name):
+                    self._ds.update_study(study)
+
+            def _apply_locked(self, study):
+                self._ds.update_study(study)
+        """)
+    findings = [f for f in lock_pass.run([src])
+                if f.rule == lock_pass.RULE_UNGUARDED]
+    assert [f.line for f in findings] == [
+        _line_of(src, "def bad(") + 1]
+
+
+def test_witness_factories_count_as_locks(tmp_path):
+    src = _src(tmp_path, "service/mod.py", """\
+        import time
+        from repro.service._lockwitness import make_lock
+
+        class S:
+            def __init__(self):
+                self._l = make_lock("S._l")
+
+            def bad(self):
+                with self._l:
+                    time.sleep(1)
+        """)
+    assert lock_pass.RULE_BLOCKING in _rules(lock_pass.run([src]))
+
+
+# ---------------------------------------------------------------------------
+# Retrace-hygiene pass
+# ---------------------------------------------------------------------------
+
+
+def test_host_sync_in_jit_body_flagged(tmp_path):
+    src = _src(tmp_path, "pythia/mod.py", """\
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            return float(x)
+
+        @jax.jit
+        def g(x):
+            return x.item()
+
+        @jax.jit
+        def h(x):
+            import numpy as np
+            return np.asarray(x)
+        """)
+    findings = [f for f in retrace_pass.run([src])
+                if f.rule == retrace_pass.RULE_HOST_SYNC]
+    lines = {f.line for f in findings}
+    assert _line_of(src, "return float(x)") in lines
+    assert _line_of(src, "return x.item()") in lines
+    assert _line_of(src, "return np.asarray(x)") in lines
+
+
+def test_shape_derived_host_values_are_clean(tmp_path):
+    src = _src(tmp_path, "pythia/mod.py", """\
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            n = float(x.shape[0])
+            m = int(len(x))
+            return x * n + m
+        """)
+    assert retrace_pass.run([src]) == []
+
+
+def test_tracer_branch_flagged_and_static_exempt(tmp_path):
+    src = _src(tmp_path, "pythia/mod.py", """\
+        import functools
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def bad(x):
+            if x > 0:
+                return x
+            return -x
+
+        @functools.partial(jax.jit, static_argnames=("n",))
+        def static_ok(x, n):
+            if n > 2:
+                return x * 2
+            return x
+
+        @jax.jit
+        def none_ok(x, y=None):
+            if y is None:
+                return x
+            return x + y
+
+        @jax.jit
+        def shape_ok(x):
+            if x.shape[0] > 4:
+                return x[:4]
+            return x
+        """)
+    findings = retrace_pass.run([src])
+    assert [(f.rule, f.line) for f in findings] == [
+        (retrace_pass.RULE_TRACER_BRANCH, _line_of(src, "if x > 0:"))]
+
+
+def test_jit_in_function_flagged_but_init_exempt(tmp_path):
+    src = _src(tmp_path, "kernels/mod.py", """\
+        import jax
+
+        def per_call(f, x):
+            return jax.jit(f)(x)
+
+        class K:
+            def __init__(self, f):
+                self._f = jax.jit(f)
+        """)
+    findings = [f for f in retrace_pass.run([src])
+                if f.rule == retrace_pass.RULE_JIT_IN_FN]
+    assert [f.line for f in findings] == [_line_of(src, "return jax.jit(f)(x)")]
+
+
+def test_unpadded_jit_entry_flagged_and_bucket_wrapper_clean(tmp_path):
+    src = _src(tmp_path, "kernels/mod.py", """\
+        import jax
+        import jax.numpy as jnp
+
+        def _impl(x):
+            return x * 2
+
+        kernel = jax.jit(_impl)
+
+        def bad_call(xs):
+            return kernel(jnp.array([v for v in xs]))
+
+        def good_call(xs, pad_to_bucket):
+            padded = pad_to_bucket(xs)
+            return kernel(padded)
+        """)
+    findings = [f for f in retrace_pass.run([src])
+                if f.rule == retrace_pass.RULE_UNPADDED]
+    assert [f.line for f in findings] == [
+        _line_of(src, "kernel(jnp.array([v for v in xs]))")]
+
+
+def test_retrace_pass_scoped_to_pythia_and_kernels(tmp_path):
+    src = _src(tmp_path, "service/mod.py", """\
+        import jax
+
+        @jax.jit
+        def f(x):
+            return float(x)
+        """)
+    assert retrace_pass.run([src]) == []
+
+
+# ---------------------------------------------------------------------------
+# Schema / namespace pass
+# ---------------------------------------------------------------------------
+
+
+def test_reserved_namespace_write_outside_whitelist_flagged(tmp_path):
+    src = _src(tmp_path, "src/repro/service/foo.py",
+               'NS = "repro.secret.blob"\n')
+    findings = schema_pass.run([src], root=tmp_path, diff_base=None)
+    assert [(f.rule, f.line) for f in findings] == [
+        (schema_pass.RULE_NAMESPACE, 1)]
+
+
+def test_reserved_namespace_whitelist_docstring_and_imports_clean(tmp_path):
+    (tmp_path / "src/repro/configs").mkdir(parents=True)
+    state = _src(tmp_path, "src/repro/pythia/state.py",
+                 'NS = "repro.gp_bandit.state"\n')
+    doc = _src(tmp_path, "src/repro/service/doc.py", '''\
+        """Mentions repro.gp_bandit.state in prose only.
+
+        The string "repro.anything.here" inside a docstring is documentation,
+        not a write.
+        """
+        X = 1
+        ''')
+    imp = _src(tmp_path, "src/repro/service/imp.py",
+               'MODULE = "repro.configs.base"\n')
+    findings = schema_pass.run([state, doc, imp], root=tmp_path,
+                               diff_base=None)
+    assert findings == []
+
+
+def _git(cwd, *args):
+    subprocess.run(["git", "-c", "user.email=t@t", "-c", "user.name=t",
+                    *args], cwd=cwd, check=True, capture_output=True)
+
+
+STATE_V1 = """\
+STATE_SCHEMA_VERSION = 1
+
+
+class PolicyState:
+    alpha: float
+    beta: float
+"""
+
+
+@pytest.mark.parametrize("bumped", [False, True])
+def test_schema_version_bump_is_diff_aware(tmp_path, bumped):
+    rel = schema_pass.STATE_REL
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True)
+    p.write_text(STATE_V1)
+    _git(tmp_path, "init", "-q")
+    _git(tmp_path, "add", "-A")
+    _git(tmp_path, "commit", "-q", "-m", "seed")
+    version = 2 if bumped else 1
+    p.write_text(STATE_V1.replace("STATE_SCHEMA_VERSION = 1",
+                                  f"STATE_SCHEMA_VERSION = {version}")
+                 + "    gamma: float\n")
+    src = core.SourceFile.load(p, tmp_path)
+    findings = schema_pass.run([src], root=tmp_path, diff_base="HEAD")
+    if bumped:
+        assert findings == []
+    else:
+        assert [(f.rule, f.line) for f in findings] == [
+            (schema_pass.RULE_VERSION, 1)]
+        assert "gamma" in findings[0].message
+
+
+def test_schema_version_check_skipped_without_diff_base(tmp_path):
+    rel = schema_pass.STATE_REL
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True)
+    p.write_text(STATE_V1)
+    src = core.SourceFile.load(p, tmp_path)
+    assert schema_pass.run([src], root=tmp_path, diff_base=None) == []
+
+
+# ---------------------------------------------------------------------------
+# Error-discipline pass
+# ---------------------------------------------------------------------------
+
+
+def test_bare_and_baseexception_excepts_flagged(tmp_path):
+    src = _src(tmp_path, "service/operations.py", """\
+        class Runner:
+            def run(self):
+                try:
+                    work()
+                except:
+                    pass
+
+            def run2(self):
+                try:
+                    work()
+                except BaseException:
+                    pass
+
+            def run3(self):
+                try:
+                    work()
+                except ValueError:
+                    pass
+        """)
+    findings = [f for f in error_pass.run([src])
+                if f.rule == error_pass.RULE_BARE]
+    assert [f.line for f in findings] == [
+        _line_of(src, "except:"),
+        _line_of(src, "except BaseException:")]
+
+
+def test_swallowed_status_code_flagged_and_consulting_clean(tmp_path):
+    src = _src(tmp_path, "service/vizier_service.py", """\
+        class Svc:
+            def RunBad(self, op):
+                try:
+                    work()
+                except Exception as e:
+                    op["error"] = {"code": StatusCode.INTERNAL}
+
+            def RunGood(self, op):
+                try:
+                    work()
+                except Exception as e:
+                    code = getattr(e, "code", None)
+                    if not isinstance(code, int):
+                        code = StatusCode.INTERNAL
+                    op["error"] = {"code": code}
+
+            def RunFailOp(self, op):
+                try:
+                    work()
+                except Exception as e:
+                    self._fail_op(op, e)
+        """)
+    findings = [f for f in error_pass.run([src])
+                if f.rule == error_pass.RULE_SWALLOW]
+    assert [f.line for f in findings] == [
+        _line_of(src, 'op["error"] = {"code": StatusCode.INTERNAL}')]
+
+
+def test_unmapped_service_raise_flagged_and_carriers_exempt(tmp_path):
+    src = _src(tmp_path, "service/vizier_service.py", """\
+        class QuotaError(Exception):
+            def __init__(self, msg):
+                super().__init__(msg)
+                self.code = 8
+
+        class Svc:
+            def GetStudy(self, params):
+                raise KeyError(params["name"])
+
+            def CreateStudy(self, params):
+                raise VizierRpcError(5, "nope")
+
+            def DeleteStudy(self, params):
+                raise QuotaError("over quota")
+
+            def ListStudies(self, params):
+                raise NotImplementedError()
+
+            def _helper(self):
+                raise ValueError("internal helpers are not RPC surface")
+        """)
+    findings = [f for f in error_pass.run([src])
+                if f.rule == error_pass.RULE_UNMAPPED]
+    assert [f.line for f in findings] == [
+        _line_of(src, 'raise KeyError(params["name"])')]
+    assert "GetStudy" in findings[0].message
+
+
+def test_error_pass_scoped_to_isolation_basenames(tmp_path):
+    src = _src(tmp_path, "service/helpers.py", """\
+        class H:
+            def Run(self):
+                try:
+                    work()
+                except:
+                    pass
+        """)
+    assert error_pass.run([src]) == []
+
+
+# ---------------------------------------------------------------------------
+# Core: suppressions, baseline, runner
+# ---------------------------------------------------------------------------
+
+
+def test_same_line_suppression_with_reason(tmp_path):
+    src = _src(tmp_path, "service/mod.py", """\
+        import threading
+        import time
+
+        class S:
+            def __init__(self):
+                self._l = threading.Lock()
+
+            def f(self):
+                with self._l:
+                    time.sleep(0.1)  # archlint: disable=lock-blocking-call test fixture
+        """)
+    findings = core.filter_suppressed(lock_pass.run([src]), [src])
+    assert findings == []
+    assert src.suppression_reason_findings() == []
+
+
+def test_standalone_multiline_comment_suppression_covers_next_stmt(tmp_path):
+    src = _src(tmp_path, "service/mod.py", """\
+        import threading
+        import time
+
+        class S:
+            def __init__(self):
+                self._l = threading.Lock()
+
+            def f(self):
+                with self._l:
+                    # archlint: disable=lock-blocking-call sanctioned because this
+                    # fixture documents the multi-line reason idiom
+                    time.sleep(0.1)
+        """)
+    assert core.filter_suppressed(lock_pass.run([src]), [src]) == []
+
+
+def test_suppression_without_reason_is_itself_a_finding(tmp_path):
+    src = _src(tmp_path, "service/mod.py",
+               "X = 1  # archlint: disable=lock-blocking-call\n")
+    findings = src.suppression_reason_findings()
+    assert [(f.rule, f.line) for f in findings] == [
+        (core.RULE_SUPPRESSION_NO_REASON, 1)]
+
+
+def test_suppression_only_covers_named_rules(tmp_path):
+    src = _src(tmp_path, "service/mod.py", """\
+        import threading
+        import time
+
+        class S:
+            def __init__(self):
+                self._l = threading.Lock()
+
+            def f(self):
+                with self._l:
+                    time.sleep(0.1)  # archlint: disable=jit-host-sync wrong rule
+        """)
+    findings = core.filter_suppressed(lock_pass.run([src]), [src])
+    assert _rules(findings) == {lock_pass.RULE_BLOCKING}
+
+
+def test_baseline_key_roundtrip(tmp_path):
+    f = core.Finding("src/x.py", 42, "lock-order-cycle", "cycle: a -> b -> a")
+    baseline = tmp_path / "baseline.txt"
+    baseline.write_text("# comment line\n\n" + f.baseline_key() + "\n")
+    keys = core.load_baseline(baseline)
+    assert keys == {f.baseline_key()}
+    # line numbers drift without invalidating the entry
+    assert core.Finding("src/x.py", 99, f.rule, f.message).baseline_key() in keys
+    assert core.load_baseline(tmp_path / "missing.txt") == set()
+
+
+def test_analyze_paths_reports_syntax_errors(tmp_path):
+    p = tmp_path / "src/repro/service/broken.py"
+    p.parent.mkdir(parents=True)
+    p.write_text("def f(:\n")
+    findings, _ = core.analyze_paths(tmp_path, [p], fast=True)
+    assert [f.rule for f in findings] == [core.RULE_SYNTAX_ERROR]
+
+
+def test_repo_tree_is_archlint_clean():
+    """The PR's own acceptance gate: zero unsuppressed findings on the tree
+    (the checked-in baseline stays empty)."""
+    findings, _ = core.analyze_paths(REPO_ROOT, fast=False)
+    baseline = core.load_baseline(REPO_ROOT / "tools/archlint/baseline.txt")
+    new = [f.render() for f in findings if f.baseline_key() not in baseline]
+    assert new == []
+
+
+# ---------------------------------------------------------------------------
+# Runtime lock-order witness
+# ---------------------------------------------------------------------------
+
+
+def test_witness_inverted_two_lock_order_fails():
+    w = lw.LockWitness()
+    a = lw._WitnessedLock(threading.Lock(), "A", w)
+    b = lw._WitnessedLock(threading.Lock(), "B", w)
+    with a:
+        with b:
+            pass
+    with b:
+        with a:
+            pass
+    with pytest.raises(lw.LockOrderViolation) as e:
+        w.assert_acyclic()
+    assert set(e.value.cycle) == {"A", "B"}
+
+
+def test_witness_consistent_order_is_acyclic():
+    w = lw.LockWitness()
+    a = lw._WitnessedLock(threading.Lock(), "A", w)
+    b = lw._WitnessedLock(threading.Lock(), "B", w)
+    for _ in range(3):
+        with a:
+            with b:
+                pass
+    assert w.edges() == {("A", "B")}
+    w.assert_acyclic()
+
+
+def test_witness_reentrant_reacquire_records_no_edge():
+    w = lw.LockWitness()
+    r = lw._WitnessedLock(threading.RLock(), "R", w, reentrant=True)
+    other = lw._WitnessedLock(threading.Lock(), "O", w)
+    with r:
+        with other:
+            with r:        # reentry with O interleaved: still no R-edge
+                pass
+    assert w.edges() == {("R", "O")}
+    w.assert_acyclic()
+
+
+def test_witness_nonreentrant_self_acquire_is_a_cycle():
+    w = lw.LockWitness()
+    l = lw._WitnessedLock(threading.Lock(), "L", w)
+    l.acquire()
+    l.acquire(blocking=False)   # would deadlock if blocking
+    l.release()
+    assert ("L", "L") in w.edges()
+    with pytest.raises(lw.LockOrderViolation):
+        w.assert_acyclic()
+
+
+def test_witness_same_name_distinct_objects_is_the_study_lock_hazard():
+    w = lw.LockWitness()
+    s1 = lw._WitnessedLock(threading.Lock(), "study", w)
+    s2 = lw._WitnessedLock(threading.Lock(), "study", w)
+    with s1:
+        with s2:
+            pass
+    with pytest.raises(lw.LockOrderViolation) as e:
+        w.assert_acyclic()
+    assert e.value.cycle == ["study"]
+
+
+def test_witness_condition_delegation_supports_wait():
+    # Condition probes _is_owned/_release_save/_acquire_restore on the lock;
+    # __getattr__ delegation to the inner RLock must keep that working.
+    w = lw.LockWitness()
+    cv = threading.Condition(
+        lw._WitnessedLock(threading.RLock(), "cv", w, reentrant=True))
+    with cv:
+        cv.wait(timeout=0.01)
+    assert cv.acquire(blocking=False)
+    cv.release()
+    w.assert_acyclic()
+
+
+def test_witness_factories_gate_on_env(monkeypatch):
+    monkeypatch.delenv("ARCHLINT_WITNESS", raising=False)
+    assert not lw.witness_enabled()
+    assert not isinstance(lw.make_lock("x"), lw._WitnessedLock)
+    assert not isinstance(lw.make_rlock("x"), lw._WitnessedLock)
+    assert isinstance(lw.make_condition("x"), threading.Condition)
+
+    monkeypatch.setenv("ARCHLINT_WITNESS", "1")
+    assert lw.witness_enabled()
+    assert isinstance(lw.make_lock("x"), lw._WitnessedLock)
+    assert isinstance(lw.make_rlock("x"), lw._WitnessedLock)
+    cv = lw.make_condition("x")
+    assert isinstance(cv, threading.Condition)
+    assert isinstance(cv._lock, lw._WitnessedLock)
+
+
+def test_witness_reset_clears_edges():
+    w = lw.LockWitness()
+    a = lw._WitnessedLock(threading.Lock(), "A", w)
+    b = lw._WitnessedLock(threading.Lock(), "B", w)
+    with a:
+        with b:
+            pass
+    assert w.edges()
+    w.reset()
+    assert w.edges() == set()
+
+
+# ---------------------------------------------------------------------------
+# Pinned regressions for defects the passes surfaced
+# ---------------------------------------------------------------------------
+
+
+def _make_local(ds):
+    return VizierService(ds, InProcessPythia(ds))
+
+
+def _assert_blocks_on_study_lock(svc, study_name, call):
+    lock = svc._study_lock(study_name)
+    assert lock.acquire(timeout=1.0)
+    done = threading.Event()
+
+    def runner():
+        call()
+        done.set()
+
+    t = threading.Thread(target=runner, daemon=True)
+    t.start()
+    try:
+        assert not done.wait(0.25), "handler ran without the study lock"
+    finally:
+        lock.release()
+    assert done.wait(3.0), "handler never completed after lock release"
+    t.join(timeout=1.0)
+
+
+def test_set_study_state_takes_study_lock(basic_config):
+    # Defect: SetStudyState did an unlocked read-modify-write; racing an
+    # UpdateMetadata/_apply_delta_locked writer resurrected a stale study
+    # snapshot (archlint unguarded-study-write).
+    ds = InMemoryDatastore()
+    svc = _make_local(ds)
+    client = VizierClient.load_or_create_study(
+        "lock-set", basic_config, client_id="c", target=svc)
+    _assert_blocks_on_study_lock(
+        svc, client.study_name,
+        lambda: svc.SetStudyState(
+            {"name": client.study_name, "state": StudyState.INACTIVE.value}))
+    assert ds.get_study(client.study_name).state == StudyState.INACTIVE
+    svc.shutdown()
+
+
+def test_update_metadata_takes_study_lock(basic_config):
+    ds = InMemoryDatastore()
+    svc = _make_local(ds)
+    client = VizierClient.load_or_create_study(
+        "lock-md", basic_config, client_id="c", target=svc)
+    delta = MetadataDelta()
+    delta.assign("user", "k", "v")
+    _assert_blocks_on_study_lock(
+        svc, client.study_name,
+        lambda: svc.UpdateMetadata(
+            {"name": client.study_name, "delta": delta.to_proto()}))
+    svc.shutdown()
+
+
+def test_early_stop_failure_carries_invalid_argument(basic_config):
+    # Defect: _run_early_stop_op collapsed every failure to INTERNAL, making
+    # a permanent PolicyConstructionError (INVALID_ARGUMENT) look retryable
+    # (archlint swallowed-status-code).
+    ds = InMemoryDatastore()
+    svc = _make_local(ds)
+    client = VizierClient.load_or_create_study(
+        "es-code", basic_config, client_id="c", target=svc)
+    (trial,) = client.get_suggestions(count=1)
+    study = ds.get_study(client.study_name)
+    study.study_config.algorithm = "NO_SUCH_ALGORITHM"
+    ds.update_study(study)
+    op = svc.CheckTrialEarlyStoppingState(
+        {"trial_name": f"{client.study_name}/trials/{trial.id}"})["operation"]
+    deadline = time.time() + 5.0
+    while not op.get("done") and time.time() < deadline:
+        time.sleep(0.01)
+        op = svc.GetOperation({"name": op["name"]})["operation"]
+    assert op.get("done"), "early-stop op never completed"
+    assert op["error"]["code"] == StatusCode.INVALID_ARGUMENT
+    svc.shutdown()
+
+
+class _CodedError(Exception):
+    def __init__(self, code):
+        super().__init__("carried")
+        self.code = code
+
+
+def _raise(e):
+    raise e
+
+
+def test_batch_suggest_preserves_carried_status_code():
+    # Defect: PythiaBatchSuggest hard-coded INTERNAL per failed study, so the
+    # remote topology retried permanent config errors the local path failed
+    # fast (archlint swallowed-status-code).
+    servicer = PythiaServicer("127.0.0.1:9")  # never dialed in this test
+    servicer._load_many = lambda rpc, names: (
+        {n: ("cfg", "desc", []) for n in names}, {})
+    servicer._suggest_one = lambda rpc, entry, total, context: _raise(
+        _CodedError(StatusCode.INVALID_ARGUMENT))
+    resp = servicer.PythiaBatchSuggest(
+        {"requests": [{"study_name": "s", "count": 1}]})
+    assert resp["results"][0]["error"]["code"] == StatusCode.INVALID_ARGUMENT
+
+    servicer._suggest_one = lambda rpc, entry, total, context: _raise(
+        ValueError("no code attached"))
+    resp = servicer.PythiaBatchSuggest(
+        {"requests": [{"study_name": "s", "count": 1}]})
+    assert resp["results"][0]["error"]["code"] == StatusCode.INTERNAL
+    servicer.close()
+
+
+def test_dispatch_duck_types_carried_code():
+    svc = Servicer()
+    svc.expose("Coded", lambda params: _raise(
+        _CodedError(StatusCode.NOT_FOUND)))
+    svc.expose("Plain", lambda params: _raise(ValueError("boom")))
+    resp = svc.dispatch({"id": 1, "method": "Coded", "params": {}})
+    assert not resp["ok"]
+    assert resp["error"]["code"] == StatusCode.NOT_FOUND
+    resp = svc.dispatch({"id": 2, "method": "Plain", "params": {}})
+    assert resp["error"]["code"] == StatusCode.INTERNAL
+
+
+def test_work_queue_lease_loop_still_reclaims_and_rejects_stale_ack():
+    # Pins the lease() restructure (reclaim warnings now flush outside the
+    # CV): expiry still requeues, the stale holder's ack is still a no-op.
+    q = ShardedWorkQueue(n_shards=1, lease_timeout=0.05)
+    q.enqueue({"study_name": "s", "name": "op1"})
+    l1 = q.lease(worker_id=0, timeout=1.0)
+    assert l1 is not None and [op["name"] for op in l1.ops] == ["op1"]
+    time.sleep(0.08)
+    l2 = q.lease(worker_id=1, timeout=1.0)
+    assert l2 is not None and [op["name"] for op in l2.ops] == ["op1"]
+    assert q.ack(l1) is False
+    assert q.ack(l2) is True
+    assert q.pending_count() == 0
+
+
+def test_work_queue_lease_timeout_returns_none_promptly():
+    q = ShardedWorkQueue(n_shards=1)
+    t0 = time.monotonic()
+    assert q.lease(worker_id=0, timeout=0.1) is None
+    assert time.monotonic() - t0 < 1.0
+    q.close()
+    assert q.lease(worker_id=0, timeout=1.0) is None

@@ -1,0 +1,19 @@
+"""archlint — AST-based architecture-invariant analyzer for this repo.
+
+Four passes, each encoding one ROADMAP "Architecture invariants" entry as a
+machine-checked rule set (see README.md for the rule catalog):
+
+* lock_pass    — lock discipline in the sharded service tier
+* retrace_pass — retrace hygiene in the Pythia engine + Pallas kernels
+* schema_pass  — reserved-namespace writes + STATE_SCHEMA_VERSION bumps
+* error_pass   — error/status-code discipline in per-item isolation paths
+
+The static passes are complemented by a runtime lock-order witness
+(``repro.service._lockwitness``) that records the real acquisition graph
+during the fault-injection suite and fails on cycles — the dynamic check
+catches cross-thread orders the static call graph cannot see.
+"""
+
+from archlint.core import Finding, analyze_paths, load_baseline  # noqa: F401
+
+__all__ = ["Finding", "analyze_paths", "load_baseline"]

@@ -1,0 +1,16 @@
+"""``python tools/archlint`` entry point.
+
+Run as a directory, sys.path[0] is tools/archlint itself, so the package
+is not importable until its parent (tools/) is on the path.
+"""
+
+import sys
+from pathlib import Path
+
+_TOOLS = str(Path(__file__).resolve().parent.parent)
+if _TOOLS not in sys.path:
+    sys.path.insert(0, _TOOLS)
+
+from archlint.cli import main  # noqa: E402
+
+sys.exit(main())

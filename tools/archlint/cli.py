@@ -1,0 +1,63 @@
+"""archlint command line.
+
+    python tools/archlint [--fast] [--baseline tools/archlint/baseline.txt]
+                          [--diff-base REF] [paths...]
+
+Exit status: 0 when every finding is suppressed or baselined, 1 otherwise
+(and 2 on usage errors). ``--fast`` skips the git subprocess (the schema
+version diff) so ``make smoke`` stays instant; every AST pass still runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+from typing import List, Optional
+
+REPO_ROOT = Path(__file__).resolve().parent.parent.parent
+if str(REPO_ROOT / "tools") not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT / "tools"))
+
+from archlint import core  # noqa: E402
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(prog="archlint", description=__doc__)
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs to analyze (default: src/repro)")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the git-based schema-version check")
+    ap.add_argument("--baseline", type=Path,
+                    default=REPO_ROOT / "tools" / "archlint" / "baseline.txt",
+                    help="accepted-findings file (default: the checked-in "
+                         "baseline, which must stay empty)")
+    ap.add_argument("--diff-base", default="HEAD",
+                    help="git ref for the schema-version diff (default HEAD)")
+    ap.add_argument("--root", type=Path, default=REPO_ROOT)
+    args = ap.parse_args(argv)
+
+    t0 = time.monotonic()
+    paths = None
+    if args.paths:
+        paths = []
+        for p in args.paths:
+            paths.extend(core.collect_files(args.root, p))
+    findings, _sources = core.analyze_paths(
+        args.root, paths, fast=args.fast, diff_base=args.diff_base)
+
+    baseline = core.load_baseline(args.baseline)
+    new = [f for f in findings if f.baseline_key() not in baseline]
+    for f in new:
+        print(f.render())
+    dt = time.monotonic() - t0
+    n_base = len(findings) - len(new)
+    tail = f" ({n_base} baselined)" if n_base else ""
+    print(f"archlint: {len(new)} finding(s){tail} in {dt:.2f}s",
+          file=sys.stderr)
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

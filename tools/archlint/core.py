@@ -1,0 +1,177 @@
+"""archlint core: findings, suppressions, baselines, and the pass runner.
+
+A *finding* is (path, line, rule, message). Suppression is per-line via
+
+    # archlint: disable=rule-id[,rule-id]  <reason>
+
+on the offending line itself or on a standalone comment line directly above
+it. A suppression with no reason text is itself reported
+(``suppression-missing-reason``) so every disable stays auditable in review.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+SUPPRESS_RE = re.compile(
+    r"#\s*archlint:\s*disable="
+    r"([A-Za-z0-9_\-]+(?:\s*,\s*[A-Za-z0-9_\-]+)*)(.*)$")
+
+RULE_SUPPRESSION_NO_REASON = "suppression-missing-reason"
+RULE_SYNTAX_ERROR = "syntax-error"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str          # repo-relative, forward slashes
+    line: int
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+    def baseline_key(self) -> str:
+        # line numbers drift; baseline entries pin (path, rule, message)
+        return f"{self.path}::{self.rule}::{self.message}"
+
+
+@dataclasses.dataclass
+class SourceFile:
+    """One parsed module, shared by every pass (parse once)."""
+
+    path: Path          # absolute
+    rel: str            # repo-relative display path
+    text: str
+    lines: List[str]
+    tree: Optional[ast.Module]          # None when the file fails to parse
+    syntax_error: Optional[str] = None
+
+    @classmethod
+    def load(cls, path: Path, root: Path) -> "SourceFile":
+        text = path.read_text(encoding="utf-8")
+        try:
+            rel = str(path.resolve().relative_to(root.resolve()))
+        except ValueError:
+            rel = str(path)
+        rel = rel.replace("\\", "/")
+        try:
+            tree = ast.parse(text, filename=str(path))
+            err = None
+        except SyntaxError as e:
+            tree, err = None, f"{e.msg} (line {e.lineno})"
+        return cls(path=path, rel=rel, text=text,
+                   lines=text.splitlines(), tree=tree, syntax_error=err)
+
+    # -- suppressions --------------------------------------------------------
+    def suppressions(self) -> Dict[int, Set[str]]:
+        """line -> suppressed rule ids (covering that line)."""
+        out: Dict[int, Set[str]] = {}
+        for i, line in enumerate(self.lines, start=1):
+            m = SUPPRESS_RE.search(line)
+            if not m:
+                continue
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            out.setdefault(i, set()).update(rules)
+            if line.lstrip().startswith("#"):
+                # standalone comment: covers the next non-comment line (the
+                # reason text may continue over several comment lines)
+                j = i + 1
+                while j <= len(self.lines) \
+                        and self.lines[j - 1].lstrip().startswith("#"):
+                    out.setdefault(j, set()).update(rules)
+                    j += 1
+                out.setdefault(j, set()).update(rules)
+        return out
+
+    def suppression_reason_findings(self) -> List[Finding]:
+        out = []
+        for i, line in enumerate(self.lines, start=1):
+            m = SUPPRESS_RE.search(line)
+            if m and not m.group(2).strip():
+                out.append(Finding(
+                    self.rel, i, RULE_SUPPRESSION_NO_REASON,
+                    "archlint disable comment has no reason string"))
+        return out
+
+
+def collect_files(root: Path, sub: str = "") -> List[Path]:
+    base = root / sub if sub else root
+    if base.is_file():
+        return [base]
+    return sorted(p for p in base.rglob("*.py") if p.is_file())
+
+
+def load_sources(paths: Iterable[Path], root: Path) -> List[SourceFile]:
+    return [SourceFile.load(p, root) for p in paths]
+
+
+def filter_suppressed(findings: Sequence[Finding],
+                      sources: Sequence[SourceFile]) -> List[Finding]:
+    by_rel = {s.rel: s.suppressions() for s in sources}
+    kept = []
+    for f in findings:
+        rules = by_rel.get(f.path, {}).get(f.line, set())
+        if f.rule in rules or "all" in rules:
+            continue
+        kept.append(f)
+    return kept
+
+
+def load_baseline(path: Path) -> Set[str]:
+    """Baseline file: one ``Finding.baseline_key()`` per line; '#' comments."""
+    if not path.exists():
+        return set()
+    out = set()
+    for line in path.read_text(encoding="utf-8").splitlines():
+        line = line.strip()
+        if line and not line.startswith("#"):
+            out.add(line)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Pass runner
+# ---------------------------------------------------------------------------
+
+
+def analyze_paths(
+    root: Path,
+    paths: Optional[Sequence[Path]] = None,
+    *,
+    fast: bool = False,
+    diff_base: Optional[str] = "HEAD",
+) -> Tuple[List[Finding], List[SourceFile]]:
+    """Run every pass over ``paths`` (default: src/repro under root).
+
+    ``fast`` skips the git-diff schema check (the only subprocess) — the
+    syntax-only mode ``make smoke`` runs. Returns (unsuppressed findings,
+    parsed sources).
+    """
+    from archlint import error_pass, lock_pass, retrace_pass, schema_pass
+
+    if paths is None:
+        paths = collect_files(root, "src/repro")
+    sources = load_sources(paths, root)
+
+    findings: List[Finding] = []
+    for s in sources:
+        if s.syntax_error is not None:
+            findings.append(Finding(s.rel, 1, RULE_SYNTAX_ERROR,
+                                    f"cannot parse: {s.syntax_error}"))
+        findings.extend(s.suppression_reason_findings())
+    parsed = [s for s in sources if s.tree is not None]
+
+    findings.extend(lock_pass.run(parsed))
+    findings.extend(retrace_pass.run(parsed))
+    findings.extend(schema_pass.run(
+        parsed, root=root, diff_base=None if fast else diff_base))
+    findings.extend(error_pass.run(parsed))
+
+    findings = filter_suppressed(findings, parsed)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings, sources

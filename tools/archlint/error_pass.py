@@ -1,0 +1,210 @@
+"""Error-discipline pass over the per-item isolation paths.
+
+Scope: the service modules where one item's failure must become a status
+code on that item and nothing else (``operations.py``, ``vizier_service.py``,
+``work_queue.py``, ``pythia_service.py``, ``rpc.py``) — plus any fixture
+module handed in (scoping is by basename so tests can exercise the rules).
+
+Rules
+-----
+* ``bare-except``           — ``except:`` or ``except BaseException:`` in an
+  isolation path; it catches ``KeyboardInterrupt``/``SystemExit`` and hides
+  which status the item should carry.
+* ``swallowed-status-code`` — an ``except Exception`` handler that
+  hard-codes ``StatusCode.INTERNAL`` without consulting the exception's
+  carried code (``e.code`` / ``getattr(e, "code", ...)`` /
+  ``fail_operation_from_exception`` / ``_fail_op``). Policy-construction
+  errors carry ``INVALID_ARGUMENT``; collapsing them to ``INTERNAL`` turns
+  a permanent client error into something retried forever.
+* ``unmapped-service-raise``— a ``raise X(...)`` inside an RPC handler
+  (PascalCase method of a service class) where ``X`` does not carry a
+  gRPC-style code (no ``code`` attribute statically visible). Handlers
+  raise ``VizierRpcError`` (or a carrier) so ``Servicer.dispatch`` can map
+  the failure; anything else surfaces as an anonymous ``INTERNAL``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Sequence, Set
+
+from archlint.core import Finding, SourceFile
+
+RULE_BARE = "bare-except"
+RULE_SWALLOW = "swallowed-status-code"
+RULE_UNMAPPED = "unmapped-service-raise"
+
+ISOLATION_BASENAMES = {
+    "operations.py", "vizier_service.py", "work_queue.py",
+    "pythia_service.py", "rpc.py",
+}
+
+# builtins the dispatch layer has no mapping for (ValueError et al. become
+# INTERNAL); NotImplementedError is the abstract-method marker and exempt.
+EXEMPT_RAISES = {"NotImplementedError", "StopIteration"}
+
+CODE_CONSULT_CALLS = {"fail_operation_from_exception", "_fail_op"}
+
+
+def _code_carrier_classes(sources: Sequence[SourceFile]) -> Set[str]:
+    """Exception classes that statically carry a ``code`` attribute."""
+    carriers: Set[str] = {"VizierRpcError"}
+    by_name = {}
+    for src in sources:
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.ClassDef):
+                by_name[node.name] = node
+    for name, node in by_name.items():
+        if _defines_code(node):
+            carriers.add(name)
+    # subclasses of carriers inherit the attribute
+    changed = True
+    while changed:
+        changed = False
+        for name, node in by_name.items():
+            if name in carriers:
+                continue
+            for b in node.bases:
+                base = b.attr if isinstance(b, ast.Attribute) else \
+                    (b.id if isinstance(b, ast.Name) else None)
+                if base in carriers:
+                    carriers.add(name)
+                    changed = True
+    return carriers
+
+
+def _defines_code(cls: ast.ClassDef) -> bool:
+    for stmt in cls.body:
+        if isinstance(stmt, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "code"
+                for t in stmt.targets):
+            return True
+        if isinstance(stmt, ast.AnnAssign) \
+                and isinstance(stmt.target, ast.Name) \
+                and stmt.target.id == "code":
+            return True
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and stmt.name == "__init__":
+            for n in ast.walk(stmt):
+                if isinstance(n, ast.Assign) and any(
+                        isinstance(t, ast.Attribute) and t.attr == "code"
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == "self"
+                        for t in n.targets):
+                    return True
+    return False
+
+
+def _is_exception_type(expr: Optional[ast.AST], names: Set[str]) -> bool:
+    """Does the except clause include any of ``names``?"""
+    if expr is None:
+        return False
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Name) and node.id in names:
+            return True
+        if isinstance(node, ast.Attribute) and node.attr in names:
+            return True
+    return False
+
+
+def _handler_consults_code(handler: ast.ExceptHandler) -> bool:
+    exc_name = handler.name
+    for node in ast.walk(handler):
+        if isinstance(node, ast.Attribute) and node.attr == "code":
+            return True
+        if isinstance(node, ast.Call):
+            fname = None
+            if isinstance(node.func, ast.Name):
+                fname = node.func.id
+            elif isinstance(node.func, ast.Attribute):
+                fname = node.func.attr
+            if fname in CODE_CONSULT_CALLS:
+                return True
+            if fname == "getattr" and node.args:
+                first = node.args[0]
+                if isinstance(first, ast.Name) and first.id == exc_name:
+                    if len(node.args) > 1 \
+                            and isinstance(node.args[1], ast.Constant) \
+                            and node.args[1].value == "code":
+                        return True
+        if isinstance(node, ast.Raise) and node.exc is None:
+            return True                          # re-raise preserves the code
+    return False
+
+
+def _hardcodes_internal(handler: ast.ExceptHandler) -> Optional[int]:
+    for node in ast.walk(handler):
+        if isinstance(node, ast.Attribute) and node.attr == "INTERNAL":
+            chain_base = node.value
+            if isinstance(chain_base, ast.Name) \
+                    and chain_base.id == "StatusCode":
+                return node.lineno
+    return None
+
+
+def _except_findings(src: SourceFile) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(src.tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        if node.type is None or _is_exception_type(
+                node.type, {"BaseException"}):
+            out.append(Finding(
+                src.rel, node.lineno, RULE_BARE,
+                "bare/BaseException except in a per-item isolation path "
+                "swallows the item's status code (catch Exception and map "
+                "the carried code)"))
+            continue
+        if _is_exception_type(node.type, {"Exception"}):
+            line = _hardcodes_internal(node)
+            if line is not None and not _handler_consults_code(node):
+                out.append(Finding(
+                    src.rel, line, RULE_SWALLOW,
+                    "except Exception hard-codes StatusCode.INTERNAL "
+                    "without consulting the carried code (use "
+                    "fail_operation_from_exception or getattr(e, 'code'))"))
+    return out
+
+
+def _raise_findings(src: SourceFile, carriers: Set[str]) -> List[Finding]:
+    out: List[Finding] = []
+    for cls in ast.walk(src.tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        for fn in cls.body:
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not fn.name[:1].isupper():
+                continue                        # RPC handlers are PascalCase
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Raise) or node.exc is None:
+                    continue
+                exc = node.exc
+                name = None
+                if isinstance(exc, ast.Call):
+                    if isinstance(exc.func, ast.Name):
+                        name = exc.func.id
+                    elif isinstance(exc.func, ast.Attribute):
+                        name = exc.func.attr
+                elif isinstance(exc, ast.Name):
+                    continue                    # re-raise of a stored exc
+                if name is None or name in EXEMPT_RAISES or name in carriers:
+                    continue
+                out.append(Finding(
+                    src.rel, node.lineno, RULE_UNMAPPED,
+                    f"RPC handler {cls.name}.{fn.name} raises {name} which "
+                    f"carries no status code; raise VizierRpcError (or a "
+                    f"code-carrying error) so dispatch can map it"))
+    return out
+
+
+def run(sources: Sequence[SourceFile]) -> List[Finding]:
+    carriers = _code_carrier_classes(sources)
+    findings: List[Finding] = []
+    for src in sources:
+        base = src.rel.rsplit("/", 1)[-1]
+        if base not in ISOLATION_BASENAMES:
+            continue
+        findings.extend(_except_findings(src))
+        findings.extend(_raise_findings(src, carriers))
+    return findings

@@ -1,0 +1,584 @@
+"""Lock-discipline pass (rules ``lock-*``, ``queue-*``, ``unguarded-*``).
+
+Scope: the sharded service tier (``src/repro/service/``; any file defining
+classes that hold ``threading`` primitives is analyzed the same way, so the
+fixture tests can exercise the rules on synthetic modules).
+
+Model
+-----
+* A *lock node* is ``(ClassName, attr)`` for ``self.attr = threading.Lock()/
+  RLock()/Condition()`` (or the ``_lockwitness.make_*`` factories), plus
+  ``(ClassName, method())`` for lock-returning helper methods (name contains
+  "lock", e.g. ``VizierService._study_lock``) used as a ``with`` context.
+* Intraprocedural ``with`` tracking gives the held-lock stack at every call
+  site; an interprocedural fixpoint over resolvable calls (``self.m()``,
+  ``self.attr.m()`` with the attr's class inferred from ``__init__``
+  annotations or direct construction, ``super().m()``) propagates which
+  locks each method eventually acquires and whether it may block.
+
+Rules
+-----
+* ``lock-order-cycle``      — the "A held while acquiring B" graph has a
+  cycle (includes a self-acquire of a non-reentrant Lock).
+* ``lock-blocking-call``    — a blocking operation (time.sleep, socket
+  send/recv, RPC call, thread join, Event.wait without timeout, logging
+  I/O, a Pythia dispatch) while holding a lock. Waiting on the condition
+  variable you hold is the sanctioned exception.
+* ``queue-datastore-call``  — a datastore method invoked while holding a
+  work-queue lock (the queue CV is the service's hottest lock; datastore
+  I/O under it serializes every shard).
+* ``unguarded-study-write`` — in classes with a per-study lock helper, a
+  study/trial read-modify-write datastore call outside any study-lock
+  block (methods named ``*_locked`` assert the caller holds it and are
+  exempt).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from archlint.core import Finding, SourceFile
+
+RULE_ORDER = "lock-order-cycle"
+RULE_BLOCKING = "lock-blocking-call"
+RULE_QUEUE_DS = "queue-datastore-call"
+RULE_UNGUARDED = "unguarded-study-write"
+
+LOCK_FACTORY_NAMES = {"Lock": "lock", "RLock": "rlock",
+                      "Condition": "condition", "Semaphore": "lock",
+                      "BoundedSemaphore": "lock"}
+WITNESS_FACTORIES = {"make_lock": "lock", "make_rlock": "rlock",
+                     "make_condition": "condition"}
+
+# datastore RMW writes that must run under the per-study lock
+STUDY_WRITE_METHODS = {"update_study", "update_trial", "apply_metadata_delta"}
+
+LOG_METHODS = {"debug", "info", "warning", "error", "exception", "critical"}
+SOCKET_METHODS = {"sendall", "sendto", "recv", "recv_into", "connect",
+                  "accept", "makefile"}
+RPC_RECEIVER_HINTS = ("rpc", "client", "transport", "pythia", "channel",
+                     "stub")
+
+LockNode = Tuple[str, str]  # (class name, attr or "method()")
+
+
+def _attr_chain(node: ast.AST) -> Optional[List[str]]:
+    """x.y.z -> ["x", "y", "z"]; None for anything not a pure name chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return list(reversed(parts))
+    return None
+
+
+def _is_lock_factory(call: ast.AST) -> Optional[str]:
+    """threading.Lock() / Lock() / _lockwitness.make_lock(...) -> kind."""
+    if not isinstance(call, ast.Call):
+        return None
+    chain = _attr_chain(call.func)
+    if not chain:
+        return None
+    name = chain[-1]
+    if name in LOCK_FACTORY_NAMES:
+        return LOCK_FACTORY_NAMES[name]
+    if name in WITNESS_FACTORIES:
+        return WITNESS_FACTORIES[name]
+    return None
+
+
+@dataclasses.dataclass
+class ClassInfo:
+    name: str
+    rel: str
+    bases: List[str]
+    lock_attrs: Dict[str, str]                  # attr -> kind
+    attr_types: Dict[str, str]                  # attr -> class name
+    lock_methods: Set[str]                      # lock-returning helpers
+    methods: Dict[str, ast.FunctionDef]
+
+
+@dataclasses.dataclass
+class MethodSummary:
+    qual: Tuple[str, str]                       # (class, method)
+    rel: str
+    acquires: Set[LockNode] = dataclasses.field(default_factory=set)
+    # blocking ops reachable in this method when *no* lock is required:
+    # (reason, rel, line)
+    blocking: Set[Tuple[str, str, int]] = dataclasses.field(default_factory=set)
+    # (held locks at site, callee key, rel, line)
+    calls: List[Tuple[Tuple[LockNode, ...], Tuple[str, str], str, int]] = \
+        dataclasses.field(default_factory=list)
+    # direct edges recorded while analyzing: (held, acquired, rel, line)
+    edges: List[Tuple[LockNode, LockNode, str, int]] = \
+        dataclasses.field(default_factory=list)
+    # direct blocking ops observed under a held lock: (held, reason, line)
+    blocked_sites: List[Tuple[LockNode, str, str, int]] = \
+        dataclasses.field(default_factory=list)
+
+
+def _collect_classes(sources: Sequence[SourceFile]) -> Dict[str, ClassInfo]:
+    classes: Dict[str, ClassInfo] = {}
+    for src in sources:
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            methods = {
+                n.name: n for n in node.body
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+            }
+            lock_attrs: Dict[str, str] = {}
+            attr_types: Dict[str, str] = {}
+            for fn in methods.values():
+                # param annotations: def __init__(self, ds: Datastore)
+                ann: Dict[str, str] = {}
+                for arg in fn.args.args + fn.args.kwonlyargs:
+                    if arg.annotation is not None:
+                        chain = _attr_chain(arg.annotation)
+                        if chain:
+                            ann[arg.arg] = chain[-1]
+                for stmt in ast.walk(fn):
+                    if not isinstance(stmt, ast.Assign) or len(stmt.targets) != 1:
+                        continue
+                    tgt = stmt.targets[0]
+                    if not (isinstance(tgt, ast.Attribute)
+                            and isinstance(tgt.value, ast.Name)
+                            and tgt.value.id == "self"):
+                        continue
+                    kind = _is_lock_factory(stmt.value)
+                    if kind:
+                        lock_attrs[tgt.attr] = kind
+                        continue
+                    if isinstance(stmt.value, ast.Name) and stmt.value.id in ann:
+                        attr_types[tgt.attr] = ann[stmt.value.id]
+                    elif isinstance(stmt.value, ast.Call):
+                        chain = _attr_chain(stmt.value.func)
+                        if chain and chain[-1][:1].isupper():
+                            attr_types[tgt.attr] = chain[-1]
+            lock_methods = {
+                name for name, fn in methods.items()
+                if "lock" in name.lower() and _returns_lockish(fn)
+            }
+            bases = []
+            for b in node.bases:
+                chain = _attr_chain(b)
+                if chain:
+                    bases.append(chain[-1])
+            classes[node.name] = ClassInfo(
+                name=node.name, rel=src.rel, bases=bases,
+                lock_attrs=lock_attrs, attr_types=attr_types,
+                lock_methods=lock_methods, methods=methods)
+    return classes
+
+
+def _returns_lockish(fn: ast.FunctionDef) -> bool:
+    """Heuristic: the helper hands out a threading primitive."""
+    if fn.returns is not None:
+        chain = _attr_chain(fn.returns)
+        if chain and chain[-1] in LOCK_FACTORY_NAMES:
+            return True
+    for node in ast.walk(fn):
+        if _is_lock_factory(node):
+            return True
+    return False
+
+
+def _subclass_map(classes: Dict[str, ClassInfo]) -> Dict[str, Set[str]]:
+    subs: Dict[str, Set[str]] = {name: {name} for name in classes}
+    changed = True
+    while changed:
+        changed = False
+        for info in classes.values():
+            for base in info.bases:
+                if base in subs and info.name not in subs[base]:
+                    subs[base].add(info.name)
+                    changed = True
+                # transitive: everything under info.name flows up to base
+                if base in subs and not subs[info.name] <= subs[base]:
+                    subs[base] |= subs[info.name]
+                    changed = True
+    return subs
+
+
+class _MethodAnalyzer(ast.NodeVisitor):
+    """Walks one method tracking the held-lock stack."""
+
+    def __init__(self, cls: ClassInfo, fn: ast.FunctionDef, rel: str,
+                 classes: Dict[str, ClassInfo]):
+        self.cls = cls
+        self.fn = fn
+        self.rel = rel
+        self.classes = classes
+        self.held: List[Tuple[LockNode, str]] = []   # (node, kind)
+        self.summary = MethodSummary(qual=(cls.name, fn.name), rel=rel)
+
+    # -- lock-expression classification -------------------------------------
+    def _lock_of_expr(self, expr: ast.AST) -> Optional[Tuple[LockNode, str]]:
+        chain = _attr_chain(expr)
+        if chain and len(chain) == 2 and chain[0] == "self":
+            attr = chain[1]
+            if attr in self.cls.lock_attrs:
+                return (self.cls.name, attr), self.cls.lock_attrs[attr]
+        if isinstance(expr, ast.Call):
+            chain = _attr_chain(expr.func)
+            if (chain and len(chain) == 2 and chain[0] == "self"
+                    and chain[1] in self.cls.lock_methods):
+                return (self.cls.name, chain[1] + "()"), "lock"
+        return None
+
+    def _record_acquire(self, node: LockNode, kind: str, line: int) -> None:
+        self.summary.acquires.add(node)
+        for held, held_kind in self.held:
+            if held == node:
+                if kind == "lock" and held_kind == "lock":
+                    self.summary.edges.append((held, node, self.rel, line))
+                continue
+            self.summary.edges.append((held, node, self.rel, line))
+
+    # -- blocking classification --------------------------------------------
+    def _blocking_reason(self, call: ast.Call) -> Optional[str]:
+        func = call.func
+        if isinstance(func, ast.Name):
+            if func.id == "sleep":
+                return "time.sleep"
+            if func.id == "input":
+                return "console input"
+            return None
+        if not isinstance(func, ast.Attribute):
+            return None
+        attr = func.attr
+        recv = func.value
+        recv_chain = _attr_chain(recv)
+        if attr == "sleep" and recv_chain == ["time"]:
+            return "time.sleep"
+        if attr in SOCKET_METHODS:
+            return f"socket .{attr}()"
+        if attr == "join":
+            if isinstance(recv, ast.Constant):
+                return None                      # ",".join / b"".join
+            if recv_chain and "path" in recv_chain:
+                return None                      # os.path.join
+            return "blocking .join()"
+        if attr == "wait":
+            held_exprs = {h for h, _ in self.held}
+            lockish = self._lock_of_expr(recv)
+            if lockish is not None and lockish[0] in held_exprs:
+                return None                      # cv.wait on the held CV
+            has_timeout = bool(call.args) or any(
+                kw.arg == "timeout" for kw in call.keywords)
+            if has_timeout:
+                return None                      # bounded wait
+            return "unbounded .wait()"
+        if attr in {"call", "call_many"} and recv_chain:
+            leaf = recv_chain[-1].lower()
+            if any(h in leaf for h in RPC_RECEIVER_HINTS):
+                return "RPC send"
+        if attr in {"suggest", "suggest_batch", "early_stop"} and recv_chain:
+            if recv_chain[-1] in {"_pythia", "pythia"}:
+                return "Pythia dispatch"
+        if attr in LOG_METHODS and recv_chain:
+            if recv_chain[0] in {"log", "logger", "logging"}:
+                return f"logging I/O (log.{attr})"
+        return None
+
+    # -- callee resolution ---------------------------------------------------
+    def _callee_key(self, call: ast.Call) -> Optional[Tuple[str, str]]:
+        """("self", m) | ("super", m) | (AttrType, m).
+
+        Self/super calls are resolved context-sensitively later — the
+        receiver class constrains dispatch, which is what keeps sibling
+        subclasses (the two datastore backends) from creating phantom
+        cross-backend lock edges.
+        """
+        func = call.func
+        if not isinstance(func, ast.Attribute):
+            return None
+        if (isinstance(func.value, ast.Call)
+                and isinstance(func.value.func, ast.Name)
+                and func.value.func.id == "super"):
+            return ("super", func.attr)
+        chain = _attr_chain(func.value)
+        if not chain or chain[0] != "self":
+            return None
+        if len(chain) == 1:
+            return ("self", func.attr)
+        if len(chain) == 2:
+            t = self.cls.attr_types.get(chain[1])
+            if t:
+                return (t, func.attr)
+        return None
+
+    # -- visitors ------------------------------------------------------------
+    def visit_With(self, node: ast.With) -> None:
+        pushed = 0
+        for item in node.items:
+            # the context expression runs BEFORE the lock is held
+            self.visit(item.context_expr)
+            lockish = self._lock_of_expr(item.context_expr)
+            if lockish is not None:
+                ln, kind = lockish
+                self._record_acquire(ln, kind, item.context_expr.lineno)
+                self.held.append((ln, kind))
+                pushed += 1
+        for stmt in node.body:
+            self.visit(stmt)
+        for _ in range(pushed):
+            self.held.pop()
+
+    def visit_Call(self, node: ast.Call) -> None:
+        line = node.lineno
+        # .acquire() outside a with-statement: record the ordering edge
+        if isinstance(node.func, ast.Attribute) and node.func.attr == "acquire":
+            lockish = self._lock_of_expr(node.func.value)
+            if lockish is not None:
+                self._record_acquire(lockish[0], lockish[1], line)
+        reason = self._blocking_reason(node)
+        if reason is not None:
+            if self.held:
+                self.summary.blocked_sites.append(
+                    (self.held[-1][0], reason, self.rel, line))
+            else:
+                self.summary.blocking.add((reason, self.rel, line))
+        key = self._callee_key(node)
+        if key is not None:
+            held = tuple(h for h, _ in self.held)
+            self.summary.calls.append((held, key, self.rel, line))
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        if node is not self.fn:
+            return              # nested defs analyzed only if called — skip
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+
+def _mro(cname: str, classes: Dict[str, ClassInfo]) -> List[str]:
+    """DFS first-wins linearization over the classes we can see."""
+    out: List[str] = []
+
+    def walk(c: str) -> None:
+        if c in out or c not in classes:
+            return
+        out.append(c)
+        for b in classes[c].bases:
+            walk(b)
+
+    walk(cname)
+    return out
+
+
+def _lookup(receiver: str, method: str,
+            classes: Dict[str, ClassInfo]) -> Optional[str]:
+    for c in _mro(receiver, classes):
+        if method in classes[c].methods:
+            return c
+    return None
+
+
+Ctx = Tuple[str, str, str]  # (receiver class, defining class, method)
+
+
+def _targets(ctx: Ctx, key: Tuple[str, str], classes: Dict[str, ClassInfo],
+             subs: Dict[str, Set[str]]) -> List[Ctx]:
+    """Resolve a call key in a receiver context.
+
+    The receiver class constrains dispatch: ``self.m()`` with receiver R
+    runs exactly R's implementation of m (each concrete class gets its own
+    top-level context, so subclass overrides are covered there) — this is
+    what keeps sibling subclasses, e.g. the two datastore backends, from
+    creating phantom cross-backend lock edges.
+    """
+    receiver, definer, _ = ctx
+    kind, m = key
+    out: List[Ctx] = []
+    if kind == "self":
+        d = _lookup(receiver, m, classes)
+        if d is not None:
+            out.append((receiver, d, m))
+    elif kind == "super":
+        chain = _mro(definer, classes)
+        for c in chain[1:]:
+            if m in classes[c].methods:
+                out.append((receiver, c, m))
+                break
+    else:
+        for r in sorted(subs.get(kind, set())):
+            d = _lookup(r, m, classes)
+            if d is not None:
+                out.append((r, d, m))
+    return out
+
+
+def run(sources: Sequence[SourceFile]) -> List[Finding]:
+    classes = _collect_classes(sources)
+    subs = _subclass_map(classes)
+
+    summaries: Dict[Tuple[str, str], MethodSummary] = {}
+    for src in sources:
+        for cname, info in classes.items():
+            if info.rel != src.rel:
+                continue
+            for mname, fn in info.methods.items():
+                an = _MethodAnalyzer(info, fn, src.rel, classes)
+                an.visit(fn)
+                summaries[(cname, mname)] = an.summary
+
+    contexts: List[Ctx] = [
+        (r, c, m)
+        for r in classes
+        for c in _mro(r, classes)
+        for m in classes[c].methods
+    ]
+
+    # fixpoint: transitive acquisitions + blocking reachability per context
+    acquires: Dict[Ctx, Set[LockNode]] = {
+        ctx: set(summaries[(ctx[1], ctx[2])].acquires) for ctx in contexts}
+    blocking: Dict[Ctx, Set[Tuple[str, str, int]]] = {
+        ctx: set(summaries[(ctx[1], ctx[2])].blocking) for ctx in contexts}
+    changed = True
+    while changed:
+        changed = False
+        for ctx in contexts:
+            s = summaries[(ctx[1], ctx[2])]
+            for _held, key, _rel, _line in s.calls:
+                for tgt in _targets(ctx, key, classes, subs):
+                    if tgt == ctx or tgt not in acquires:
+                        continue
+                    if not acquires[tgt] <= acquires[ctx]:
+                        acquires[ctx] |= acquires[tgt]
+                        changed = True
+                    if not blocking[tgt] <= blocking[ctx]:
+                        blocking[ctx] |= blocking[tgt]
+                        changed = True
+
+    findings: Set[Finding] = set()
+    edges: Dict[Tuple[LockNode, LockNode], Tuple[str, int]] = {}
+
+    def note_edge(a: LockNode, b: LockNode, rel: str, line: int) -> None:
+        edges.setdefault((a, b), (rel, line))
+
+    kind_of: Dict[LockNode, str] = {}
+    for info in classes.values():
+        for attr, kind in info.lock_attrs.items():
+            kind_of[(info.name, attr)] = kind
+        for m in info.lock_methods:
+            kind_of[(info.name, m + "()")] = "lock"
+
+    # direct (intraprocedural) evidence: once per method body
+    for s in summaries.values():
+        for a, b, rel, line in s.edges:
+            note_edge(a, b, rel, line)
+        for held, reason, rel, line in s.blocked_sites:
+            findings.add(Finding(
+                rel, line, RULE_BLOCKING,
+                f"{reason} while holding {held[0]}.{held[1]}"))
+
+    # interprocedural evidence: per receiver context
+    for ctx in contexts:
+        s = summaries[(ctx[1], ctx[2])]
+        for held, key, rel, line in s.calls:
+            if not held:
+                continue
+            callee_acq: Set[LockNode] = set()
+            callee_blk: Set[Tuple[str, str, int]] = set()
+            callee_desc = key[1]
+            for tgt in _targets(ctx, key, classes, subs):
+                if tgt in acquires:
+                    callee_acq |= acquires[tgt]
+                    callee_blk |= blocking[tgt]
+                    callee_desc = f"{tgt[1]}.{key[1]}"
+            for acq in callee_acq:
+                for h in held:
+                    if h == acq:
+                        if kind_of.get(acq) == "lock":
+                            note_edge(h, acq, rel, line)
+                        continue
+                    note_edge(h, acq, rel, line)
+            for reason, brel, bline in callee_blk:
+                findings.add(Finding(
+                    rel, line, RULE_BLOCKING,
+                    f"call to {callee_desc} may block ({reason} at "
+                    f"{brel}:{bline}) while holding "
+                    f"{held[-1][0]}.{held[-1][1]}"))
+            queue_held = [h for h in held if "Queue" in h[0]]
+            if queue_held and _is_datastore_key(key, ctx[1], classes):
+                findings.add(Finding(
+                    rel, line, RULE_QUEUE_DS,
+                    f"datastore call {callee_desc} under queue lock "
+                    f"{queue_held[-1][0]}.{queue_held[-1][1]}"))
+
+    # lock-order cycles over the merged edge graph
+    graph: Dict[LockNode, Set[LockNode]] = {}
+    for (a, b), _site in edges.items():
+        graph.setdefault(a, set()).add(b)
+    for cycle in _find_cycles(graph):
+        pairs = list(zip(cycle, cycle[1:] + cycle[:1]))
+        rel, line = edges[pairs[0]]
+        desc = " -> ".join(f"{c}.{a}" for c, a in cycle + [cycle[0]])
+        findings.add(Finding(
+            rel, line, RULE_ORDER, f"lock-order cycle: {desc}"))
+
+    # unguarded study writes (classes exposing a per-study lock helper)
+    for (cname, mname), s in summaries.items():
+        info = classes[cname]
+        if not any(m.startswith("_study_lock") for m in info.lock_methods):
+            continue
+        if mname.endswith("_locked") or mname.startswith("__"):
+            continue
+        study_nodes = {(cname, m + "()") for m in info.lock_methods}
+        for held, key, rel, line in s.calls:
+            if key[1] not in STUDY_WRITE_METHODS:
+                continue
+            if not _is_datastore_key(key, cname, classes):
+                continue
+            if any(h in study_nodes for h in held):
+                continue
+            findings.add(Finding(
+                rel, line, RULE_UNGUARDED,
+                f"{key[1]} read-modify-write outside the per-study lock "
+                f"(take self._study_lock or rename the method *_locked)"))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule, f.message))
+
+
+def _is_datastore_key(key: Tuple[str, str], caller_cls: str,
+                      classes: Dict[str, ClassInfo]) -> bool:
+    t = caller_cls if key[0] in {"self", "super"} else key[0]
+    if "Datastore" in t:
+        return True
+    info = classes.get(t)
+    if not info:
+        return False
+    return any("Datastore" in c for c in _mro(t, classes))
+
+
+def _find_cycles(graph: Dict[LockNode, Set[LockNode]]
+                 ) -> List[List[LockNode]]:
+    """Simple cycles via DFS; self-loops included. Deduplicated by node set."""
+    cycles: List[List[LockNode]] = []
+    seen_sets: Set[frozenset] = set()
+    nodes = sorted(set(graph) | {b for vs in graph.values() for b in vs})
+    for start in nodes:
+        stack: List[LockNode] = []
+        on_stack: Set[LockNode] = set()
+
+        def dfs(n: LockNode) -> None:
+            stack.append(n)
+            on_stack.add(n)
+            for m in sorted(graph.get(n, ())):
+                if m == start and stack:
+                    key = frozenset(stack)
+                    if key not in seen_sets:
+                        seen_sets.add(key)
+                        cycles.append(list(stack))
+                elif m not in on_stack and m > start:
+                    dfs(m)
+            stack.pop()
+            on_stack.discard(n)
+
+        dfs(start)
+    return cycles

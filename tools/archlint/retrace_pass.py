@@ -1,0 +1,330 @@
+"""Retrace-hygiene pass over the Pythia engine + Pallas kernels.
+
+Scope: ``src/repro/pythia/`` and ``src/repro/kernels/`` (plus any fixture
+module handed to it). The engine invariant (ROADMAP "Engine rules") is that
+steady-state serving never retraces: jitted kernels see only bucket-padded
+shapes, and jit bodies never sync back to the host.
+
+Traced-function discovery handles every idiom used in this repo:
+
+* ``@jax.jit`` / ``@functools.partial(jax.jit, static_argnames=...)``
+  decorators (with ``partial`` imported bare as well);
+* module-level ``name = jax.jit(f)``, ``jax.jit(jax.vmap(f))``, and
+  ``jax.jit(lambda ...: ...)`` where ``f`` is defined in the same module;
+* nested ``def``s inside a traced body (traced transitively).
+
+Rules
+-----
+* ``jit-host-sync``     — ``float()/int()/bool()`` on a traced value,
+  ``.item()``, or ``np.asarray/np.array`` inside a traced body. Shape
+  arithmetic (anything derived from ``.shape``/``len()``/``.ndim``/
+  ``.size``) is static under trace and exempt.
+* ``jit-tracer-branch`` — a Python ``if``/``while`` whose test reads a
+  non-static traced parameter (static_argnames and shape-derived tests
+  are exempt; use ``jnp.where``/``lax.cond`` instead).
+* ``jit-in-function``   — ``jax.jit(...)`` called inside a function body
+  (a fresh jit wrapper per call defeats the trace cache; build jitted
+  callables at module scope or once in ``__init__``).
+* ``jit-unpadded-shape``— a call to a known-jitted kernel passing a
+  freshly-materialized ragged argument (``jnp.array``/``np.asarray`` of a
+  Python list, or a non-constant slice) from a function that never runs a
+  bucket/padding helper — the blessed wrappers pad via ``*_bucket``/
+  ``pad*`` before entering jit.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from archlint.core import Finding, SourceFile
+
+RULE_HOST_SYNC = "jit-host-sync"
+RULE_TRACER_BRANCH = "jit-tracer-branch"
+RULE_JIT_IN_FN = "jit-in-function"
+RULE_UNPADDED = "jit-unpadded-shape"
+
+SHAPE_ATTRS = {"shape", "ndim", "size", "dtype"}
+PAD_HINTS = ("bucket", "pad")
+
+
+def _attr_chain(node: ast.AST) -> Optional[List[str]]:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return list(reversed(parts))
+    return None
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    chain = _attr_chain(node)
+    return chain is not None and chain[-1] == "jit" and (
+        len(chain) == 1 or chain[-2] in {"jax", "api", "xla"})
+
+
+def _static_argnames(call: ast.Call) -> Set[str]:
+    out: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg in {"static_argnames", "static_argnums"}:
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    out.add(n.value)
+    return out
+
+
+def _jit_call_info(call: ast.Call) -> Optional[Tuple[Optional[ast.AST], Set[str]]]:
+    """If ``call`` is ``jax.jit(...)`` or ``partial(jax.jit, ...)``, return
+    (wrapped target expr or None, static argnames)."""
+    if not isinstance(call, ast.Call):
+        return None
+    if _is_jax_jit(call.func):
+        target = call.args[0] if call.args else None
+        return target, _static_argnames(call)
+    chain = _attr_chain(call.func)
+    if chain and chain[-1] == "partial" and call.args \
+            and _is_jax_jit(call.args[0]):
+        return None, _static_argnames(call)
+    return None
+
+
+def _shape_derived(expr: ast.AST) -> bool:
+    """True when every data dependency is shape metadata (static at trace)."""
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Attribute) and node.attr in SHAPE_ATTRS:
+            return True
+        if isinstance(node, ast.Call):
+            chain = _attr_chain(node.func)
+            if chain and chain[-1] == "len":
+                return True
+    return False
+
+
+class _ModuleScan:
+    """Discover the traced-function set for one module."""
+
+    def __init__(self, src: SourceFile):
+        self.src = src
+        # fn-def -> static argnames for traced functions
+        self.traced: Dict[ast.FunctionDef, Set[str]] = {}
+        self.jitted_names: Set[str] = set()
+        self.in_function_jits: List[int] = []
+        self._fn_defs: Dict[str, ast.FunctionDef] = {
+            n.name: n for n in src.tree.body
+            if isinstance(n, ast.FunctionDef)}
+        self._scan()
+
+    def _mark(self, fn: ast.FunctionDef, static: Set[str]) -> None:
+        self.traced.setdefault(fn, set()).update(static)
+        self.jitted_names.add(fn.name)
+
+    def _target_fn(self, expr: Optional[ast.AST]) -> Optional[ast.FunctionDef]:
+        """Resolve jax.jit(<expr>) to a module-level def (unwraps vmap etc)."""
+        while isinstance(expr, ast.Call):
+            expr = expr.args[0] if expr.args else None
+        if isinstance(expr, ast.Name):
+            return self._fn_defs.get(expr.id)
+        return None
+
+    def _scan(self) -> None:
+        for node in self.src.tree.body:
+            if isinstance(node, ast.FunctionDef):
+                static = self._decorated_static(node)
+                if static is not None:
+                    self._mark(node, static)
+            elif isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                info = _jit_call_info(node.value) if \
+                    isinstance(node.value, ast.Call) else None
+                if info is not None:
+                    target, static = info
+                    self.jitted_names.add(node.targets[0].id)
+                    fn = self._target_fn(target)
+                    if fn is not None:
+                        self._mark(fn, static)
+                        self.jitted_names.add(node.targets[0].id)
+                    elif isinstance(target, ast.Lambda):
+                        # analyze the lambda body as a traced expression
+                        self.traced.setdefault(
+                            _LambdaShim(target), set()).update(static)
+        # jit created inside a function body (any def, incl. methods)
+        for node in ast.walk(self.src.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for inner in ast.walk(node):
+                if isinstance(inner, ast.Call) and _is_jax_jit(inner.func):
+                    if node.name == "__init__":
+                        continue        # one-time construction is fine
+                    self.in_function_jits.append(inner.lineno)
+
+    def _decorated_static(self, fn: ast.FunctionDef) -> Optional[Set[str]]:
+        for dec in fn.decorator_list:
+            if _is_jax_jit(dec):
+                return set()
+            if isinstance(dec, ast.Call):
+                info = _jit_call_info(dec)
+                if info is not None:
+                    return info[1]
+        return None
+
+
+class _LambdaShim:
+    """Adapter so a jitted lambda walks like a FunctionDef."""
+
+    def __init__(self, lam: ast.Lambda):
+        self.name = "<lambda>"
+        self.args = lam.args
+        self.body = [ast.Expr(value=lam.body)]
+        self.lineno = lam.lineno
+
+
+def _param_names(fn) -> Set[str]:
+    a = fn.args
+    names = {p.arg for p in a.args + a.kwonlyargs + a.posonlyargs}
+    if a.vararg:
+        names.add(a.vararg.arg)
+    if a.kwarg:
+        names.add(a.kwarg.arg)
+    names.discard("self")
+    return names
+
+
+def _check_traced_body(fn, static: Set[str], rel: str,
+                       findings: List[Finding]) -> None:
+    traced_params = _param_names(fn) - static
+
+    def check_node(node: ast.AST) -> None:
+        if isinstance(node, ast.Call):
+            chain = _attr_chain(node.func)
+            if chain and chain[-1] in {"float", "int", "bool"} \
+                    and len(chain) == 1 and node.args:
+                if not _shape_derived(node.args[0]):
+                    findings.append(Finding(
+                        rel, node.lineno, RULE_HOST_SYNC,
+                        f"{chain[-1]}() on a traced value forces a host "
+                        f"sync inside a jit body"))
+            elif chain and chain[-1] == "item":
+                findings.append(Finding(
+                    rel, node.lineno, RULE_HOST_SYNC,
+                    ".item() forces a host sync inside a jit body"))
+            elif chain and len(chain) >= 2 and chain[0] in {"np", "numpy"} \
+                    and chain[-1] in {"asarray", "array"}:
+                findings.append(Finding(
+                    rel, node.lineno, RULE_HOST_SYNC,
+                    f"{'.'.join(chain)}() materializes a traced value on "
+                    f"the host inside a jit body"))
+        elif isinstance(node, (ast.If, ast.While)):
+            test = node.test
+            if _shape_derived(test):
+                return
+            if _reads_any(test, traced_params) and not _is_none_check(test):
+                findings.append(Finding(
+                    rel, test.lineno, RULE_TRACER_BRANCH,
+                    "Python branch on a traced value (use jnp.where / "
+                    "lax.cond, or mark the arg static)"))
+
+    for stmt in fn.body:
+        for node in ast.walk(stmt):
+            check_node(node)
+
+
+def _reads_any(expr: ast.AST, names: Set[str]) -> bool:
+    return any(isinstance(n, ast.Name) and n.id in names
+               for n in ast.walk(expr))
+
+
+def _is_none_check(test: ast.AST) -> bool:
+    for node in ast.walk(test):
+        if isinstance(node, ast.Compare) and any(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            return True
+    return False
+
+
+def _check_unpadded_calls(src: SourceFile, scan: _ModuleScan,
+                          findings: List[Finding]) -> None:
+    for node in ast.walk(src.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if node in scan.traced:
+            continue
+        calls_padding = any(
+            isinstance(c, ast.Call) and _call_name_has(c, PAD_HINTS)
+            for c in ast.walk(node))
+        if calls_padding:
+            continue
+        for call in ast.walk(node):
+            if not isinstance(call, ast.Call):
+                continue
+            fname = _called_name(call)
+            if fname not in scan.jitted_names:
+                continue
+            for arg in call.args:
+                if _ragged_expr(arg):
+                    findings.append(Finding(
+                        src.rel, call.lineno, RULE_UNPADDED,
+                        f"jitted kernel {fname}() called with a "
+                        f"shape-varying argument; route through a "
+                        f"bucket-padding wrapper"))
+                    break
+
+
+def _call_name_has(call: ast.Call, hints: Tuple[str, ...]) -> bool:
+    chain = _attr_chain(call.func)
+    if not chain:
+        return False
+    leaf = chain[-1].lower()
+    return any(h in leaf for h in hints)
+
+
+def _called_name(call: ast.Call) -> Optional[str]:
+    if isinstance(call.func, ast.Name):
+        return call.func.id
+    if isinstance(call.func, ast.Attribute):
+        return call.func.attr
+    return None
+
+
+def _ragged_expr(arg: ast.AST) -> bool:
+    """jnp.array([..list..]) / np.asarray(pylist) / x[:n] with variable n."""
+    if isinstance(arg, ast.Call):
+        chain = _attr_chain(arg.func)
+        if chain and chain[-1] in {"array", "asarray", "stack"} and arg.args:
+            inner = arg.args[0]
+            if isinstance(inner, (ast.List, ast.ListComp, ast.GeneratorExp)):
+                return True
+    if isinstance(arg, ast.Subscript) and isinstance(arg.slice, ast.Slice):
+        for bound in (arg.slice.lower, arg.slice.upper):
+            if bound is not None and not isinstance(bound, ast.Constant):
+                return True
+    return False
+
+
+def run(sources: Sequence[SourceFile]) -> List[Finding]:
+    findings: List[Finding] = []
+    for src in sources:
+        if "/pythia/" not in f"/{src.rel}" and "/kernels/" not in f"/{src.rel}":
+            continue
+        scan = _ModuleScan(src)
+        for line in scan.in_function_jits:
+            findings.append(Finding(
+                src.rel, line, RULE_JIT_IN_FN,
+                "jax.jit(...) constructed inside a function body defeats "
+                "the trace cache; build jitted callables at module scope"))
+        seen: Set[int] = set()
+        work = list(scan.traced.items())
+        while work:
+            fn, static = work.pop()
+            if id(fn) in seen:
+                continue
+            seen.add(id(fn))
+            _check_traced_body(fn, static, src.rel, findings)
+            # nested defs are traced transitively
+            for stmt in fn.body:
+                for node in ast.walk(stmt):
+                    if isinstance(node, ast.FunctionDef):
+                        work.append((node, set(static)))
+        _check_unpadded_calls(src, scan, findings)
+    return findings

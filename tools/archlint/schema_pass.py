@@ -1,0 +1,167 @@
+"""Schema/namespace pass.
+
+Two rules pinning the ROADMAP "State schema discipline" invariant:
+
+* ``reserved-namespace-write`` — a ``repro.*`` namespace literal appearing
+  anywhere outside the whitelisted policy-state module
+  (``src/repro/pythia/state.py``). The reserved prefix is the built-in
+  policies' private storage; external code writing there can corrupt
+  warm-start blobs that loaders must then treat as hostile.
+* ``schema-version-bump``      — git-diff-aware: the serialized-field set
+  of ``PolicyState`` in ``pythia/state.py`` changed relative to the diff
+  base but ``STATE_SCHEMA_VERSION`` did not. Runs only when a diff base
+  is given (the CLI skips it in ``--fast`` mode and when the tree is not
+  a git checkout).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+import subprocess
+from pathlib import Path
+from typing import List, Optional, Sequence, Set, Tuple
+
+from archlint.core import Finding, SourceFile
+
+RULE_NAMESPACE = "reserved-namespace-write"
+RULE_VERSION = "schema-version-bump"
+
+RESERVED_RE = re.compile(r"^repro\.[A-Za-z0-9_.]*$")
+STATE_REL = "src/repro/pythia/state.py"
+NAMESPACE_WHITELIST = {STATE_REL}
+STATE_CLASS = "PolicyState"
+VERSION_NAME = "STATE_SCHEMA_VERSION"
+
+
+def _docstring_linenos(tree: ast.Module) -> Set[int]:
+    out: Set[int] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Module, ast.ClassDef, ast.FunctionDef,
+                             ast.AsyncFunctionDef)):
+            body = node.body
+            if body and isinstance(body[0], ast.Expr) \
+                    and isinstance(body[0].value, ast.Constant) \
+                    and isinstance(body[0].value.value, str):
+                c = body[0].value
+                end = getattr(c, "end_lineno", c.lineno) or c.lineno
+                out.update(range(c.lineno, end + 1))
+    return out
+
+
+def _repro_packages(root: Path) -> Set[str]:
+    """Subpackage names under src/repro — ``"repro.configs.base"`` is an
+    import path, not a metadata namespace, and must not be flagged."""
+    pkg = root / "src" / "repro"
+    if not pkg.is_dir():
+        return set()
+    return {p.name for p in pkg.iterdir() if p.is_dir()} | \
+        {p.stem for p in pkg.glob("*.py")}
+
+
+def _namespace_findings(src: SourceFile, packages: Set[str]) -> List[Finding]:
+    if src.rel in NAMESPACE_WHITELIST or src.rel.endswith("/state.py"):
+        return []
+    docs = _docstring_linenos(src.tree)
+    out: List[Finding] = []
+    for node in ast.walk(src.tree):
+        if not (isinstance(node, ast.Constant) and isinstance(node.value, str)):
+            continue
+        if node.lineno in docs:
+            continue
+        head = node.value.split(".")[1] if "." in node.value else ""
+        if head in packages:
+            continue
+        if RESERVED_RE.match(node.value):
+            out.append(Finding(
+                src.rel, node.lineno, RULE_NAMESPACE,
+                f'"{node.value}" is in the reserved repro.* namespace; '
+                f"only {STATE_REL} may name it (store external state "
+                f"under your own prefix)"))
+    return out
+
+
+def _state_signature(text: str) -> Optional[Tuple[Tuple[str, ...], object]]:
+    """(sorted PolicyState field names, STATE_SCHEMA_VERSION value)."""
+    try:
+        tree = ast.parse(text)
+    except SyntaxError:
+        return None
+    fields: List[str] = []
+    version: object = None
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef) and node.name == STATE_CLASS:
+            for stmt in node.body:
+                if isinstance(stmt, ast.AnnAssign) \
+                        and isinstance(stmt.target, ast.Name):
+                    fields.append(stmt.target.id)
+                elif isinstance(stmt, ast.Assign):
+                    for t in stmt.targets:
+                        if isinstance(t, ast.Name):
+                            fields.append(t.id)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == VERSION_NAME \
+                        and isinstance(node.value, ast.Constant):
+                    version = node.value.value
+    return tuple(sorted(fields)), version
+
+
+def _git_show(root: Path, ref: str, rel: str) -> Optional[str]:
+    try:
+        proc = subprocess.run(
+            ["git", "show", f"{ref}:{rel}"], cwd=root,
+            capture_output=True, text=True, timeout=10)
+    except (OSError, subprocess.TimeoutExpired):
+        return None
+    return proc.stdout if proc.returncode == 0 else None
+
+
+def _version_line(src: SourceFile) -> int:
+    for node in src.tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == VERSION_NAME:
+                    return node.lineno
+    return 1
+
+
+def _version_findings(sources: Sequence[SourceFile], root: Path,
+                      diff_base: str) -> List[Finding]:
+    state = next((s for s in sources if s.rel == STATE_REL), None)
+    if state is None:
+        return []
+    base_text = _git_show(root, diff_base, STATE_REL)
+    if base_text is None:
+        return []                      # no git / file new at base: nothing to diff
+    base_sig = _state_signature(base_text)
+    cur_sig = _state_signature(state.text)
+    if base_sig is None or cur_sig is None:
+        return []
+    base_fields, base_ver = base_sig
+    cur_fields, cur_ver = cur_sig
+    if base_fields != cur_fields and base_ver == cur_ver:
+        added = sorted(set(cur_fields) - set(base_fields))
+        removed = sorted(set(base_fields) - set(cur_fields))
+        delta = []
+        if added:
+            delta.append("added " + ", ".join(added))
+        if removed:
+            delta.append("removed " + ", ".join(removed))
+        return [Finding(
+            state.rel, _version_line(state), RULE_VERSION,
+            f"{STATE_CLASS} serialized fields changed vs {diff_base} "
+            f"({'; '.join(delta)}) without a {VERSION_NAME} bump "
+            f"(still {cur_ver!r})")]
+    return []
+
+
+def run(sources: Sequence[SourceFile], *, root: Path,
+        diff_base: Optional[str] = "HEAD") -> List[Finding]:
+    findings: List[Finding] = []
+    packages = _repro_packages(root)
+    for src in sources:
+        findings.extend(_namespace_findings(src, packages))
+    if diff_base is not None:
+        findings.extend(_version_findings(sources, root, diff_base))
+    return findings
