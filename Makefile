@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test test-fast smoke test-dist test-dist-witness lint-arch cov-service bench-batched bench-remote-pythia bench-warmstart bench-transfer bench-acquisition bench-scaleout bench-multimetric
+.PHONY: test test-fast smoke test-dist test-dist-witness test-chaos lint-arch cov-service bench-batched bench-remote-pythia bench-warmstart bench-transfer bench-acquisition bench-scaleout bench-multimetric
 
 # tier-1: the full suite (what the driver runs), then the coverage floors
 # (repro.service >= 80%, repro.pythia >= 70%, repro.core >= 70%,
@@ -19,15 +19,21 @@ lint-arch:
 	$(PY) tools/archlint
 
 # distributed-topology tests only (Figure-2 split: real sockets, fault
-# injection, cross-process end-to-end) — includes the slow-marked e2e
+# injection, cross-process end-to-end) — includes the slow-marked e2e and
+# the seeded chaos suite (a chaos schedule IS a distributed-fault scenario)
 test-dist:
-	$(PY) -m pytest -q -m dist
+	$(PY) -m pytest -q -m "dist or chaos"
 
 # the dist fault suite under the runtime lock-order witness: every lock in
 # the service tier records its acquisition order and the session fails if
 # the witnessed graph has a cycle (conftest.pytest_sessionfinish)
 test-dist-witness:
-	ARCHLINT_WITNESS=1 $(PY) -m pytest -q -m dist
+	ARCHLINT_WITNESS=1 $(PY) -m pytest -q -m "dist or chaos"
+
+# seeded chaos-injection + crash-restart durability suite on its own: the
+# ~20-schedule sweep over both topologies plus the SIGKILL recovery tests
+test-chaos:
+	$(PY) -m pytest -q -m chaos
 
 # the service/pythia/core/kernels coverage floors on their own
 cov-service:

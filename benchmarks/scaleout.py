@@ -16,27 +16,47 @@ sockets and written to ``BENCH_scaleout.json``:
    first sleep alone was ``poll_interval`` = 20 ms. Floor: **long-poll
    median < 20 ms** (completion latency is no longer quantized by the
    client's poll schedule).
+
+3. **Sharded datastore isolation** — the single-file SQLite backend holds
+   ONE connection lock across every transaction, so one study's heavy
+   writes serialize all studies (ROADMAP open item: the storage tier as a
+   single point of contention). Workload: 8 "worker" threads continuously
+   persisting 1 MiB checkpoint blobs (the shape of ``repro.gp_bandit``
+   state writes) to their own studies while 56 client threads run
+   suggest-shaped trial writes on 16 other studies — 64 concurrent clients
+   total, both backends at ``synchronous=FULL`` (commits fsync; acked work
+   survives power loss, the durability level the crash tests assume).
+   Floor: **sharded light-op throughput >= 2x single-file** at 64 clients /
+   8 checkpointing workers. Per-commit fsync bandwidth is identical for
+   both backends (same disk); the ratio isolates exactly the lock: on the
+   sharded backend a checkpoint only stalls its own shard file, never the
+   other 7.
 """
 
 import argparse
 import json
 import os
+import tempfile
 import threading
 import time
 
 from benchmarks.bench_util import emit
 
-from repro.core import ScaleType, StudyConfig
+from repro.core import ScaleType, StudyConfig, Trial
+from repro.core.study import Study
 from repro.pythia.baseline_designers import RandomSearchDesigner
 from repro.pythia.policy import Policy, SuggestDecision
 from repro.pythia.registry import register
 from repro.service import DefaultVizierServer, VizierClient
+from repro.service.datastore import ShardedSqliteDatastore, SQLiteDatastore
 
 TPUT_FLOOR = 2.0        # 8-worker suggestions/sec >= 2x 1-worker, 64+ clients
 LATENCY_FLOOR_S = 0.02  # long-poll median < the old first poll interval
+DATASTORE_FLOOR = 2.0   # sharded light-op tput >= 2x single-file, 64 clients
 
 N_STUDIES = 16
 POLICY_COST_S = 0.004
+CHECKPOINT_BYTES = 1 << 20  # one repro.gp_bandit state blob per hot write
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 OUT_PATH = os.path.join(_ROOT, "BENCH_scaleout.json")
@@ -146,6 +166,104 @@ def bench_longpoll_latency(rounds: int = 30) -> dict:
             "legacy_poll_median_s": out["legacy_poll"]}
 
 
+def _bench_study_config() -> StudyConfig:
+    cfg = StudyConfig()
+    cfg.search_space.select_root().add_float_param("x", 0, 1)
+    cfg.metrics.add("m", "MAXIMIZE")
+    return cfg
+
+
+def _drive_datastore(ds, n_hot: int, n_light: int, secs: float) -> dict:
+    """Hot checkpoint writers + light suggest-shaped writers, direct drive.
+
+    Returns light/hot ops-per-second. Direct datastore calls (no sockets)
+    so the backend lock is the only thing under test."""
+    cfg = _bench_study_config()
+    light_names = []
+    for i in range(N_STUDIES):
+        s = Study(name=f"owners/bench/studies/light{i}", display_name="s",
+                  study_config=cfg)
+        ds.create_study(s)
+        light_names.append(s.name)
+    hot_names = []
+    for i in range(n_hot):
+        s = Study(name=f"owners/bench/studies/hot{i}", display_name="s",
+                  study_config=cfg)
+        ds.create_study(s)
+        hot_names.append(s.name)
+    blob = os.urandom(CHECKPOINT_BYTES)
+    stop = threading.Event()
+    errs, counts = [], {"light": 0, "hot": 0}
+    lock = threading.Lock()
+
+    def hot(hid: int):
+        i = 0
+        try:
+            while not stop.is_set():
+                ds.put_operation({
+                    "name": f"{hot_names[hid]}/operations/ckpt{i}",
+                    "study_name": hot_names[hid], "done": True,
+                    "result": {"state": blob}})
+                i += 1
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+        with lock:
+            counts["hot"] += i
+
+    def light(wid: int):
+        name = light_names[wid % N_STUDIES]
+        n = 0
+        try:
+            while not stop.is_set():
+                ds.create_trial(name, Trial(parameters={"x": 0.5},
+                                            client_id=f"c{wid}"))
+                n += 1
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+        with lock:
+            counts["light"] += n
+
+    threads = ([threading.Thread(target=hot, args=(i,))
+                for i in range(n_hot)] +
+               [threading.Thread(target=light, args=(i,))
+                for i in range(n_light)])
+    for t in threads:
+        t.start()
+    time.sleep(secs)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errs, errs[:3]
+    return {"light_ops_per_sec": counts["light"] / secs,
+            "hot_ops_per_sec": counts["hot"] / secs}
+
+
+def bench_datastore_backends(n_hot: int = 8, n_light: int = 56,
+                             secs: float = 4.0) -> dict:
+    """Single-file vs sharded SQLite under checkpoint-heavy contention."""
+    out = {"clients": n_hot + n_light, "hot_writers": n_hot,
+           "checkpoint_bytes": CHECKPOINT_BYTES, "synchronous": "FULL"}
+    with tempfile.TemporaryDirectory(prefix="scaleout-ds-") as root:
+        single = SQLiteDatastore(os.path.join(root, "single.sqlite3"),
+                                 synchronous="FULL")
+        out["single"] = _drive_datastore(single, n_hot, n_light, secs)
+        single.close()
+        sharded = ShardedSqliteDatastore(os.path.join(root, "sharded"),
+                                         n_shards=8, synchronous="FULL")
+        out["sharded"] = _drive_datastore(sharded, n_hot, n_light, secs)
+        sharded.close()
+    ratio = (out["sharded"]["light_ops_per_sec"]
+             / max(out["single"]["light_ops_per_sec"], 1e-9))
+    out["light_tput_ratio"] = ratio
+    emit("scaleout.datastore.single_light",
+         out["single"]["light_ops_per_sec"],
+         f"light_ops_per_sec={out['single']['light_ops_per_sec']:.0f}")
+    emit("scaleout.datastore.sharded_light",
+         out["sharded"]["light_ops_per_sec"],
+         f"light_ops_per_sec={out['sharded']['light_ops_per_sec']:.0f}")
+    return out
+
+
 def main() -> int:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--rounds", type=int, default=6,
@@ -162,6 +280,7 @@ def main() -> int:
             scenarios.append(
                 bench_suggest_tput(n_clients, n_workers, rounds=args.rounds))
     latency = bench_longpoll_latency()
+    datastore = bench_datastore_backends()
 
     by_key = {(s["clients"], s["workers"]): s for s in scenarios}
     floors = []
@@ -180,6 +299,11 @@ def main() -> int:
          latency["long_poll_median_s"] * 1e6,
          f"median={latency['long_poll_median_s']*1e3:.2f}ms "
          f"(floor {LATENCY_FLOOR_S*1e3:.0f}ms) {'PASS' if lat_ok else 'FAIL'}")
+    ds_ok = datastore["light_tput_ratio"] >= DATASTORE_FLOOR
+    floors.append(ds_ok)
+    emit("scaleout.floor.datastore_sharding", datastore["light_tput_ratio"],
+         f"sharded/single={datastore['light_tput_ratio']:.2f}x "
+         f"(floor {DATASTORE_FLOOR}x) {'PASS' if ds_ok else 'FAIL'}")
 
     verdict = "PASS" if all(floors) else "FAIL"
     payload = {
@@ -188,9 +312,11 @@ def main() -> int:
         "policy_cost_s": POLICY_COST_S,
         "n_studies": N_STUDIES,
         "floors": {"tput_8w_over_1w": TPUT_FLOOR,
-                   "longpoll_median_s": LATENCY_FLOOR_S},
+                   "longpoll_median_s": LATENCY_FLOOR_S,
+                   "datastore_sharded_over_single": DATASTORE_FLOOR},
         "throughput": scenarios,
         "latency": latency,
+        "datastore": datastore,
         "verdict": verdict,
     }
     with open(args.out, "w") as f:

@@ -1,5 +1,7 @@
 """Distributed fault-tolerant service layer (paper §3)."""
 
+from repro.service import chaos
+from repro.service.chaos import ChaosError, Fault, FaultInjector
 from repro.service.client import (
     BatchSuggestionError,
     OperationFailedError,
@@ -8,13 +10,17 @@ from repro.service.client import (
 )
 from repro.service.datastore import (
     Datastore,
+    DatastoreBusyError,
     InMemoryDatastore,
     KeyAlreadyExistsError,
     NotFoundError,
+    ShardedSqliteDatastore,
     SQLiteDatastore,
 )
 from repro.service.rpc import (
+    CircuitBreaker,
     PooledRpcClient,
+    RetryBudget,
     RpcClient,
     RpcServer,
     Servicer,
@@ -32,10 +38,11 @@ from repro.service.work_queue import PythiaWorkerPool, ShardedWorkQueue
 
 __all__ = [
     "BatchSuggestionError", "OperationFailedError", "VizierBatchClient",
-    "VizierClient", "Datastore", "InMemoryDatastore", "KeyAlreadyExistsError",
-    "NotFoundError", "SQLiteDatastore", "PooledRpcClient", "RpcClient",
-    "RpcServer", "Servicer", "StatusCode", "VizierRpcError",
+    "VizierClient", "Datastore", "DatastoreBusyError", "InMemoryDatastore",
+    "KeyAlreadyExistsError", "NotFoundError", "ShardedSqliteDatastore",
+    "SQLiteDatastore", "CircuitBreaker", "PooledRpcClient", "RetryBudget",
+    "RpcClient", "RpcServer", "Servicer", "StatusCode", "VizierRpcError",
     "DefaultVizierServer", "DistributedVizierServer", "InProcessPythia",
     "PythiaConnector", "RemotePythia", "VizierService", "PythiaWorkerPool",
-    "ShardedWorkQueue",
+    "ShardedWorkQueue", "chaos", "ChaosError", "Fault", "FaultInjector",
 ]

@@ -1,0 +1,309 @@
+"""Deterministic chaos injection for the service tier (paper §3.2, §5).
+
+The paper's reliability claims — worker death, client disconnects, server
+restarts — are pinned by hand-scripted kill tests elsewhere; this module
+turns them into *seeded, declarative* fault schedules so a failure found at
+seed N replays exactly at seed N. It is a harness, not a production feature:
+every hook is a no-op unless an injector is installed (``CHAOS_SEED`` in the
+environment, or :func:`scenario` in a test), and the archlint
+``chaos-ungated-hook`` rule pins the early-return guard that keeps the hooks
+dead code in normal operation.
+
+Injection sites (where production code calls :func:`inject`):
+
+========================  ====================================================
+site                      seam
+========================  ====================================================
+``transport.send``        before a frame (or pipelined batch) is written
+``transport.recv``        before each response frame is read (ctx: ``index``)
+``datastore.<method>``    every public Datastore call (via ``wrap_datastore``)
+``queue.lease``           after a shard lease is granted (ctx: ``lease``)
+``queue.ack``             before a worker acks its lease (ctx: ``kill``)
+``worker.batch``          before a worker dispatches a leased batch
+``service.finalize``      before a coalesced batch takes the study lock
+========================  ====================================================
+
+Fault kinds:
+
+``delay``/``stall``  sleep ``delay_s`` (a slow link / slow disk)
+``sever``            raise ConnectionError — at ``transport.send`` the server
+                     never sees the request
+``drop``             raise ConnectionError — at ``transport.recv`` the server
+                     *did* apply the request but the response is lost (the
+                     non-idempotent-resend hazard)
+``error``            raise :class:`ChaosError` carrying a status ``code``
+                     (duck-typed like VizierRpcError, so error discipline
+                     maps it end to end). Use at datastore/queue/service
+                     seams — the transport seams promise VizierRpcError to
+                     their callers, so inject ``sever``/``drop`` there
+                     instead
+``expire_lease``     zero the granted lease's deadline: the next queue scan
+                     reclaims and requeues it under the current holder
+``kill_worker``      invoke the seam's ``kill`` callback — the worker thread
+                     dies as if crashed (no ack, no reclaim of its own)
+``corrupt``          scramble every ``repro.gp_bandit`` state value in the
+                     metadata/delta about to be written (the policy must
+                     treat it as a cold start, never fail the op)
+
+Reproducibility: each fault gets its own ``random.Random`` stream derived
+from ``(seed, fault index)`` and its own matched-event counter, so firing
+decisions depend only on the per-site event order — not on wall-clock time
+or interleaving with other sites.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import os
+import random
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.service._lockwitness import make_lock
+
+_UNAVAILABLE = 14  # StatusCode.UNAVAILABLE (duck-typed; no rpc import cycle)
+
+# value written over repro.gp_bandit state by the ``corrupt`` kind — not
+# valid msgpack/JSON, so every schema-versioned loader rejects it
+_CORRUPT_BLOB = b"\x00chaos-corrupted\x00"
+_STATE_NS_FRAGMENT = "gp_bandit"
+
+
+class ChaosError(Exception):
+    """An injected failure. Carries ``code``/``message`` like VizierRpcError
+    so ``Servicer.dispatch`` and ``fail_operation_from_exception`` surface a
+    real status code, per the error-discipline invariant."""
+
+    def __init__(self, code: int, message: str):
+        super().__init__(f"[code={code}] {message}")
+        self.code = code
+        self.message = message
+
+
+@dataclasses.dataclass
+class Fault:
+    """One declarative fault. ``site`` is exact or a ``prefix.*`` glob."""
+
+    site: str
+    kind: str
+    prob: float = 1.0      # per-matching-event firing probability
+    after: int = 0         # skip the first N matching events
+    times: int = 1         # fire at most this many times
+    delay_s: float = 0.05  # delay/stall sleep
+    code: int = _UNAVAILABLE
+
+    def matches(self, site: str) -> bool:
+        if self.site.endswith(".*"):
+            return site.startswith(self.site[:-1]) or site == self.site[:-2]
+        return site == self.site
+
+
+class FaultInjector:
+    """Seeded schedule evaluator. ``fire`` is called from every hook site;
+    counter bookkeeping happens under a lock, fault *actions* (sleeps,
+    raises, mutations) strictly after it is released."""
+
+    def __init__(self, seed: int, faults: List[Fault]):
+        self.seed = int(seed)
+        self.faults = list(faults)
+        self._lock = make_lock("FaultInjector._lock")
+        self._seen = [0] * len(self.faults)
+        self._fired = [0] * len(self.faults)
+        # independent stream per fault: decisions for fault i are a pure
+        # function of (seed, i, per-fault event index)
+        self._rngs = [random.Random((self.seed << 8) ^ i)
+                      for i in range(len(self.faults))]
+        self.events: List[tuple] = []  # (site, kind, event index), bounded
+
+    def fired_count(self, site_prefix: str = "") -> int:
+        with self._lock:
+            return sum(
+                fired for fault, fired in zip(self.faults, self._fired)
+                if fault.site.startswith(site_prefix))
+
+    def fire(self, site: str, ctx: Dict[str, Any]) -> None:
+        actions: List[Fault] = []
+        with self._lock:
+            for i, fault in enumerate(self.faults):
+                if not fault.matches(site):
+                    continue
+                n = self._seen[i]
+                self._seen[i] += 1
+                if n < fault.after or self._fired[i] >= fault.times:
+                    continue
+                if fault.prob < 1.0 and self._rngs[i].random() > fault.prob:
+                    continue
+                self._fired[i] += 1
+                if len(self.events) < 10_000:
+                    self.events.append((site, fault.kind, n))
+                actions.append(fault)
+        # non-raising effects first, then the first raising fault wins
+        raising: Optional[Fault] = None
+        for fault in actions:
+            kind = fault.kind
+            if kind in ("delay", "stall"):
+                time.sleep(fault.delay_s)
+            elif kind == "expire_lease":
+                lease = ctx.get("lease")
+                if lease is not None:
+                    lease.deadline = time.monotonic() - 1.0
+            elif kind == "kill_worker":
+                kill = ctx.get("kill")
+                if kill is not None:
+                    kill()
+            elif kind == "corrupt":
+                _corrupt_state(ctx)
+            elif raising is None:
+                raising = fault
+        if raising is not None:
+            if raising.kind in ("sever", "drop"):
+                raise ConnectionError(
+                    f"chaos: {raising.kind} at {site} (seed {self.seed})")
+            raise ChaosError(
+                raising.code, f"chaos: injected {raising.kind} at {site} "
+                              f"(seed {self.seed})")
+
+
+def _corrupt_state(ctx: Dict[str, Any]) -> None:
+    """Overwrite repro.gp_bandit state values in a Metadata/MetadataDelta
+    about to be persisted. Reaches into the metadata store directly: the
+    corruption must bypass every API-level validation, exactly like a torn
+    write on disk would."""
+    stores = []
+    delta = ctx.get("delta")
+    if delta is not None:
+        stores.append(delta.on_study._store)
+        stores.extend(md._store for md in delta.on_trials.values())
+    metadata = ctx.get("metadata")
+    if metadata is not None:
+        stores.append(metadata._store)
+    for store in stores:
+        for ns_key, bucket in store.items():
+            if _STATE_NS_FRAGMENT in ns_key:
+                for key in bucket:
+                    bucket[key] = _CORRUPT_BLOB
+
+
+# ---------------------------------------------------------------------------
+# Module-level installation (the hooks production code calls)
+# ---------------------------------------------------------------------------
+
+_injector: Optional[FaultInjector] = None
+_install_lock = threading.Lock()
+
+
+def active() -> bool:
+    return _injector is not None
+
+
+def current() -> Optional[FaultInjector]:
+    return _injector
+
+
+def inject(site: str, **ctx: Any) -> None:
+    """The hook. MUST stay a no-op when no injector is installed — the
+    archlint ``chaos-ungated-hook`` rule pins this guard."""
+    if _injector is None:
+        return
+    _injector.fire(site, ctx)
+
+
+def install(seed: int, faults: List[Fault]) -> FaultInjector:
+    global _injector
+    with _install_lock:
+        inj = FaultInjector(seed, faults)
+        _injector = inj
+        return inj
+
+
+def uninstall() -> None:
+    global _injector
+    with _install_lock:
+        _injector = None
+
+
+@contextlib.contextmanager
+def scenario(seed: int, faults: List[Fault]):
+    """Install a schedule for the duration of a with-block (test harness)."""
+    inj = install(seed, faults)
+    try:
+        yield inj
+    finally:
+        uninstall()
+
+
+#: schedule used when only CHAOS_SEED is set: a mild mixed storm across
+#: every seam, probabilistic so different seeds exercise different traces
+DEFAULT_SCHEDULE = [
+    Fault(site="transport.send", kind="sever", prob=0.05, times=10),
+    Fault(site="transport.recv", kind="drop", prob=0.05, times=10),
+    Fault(site="datastore.*", kind="stall", prob=0.02, times=20,
+          delay_s=0.02),
+    Fault(site="queue.lease", kind="expire_lease", prob=0.1, times=5),
+    Fault(site="service.finalize", kind="delay", prob=0.1, times=5,
+          delay_s=0.05),
+]
+
+
+def install_from_env() -> Optional[FaultInjector]:
+    """Install from ``CHAOS_SEED`` (+ optional ``CHAOS_SCHEDULE`` JSON list
+    of Fault kwargs). No-op when unset or when an injector already exists
+    (a scenario() in a test wins over the env)."""
+    seed_raw = os.environ.get("CHAOS_SEED")
+    if not seed_raw or active():
+        return _injector
+    raw = os.environ.get("CHAOS_SCHEDULE")
+    faults = ([Fault(**spec) for spec in json.loads(raw)]
+              if raw else list(DEFAULT_SCHEDULE))
+    return install(int(seed_raw), faults)
+
+
+# ---------------------------------------------------------------------------
+# Datastore seam
+# ---------------------------------------------------------------------------
+
+
+class ChaosDatastore:
+    """Fault-injecting Datastore proxy.
+
+    Installed only while chaos is active (see :func:`wrap_datastore`), so
+    the production datastores carry no chaos code at all. Every public
+    method call fires ``datastore.<method>`` before delegating; the
+    metadata-writing methods also expose their payload so the ``corrupt``
+    kind can scramble ``repro.gp_bandit`` state in flight.
+    """
+
+    def __init__(self, inner: Any):
+        self._inner = inner
+
+    @property
+    def wrapped(self) -> Any:
+        return self._inner
+
+    def __getattr__(self, name: str) -> Any:
+        attr = getattr(self._inner, name)
+        if name.startswith("_") or not callable(attr):
+            return attr
+
+        def hooked(*args: Any, **kwargs: Any) -> Any:
+            ctx: Dict[str, Any] = {"method": name}
+            if name == "apply_metadata_delta" and len(args) >= 2:
+                ctx["delta"] = args[1]
+            elif name == "update_study_metadata" and len(args) >= 2:
+                ctx["metadata"] = args[1]
+            inject(f"datastore.{name}", **ctx)
+            return attr(*args, **kwargs)
+
+        hooked.__name__ = name
+        return hooked
+
+
+def wrap_datastore(ds: Any) -> Any:
+    """Return ``ds`` untouched when chaos is off; the injecting proxy when
+    on. Servers call this once at construction."""
+    if not active():
+        return ds
+    return ChaosDatastore(ds)

@@ -21,10 +21,12 @@ operation scan used by crash recovery.
 
 from __future__ import annotations
 
+import contextlib
+import json
 import os
 import sqlite3
 import threading
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import msgpack
 
@@ -39,6 +41,19 @@ class KeyAlreadyExistsError(Exception):
 
 class NotFoundError(Exception):
     pass
+
+
+class DatastoreBusyError(Exception):
+    """The storage backend is transiently contended (SQLite busy/locked).
+
+    Carries ``code`` = UNAVAILABLE so the RPC dispatch surfaces a retryable
+    status instead of INTERNAL — a handler must never leak a raw
+    ``sqlite3.OperationalError: database is locked`` (error-discipline
+    invariant); clients treat it like any other brownout and retry within
+    their budget.
+    """
+
+    code = 14  # StatusCode.UNAVAILABLE (duck-typed; storage stays below rpc)
 
 
 class Datastore:
@@ -122,6 +137,19 @@ class Datastore:
             for name, trials in self.list_trials_multi(
                 study_names, states=states).items()
         }
+
+    def study_transaction(self, study_name: str):
+        """Context manager making every write inside it atomic and durable
+        as one unit (the exactly-once-finalize write set: metadata delta +
+        new trials + the done operation). A crash inside the block must
+        leave either all of it or none of it; ``recover_pending_operations``
+        relies on that to re-run interrupted ops cleanly. Default: no extra
+        atomicity (single-write backends).
+        """
+        return contextlib.nullcontext()
+
+    def close(self) -> None:
+        pass
 
     # operations (long-running computations; paper §3.2)
     def put_operation(self, op: dict) -> None:
@@ -375,54 +403,131 @@ class InMemoryDatastore(Datastore):
                 out.append(dict(op))
             return sorted(out, key=lambda o: o.get("create_time", 0))
 
+    def study_transaction(self, study_name: str):
+        # one backend lock ⇒ holding it makes the write set atomic w.r.t.
+        # every reader; durability is moot for an in-memory store
+        return self._lock
+
 
 # ---------------------------------------------------------------------------
 
 
-class SQLiteDatastore(Datastore):
-    """Durable datastore; survives process crashes (server-side fault tolerance)."""
+_SYNCHRONOUS_MODES = {"OFF", "NORMAL", "FULL", "EXTRA"}
 
-    def __init__(self, path: str = ":memory:"):
+
+def _open_conn(path: str, busy_timeout_ms: int,
+               synchronous: str) -> sqlite3.Connection:
+    """Open a connection in manual-transaction mode.
+
+    ``isolation_level=None`` disables sqlite3's implicit BEGIN so our
+    explicit BEGIN IMMEDIATE / COMMIT below are the *only* transactions —
+    the stdlib's autobegin interacts badly with reentrant write scopes
+    (a nested ``with conn`` commits the outer transaction early).
+    """
+    if synchronous.upper() not in _SYNCHRONOUS_MODES:
+        raise ValueError(f"bad synchronous mode {synchronous!r}")
+    conn = sqlite3.connect(path, check_same_thread=False, isolation_level=None)
+    conn.execute("PRAGMA journal_mode=WAL")
+    # without a busy timeout a cross-process writer collision surfaces
+    # instantly as "database is locked"; with it SQLite spins internally
+    conn.execute(f"PRAGMA busy_timeout={int(busy_timeout_ms)}")
+    conn.execute(f"PRAGMA synchronous={synchronous.upper()}")
+    return conn
+
+
+def _init_schema(conn: sqlite3.Connection) -> None:
+    conn.execute(
+        "CREATE TABLE IF NOT EXISTS studies ("
+        " name TEXT PRIMARY KEY, proto BLOB NOT NULL)"
+    )
+    conn.execute(
+        "CREATE TABLE IF NOT EXISTS trials ("
+        " study_name TEXT NOT NULL, trial_id INTEGER NOT NULL,"
+        " state TEXT NOT NULL, client_id TEXT, proto BLOB NOT NULL,"
+        " PRIMARY KEY (study_name, trial_id))"
+    )
+    conn.execute(
+        "CREATE TABLE IF NOT EXISTS operations ("
+        " name TEXT PRIMARY KEY, study_name TEXT NOT NULL,"
+        " client_id TEXT, done INTEGER NOT NULL, create_time REAL,"
+        " proto BLOB NOT NULL)"
+    )
+    conn.execute(
+        "CREATE INDEX IF NOT EXISTS trials_by_state"
+        " ON trials (study_name, state)"
+    )
+    conn.execute(
+        "CREATE INDEX IF NOT EXISTS trials_by_client"
+        " ON trials (study_name, client_id)"
+    )
+    conn.execute(
+        "CREATE INDEX IF NOT EXISTS ops_pending"
+        " ON operations (study_name, done)"
+    )
+
+
+class SQLiteDatastore(Datastore):
+    """Durable datastore; survives process crashes (server-side fault tolerance).
+
+    All writes run inside explicit BEGIN IMMEDIATE transactions via
+    ``_txn()`` (reentrant: nested scopes join the outer transaction, commit
+    happens once at depth 0), so multi-row write sets — apply_metadata_delta,
+    the finalize region under ``study_transaction`` — hit disk atomically:
+    after a hard kill, recovery sees either the whole write set or none of
+    it. Busy/locked contention surfaces as DatastoreBusyError (UNAVAILABLE),
+    never a raw sqlite3.OperationalError.
+    """
+
+    def __init__(self, path: str = ":memory:", *,
+                 busy_timeout_ms: int = 10_000, synchronous: str = "NORMAL"):
         self._path = path
         self._lock = make_rlock("SQLiteDatastore._lock")
+        self._txn_depth = 0
         if path != ":memory:":
             os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-        self._conn = sqlite3.connect(path, check_same_thread=False)
-        with self._lock, self._conn:
-            self._conn.execute("PRAGMA journal_mode=WAL")
-            self._conn.execute(
-                "CREATE TABLE IF NOT EXISTS studies ("
-                " name TEXT PRIMARY KEY, proto BLOB NOT NULL)"
-            )
-            self._conn.execute(
-                "CREATE TABLE IF NOT EXISTS trials ("
-                " study_name TEXT NOT NULL, trial_id INTEGER NOT NULL,"
-                " state TEXT NOT NULL, client_id TEXT, proto BLOB NOT NULL,"
-                " PRIMARY KEY (study_name, trial_id))"
-            )
-            self._conn.execute(
-                "CREATE TABLE IF NOT EXISTS operations ("
-                " name TEXT PRIMARY KEY, study_name TEXT NOT NULL,"
-                " client_id TEXT, done INTEGER NOT NULL, create_time REAL,"
-                " proto BLOB NOT NULL)"
-            )
-            self._conn.execute(
-                "CREATE INDEX IF NOT EXISTS trials_by_state"
-                " ON trials (study_name, state)"
-            )
-            self._conn.execute(
-                "CREATE INDEX IF NOT EXISTS trials_by_client"
-                " ON trials (study_name, client_id)"
-            )
-            self._conn.execute(
-                "CREATE INDEX IF NOT EXISTS ops_pending"
-                " ON operations (study_name, done)"
-            )
+        self._conn = _open_conn(path, busy_timeout_ms, synchronous)
+        with self._txn():
+            _init_schema(self._conn)
+
+    @contextlib.contextmanager
+    def _txn(self):
+        """Reentrant write scope: BEGIN IMMEDIATE at depth 0, COMMIT when
+        the outermost scope exits cleanly, ROLLBACK if it raises."""
+        with self._lock:
+            if self._txn_depth == 0:
+                try:
+                    self._conn.execute("BEGIN IMMEDIATE")
+                except sqlite3.OperationalError as e:
+                    raise DatastoreBusyError(str(e)) from e
+            self._txn_depth += 1
+            try:
+                yield self._conn
+            except BaseException:
+                self._txn_depth -= 1
+                if self._txn_depth == 0:
+                    try:
+                        self._conn.execute("ROLLBACK")
+                    except sqlite3.Error:
+                        pass  # connection torn down mid-failure
+                raise
+            self._txn_depth -= 1
+            if self._txn_depth == 0:
+                try:
+                    self._conn.execute("COMMIT")
+                except sqlite3.OperationalError as e:
+                    try:
+                        self._conn.execute("ROLLBACK")
+                    except sqlite3.Error:
+                        pass
+                    raise DatastoreBusyError(str(e)) from e
+
+    def study_transaction(self, study_name: str):
+        return self._txn()
 
     # studies --------------------------------------------------------------------
     def create_study(self, study: Study) -> str:
         blob = msgpack.packb(study.to_proto(), use_bin_type=True)
-        with self._lock, self._conn:
+        with self._txn():
             try:
                 self._conn.execute(
                     "INSERT INTO studies (name, proto) VALUES (?, ?)", (study.name, blob)
@@ -450,7 +555,7 @@ class SQLiteDatastore(Datastore):
 
     def update_study(self, study: Study) -> None:
         blob = msgpack.packb(study.to_proto(), use_bin_type=True)
-        with self._lock, self._conn:
+        with self._txn():
             cur = self._conn.execute(
                 "UPDATE studies SET proto = ? WHERE name = ?", (blob, study.name)
             )
@@ -458,7 +563,7 @@ class SQLiteDatastore(Datastore):
                 raise NotFoundError(study.name)
 
     def delete_study(self, study_name: str) -> None:
-        with self._lock, self._conn:
+        with self._txn():
             cur = self._conn.execute("DELETE FROM studies WHERE name = ?", (study_name,))
             if cur.rowcount == 0:
                 raise NotFoundError(study_name)
@@ -467,7 +572,7 @@ class SQLiteDatastore(Datastore):
 
     # trials -------------------------------------------------------------------------
     def create_trial(self, study_name: str, trial: Trial) -> Trial:
-        with self._lock, self._conn:
+        with self._txn():
             exists = self._conn.execute(
                 "SELECT 1 FROM studies WHERE name = ?", (study_name,)
             ).fetchone()
@@ -527,7 +632,7 @@ class SQLiteDatastore(Datastore):
     def update_trial(self, study_name: str, trial: Trial) -> None:
         trial.study_name = study_name
         blob = msgpack.packb(trial.to_proto(), use_bin_type=True)
-        with self._lock, self._conn:
+        with self._txn():
             cur = self._conn.execute(
                 "UPDATE trials SET proto = ?, state = ?, client_id = ?"
                 " WHERE study_name = ? AND trial_id = ?",
@@ -537,7 +642,7 @@ class SQLiteDatastore(Datastore):
                 raise NotFoundError(f"{study_name}/trials/{trial.id}")
 
     def delete_trial(self, study_name: str, trial_id: int) -> None:
-        with self._lock, self._conn:
+        with self._txn():
             cur = self._conn.execute(
                 "DELETE FROM trials WHERE study_name = ? AND trial_id = ?",
                 (study_name, trial_id),
@@ -558,11 +663,17 @@ class SQLiteDatastore(Datastore):
             ).fetchone()
         return int(row[0])
 
-    def _fetch_trial_blobs_multi(self, study_names, states) -> Dict[str, list]:
-        """Shared single-query/single-lock fetch for the multi-study reads."""
+    def _fetch_trial_blobs_or_missing(
+            self, study_names, states) -> "Tuple[Dict[str, list], List[str]]":
+        """Single-query fetch returning (blobs by study, missing studies).
+
+        Missing studies are *returned*, not raised, so the sharded backend
+        can merge per-shard results and still report the first missing study
+        in the caller's request order.
+        """
         study_names = list(study_names)
         if not study_names:
-            return {}
+            return {}, []
         marks = ",".join("?" * len(study_names))
         query = f"SELECT study_name, proto FROM trials WHERE study_name IN ({marks})"
         args: list = list(study_names)
@@ -578,13 +689,19 @@ class SQLiteDatastore(Datastore):
                     f"SELECT name FROM studies WHERE name IN ({marks})", study_names
                 ).fetchall()
             }
-            for name in study_names:
-                if name not in known:
-                    raise NotFoundError(name)
-            rows = self._conn.execute(query, args).fetchall()
+            missing = [name for name in study_names if name not in known]
+            rows = (self._conn.execute(query, args).fetchall()
+                    if not missing else [])
         out: Dict[str, list] = {name: [] for name in study_names}
         for study_name, blob in rows:
             out[study_name].append(blob)
+        return out, missing
+
+    def _fetch_trial_blobs_multi(self, study_names, states) -> Dict[str, list]:
+        """Shared single-query/single-lock fetch for the multi-study reads."""
+        out, missing = self._fetch_trial_blobs_or_missing(study_names, states)
+        if missing:
+            raise NotFoundError(missing[0])
         return out
 
     def list_trials_multi(self, study_names, *, states=None):
@@ -604,21 +721,23 @@ class SQLiteDatastore(Datastore):
 
     # metadata ----------------------------------------------------------------
     def update_study_metadata(self, study_name: str, metadata: Metadata) -> None:
-        with self._lock:  # atomic read-modify-write (RLock: reentrant)
+        with self._txn():  # atomic RMW, one durable commit
             super().update_study_metadata(study_name, metadata)
 
     def update_trial_metadata(self, study_name, trial_id, metadata) -> None:
-        with self._lock:
+        with self._txn():
             super().update_trial_metadata(study_name, trial_id, metadata)
 
     def apply_metadata_delta(self, study_name: str, delta) -> List[int]:
-        with self._lock:
+        # the whole delta (study checkpoint + N trial rows) commits as one
+        # transaction: a crash mid-delta must not leave half a GP state
+        with self._txn():
             return super().apply_metadata_delta(study_name, delta)
 
     # ops ---------------------------------------------------------------------------
     def put_operation(self, op: dict) -> None:
         blob = msgpack.packb(op, use_bin_type=True)
-        with self._lock, self._conn:
+        with self._txn():
             self._conn.execute(
                 "INSERT INTO operations (name, study_name, client_id, done, create_time, proto)"
                 " VALUES (?, ?, ?, ?, ?, ?)"
@@ -658,3 +777,175 @@ class SQLiteDatastore(Datastore):
     def close(self) -> None:
         with self._lock:
             self._conn.close()
+
+
+# ---------------------------------------------------------------------------
+
+
+class ShardedSqliteDatastore(Datastore):
+    """Per-shard SQLite files keyed by ``operations.shard_of(study_name)``.
+
+    The single-file backend serializes every write on one connection lock —
+    under N Pythia workers the storage tier is a single point of contention
+    (ROADMAP open item 1). Here each shard owns its own file, connection,
+    and lock, so writes to different studies commit (and fsync) in parallel;
+    a study's trials, operations, and metadata always live in the *same*
+    shard file, so the ``study_transaction`` write set stays atomic within
+    one SQLite transaction.
+
+    Layout: ``<path>/layout.json`` ({"n_shards": N}, written once, adopted
+    on reopen — the shard count is a property of the data on disk, not the
+    process config) plus ``<path>/shard-00.sqlite3`` … ``shard-NN.sqlite3``,
+    each with the full schema. The shard index of study S is
+    ``shard_of(S, n_shards)`` (stable crc32, same function the work queue
+    uses), and an operation name ``<study>/operations/<uuid>`` routes to its
+    study's shard.
+    """
+
+    def __init__(self, path: str, *, n_shards: int = 8,
+                 busy_timeout_ms: int = 10_000, synchronous: str = "NORMAL"):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self._path = os.path.abspath(path)
+        os.makedirs(self._path, exist_ok=True)
+        layout_path = os.path.join(self._path, "layout.json")
+        if os.path.exists(layout_path):
+            with open(layout_path, "r", encoding="utf-8") as f:
+                persisted = int(json.load(f)["n_shards"])
+            n_shards = persisted  # disk wins: rekeying would orphan studies
+        else:
+            tmp = layout_path + ".tmp"
+            with open(tmp, "w", encoding="utf-8") as f:
+                json.dump({"n_shards": n_shards}, f)
+            os.replace(tmp, layout_path)
+        self.n_shards = n_shards
+        self._shards = [
+            SQLiteDatastore(
+                os.path.join(self._path, f"shard-{i:02d}.sqlite3"),
+                busy_timeout_ms=busy_timeout_ms, synchronous=synchronous)
+            for i in range(n_shards)
+        ]
+
+    def _shard(self, study_name: str) -> SQLiteDatastore:
+        from repro.service.operations import shard_of
+        return self._shards[shard_of(study_name, self.n_shards)]
+
+    def _shard_of_op(self, op_name: str) -> Optional[SQLiteDatastore]:
+        study_name, sep, _ = op_name.partition("/operations/")
+        return self._shard(study_name) if sep else None
+
+    # studies --------------------------------------------------------------------
+    def create_study(self, study: Study) -> str:
+        return self._shard(study.name).create_study(study)
+
+    def get_study(self, study_name: str) -> Study:
+        return self._shard(study_name).get_study(study_name)
+
+    def list_studies(self, owner_prefix: str = "") -> List[Study]:
+        # shards visited one at a time (never two shard locks at once)
+        out: List[Study] = []
+        for shard in self._shards:
+            out.extend(shard.list_studies(owner_prefix))
+        out.sort(key=lambda s: s.name)
+        return out
+
+    def update_study(self, study: Study) -> None:
+        self._shard(study.name).update_study(study)
+
+    def delete_study(self, study_name: str) -> None:
+        self._shard(study_name).delete_study(study_name)
+
+    # trials -------------------------------------------------------------------------
+    def create_trial(self, study_name: str, trial: Trial) -> Trial:
+        return self._shard(study_name).create_trial(study_name, trial)
+
+    def get_trial(self, study_name: str, trial_id: int) -> Trial:
+        return self._shard(study_name).get_trial(study_name, trial_id)
+
+    def list_trials(self, study_name, *, states=None, client_id=None, min_trial_id=None):
+        return self._shard(study_name).list_trials(
+            study_name, states=states, client_id=client_id,
+            min_trial_id=min_trial_id)
+
+    def update_trial(self, study_name: str, trial: Trial) -> None:
+        self._shard(study_name).update_trial(study_name, trial)
+
+    def delete_trial(self, study_name: str, trial_id: int) -> None:
+        self._shard(study_name).delete_trial(study_name, trial_id)
+
+    def max_trial_id(self, study_name: str) -> int:
+        return self._shard(study_name).max_trial_id(study_name)
+
+    def _multi_blobs(self, study_names, states) -> Dict[str, list]:
+        """Group the request by shard, fetch per shard, and keep the
+        single-backend contract: NotFoundError names the first missing
+        study in the *request* order even when it lives on a later shard."""
+        study_names = list(study_names)
+        by_shard: Dict[int, List[str]] = {}
+        from repro.service.operations import shard_of
+        for name in study_names:
+            by_shard.setdefault(shard_of(name, self.n_shards), []).append(name)
+        merged: Dict[str, list] = {}
+        missing: List[str] = []
+        for idx, names in by_shard.items():
+            out, miss = self._shards[idx]._fetch_trial_blobs_or_missing(
+                names, states)
+            merged.update(out)
+            missing.extend(miss)
+        if missing:
+            missing_set = set(missing)
+            first = next(n for n in study_names if n in missing_set)
+            raise NotFoundError(first)
+        return {name: merged[name] for name in study_names}
+
+    def list_trials_multi(self, study_names, *, states=None):
+        return {
+            name: [Trial.from_proto(msgpack.unpackb(blob, raw=False))
+                   for blob in blobs]
+            for name, blobs in self._multi_blobs(study_names, states).items()
+        }
+
+    def list_trials_multi_raw(self, study_names, *, states=None):
+        return {
+            name: [msgpack.unpackb(blob, raw=False) for blob in blobs]
+            for name, blobs in self._multi_blobs(study_names, states).items()
+        }
+
+    # metadata ----------------------------------------------------------------
+    def update_study_metadata(self, study_name: str, metadata: Metadata) -> None:
+        self._shard(study_name).update_study_metadata(study_name, metadata)
+
+    def update_trial_metadata(self, study_name, trial_id, metadata) -> None:
+        self._shard(study_name).update_trial_metadata(
+            study_name, trial_id, metadata)
+
+    def apply_metadata_delta(self, study_name: str, delta) -> List[int]:
+        return self._shard(study_name).apply_metadata_delta(study_name, delta)
+
+    def study_transaction(self, study_name: str):
+        return self._shard(study_name).study_transaction(study_name)
+
+    # ops ---------------------------------------------------------------------------
+    def put_operation(self, op: dict) -> None:
+        study_name = op.get("study_name") or op["name"].partition(
+            "/operations/")[0]
+        self._shard(study_name).put_operation(op)
+
+    def get_operation(self, op_name: str) -> dict:
+        shard = self._shard_of_op(op_name)
+        if shard is not None:
+            return shard.get_operation(op_name)
+        for shard in self._shards:  # malformed name: fall back to a scan
+            try:
+                return shard.get_operation(op_name)
+            except NotFoundError:
+                continue
+        raise NotFoundError(op_name)
+
+    def list_operations(self, study_name, *, client_id=None, only_pending=False):
+        return self._shard(study_name).list_operations(
+            study_name, client_id=client_id, only_pending=only_pending)
+
+    def close(self) -> None:
+        for shard in self._shards:
+            shard.close()

@@ -38,6 +38,7 @@ from typing import Any, Callable, Dict, Optional
 
 import msgpack
 
+from repro.service import chaos
 from repro.service._lockwitness import make_lock
 
 log = logging.getLogger(__name__)
@@ -100,8 +101,20 @@ class Transport:
         raise NotImplementedError
 
     def call_raw_many(self, requests: "list[dict]", timeout: float) -> "list[dict]":
-        """Issue N requests, responses in request order. Default: sequential."""
-        return [self.call_raw(r, timeout) for r in requests]
+        """Issue N requests, responses in request order. Default: sequential.
+
+        On a transport error the responses already read are attached to the
+        raised VizierRpcError as ``delivered`` so RpcClient.call_many can
+        resend only the undelivered sub-requests.
+        """
+        out: "list[dict]" = []
+        for r in requests:
+            try:
+                out.append(self.call_raw(r, timeout))
+            except VizierRpcError as e:
+                e.delivered = list(out)
+                raise
+        return out
 
     def close(self) -> None:
         pass
@@ -137,10 +150,18 @@ class TcpTransport(Transport):
                 if self._sock is None:
                     self._sock = self._connect(timeout)
                 self._sock.settimeout(timeout)
+                # archlint: disable=chaos-call-under-lock — the transport lock
+                # IS the per-frame serializer: an injected sever must tear
+                # *this* connection's frame, so it has to fire inside it
+                chaos.inject("transport.send", method=request.get("method"))
                 # archlint: disable=lock-blocking-call — this lock IS the
                 # per-connection request serializer; blocking socket I/O under
                 # it is the design (one in-flight frame per transport)
                 self._sock.sendall(_pack(request))
+                # archlint: disable=chaos-call-under-lock — a drop models the
+                # response frame lost after the server applied the request;
+                # only this point in the serializer has that meaning
+                chaos.inject("transport.recv", method=request.get("method"))
                 return _read_frame(self._sock)
             except (OSError, ConnectionError, struct.error) as e:
                 self._drop()
@@ -150,20 +171,36 @@ class TcpTransport(Transport):
         """Pipelined: all frames go out, then all responses are read in order.
 
         Correct because the server handler loop reads/serves/replies one frame
-        at a time per connection, so response order == request order.
+        at a time per connection, so response order == request order. On a
+        transport error the responses already read are attached to the raised
+        VizierRpcError as ``delivered`` (see Transport.call_raw_many).
         """
         with self._lock:
+            delivered: "list[dict]" = []
             try:
                 if self._sock is None:
                     self._sock = self._connect(timeout)
                 self._sock.settimeout(timeout)
+                # archlint: disable=chaos-call-under-lock — the transport lock
+                # IS the per-frame serializer; a batch sever must tear this
+                # connection's pipelined frames, so it fires inside it
+                chaos.inject("transport.send", method=requests[0].get("method"))
                 # archlint: disable=lock-blocking-call — pipelined frames ride
                 # the same per-connection serializer lock by design
                 self._sock.sendall(b"".join(_pack(r) for r in requests))
-                return [_read_frame(self._sock) for _ in requests]
+                for i in range(len(requests)):
+                    # archlint: disable=chaos-call-under-lock — a drop at
+                    # index i loses response i after the server applied it;
+                    # only this point in the serializer has that meaning
+                    chaos.inject("transport.recv",
+                                 method=requests[i].get("method"), index=i)
+                    delivered.append(_read_frame(self._sock))
+                return delivered
             except (OSError, ConnectionError, struct.error) as e:
                 self._drop()
-                raise VizierRpcError(StatusCode.UNAVAILABLE, f"transport: {e}") from e
+                err = VizierRpcError(StatusCode.UNAVAILABLE, f"transport: {e}")
+                err.delivered = delivered
+                raise err from e
 
     def _drop(self) -> None:
         if self._sock is not None:
@@ -183,6 +220,105 @@ class TcpTransport(Transport):
 # ---------------------------------------------------------------------------
 
 
+class RetryBudget:
+    """Token-bucket retry budget shared by every call on one client.
+
+    Each retry spends a token; the bucket refills at ``refill_per_s`` and
+    every success refunds ``success_credit``. When the bucket runs dry the
+    client stops retrying and surfaces the UNAVAILABLE immediately, so an
+    injected (or real) outage costs a caller one failed attempt instead of
+    ``max_retries`` backoff cycles — retries track the *success* rate of the
+    backend rather than amplifying its failure rate into a retry storm
+    (gRPC retryThrottling semantics).
+    """
+
+    def __init__(self, capacity: float = 32.0, refill_per_s: float = 2.0,
+                 success_credit: float = 1.0):
+        self.capacity = float(capacity)
+        self.refill_per_s = float(refill_per_s)
+        self.success_credit = float(success_credit)
+        self._tokens = self.capacity
+        self._stamp = time.monotonic()
+        self._lock = make_lock("RetryBudget._lock")
+
+    def _refill_locked(self) -> None:
+        now = time.monotonic()
+        self._tokens = min(
+            self.capacity,
+            self._tokens + (now - self._stamp) * self.refill_per_s)
+        self._stamp = now
+
+    def try_spend(self, cost: float = 1.0) -> bool:
+        with self._lock:
+            self._refill_locked()
+            if self._tokens < cost:
+                return False
+            self._tokens -= cost
+            return True
+
+    def record_success(self) -> None:
+        with self._lock:
+            self._refill_locked()
+            self._tokens = min(self.capacity,
+                               self._tokens + self.success_credit)
+
+    @property
+    def tokens(self) -> float:
+        with self._lock:
+            self._refill_locked()
+            return self._tokens
+
+
+class CircuitBreaker:
+    """Consecutive-transport-failure breaker: closed → open → half-open.
+
+    ``failure_threshold`` consecutive transport failures open the breaker;
+    while open, ``allow()`` is False so the client backs off without touching
+    the socket (no reconnect storm against a dead or drowning server). After
+    ``cooldown_s`` exactly one probe is let through: success closes the
+    breaker, failure re-opens it for another cooldown. Only transport-level
+    failures count — an application error proves the server is up.
+    """
+
+    def __init__(self, failure_threshold: int = 16, cooldown_s: float = 1.0):
+        self.failure_threshold = int(failure_threshold)
+        self.cooldown_s = float(cooldown_s)
+        self._failures = 0
+        self._opened_at: Optional[float] = None
+        self._probing = False
+        self._lock = make_lock("CircuitBreaker._lock")
+
+    def allow(self) -> bool:
+        with self._lock:
+            if self._opened_at is None:
+                return True
+            if time.monotonic() - self._opened_at < self.cooldown_s:
+                return False
+            if self._probing:
+                return False
+            self._probing = True  # half-open: single probe in flight
+            return True
+
+    def record_success(self) -> None:
+        with self._lock:
+            self._failures = 0
+            self._opened_at = None
+            self._probing = False
+
+    def record_failure(self) -> None:
+        with self._lock:
+            self._failures += 1
+            self._probing = False
+            if self._failures >= self.failure_threshold:
+                self._opened_at = time.monotonic()
+
+    @property
+    def is_open(self) -> bool:
+        with self._lock:
+            return (self._opened_at is not None
+                    and time.monotonic() - self._opened_at < self.cooldown_s)
+
+
 class RpcClient:
     def __init__(
         self,
@@ -192,6 +328,8 @@ class RpcClient:
         max_retries: int = 5,
         backoff_base: float = 0.05,
         backoff_cap: float = 2.0,
+        retry_budget: Optional[RetryBudget] = None,
+        circuit_breaker: Optional[CircuitBreaker] = None,
     ):
         if isinstance(target, str):
             self._transport: Transport = TcpTransport(target)
@@ -201,6 +339,10 @@ class RpcClient:
         self.max_retries = max_retries
         self.backoff_base = backoff_base
         self.backoff_cap = backoff_cap
+        self.retry_budget = (retry_budget if retry_budget is not None
+                             else RetryBudget())
+        self.circuit_breaker = (circuit_breaker if circuit_breaker is not None
+                                else CircuitBreaker())
 
     def _backoff_sleep(self, attempt: int, deadline: float) -> None:
         """Jittered exponential backoff, clamped to the request deadline.
@@ -231,19 +373,34 @@ class RpcClient:
             remaining = deadline - time.monotonic()
             if remaining <= 0:
                 raise VizierRpcError(StatusCode.DEADLINE_EXCEEDED, f"{method} deadline")
+            if not self.circuit_breaker.allow():
+                # open breaker: back off without touching the socket; keep
+                # retrying (within budget) so a recovering server is re-probed
+                if attempt >= self.max_retries or not self.retry_budget.try_spend():
+                    raise VizierRpcError(
+                        StatusCode.UNAVAILABLE, f"{method}: circuit breaker open")
+                attempt += 1
+                self._backoff_sleep(attempt, deadline)
+                continue
             try:
                 resp = self._transport.call_raw(request, remaining)
             except VizierRpcError as e:
-                if e.code != StatusCode.UNAVAILABLE or attempt >= self.max_retries:
+                if e.code != StatusCode.UNAVAILABLE:
+                    raise
+                self.circuit_breaker.record_failure()
+                if attempt >= self.max_retries or not self.retry_budget.try_spend():
                     raise
                 attempt += 1
                 self._backoff_sleep(attempt, deadline)
                 continue
+            self.circuit_breaker.record_success()
             if resp.get("ok"):
+                self.retry_budget.record_success()
                 return resp.get("result")
             err = resp.get("error") or {}
             code = err.get("code", StatusCode.INTERNAL)
-            if code == StatusCode.UNAVAILABLE and attempt < self.max_retries:
+            if (code == StatusCode.UNAVAILABLE and attempt < self.max_retries
+                    and self.retry_budget.try_spend()):
                 attempt += 1
                 self._backoff_sleep(attempt, deadline)
                 continue
@@ -259,13 +416,18 @@ class RpcClient:
     ) -> "list[Any]":
         """N calls of one method, pipelined over a single connection.
 
-        Results come back in params order. Transport failures retry the whole
-        batch (callers should only batch idempotent methods, e.g. polling
-        GetOperation); the first application error is raised after all
-        responses are read, so the connection stays frame-aligned. With
-        ``return_exceptions=True`` application errors are returned in-place
-        as VizierRpcError objects instead — per-item fault isolation for
-        pipelined reads where one bad key must not fail its siblings.
+        Results come back in params order. On a mid-batch transport failure
+        the responses already read are kept and only the *undelivered*
+        sub-requests are resent — a sub-request whose response was read is
+        never re-sent, so batching non-idempotent methods cannot double-apply
+        work the server already acknowledged. (A sub-request whose response
+        was lost in flight is still at-least-once, same as any single call:
+        services dedupe those via client-chosen operation ids.) The first
+        application error is raised after all responses are read, so the
+        connection stays frame-aligned. With ``return_exceptions=True``
+        application errors are returned in-place as VizierRpcError objects
+        instead — per-item fault isolation for pipelined reads where one bad
+        key must not fail its siblings.
         """
         if not params_list:
             return []
@@ -280,36 +442,61 @@ class RpcClient:
             }
             for params in params_list
         ]
+        responses_by_id: Dict[str, dict] = {}
+
+        def _absorb(resps: "list[dict]") -> None:
+            for resp in resps:
+                rid = resp.get("id")
+                if rid is not None:
+                    responses_by_id[rid] = resp
+
+        pending = list(requests)
         attempt = 0
-        while True:
+        while pending:
             remaining = deadline - time.monotonic()
             if remaining <= 0:
                 raise VizierRpcError(StatusCode.DEADLINE_EXCEEDED, f"{method} deadline")
+            if not self.circuit_breaker.allow():
+                if attempt >= self.max_retries or not self.retry_budget.try_spend():
+                    raise VizierRpcError(
+                        StatusCode.UNAVAILABLE, f"{method}: circuit breaker open")
+                attempt += 1
+                self._backoff_sleep(attempt, deadline)
+                continue
             try:
-                responses = self._transport.call_raw_many(requests, remaining)
+                _absorb(self._transport.call_raw_many(pending, remaining))
             except VizierRpcError as e:
-                if e.code != StatusCode.UNAVAILABLE or attempt >= self.max_retries:
+                _absorb(getattr(e, "delivered", None) or [])
+                pending = [r for r in pending if r["id"] not in responses_by_id]
+                if e.code != StatusCode.UNAVAILABLE:
+                    raise
+                self.circuit_breaker.record_failure()
+                if attempt >= self.max_retries or not self.retry_budget.try_spend():
                     raise
                 attempt += 1
                 self._backoff_sleep(attempt, deadline)
                 continue
-            results = []
-            first_error: Optional[VizierRpcError] = None
-            for resp in responses:
-                if resp.get("ok"):
-                    results.append(resp.get("result"))
-                    continue
-                err = resp.get("error") or {}
-                error = VizierRpcError(
-                    err.get("code", StatusCode.INTERNAL),
-                    err.get("message", "unknown error"),
-                )
-                if first_error is None:
-                    first_error = error
-                results.append(error if return_exceptions else None)
-            if first_error is not None and not return_exceptions:
-                raise first_error
-            return results
+            self.circuit_breaker.record_success()
+            self.retry_budget.record_success()
+            pending = [r for r in pending if r["id"] not in responses_by_id]
+        results = []
+        first_error: Optional[VizierRpcError] = None
+        for req in requests:
+            resp = responses_by_id.get(req["id"]) or {}
+            if resp.get("ok"):
+                results.append(resp.get("result"))
+                continue
+            err = resp.get("error") or {}
+            error = VizierRpcError(
+                err.get("code", StatusCode.INTERNAL),
+                err.get("message", "unknown error"),
+            )
+            if first_error is None:
+                first_error = error
+            results.append(error if return_exceptions else None)
+        if first_error is not None and not return_exceptions:
+            raise first_error
+        return results
 
     def close(self) -> None:
         self._transport.close()

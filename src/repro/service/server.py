@@ -16,10 +16,43 @@ from __future__ import annotations
 import os
 from typing import Optional
 
-from repro.service.datastore import Datastore, InMemoryDatastore, SQLiteDatastore
+from repro.service import chaos
+from repro.service.datastore import (
+    Datastore,
+    InMemoryDatastore,
+    ShardedSqliteDatastore,
+    SQLiteDatastore,
+)
 from repro.service.pythia_service import PythiaServicer
 from repro.service.rpc import PooledRpcClient, RpcServer
 from repro.service.vizier_service import InProcessPythia, RemotePythia, VizierService
+
+
+def _make_datastore(database_path: Optional[str],
+                    database_shards: int,
+                    database_synchronous: str = "NORMAL") -> Datastore:
+    """Storage tier selection, shared by both server shapes.
+
+    ``database_shards`` > 0 selects the per-shard-file SQLite backend
+    (``database_path`` is then a directory); a plain ``database_path``
+    keeps the single-file store; neither means in-memory.
+    ``database_synchronous`` sets the SQLite durability level for either
+    file-backed shape ("FULL" fsyncs every commit — acked work survives
+    power loss, not just process death). The datastore is wrapped for chaos
+    injection only when ``CHAOS_SEED`` is active.
+    """
+    if database_shards > 0:
+        if not database_path:
+            raise ValueError("database_shards > 0 requires database_path")
+        ds: Datastore = ShardedSqliteDatastore(
+            database_path, n_shards=database_shards,
+            synchronous=database_synchronous)
+    elif database_path:
+        ds = SQLiteDatastore(database_path, synchronous=database_synchronous)
+    else:
+        ds = InMemoryDatastore()
+    chaos.install_from_env()
+    return chaos.wrap_datastore(ds)
 
 
 class DefaultVizierServer:
@@ -29,24 +62,30 @@ class DefaultVizierServer:
         port: int = 0,
         *,
         database_path: Optional[str] = None,
+        database_shards: int = 0,
+        database_synchronous: str = "NORMAL",
         reassign_stalled_after: Optional[float] = None,
         recover: bool = True,
         n_pythia_workers: int = 0,
         n_shards: int = 8,
+        lease_timeout: float = 30.0,
     ):
         """``n_pythia_workers`` > 0 enables the scale-out serving tier: a
         pool of Pythia workers pulling coalesced batches off an
         ``n_shards``-way study-sharded work queue (0 keeps the classic
-        direct thread-pool dispatch)."""
-        self.datastore: Datastore = (
-            SQLiteDatastore(database_path) if database_path else InMemoryDatastore()
-        )
+        direct thread-pool dispatch). ``database_shards`` > 0 stores each
+        study shard in its own SQLite file under the ``database_path``
+        directory."""
+        self.datastore: Datastore = _make_datastore(database_path,
+                                                    database_shards,
+                                                    database_synchronous)
         self.servicer = VizierService(
             self.datastore,
             InProcessPythia(self.datastore),
             reassign_stalled_after=reassign_stalled_after,
             n_pythia_workers=n_pythia_workers,
             n_shards=n_shards,
+            lease_timeout=lease_timeout,
         )
         self._server = RpcServer(self.servicer, host=host, port=port).start()
         if recover:
@@ -85,21 +124,25 @@ class DistributedVizierServer:
         host: str = "127.0.0.1",
         *,
         database_path: Optional[str] = None,
+        database_shards: int = 0,
+        database_synchronous: str = "NORMAL",
         reassign_stalled_after: Optional[float] = None,
         coalesce_remote: bool = True,
         pythia_single_fetch: bool = True,
         n_pythia_workers: int = 0,
         n_shards: int = 8,
+        lease_timeout: float = 30.0,
     ):
-        self.datastore: Datastore = (
-            SQLiteDatastore(database_path) if database_path else InMemoryDatastore()
-        )
+        self.datastore: Datastore = _make_datastore(database_path,
+                                                    database_shards,
+                                                    database_synchronous)
         # 1. API server comes up first (Pythia dials back into it).
         self.servicer = VizierService(
             self.datastore, pythia=None,
             reassign_stalled_after=reassign_stalled_after,
             n_pythia_workers=n_pythia_workers,
             n_shards=n_shards,
+            lease_timeout=lease_timeout,
         )
         self._api_server = RpcServer(self.servicer, host=host, port=0).start()
         # 2. Pythia server, pointed at the API server.

@@ -55,6 +55,7 @@ from repro.core.study_config import StudyConfig
 from repro.pythia.policy import StudyDescriptor, SuggestRequest, EarlyStopRequest
 from repro.pythia.registry import make_policy, registered_algorithms
 from repro.pythia.supporter import DatastorePolicySupporter, PrefetchedPolicySupporter
+from repro.service import chaos
 from repro.service import operations as ops_lib
 from repro.service._lockwitness import make_lock
 from repro.service.datastore import Datastore, KeyAlreadyExistsError, NotFoundError
@@ -578,12 +579,16 @@ class VizierService(Servicer):
                 study, op["suggestion_count"], client_id
             )
             with self._study_lock(study_name):
-                self._apply_delta_locked(study_name, delta)
-                trials = self._create_trials_locked(study_name, client_id, suggestions)
-                done = ops_lib.complete_operation(
-                    op, {"trials": [t.to_proto() for t in trials]}
-                )
-                self._put_op(done)
+                # one durable unit: delta + trials + the done op commit
+                # together, so a crash mid-finalize rolls back to a cleanly
+                # re-runnable pending op (never trials without their op)
+                with self._ds.study_transaction(study_name):
+                    self._apply_delta_locked(study_name, delta)
+                    trials = self._create_trials_locked(study_name, client_id, suggestions)
+                    done = ops_lib.complete_operation(
+                        op, {"trials": [t.to_proto() for t in trials]}
+                    )
+                    self._put_op(done)
         except Exception as e:  # noqa: BLE001 — op must terminate
             log.exception("suggest op %s failed", op["name"])
             self._fail_op(op, e)
@@ -640,6 +645,9 @@ class VizierService(Servicer):
             suggestions, delta = result
             shortfalls: List[tuple] = []
             try:
+                # injected finalize faults fire before the study lock so a
+                # stall here delays, never deadlocks, the finalize path
+                chaos.inject("service.finalize", study=study.name)
                 with self._study_lock(study.name):
                     if op_guard is not None:
                         # zombie-lease finalize races are settled under the
@@ -649,31 +657,35 @@ class VizierService(Servicer):
                                  if op_guard(op) and not self._op_already_done(op)]
                         if not group:
                             continue
-                    self._apply_delta_locked(study.name, delta)
-                    cursor = 0
-                    for op in group:
-                        want = int(op["suggestion_count"])
-                        take = suggestions[cursor:cursor + want]
-                        cursor += len(take)
-                        if want and not take:
-                            # the policy under-delivered and this op got
-                            # nothing: an empty *successful* op would make
-                            # the client's suggestion loop terminate, so
-                            # fail it (client may retry) instead
-                            self._fail_op(op, RuntimeError(
-                                f"policy returned {len(suggestions)} suggestions "
-                                f"for a coalesced request; none left for this op"))
-                            continue
-                        if len(take) < want:
-                            # log outside the study lock (logging does I/O)
-                            shortfalls.append((op["name"], len(take), want))
-                        trials = self._create_trials_locked(
-                            study.name, op["client_id"], take
-                        )
-                        done = ops_lib.complete_operation(
-                            op, {"trials": [t.to_proto() for t in trials]}
-                        )
-                        self._put_op(done)
+                    # one durable unit per study group: delta + every op's
+                    # trials + done markers commit together (see
+                    # Datastore.study_transaction)
+                    with self._ds.study_transaction(study.name):
+                        self._apply_delta_locked(study.name, delta)
+                        cursor = 0
+                        for op in group:
+                            want = int(op["suggestion_count"])
+                            take = suggestions[cursor:cursor + want]
+                            cursor += len(take)
+                            if want and not take:
+                                # the policy under-delivered and this op got
+                                # nothing: an empty *successful* op would make
+                                # the client's suggestion loop terminate, so
+                                # fail it (client may retry) instead
+                                self._fail_op(op, RuntimeError(
+                                    f"policy returned {len(suggestions)} suggestions "
+                                    f"for a coalesced request; none left for this op"))
+                                continue
+                            if len(take) < want:
+                                # log outside the study lock (logging does I/O)
+                                shortfalls.append((op["name"], len(take), want))
+                            trials = self._create_trials_locked(
+                                study.name, op["client_id"], take
+                            )
+                            done = ops_lib.complete_operation(
+                                op, {"trials": [t.to_proto() for t in trials]}
+                            )
+                            self._put_op(done)
             except Exception as e:  # noqa: BLE001 — ops must terminate
                 log.exception("batch suggest finalize for %s failed", study.name)
                 for op in group:

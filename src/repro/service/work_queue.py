@@ -37,6 +37,7 @@ import time
 from collections import deque
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.service import chaos
 from repro.service import operations as ops_lib
 from repro.service._lockwitness import make_condition
 
@@ -127,7 +128,8 @@ class ShardedWorkQueue:
               ) -> Optional[Lease]:
         """Claim one free shard's whole backlog; None on timeout/close."""
         deadline = None if timeout is None else time.monotonic() + timeout
-        while True:
+        granted: Optional[Lease] = None
+        while granted is None:
             # the wait loop re-acquires the CV each iteration so reclaim
             # warnings flush outside the critical section
             reclaimed: List[Tuple[str, int]] = []
@@ -142,22 +144,27 @@ class ShardedWorkQueue:
                             ops = list(shard.queued)
                             shard.queued.clear()
                             shard.generation += 1
-                            lease = Lease(sid, shard.generation, worker_id,
-                                          ops, now + self.lease_timeout)
-                            shard.lease = lease
-                            return lease
-                    if deadline is not None:
-                        remaining = deadline - time.monotonic()
-                        if remaining <= 0:
-                            return None
-                        self._cv.wait(remaining)
-                    else:
-                        self._cv.wait()
+                            granted = Lease(sid, shard.generation, worker_id,
+                                            ops, now + self.lease_timeout)
+                            shard.lease = granted
+                            break
+                    if granted is None:
+                        if deadline is not None:
+                            remaining = deadline - time.monotonic()
+                            if remaining <= 0:
+                                return None
+                            self._cv.wait(remaining)
+                        else:
+                            self._cv.wait()
             finally:
                 # the with-block has exited (CV released) before this runs
                 for desc, n_ops in reclaimed:
                     log.warning("lease %s expired; requeueing %d ops",
                                 desc, n_ops)
+        # strictly outside the CV: an injected stall or early expiry on this
+        # grant must never block the other shards' lease traffic
+        chaos.inject("queue.lease", lease=granted)
+        return granted
 
     def lease_valid(self, lease: Lease) -> bool:
         """True while the lease still owns its shard (generation match)."""
@@ -173,6 +180,21 @@ class ShardedWorkQueue:
                 return False  # stale: ops were requeued to another worker
             shard.lease = None
             self._cv.notify_all()
+            return True
+
+    def release(self, lease: Lease) -> bool:
+        """Hand a lease back *without* acking (the batch runner failed).
+
+        The ops requeue at the front exactly like a crash reclaim — a worker
+        whose runner raised must not ack work it may not have finished, or a
+        still-pending op would be retired on a live server and stay pending
+        forever (a lost acked op). False if the lease was already reclaimed.
+        """
+        with self._cv:
+            shard = self._shards[lease.shard_id]
+            if shard.lease is not lease or shard.generation != lease.generation:
+                return False
+            self._requeue_locked(lease)
             return True
 
     def reclaim_worker(self, worker_id: int) -> int:
@@ -247,22 +269,39 @@ class PythiaWorkerPool:
     def _loop(self, wid: int) -> None:
         killed = self._killed[wid]
         while not (self._shutdown.is_set() or killed.is_set()):
-            lease = self._queue.lease(wid, timeout=self._POLL)
+            try:
+                lease = self._queue.lease(wid, timeout=self._POLL)
+            except Exception:  # noqa: BLE001 — injected lease fault: the
+                log.exception("worker %d lease raised", wid)
+                continue      # grant reclaims via its own timeout
             if lease is None:
                 continue
+            failed = False
             try:
+                # a mid-batch worker kill lands here: killed.set() via the
+                # seam's kill callback, checked before dispatch and by the
+                # op_guard below
+                chaos.inject("worker.batch", worker=wid, lease=lease,
+                             kill=killed.set)
                 # idempotent re-run: skip ops a dead predecessor finished
                 ops = [op for op in lease.ops if not self._already_done(op)]
-                if ops:
+                if ops and not killed.is_set():
                     self._run_batch(
                         ops,
                         lambda op: (not killed.is_set()
                                     and self._queue.lease_valid(lease)),
                     )
+                chaos.inject("queue.ack", lease=lease, kill=killed.set)
             except Exception:  # noqa: BLE001 — the runner fails ops itself
                 log.exception("worker %d batch run raised", wid)
+                failed = True
             if killed.is_set():
-                return  # crashed before ack: reclaim_worker requeues
+                return  # crashed before ack: reclaim/lease-expiry requeues
+            if failed:
+                # crash-equivalent: the runner may have died before failing
+                # every op — hand the batch back instead of acking it away
+                self._queue.release(lease)
+                continue
             self._queue.ack(lease)
 
     # -- fault injection / lifecycle ----------------------------------------

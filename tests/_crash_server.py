@@ -1,0 +1,145 @@
+"""Subprocess halves of the crash-restart durability test (test_chaos.py).
+
+Two phases, run as separate processes so the kill is a REAL ``SIGKILL`` —
+no atexit, no finally blocks, no flush; exactly what a machine failure
+looks like to the datastore.
+
+``serve DB SHARDS SENTINEL``
+    Start a DefaultVizierServer on the durable path, complete one trial
+    (acked work that must survive), dispatch a 2-suggestion op into the
+    SLEEPY policy (stalls CRASH_SLEEP seconds inside the worker batch),
+    write the sentinel JSON, then sleep until killed.
+
+``recover DB SHARDS {wait|get} OP_NAME STUDY_NAME``
+    Fresh server on the same path (CRASH_SLEEP=0 in the parent's env):
+    ``recover_pending_operations`` re-enqueues the interrupted op; poll it
+    to completion via WaitOperation long-poll or the classic GetOperation
+    loop, then print a JSON report for the parent's assertions.
+"""
+
+import json
+import os
+import sys
+import time
+
+from repro.core import Trial
+from repro.pythia.baseline_designers import RandomSearchDesigner
+from repro.pythia.designers import SerializableDesignerPolicy
+from repro.pythia.policy import Policy
+from repro.pythia.registry import register
+from repro.service import DefaultVizierServer, VizierClient
+from repro.service.rpc import RpcClient
+
+
+@register("SLEEPY")
+def _sleepy(supporter, config):
+    inner = SerializableDesignerPolicy(
+        supporter, lambda cfg: RandomSearchDesigner(cfg), RandomSearchDesigner)
+    sleep_s = float(os.environ.get("CRASH_SLEEP", "30"))
+
+    class SleepyPolicy(Policy):
+        def suggest(self, request):
+            time.sleep(sleep_s)  # the parent SIGKILLs us in here
+            return inner.suggest(request)
+
+    return SleepyPolicy()
+
+
+def _config():
+    from repro.core import ObjectiveMetricGoal, StudyConfig
+
+    cfg = StudyConfig()
+    cfg.search_space.select_root().add_float_param("x", 0.0, 1.0)
+    cfg.metrics.add("acc", ObjectiveMetricGoal.MAXIMIZE)
+    cfg.algorithm = "SLEEPY"
+    return cfg
+
+
+def _server(db: str, shards: int) -> DefaultVizierServer:
+    return DefaultVizierServer(
+        database_path=db,
+        database_shards=shards,
+        n_pythia_workers=2,
+        n_shards=4,
+    )
+
+
+def serve(db: str, shards: int, sentinel: str) -> None:
+    server = _server(db, shards)
+    client = VizierClient.load_or_create_study(
+        "crash", _config(), client_id="killer", target=server.address)
+
+    # acked work that must survive the kill (different client_id so the
+    # suggest below cannot be satisfied by handing this trial back)
+    done = client.add_trial(Trial(parameters={"x": 0.5}))
+    client.complete_trial({"acc": 1.0}, trial_id=done.id)
+
+    # dispatch without awaiting: the op record is durable before the RPC
+    # returns; a worker leases it and stalls inside SLEEPY.suggest
+    rpc = RpcClient(server.address)
+    op = rpc.call("SuggestTrials", {
+        "parent": client.study_name,
+        "suggestion_count": 2,
+        "client_id": "killer",
+    })["operation"]
+
+    payload = {
+        "op_name": op["name"],
+        "study_name": client.study_name,
+        "completed_trial_id": done.id,
+    }
+    tmp = sentinel + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(json.dumps(payload))
+    os.replace(tmp, sentinel)
+    time.sleep(3600)  # killed long before this returns
+
+
+def recover(db: str, shards: int, poll_mode: str, op_name: str,
+            study_name: str) -> None:
+    server = _server(db, shards)  # recover=True re-enqueues the pending op
+    rpc = RpcClient(server.address)
+    deadline = time.monotonic() + 60
+    while True:
+        if poll_mode == "wait":
+            op = rpc.call("WaitOperation",
+                          {"name": op_name, "timeout_ms": 2000})["operation"]
+        else:
+            op = rpc.call("GetOperation", {"name": op_name})["operation"]
+        if op.get("done"):
+            break
+        if time.monotonic() > deadline:
+            break
+        if poll_mode == "get":
+            time.sleep(0.05)
+
+    client = VizierClient(server.address, study_name, "recover")
+    trials = client.list_trials()
+    completed = [t for t in trials if t.state.is_terminal]
+    report = {
+        "done": bool(op.get("done")),
+        "error": op.get("error"),
+        "requeues": op.get("requeues"),
+        "result_trials": len((op.get("result") or {}).get("trials", [])),
+        "trial_count": len(trials),
+        "completed_trial_state_terminal": len(completed) >= 1,
+    }
+    client.close()
+    rpc.close()
+    server.stop()
+    print(json.dumps(report))
+
+
+def main(argv) -> int:
+    cmd = argv[1]
+    if cmd == "serve":
+        serve(argv[2], int(argv[3]), argv[4])
+    elif cmd == "recover":
+        recover(argv[2], int(argv[3]), argv[4], argv[5], argv[6])
+    else:
+        raise SystemExit(f"unknown phase {cmd!r}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -22,7 +22,14 @@ from pathlib import Path
 
 import pytest
 
-from archlint import core, error_pass, lock_pass, retrace_pass, schema_pass
+from archlint import (
+    chaos_pass,
+    core,
+    error_pass,
+    lock_pass,
+    retrace_pass,
+    schema_pass,
+)
 from repro.core import StudyState
 from repro.core.metadata import MetadataDelta
 from repro.service import InMemoryDatastore, VizierClient, VizierService
@@ -639,6 +646,126 @@ def test_error_pass_scoped_to_isolation_basenames(tmp_path):
                     pass
         """)
     assert error_pass.run([src]) == []
+
+
+# ---------------------------------------------------------------------------
+# Chaos-hook discipline pass
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_inject_under_lock_flagged(tmp_path):
+    src = _src(tmp_path, "service/mod.py", """\
+        import threading
+        from repro.service import chaos
+
+        class S:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def f(self):
+                with self._lock:
+                    chaos.inject("datastore.write")
+        """)
+    findings = chaos_pass.run([src])
+    assert _rules(findings) == {chaos_pass.RULE_UNDER_LOCK}
+    assert findings[0].line == _line_of(src, 'chaos.inject("datastore.write")')
+
+
+def test_chaos_inject_under_cv_and_imported_name_flagged(tmp_path):
+    src = _src(tmp_path, "service/mod.py", """\
+        import threading
+        from repro.service.chaos import inject
+
+        class Q:
+            def __init__(self):
+                self._cv = threading.Condition()
+
+            def lease(self):
+                with self._cv:
+                    inject("queue.lease")
+        """)
+    findings = chaos_pass.run([src])
+    assert _rules(findings) == {chaos_pass.RULE_UNDER_LOCK}
+
+
+def test_chaos_inject_outside_lock_clean(tmp_path):
+    src = _src(tmp_path, "service/mod.py", """\
+        import threading
+        from repro.service import chaos
+
+        class S:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def f(self):
+                granted = None
+                with self._lock:
+                    granted = object()
+                chaos.inject("queue.lease", lease=granted)
+                with open("x") as fh:
+                    chaos.inject("transport.send")
+        """)
+    assert chaos_pass.run([src]) == []
+
+
+def test_chaos_inject_in_nested_def_under_lock_clean(tmp_path):
+    # A callback *defined* under the lock runs later, off the lock.
+    src = _src(tmp_path, "service/mod.py", """\
+        import threading
+        from repro.service import chaos
+
+        class S:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def f(self):
+                with self._lock:
+                    def cb():
+                        chaos.inject("worker.batch")
+                    self._cb = cb
+        """)
+    assert chaos_pass.run([src]) == []
+
+
+def test_chaos_ungated_hook_flagged_and_guarded_clean(tmp_path):
+    bad = _src(tmp_path, "a/chaos.py", """\
+        _injector = None
+
+        def inject(site, **ctx):
+            _injector.fire(site, ctx)
+        """)
+    findings = chaos_pass.run([bad])
+    assert _rules(findings) == {chaos_pass.RULE_UNGATED}
+    assert findings[0].line == _line_of(bad, "def inject")
+
+    good = _src(tmp_path, "b/chaos.py", '''\
+        _injector = None
+
+        def inject(site, **ctx):
+            """Docstring before the guard is fine."""
+            if _injector is None:
+                return
+            _injector.fire(site, ctx)
+        ''')
+    assert chaos_pass.run([good]) == []
+
+
+def test_chaos_pass_real_rpc_seams_are_suppressed_not_silent(tmp_path):
+    """Non-vacuity pin: the two sanctioned transport-send seams in rpc.py DO
+    trip the rule (so the pass watches them) and their standalone
+    suppression comments cover every occurrence."""
+    src = core.SourceFile.load(
+        REPO_ROOT / "src/repro/service/rpc.py", REPO_ROOT)
+    raw = chaos_pass.run([src])
+    assert raw, "expected chaos-call-under-lock findings in rpc.py"
+    assert _rules(raw) == {chaos_pass.RULE_UNDER_LOCK}
+    assert core.filter_suppressed(raw, [src]) == []
+
+
+def test_chaos_pass_repo_chaos_module_is_gated():
+    src = core.SourceFile.load(
+        REPO_ROOT / "src/repro/service/chaos.py", REPO_ROOT)
+    assert chaos_pass.run([src]) == []
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,589 @@
+"""Deterministic chaos-injection suite (ISSUE 10).
+
+Layers:
+
+1. Unit tests of the harness itself — seeded determinism (same seed → same
+   firing trace), the ``after``/``times``/``prob`` windows, per-kind effects
+   (expire_lease, kill_worker, corrupt), the datastore proxy, and the
+   env-var installation path.
+2. Fast end-to-end smokes: a mild mixed storm through each topology (these
+   ride in the coverage-floor run).
+3. The slow sweep: ~10 named fault schedules x both topologies, each a real
+   socketed server + multi-threaded client workload, asserting the
+   robustness invariants after every storm:
+     * no lost acked work — every operation reaches ``done``, every trial a
+       client saw complete stays terminal;
+     * no duplicate trials — trial ids in each study are unique;
+     * per-item isolation — every failure surfaces as an int status code;
+     * the queue fully drains (exactly-once finalize, nothing stranded);
+     * non-vacuity — the schedule's target seam actually fired.
+4. Crash-restart durability (subprocess SIGKILL mid-suggest-batch; see
+   ``tests/_crash_server.py``): after restarting on the same database path,
+   ``recover_pending_operations`` completes every op exactly once, in both
+   polling modes and on both SQLite backends.
+
+Reproduction recipe: every failure here prints its seed; re-run any single
+schedule with the same seed (or set ``CHAOS_SEED``/``CHAOS_SCHEDULE`` on a
+live server) to replay the identical fault trace.
+"""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+from types import SimpleNamespace
+
+import pytest
+
+from repro.core import Metadata, ObjectiveMetricGoal, StudyConfig
+from repro.core.metadata import MetadataDelta, Namespace
+from repro.service import (
+    DefaultVizierServer,
+    DistributedVizierServer,
+    OperationFailedError,
+    VizierClient,
+    chaos,
+)
+from repro.service.chaos import ChaosError, Fault, FaultInjector
+from repro.service.operations import fail_operation_from_exception
+from repro.service.rpc import StatusCode, VizierRpcError
+
+pytestmark = pytest.mark.chaos
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _config(algorithm: str = "RANDOM_SEARCH") -> StudyConfig:
+    cfg = StudyConfig()
+    root = cfg.search_space.select_root()
+    root.add_float_param("x", 0.0, 1.0)
+    cfg.metrics.add("acc", ObjectiveMetricGoal.MAXIMIZE)
+    cfg.algorithm = algorithm
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# 1. Harness unit tests
+# ---------------------------------------------------------------------------
+
+
+def test_fault_site_glob_matching():
+    f = Fault(site="datastore.*", kind="stall")
+    assert f.matches("datastore.put_operation")
+    assert f.matches("datastore")
+    assert not f.matches("transport.send")
+    exact = Fault(site="queue.ack", kind="error")
+    assert exact.matches("queue.ack")
+    assert not exact.matches("queue.ack.extra")
+
+
+def _firing_trace(seed: int, n_events: int):
+    inj = FaultInjector(seed, [Fault(site="s", kind="delay", prob=0.5,
+                                     times=n_events, delay_s=0.0)])
+    for _ in range(n_events):
+        inj.fire("s", {})
+    return list(inj.events)
+
+
+def test_same_seed_same_firing_trace():
+    assert _firing_trace(123, 40) == _firing_trace(123, 40)
+
+
+def test_different_seed_different_firing_trace():
+    assert _firing_trace(123, 40) != _firing_trace(124, 40)
+
+
+def test_after_and_times_window():
+    inj = FaultInjector(0, [Fault(site="s", kind="delay", after=2, times=2,
+                                  delay_s=0.0)])
+    for _ in range(10):
+        inj.fire("s", {})
+    assert inj.fired_count("s") == 2
+    # fired exactly on the 3rd and 4th matching events
+    assert [e[2] for e in inj.events] == [2, 3]
+
+
+def test_error_kind_carries_status_code():
+    inj = FaultInjector(0, [Fault(site="s", kind="error", code=9)])
+    with pytest.raises(ChaosError) as ei:
+        inj.fire("s", {})
+    assert ei.value.code == 9
+    # ...and the op-failure mapper consumes it like any carried code
+    op = {"name": "x/operations/1", "done": False, "result": None,
+          "error": None}
+    failed = fail_operation_from_exception(op, ei.value)
+    assert failed["done"] is True
+    assert failed["error"]["code"] == 9
+
+
+def test_sever_and_drop_raise_connection_error():
+    for kind in ("sever", "drop"):
+        inj = FaultInjector(7, [Fault(site="s", kind=kind)])
+        with pytest.raises(ConnectionError):
+            inj.fire("s", {})
+
+
+def test_expire_lease_effect():
+    inj = FaultInjector(0, [Fault(site="queue.lease", kind="expire_lease")])
+    lease = SimpleNamespace(deadline=time.monotonic() + 1e6)
+    inj.fire("queue.lease", {"lease": lease})
+    assert lease.deadline < time.monotonic()
+
+
+def test_kill_worker_effect_and_raising_fault_still_wins():
+    killed = threading.Event()
+    inj = FaultInjector(0, [
+        Fault(site="queue.ack", kind="kill_worker"),
+        Fault(site="queue.ack", kind="error", code=14),
+    ])
+    with pytest.raises(ChaosError) as ei:
+        inj.fire("queue.ack", {"kill": killed.set})
+    assert killed.is_set()  # non-raising effect applied before the raise
+    assert ei.value.code == 14
+
+
+def test_corrupt_scrambles_only_gp_bandit_namespace():
+    delta = MetadataDelta()
+    delta.assign("repro.gp_bandit", "state", b"precious")
+    delta.assign("user.notes", "state", b"untouched")
+    delta.assign("repro.gp_bandit", "state", b"trial", trial_id=3)
+    inj = FaultInjector(0, [Fault(site="datastore.apply_metadata_delta",
+                                  kind="corrupt")])
+    inj.fire("datastore.apply_metadata_delta", {"delta": delta})
+    gp = delta.on_study.abs_ns(Namespace("repro.gp_bandit"))
+    assert gp["state"] == chaos._CORRUPT_BLOB
+    assert delta.on_study.abs_ns(Namespace("user.notes"))["state"] == b"untouched"
+    tgp = delta.on_trials[3].abs_ns(Namespace("repro.gp_bandit"))
+    assert tgp["state"] == chaos._CORRUPT_BLOB
+
+
+def test_inject_is_noop_when_uninstalled():
+    chaos.uninstall()
+    assert not chaos.active()
+    chaos.inject("transport.send", method="Anything")  # must not raise
+
+
+def test_scenario_installs_and_uninstalls():
+    assert not chaos.active()
+    with chaos.scenario(5, [Fault(site="s", kind="error")]) as inj:
+        assert chaos.active()
+        assert chaos.current() is inj
+        with pytest.raises(ChaosError):
+            chaos.inject("s")
+    assert not chaos.active()
+
+
+def test_install_from_env(monkeypatch):
+    monkeypatch.delenv("CHAOS_SEED", raising=False)
+    assert chaos.install_from_env() is None
+
+    monkeypatch.setenv("CHAOS_SEED", "99")
+    inj = chaos.install_from_env()
+    try:
+        assert inj is not None and inj.seed == 99
+        assert [f.site for f in inj.faults] == \
+            [f.site for f in chaos.DEFAULT_SCHEDULE]
+    finally:
+        chaos.uninstall()
+
+    monkeypatch.setenv(
+        "CHAOS_SCHEDULE",
+        json.dumps([{"site": "transport.send", "kind": "sever", "times": 2}]))
+    inj = chaos.install_from_env()
+    try:
+        assert [(f.site, f.kind, f.times) for f in inj.faults] == \
+            [("transport.send", "sever", 2)]
+    finally:
+        chaos.uninstall()
+
+
+def test_scenario_wins_over_env(monkeypatch):
+    monkeypatch.setenv("CHAOS_SEED", "99")
+    with chaos.scenario(1, []) as inj:
+        assert chaos.install_from_env() is inj  # env does not clobber
+    chaos.uninstall()
+
+
+def test_wrap_datastore_passthrough_and_proxy():
+    from repro.service import InMemoryDatastore
+
+    ds = InMemoryDatastore()
+    assert chaos.wrap_datastore(ds) is ds  # chaos off: untouched
+    with chaos.scenario(3, [Fault(site="datastore.update_study_metadata",
+                                  kind="corrupt", times=1)]) as inj:
+        proxy = chaos.wrap_datastore(ds)
+        assert proxy is not ds
+        assert proxy.wrapped is ds
+        from repro.core import Study
+
+        study = Study(name="owners/o/studies/s", study_config=_config())
+        proxy.create_study(study)
+        assert inj.fired_count("datastore.create_study") == 0  # no fault for it
+        md = Metadata()
+        md.abs_ns(Namespace("repro.gp_bandit"))["state"] = b"live"
+        proxy.update_study_metadata(study.name, md)
+        assert inj.fired_count("datastore.update_study_metadata") == 1
+        # the proxy handed the payload to the corrupt kind before delegating
+        stored = ds.get_study(study.name).study_config  # study still readable
+        assert stored is not None
+        assert md.abs_ns(Namespace("repro.gp_bandit"))["state"] == \
+            chaos._CORRUPT_BLOB
+
+
+# ---------------------------------------------------------------------------
+# End-to-end harness helpers
+# ---------------------------------------------------------------------------
+
+_TOLERATED = (VizierRpcError, OperationFailedError, ConnectionError,
+              TimeoutError)
+
+
+def _retrying(fn, *, attempts=12, errors=None, pause=0.05):
+    """Run ``fn`` through injected faults: any tolerated failure must carry
+    an int status code (per-item isolation) and is retried."""
+    last = None
+    for _ in range(attempts):
+        try:
+            return fn()
+        except _TOLERATED as e:
+            code = getattr(e, "code", None)
+            if code is not None:
+                assert isinstance(code, int), f"non-int status code: {e!r}"
+                if errors is not None:
+                    errors.append(code)
+            last = e
+            time.sleep(pause)
+    raise AssertionError(f"gave up after {attempts} attempts: {last!r}")
+
+
+def _complete_tolerant(client, trial_id, value, errors):
+    def attempt():
+        try:
+            client.complete_trial({"acc": value}, trial_id=trial_id)
+        except VizierRpcError as e:
+            # a dropped-response resend: the first attempt DID land
+            if e.code != StatusCode.FAILED_PRECONDITION:
+                raise
+
+    _retrying(attempt, errors=errors)
+
+
+def _make_server(topology, tmp_path):
+    common = dict(n_pythia_workers=2, n_shards=4, lease_timeout=0.5)
+    if topology == "default":
+        # the crash-durable sharded backend under storm
+        return DefaultVizierServer(
+            database_path=str(tmp_path / "chaosdb"), database_shards=4,
+            **common)
+    return DistributedVizierServer(**common)
+
+
+def _workload(server, *, n_studies=2, n_clients=2, rounds=2,
+              algorithm="RANDOM_SEARCH", prefix="chaos"):
+    """Concurrent suggest/complete rounds; returns (study_names, completed
+    trial ids per study, observed status codes)."""
+    errors = []
+    completed = {}
+    lock = threading.Lock()
+    study_names = []
+    for si in range(n_studies):
+        c = _retrying(lambda si=si: VizierClient.load_or_create_study(
+            f"{prefix}-{si}", _config(algorithm), client_id="seed",
+            target=server.address), errors=errors)
+        study_names.append(c.study_name)
+        c.close()
+
+    failures = []
+
+    def run_client(ci):
+        try:
+            for si in range(n_studies):
+                client = VizierClient(server.address, study_names[si],
+                                      f"c{ci}")
+                try:
+                    for r in range(rounds):
+                        trials = _retrying(
+                            lambda: client.get_suggestions(
+                                count=1, timeout=30.0),
+                            errors=errors)
+                        for t in trials:
+                            _complete_tolerant(
+                                client, t.id, float(ci + r), errors)
+                            with lock:
+                                completed.setdefault(
+                                    study_names[si], set()).add(t.id)
+                finally:
+                    client.close()
+        except BaseException as e:  # noqa: BLE001 — surfaced to the test
+            failures.append(e)
+
+    threads = [threading.Thread(target=run_client, args=(ci,))
+               for ci in range(n_clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not failures, f"client thread failed: {failures[0]!r}"
+    return study_names, completed, errors
+
+
+def _drain_and_check(server, study_names, completed, injector,
+                     *, expect_prefix=None, timeout=30.0):
+    """Wait for the queue to drain (restarting chaos-killed workers — the
+    operator action) and assert the robustness invariants."""
+    ds = getattr(server.datastore, "wrapped", server.datastore)
+    svc = server.servicer
+    deadline = time.monotonic() + timeout
+    while True:
+        if svc.worker_pool is not None:
+            alive = set(svc.worker_pool.alive_workers())
+            for wid in range(svc.worker_pool.n_workers):
+                if wid not in alive:
+                    svc.worker_pool.restart_worker(wid)
+        pending = [op["name"] for s in study_names
+                   for op in ds.list_operations(s, only_pending=True)]
+        queued = svc._queue.pending_count() if svc._queue is not None else 0
+        if not pending and queued == 0:
+            break
+        assert time.monotonic() < deadline, (
+            f"seed {injector.seed}: queue never drained: "
+            f"pending={pending} queued={queued}")
+        time.sleep(0.05)
+
+    for s in study_names:
+        ids = [t.id for t in ds.list_trials(s)]
+        assert len(ids) == len(set(ids)), \
+            f"seed {injector.seed}: duplicate trial ids in {s}: {sorted(ids)}"
+        for op in ds.list_operations(s):
+            assert op["done"] is True, \
+                f"seed {injector.seed}: lost op {op['name']}"
+            err = op.get("error")
+            if err is not None:
+                assert isinstance(err.get("code"), int), \
+                    f"seed {injector.seed}: anonymous failure on {op['name']}"
+    # no lost acked work: every completion a client observed stays terminal
+    for s, ids in completed.items():
+        for tid in ids:
+            assert ds.get_trial(s, tid).state.is_terminal, \
+                f"seed {injector.seed}: acked completion of {s}/{tid} lost"
+    if expect_prefix is not None:
+        assert injector.fired_count(expect_prefix) > 0, (
+            f"seed {injector.seed}: schedule never fired at "
+            f"{expect_prefix!r} — the sweep is vacuous")
+
+
+# ---------------------------------------------------------------------------
+# 2. Fast end-to-end smokes (coverage-floor run)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topology", ["default", "distributed"])
+def test_mild_storm_smoke(topology, tmp_path):
+    faults = [
+        Fault(site="transport.send", kind="sever", prob=0.5, times=2),
+        Fault(site="datastore.*", kind="stall", prob=0.2, times=5,
+              delay_s=0.005),
+    ]
+    with chaos.scenario(4242, faults) as inj:
+        server = _make_server(topology, tmp_path)
+        try:
+            names, completed, errors = _workload(server)
+            _drain_and_check(server, names, completed, inj, expect_prefix="")
+        finally:
+            server.stop()
+    assert all(isinstance(c, int) for c in errors)
+
+
+# ---------------------------------------------------------------------------
+# 3. The sweep: named schedules x both topologies
+# ---------------------------------------------------------------------------
+
+# (name, faults, non-vacuity site prefix, study algorithm)
+SCHEDULES = [
+    ("send-sever",
+     [Fault(site="transport.send", kind="sever", prob=0.3, times=4)],
+     "transport.send", "RANDOM_SEARCH"),
+    ("recv-drop",  # server applied the request; the response is lost
+     [Fault(site="transport.recv", kind="drop", prob=0.3, times=4)],
+     "transport.recv", "RANDOM_SEARCH"),
+    ("ds-get-error",  # read fails inside the RPC handler: carried-code map
+     [Fault(site="datastore.get_study", kind="error", prob=0.3, times=3,
+            code=14)],
+     "datastore.get_study", "RANDOM_SEARCH"),
+    ("ds-stall",
+     [Fault(site="datastore.*", kind="stall", prob=0.15, times=12,
+            delay_s=0.01)],
+     "datastore.", "RANDOM_SEARCH"),
+    ("ds-put-op-error",  # write fails inside finalize too: release-path test
+     [Fault(site="datastore.put_operation", kind="error", prob=0.4,
+            times=2)],
+     "datastore.put_operation", "RANDOM_SEARCH"),
+    ("lease-expire",  # reclaimed mid-run: exactly-once finalize guard
+     [Fault(site="queue.lease", kind="expire_lease", prob=0.6, times=3)],
+     "queue.lease", "RANDOM_SEARCH"),
+    ("worker-kill-ack",  # dies after the batch ran, before acking
+     [Fault(site="queue.ack", kind="kill_worker", times=1)],
+     "queue.ack", "RANDOM_SEARCH"),
+    ("worker-kill-batch",  # dies holding an unprocessed lease
+     [Fault(site="worker.batch", kind="kill_worker", after=1, times=1)],
+     "worker.batch", "RANDOM_SEARCH"),
+    ("finalize-delay",
+     [Fault(site="service.finalize", kind="delay", prob=0.5, times=4,
+            delay_s=0.02)],
+     "service.finalize", "RANDOM_SEARCH"),
+    ("mixed-storm", list(chaos.DEFAULT_SCHEDULE), None, "RANDOM_SEARCH"),
+]
+
+_SCHEDULE_INDEX = {s[0]: i for i, s in enumerate(SCHEDULES)}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("topology", ["default", "distributed"])
+@pytest.mark.parametrize(
+    "name,faults,expect,algorithm", SCHEDULES,
+    ids=[s[0] for s in SCHEDULES])
+def test_seeded_schedule_sweep(name, faults, expect, algorithm, topology,
+                               tmp_path):
+    seed = 1000 + 2 * _SCHEDULE_INDEX[name] + (topology == "distributed")
+    with chaos.scenario(seed, [Fault(**vars(f)) for f in faults]) as inj:
+        server = _make_server(topology, tmp_path)
+        try:
+            names, completed, errors = _workload(
+                server, algorithm=algorithm, prefix=f"sweep-{name}")
+            _drain_and_check(server, names, completed, inj,
+                             expect_prefix=expect)
+        finally:
+            server.stop()
+    assert all(isinstance(c, int) for c in errors), errors
+
+
+def test_corrupt_state_blob_is_cold_start_not_failure(tmp_path):
+    """The ``corrupt`` kind scrambles a repro.gp_bandit checkpoint on its
+    way through the datastore seam (a torn write); the GP policy must treat
+    the garbage as a cold start on the next suggest — the op never fails
+    (the state loader's defensive-load contract)."""
+    from repro.pythia.state import GP_BANDIT_NAMESPACE, STATE_KEY
+
+    faults = [Fault(site="datastore.apply_metadata_delta", kind="corrupt",
+                    times=1)]
+    with chaos.scenario(5151, faults) as inj:
+        server = _make_server("default", tmp_path)
+        try:
+            c = VizierClient.load_or_create_study(
+                "corrupt", _config("GP_UCB"), client_id="c0",
+                target=server.address)
+            delta = MetadataDelta()
+            delta.assign(GP_BANDIT_NAMESPACE, STATE_KEY,
+                         b"valid-looking-checkpoint")
+            c.update_metadata(delta)
+            assert inj.fired_count("datastore.apply_metadata_delta") == 1
+            # the torn write really landed in the store...
+            stored = c.get_study_metadata().abs_ns(
+                Namespace(GP_BANDIT_NAMESPACE)).get(STATE_KEY)
+            assert stored == chaos._CORRUPT_BLOB
+            # ...and the policy shrugs it off as a cold start
+            for r in range(2):
+                trials = _retrying(lambda: c.get_suggestions(
+                    count=1, timeout=60.0))
+                assert trials
+                for t in trials:
+                    _complete_tolerant(c, t.id, float(r), [])
+            study = c.study_name
+            c.close()
+            _drain_and_check(
+                server, [study], {}, inj,
+                expect_prefix="datastore.apply_metadata_delta")
+        finally:
+            server.stop()
+
+
+def test_frame_budget_intact_under_chaos_harness():
+    """Control run: with the injector installed but an empty schedule, the
+    chaos seams and datastore proxy add ZERO frames to the dispatch (one
+    Pythia hop + one GetTrialsMulti per suggest — the pinned budget)."""
+    with chaos.scenario(7, []) as inj:
+        server = DistributedVizierServer()
+        try:
+            c = VizierClient.load_or_create_study(
+                "frames", _config(), client_id="w0", target=server.address)
+            server.servicer.reset_method_counts()
+            server.pythia_servicer.reset_method_counts()
+            (t,) = c.get_suggestions(count=1)
+            assert t.id >= 1
+            api = server.servicer.method_counts()
+            pythia = server.pythia_servicer.method_counts()
+            assert pythia == {"PythiaSuggest": 1}
+            assert api.get("GetTrialsMulti") == 1
+            assert "ListTrials" not in api
+            assert "GetStudy" not in api
+            c.close()
+        finally:
+            server.stop()
+        assert inj.fired_count() == 0
+
+
+# ---------------------------------------------------------------------------
+# 4. Crash-restart durability (SIGKILL mid-suggest-batch)
+# ---------------------------------------------------------------------------
+
+_CRASH_HELPER = os.path.join(REPO_ROOT, "tests", "_crash_server.py")
+
+
+def _crash_env(sleep_s=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src")
+    env.pop("CHAOS_SEED", None)
+    if sleep_s is not None:
+        env["CRASH_SLEEP"] = str(sleep_s)
+    return env
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("poll_mode,shards", [
+    ("wait", 0), ("get", 0), ("wait", 4),
+], ids=["waitop-sqlite", "getop-sqlite", "waitop-sharded"])
+def test_sigkill_mid_batch_then_recover_exactly_once(tmp_path, poll_mode,
+                                                     shards):
+    """Phase 1 (subprocess): server on a durable SQLite path, one trial
+    completed (acked work), then a suggest op dispatched into a policy that
+    stalls for 30s — SIGKILLed mid-batch. Phase 2 (fresh subprocess, same
+    path): recover_pending_operations must finish the op exactly once."""
+    db = str(tmp_path / ("db" if shards else "db.sqlite3"))
+    sentinel = str(tmp_path / "sentinel.json")
+
+    p1 = subprocess.Popen(
+        [sys.executable, _CRASH_HELPER, "serve", db, str(shards), sentinel],
+        env=_crash_env(), stdout=subprocess.PIPE, stderr=subprocess.PIPE)
+    try:
+        deadline = time.monotonic() + 60
+        while not os.path.exists(sentinel):
+            assert p1.poll() is None, (
+                f"phase-1 server died early: "
+                f"{p1.communicate()[1].decode(errors='replace')[-2000:]}")
+            assert time.monotonic() < deadline, "phase-1 sentinel timeout"
+            time.sleep(0.05)
+        state = json.loads(open(sentinel).read())
+        time.sleep(0.3)  # let the worker lease the op and enter the policy
+    finally:
+        os.kill(p1.pid, signal.SIGKILL)
+        p1.wait(timeout=10)
+
+    out = subprocess.run(
+        [sys.executable, _CRASH_HELPER, "recover", db, str(shards),
+         poll_mode, state["op_name"], state["study_name"]],
+        env=_crash_env(sleep_s=0), capture_output=True, timeout=120)
+    assert out.returncode == 0, out.stderr.decode(errors="replace")[-2000:]
+    report = json.loads(out.stdout.decode().strip().splitlines()[-1])
+
+    assert report["done"] is True
+    assert report["error"] is None, report
+    # recovery re-ran the op from its persisted record — not via the
+    # worker-death requeue path, so the stamp stays untouched
+    assert report["requeues"] == 0
+    assert report["result_trials"] == 2
+    # exactly once: 1 pre-kill completed trial + the 2 suggested, no extras
+    assert report["trial_count"] == 3
+    assert report["completed_trial_state_terminal"] is True

@@ -210,3 +210,158 @@ def test_pooled_client_one_connection_per_thread(server):
     assert len({id(c) for c in seen.values()}) == 4  # one client per thread
     assert pooled.call_many("Echo", [{"j": 1}, {"j": 2}])[1]["echo"]["j"] == 2
     pooled.close()
+
+
+# ---------------------------------------------------------------------------
+# Partial-delivery resend (ISSUE 10 S1): non-idempotent batches
+# ---------------------------------------------------------------------------
+
+
+class IncrServicer(Servicer):
+    """Non-idempotent by construction: every applied Incr is visible."""
+
+    def __init__(self):
+        super().__init__()
+        self.counts = {}
+        self.expose("Incr", self.incr)
+
+    def incr(self, params):
+        k = params["k"]
+        self.counts[k] = self.counts.get(k, 0) + 1
+        return {"k": k, "count": self.counts[k]}
+
+
+def test_call_many_resends_only_undelivered_after_partial_delivery():
+    """Regression: a mid-batch transport failure used to resend the WHOLE
+    batch, double-applying every non-idempotent sub-request whose response
+    had already been read. Now delivered responses are kept and only the
+    undelivered tail is resent."""
+    from repro.service import chaos
+    from repro.service.chaos import Fault
+
+    servicer = IncrServicer()
+    srv = RpcServer(servicer).start()
+    try:
+        client = RpcClient(srv.address, backoff_base=0.01, backoff_cap=0.02)
+        # drop the LAST response of a pipelined batch of 4: the server
+        # applied all four, the client read three
+        with chaos.scenario(11, [Fault(site="transport.recv", kind="drop",
+                                       after=3, times=1)]):
+            results = client.call_many("Incr", [{"k": i} for i in range(4)])
+        assert [r["k"] for r in results] == [0, 1, 2, 3]
+        # acknowledged sub-requests were NOT resent (the regression)
+        assert [servicer.counts[i] for i in range(3)] == [1, 1, 1]
+        # the one genuinely ambiguous sub-request (response lost after the
+        # server applied it) is at-least-once, like any single call
+        assert servicer.counts[3] == 2
+        assert results[3]["count"] == 2
+        client.close()
+    finally:
+        srv.stop()
+
+
+def test_default_transport_call_raw_many_attaches_delivered():
+    """The sequential fallback path carries the same contract."""
+    from repro.service.rpc import Transport
+
+    class FlakyThird(Transport):
+        def __init__(self):
+            self.sent = []
+
+        def call_raw(self, request, timeout):
+            if len(self.sent) == 2:
+                raise VizierRpcError(StatusCode.UNAVAILABLE, "boom")
+            self.sent.append(request["id"])
+            return {"id": request["id"], "ok": True, "result": {}}
+
+    t = FlakyThird()
+    with pytest.raises(VizierRpcError) as ei:
+        t.call_raw_many([{"id": str(i)} for i in range(4)], timeout=1.0)
+    assert [r["id"] for r in ei.value.delivered] == ["0", "1"]
+
+
+# ---------------------------------------------------------------------------
+# Retry budget + circuit breaker (ISSUE 10 tentpole, client side)
+# ---------------------------------------------------------------------------
+
+
+def test_retry_budget_spend_refill_and_success_credit():
+    from repro.service.rpc import RetryBudget
+
+    b = RetryBudget(capacity=2.0, refill_per_s=0.0, success_credit=1.5)
+    assert b.try_spend()
+    assert b.try_spend()
+    assert not b.try_spend()  # dry: stop retrying
+    b.record_success()        # successes refund tokens...
+    assert b.try_spend()
+    assert not b.try_spend()  # ...capped by what was credited
+
+
+def test_retry_budget_exhaustion_stops_transport_retries():
+    """A dead server with a dry budget costs ~3 attempts, not max_retries
+    backoff cycles — retries track success rate, not failure rate."""
+    from repro.service.rpc import RetryBudget
+
+    srv = RpcServer(EchoServicer()).start()
+    addr = srv.address
+    srv.stop()
+    client = RpcClient(
+        addr, max_retries=10, backoff_base=0.01, backoff_cap=0.02,
+        retry_budget=RetryBudget(capacity=2.0, refill_per_s=0.0))
+    start = time.monotonic()
+    with pytest.raises(VizierRpcError) as ei:
+        client.call("Echo", {}, timeout=10.0)
+    assert ei.value.code == StatusCode.UNAVAILABLE
+    # 10 retries at jittered backoff would take far longer
+    assert time.monotonic() - start < 2.0
+    client.close()
+
+
+def test_circuit_breaker_state_machine():
+    from repro.service.rpc import CircuitBreaker
+
+    cb = CircuitBreaker(failure_threshold=2, cooldown_s=0.05)
+    assert cb.allow()
+    cb.record_failure()
+    assert not cb.is_open and cb.allow()  # below threshold: still closed
+    cb.record_failure()
+    assert cb.is_open and not cb.allow()  # open: reject without I/O
+    time.sleep(0.06)
+    assert cb.allow()        # half-open: exactly one probe
+    assert not cb.allow()    # concurrent second probe refused
+    cb.record_failure()      # probe failed: re-open for another cooldown
+    assert not cb.allow()
+    time.sleep(0.06)
+    assert cb.allow()
+    cb.record_success()      # probe succeeded: closed again
+    assert not cb.is_open and cb.allow()
+
+
+def test_circuit_breaker_trips_on_consecutive_transport_failures():
+    from repro.service.rpc import CircuitBreaker
+
+    srv = RpcServer(EchoServicer()).start()
+    addr = srv.address
+    srv.stop()
+    cb = CircuitBreaker(failure_threshold=2, cooldown_s=30.0)
+    client = RpcClient(addr, max_retries=3, backoff_base=0.01,
+                       backoff_cap=0.02, circuit_breaker=cb)
+    with pytest.raises(VizierRpcError):
+        client.call("Echo", {}, timeout=1.0)
+    assert cb.is_open
+    # while open, calls fail fast without touching the socket
+    with pytest.raises(VizierRpcError) as ei:
+        client.call("Echo", {}, timeout=1.0)
+    assert "circuit breaker open" in ei.value.message
+    client.close()
+
+
+def test_application_errors_do_not_trip_the_breaker(server):
+    srv, servicer = server
+    client = RpcClient(srv.address, max_retries=0)
+    for _ in range(20):
+        with pytest.raises(VizierRpcError):
+            client.call("Boom", {})
+    assert not client.circuit_breaker.is_open  # the server is provably up
+    assert client.call("Echo", {"x": 1})["echo"]["x"] == 1
+    client.close()

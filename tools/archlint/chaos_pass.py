@@ -1,0 +1,145 @@
+"""Chaos-hook discipline pass.
+
+The fault-injection seams (``chaos.inject(...)`` call sites) must be free
+when ``CHAOS_SEED`` is unset and must never run under a held lock: the
+injected action may sleep for a configured delay or raise, and doing either
+inside a critical section turns a *simulated* slow network into a *real*
+stalled service (every other thread queues on the lock behind the sleeping
+one — a failure mode the chaos run is supposed to surface in the system
+under test, not create in the harness).
+
+Rules
+-----
+* ``chaos-call-under-lock`` — a ``chaos.inject(...)`` (or imported
+  ``inject(...)``) call lexically inside a ``with`` block whose context
+  expression looks lock-like (source mentions ``lock``/``_cv``/``guard``/
+  ``cond``). Decisions belong under the lock only inside the injector
+  itself; every seam in the service tier injects after release. The two
+  transport sends in ``rpc.py`` carry sanctioned suppressions: the socket
+  lock there serializes a *single peer connection*, not shared service
+  state, and the framing protocol cannot tolerate an interleaved writer.
+* ``chaos-ungated-hook``   — the module-level ``inject`` hook in
+  ``chaos.py`` must open with the ``if _injector is None: return`` guard,
+  so with no injector installed every seam is two loads and a branch
+  (dead code, no lock taken, nothing allocated).
+
+Scope: every analyzed file for ``chaos-call-under-lock`` except
+``chaos.py`` itself; ``chaos.py`` (by basename) for ``chaos-ungated-hook``.
+Nested ``def``/``lambda`` bodies inside a lock-holding ``with`` are *not*
+flagged — they run when called, not while the lock is held.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Sequence
+
+from archlint.core import Finding, SourceFile
+
+RULE_UNDER_LOCK = "chaos-call-under-lock"
+RULE_UNGATED = "chaos-ungated-hook"
+
+_LOCKY_SUBSTRINGS = ("lock", "_cv", "guard", "cond")
+
+
+def _expr_src(src: SourceFile, node: ast.AST) -> str:
+    seg = ast.get_source_segment(src.text, node)
+    if seg is None:
+        try:
+            seg = ast.unparse(node)
+        except Exception:
+            seg = ""
+    return seg
+
+
+def _looks_locky(text: str) -> bool:
+    low = text.lower()
+    return any(s in low for s in _LOCKY_SUBSTRINGS)
+
+
+def _is_inject_call(node: ast.Call) -> bool:
+    f = node.func
+    if isinstance(f, ast.Attribute) and f.attr == "inject":
+        return isinstance(f.value, ast.Name) and f.value.id == "chaos"
+    return isinstance(f, ast.Name) and f.id == "inject"
+
+
+def _find_under_lock(src: SourceFile) -> List[Finding]:
+    out: List[Finding] = []
+
+    def scan(node: ast.AST, under_lock: bool) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                # A nested callable's body executes later, not under the
+                # enclosing lock; restart with a clean flag.
+                scan(child, False)
+                continue
+            child_locked = under_lock
+            if isinstance(child, (ast.With, ast.AsyncWith)):
+                for item in child.items:
+                    if _looks_locky(_expr_src(src, item.context_expr)):
+                        child_locked = True
+                        break
+            if isinstance(child, ast.Call) and _is_inject_call(child) \
+                    and under_lock:
+                out.append(Finding(
+                    src.rel, child.lineno, RULE_UNDER_LOCK,
+                    "chaos.inject() under a held lock: injected delays/"
+                    "raises stall every thread queued on the lock; move "
+                    "the seam outside the critical section"))
+            scan(child, child_locked)
+
+    scan(src.tree, False)
+    return out
+
+
+def _guard_is_injector_none(stmt: ast.stmt) -> bool:
+    """Match ``if _injector is None: return`` (optionally ``return None``)."""
+    if not isinstance(stmt, ast.If) or stmt.orelse:
+        return False
+    t = stmt.test
+    if not (isinstance(t, ast.Compare) and len(t.ops) == 1
+            and isinstance(t.ops[0], ast.Is)
+            and isinstance(t.left, ast.Name) and t.left.id == "_injector"
+            and len(t.comparators) == 1
+            and isinstance(t.comparators[0], ast.Constant)
+            and t.comparators[0].value is None):
+        return False
+    body = stmt.body
+    return len(body) == 1 and isinstance(body[0], ast.Return) and (
+        body[0].value is None
+        or (isinstance(body[0].value, ast.Constant)
+            and body[0].value.value is None))
+
+
+def _find_ungated_hook(src: SourceFile) -> List[Finding]:
+    out: List[Finding] = []
+    for node in src.tree.body:
+        if not (isinstance(node, ast.FunctionDef) and node.name == "inject"):
+            continue
+        body = list(node.body)
+        if body and isinstance(body[0], ast.Expr) \
+                and isinstance(body[0].value, ast.Constant) \
+                and isinstance(body[0].value.value, str):
+            body = body[1:]  # docstring
+        if not body or not _guard_is_injector_none(body[0]):
+            out.append(Finding(
+                src.rel, node.lineno, RULE_UNGATED,
+                "inject() must begin with the 'if _injector is None: "
+                "return' guard so chaos seams are dead code when "
+                "CHAOS_SEED is unset"))
+    return out
+
+
+def run(sources: Sequence[SourceFile]) -> List[Finding]:
+    findings: List[Finding] = []
+    for src in sources:
+        if src.tree is None:
+            continue
+        name = src.path.name
+        if name == "chaos.py":
+            findings.extend(_find_ungated_hook(src))
+        else:
+            findings.extend(_find_under_lock(src))
+    return findings

@@ -152,7 +152,13 @@ def analyze_paths(
     syntax-only mode ``make smoke`` runs. Returns (unsuppressed findings,
     parsed sources).
     """
-    from archlint import error_pass, lock_pass, retrace_pass, schema_pass
+    from archlint import (
+        chaos_pass,
+        error_pass,
+        lock_pass,
+        retrace_pass,
+        schema_pass,
+    )
 
     if paths is None:
         paths = collect_files(root, "src/repro")
@@ -171,6 +177,7 @@ def analyze_paths(
     findings.extend(schema_pass.run(
         parsed, root=root, diff_base=None if fast else diff_base))
     findings.extend(error_pass.run(parsed))
+    findings.extend(chaos_pass.run(parsed))
 
     findings = filter_suppressed(findings, parsed)
     findings.sort(key=lambda f: (f.path, f.line, f.rule))

@@ -35,6 +35,7 @@ SRC = os.path.join(ROOT, "src")
 COVERAGE_TESTS = [
     "tests/test_rpc.py",
     "tests/test_datastore.py",
+    "tests/test_chaos.py",
     "tests/test_service.py",
     "tests/test_batch_suggest.py",
     "tests/test_pythia_remote.py",
